@@ -1,0 +1,77 @@
+//! Capacity planning: "how much load can this cluster take, and what do
+//! I have to buy to take more?" — the throughput dual of the paper's
+//! response-time optimization (§3), plus multi-job pool partitioning.
+//!
+//! ```bash
+//! cargo run --release --example capacity_planning
+//! ```
+
+use dcflow::flow::dag::FlowDag;
+use dcflow::flow::Workflow;
+use dcflow::sched::capacity::{
+    max_throughput, max_throughput_under_sla, required_speedup, Sla,
+};
+use dcflow::sched::multijob::{cluster_objective, multijob_allocate};
+use dcflow::sched::server::Server;
+use dcflow::sched::{Objective, ResponseModel};
+
+fn main() {
+    let model = ResponseModel::Mm1;
+
+    // ---- 1. raw and SLA-constrained capacity of the Fig. 6 workflow ----
+    let wf = Workflow::fig6();
+    let servers = Server::pool_exponential(&[9.0, 8.0, 7.0, 6.0, 5.0, 4.0]);
+    let raw = max_throughput(&wf, &servers, model).expect("feasible");
+    println!("fig6 on mu=9..4:");
+    println!("  declared entry rate : {:.2} tasks/s", wf.arrival_rate);
+    println!("  max sustainable     : {raw:.2} tasks/s ({:.0}% headroom)",
+        100.0 * (raw / wf.arrival_rate - 1.0));
+    for bound in [3.0, 2.0, 1.6] {
+        let t = max_throughput_under_sla(&wf, &servers, model, Sla::Mean(bound))
+            .expect("feasible");
+        println!("  under mean <= {bound:<4}: {t:.2} tasks/s");
+    }
+    let t99 = max_throughput_under_sla(&wf, &servers, model, Sla::P99(5.0)).expect("feasible");
+    println!("  under p99  <= 5.0 : {t99:.2} tasks/s");
+
+    // ---- 2. what uniform hardware would be needed ----------------------
+    let mu = required_speedup(&wf, model);
+    println!(
+        "\nuniform-pool equivalent: {} x Exp({mu:.2}) sustains the declared load",
+        wf.slots()
+    );
+
+    // ---- 3. a workflow arriving as a general DAG ------------------------
+    // ingest -> {2-branch fork} -> merge -> sink, written as edges
+    let dag = FlowDag::new()
+        .stage(0, 1, "ingest")
+        .stage(1, 2, "transform-a")
+        .stage(1, 2, "transform-b")
+        .stage(2, 3, "sink-write");
+    let tree = dag.to_series_parallel(0, 3).expect("TTSP");
+    let dag_wf = Workflow::new(tree, 3.0).expect("valid");
+    let pool = Server::pool_exponential(&[10.0, 8.0, 6.0, 5.0]);
+    let cap = max_throughput(&dag_wf, &pool, model).expect("feasible");
+    println!("\nDAG workflow ({} stages): capacity {cap:.2} tasks/s", dag_wf.slots());
+
+    // ---- 4. multi-job cluster partitioning ------------------------------
+    let heavy = Workflow::fig6();
+    let light = Workflow::tandem(3, 1.5);
+    let jobs = [&heavy, &light];
+    let cluster = Server::pool_exponential(&[14.0, 12.0, 10.0, 9.0, 8.0, 7.0, 6.0, 5.0, 4.0]);
+    let plans = multijob_allocate(&jobs, &cluster, model, Objective::Mean).expect("fits");
+    println!("\nmulti-job partition over a 9-server cluster:");
+    for p in &plans {
+        println!(
+            "  job {}: servers {:?}  mean={:.3} var={:.3}",
+            p.job,
+            p.alloc.slot_server,
+            p.score.mean,
+            p.score.var
+        );
+    }
+    println!(
+        "  load-weighted cluster objective: {:.3}",
+        cluster_objective(&plans, &jobs, Objective::Mean)
+    );
+}

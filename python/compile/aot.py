@@ -1,0 +1,152 @@
+"""AOT lowering: jax -> stablehlo -> XlaComputation -> **HLO text**.
+
+The interchange format is HLO *text*, not a serialized HloModuleProto:
+jax >= 0.5 emits protos with 64-bit instruction ids which the `xla`
+crate's xla_extension 0.5.1 rejects (`proto.id() <= INT_MAX`); the text
+parser reassigns ids and round-trips cleanly (see /opt/xla-example).
+
+Emits one .hlo.txt per entry in ARTIFACTS plus manifest.json describing
+every artifact's inputs/outputs, consumed by rust/src/runtime/registry.
+All functions are lowered with return_tuple=True; the rust side unwraps
+with to_tupleN(). Usage:  cd python && python -m compile.aot --out ../artifacts
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+# Canonical grid / batch shapes. G and B are fixed per artifact (PJRT
+# executables are monomorphic); rust pads the candidate wavefront to B.
+G = 1024
+B_SCORE = 64
+B_PAIR = 8
+
+F32 = jnp.float32
+M_MODES = 4  # mixture modes in the parametric scorer
+
+
+def _spec(*shape):
+    return jax.ShapeDtypeStruct(shape, F32)
+
+
+def _fn_score_fig6(pdf, cdf, dt):
+    scores, total = model.score_fig6(pdf, cdf, dt)
+    return scores, total
+
+
+def _fn_score_fig6_fast(pdf, cdf, dt):
+    scores, total = model.score_fig6_fast(pdf, cdf, dt)
+    return scores, total
+
+
+def _fn_score_fig6_mmde(w, lam, delay, dt):
+    scores, total = model.score_fig6_mmde(w, lam, delay, dt, G=G)
+    return scores, total
+
+
+def _fn_conv_pair(f, g, dt):
+    return (model.conv_pair(f, g, dt),)
+
+
+def _fn_max_pair(cf, cg, dt):
+    cdf, pdf = model.max_pair(cf, cg, dt)
+    return cdf, pdf
+
+
+def _fn_score_batch(pdf, dt):
+    return (model.score_batch(pdf, dt),)
+
+
+# name -> (fn, example args, doc). Shapes here are the contract with
+# rust/src/runtime — changing them requires regenerating artifacts AND
+# keeping runtime/registry.rs constants in sync (manifest.json is the
+# single source of truth the rust side actually reads).
+ARTIFACTS = {
+    f"score_fig6_b{B_SCORE}_g{G}": (
+        _fn_score_fig6,
+        (_spec(B_SCORE, 6, G), _spec(B_SCORE, 6, G), _spec()),
+        "batched Fig.6 allocation scorer: (pdf[B,6,G], cdf[B,6,G], dt) -> (scores[B,3], total_pdf[B,G])",
+    ),
+    f"score_fig6_fast_b{B_SCORE}_g{G}": (
+        _fn_score_fig6_fast,
+        (_spec(B_SCORE, 6, G), _spec(B_SCORE, 6, G), _spec()),
+        "CPU-optimized Fig.6 scorer (FFT conv instead of the pallas Toeplitz kernel); same contract",
+    ),
+    f"score_fig6_mmde_b{B_SCORE}_m{M_MODES}_g{G}": (
+        _fn_score_fig6_mmde,
+        (
+            _spec(B_SCORE, 6, M_MODES),
+            _spec(B_SCORE, 6, M_MODES),
+            _spec(B_SCORE, 6, M_MODES),
+            _spec(),
+        ),
+        "fully-fused parametric Fig.6 scorer: (w[B,6,M], lam[B,6,M], delay[B,6,M], dt) -> (scores[B,3], total_pdf[B,G]); grids built on-device from MMDE mixture params",
+    ),
+    f"conv_pair_b{B_PAIR}_g{G}": (
+        _fn_conv_pair,
+        (_spec(B_PAIR, G), _spec(B_PAIR, G), _spec()),
+        "serial pair composition: (f[B,G], g[B,G], dt) -> (out[B,G],)",
+    ),
+    f"max_pair_b{B_PAIR}_g{G}": (
+        _fn_max_pair,
+        (_spec(B_PAIR, G), _spec(B_PAIR, G), _spec()),
+        "parallel pair composition: (cdf_f[B,G], cdf_g[B,G], dt) -> (cdf[B,G], pdf[B,G])",
+    ),
+    f"score_batch_b{B_SCORE}_g{G}": (
+        _fn_score_batch,
+        (_spec(B_SCORE, G), _spec()),
+        "moment offload: (pdf[B,G], dt) -> (scores[B,3],)",
+    ),
+}
+
+
+def to_hlo_text(lowered) -> str:
+    """stablehlo MLIR -> XlaComputation -> HLO text (see module doc)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_all(out_dir: str) -> dict:
+    os.makedirs(out_dir, exist_ok=True)
+    manifest = {"grid": G, "artifacts": {}}
+    for name, (fn, specs, doc) in ARTIFACTS.items():
+        lowered = jax.jit(fn).lower(*specs)
+        text = to_hlo_text(lowered)
+        path = f"{name}.hlo.txt"
+        with open(os.path.join(out_dir, path), "w") as fh:
+            fh.write(text)
+        manifest["artifacts"][name] = {
+            "path": path,
+            "doc": doc,
+            "inputs": [list(s.shape) for s in specs],
+            "num_outputs": len(lowered.out_info),
+            "hlo_bytes": len(text),
+        }
+        print(f"  {name}: {len(text)} chars -> {path}")
+    with open(os.path.join(out_dir, "manifest.json"), "w") as fh:
+        json.dump(manifest, fh, indent=2)
+    return manifest
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts", help="artifact output dir")
+    args = ap.parse_args()
+    print(f"lowering {len(ARTIFACTS)} artifacts to {args.out} (G={G})")
+    lower_all(args.out)
+    print("AOT done")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,153 @@
+"""Table-1 service-time distribution families (build-time jnp versions).
+
+The paper (Table 1) models server service times with six delayed-tail
+families. These jnp implementations are the *authoring / test* versions:
+they generate PDF/CDF grids for the L2 model tests and the pytest oracles.
+The production grid generation lives in rust (`rust/src/dist`) — python is
+never on the request path.
+
+All CDFs share the shape  F(t) = (1 - alpha * exp(-lam * (m(t) - T))) * U(t - T)
+with a monotone "tail clock" m(t):
+  * delayed exponential : m(t) = t
+  * delayed pareto      : m(t) = ln(t + 1)
+  * delayed weibull     : m(t) = t**k   (our generic-m(t) instance)
+Multi-modal variants are convex mixtures sum_i p_i F_i.
+
+`alpha` controls the atom at T: F(T+) = 1 - alpha * exp(-lam*(m(T) - T)).
+`alpha=None` picks the continuous choice alpha = exp(lam * (m(T) - T)) so
+that F(T+) = 0 (no atom).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Sequence
+
+import jax.numpy as jnp
+
+Array = jnp.ndarray
+
+
+def _u(t: Array, T: float) -> Array:
+    """Delayed step U(t - T)."""
+    return (t >= T).astype(jnp.float32)
+
+
+@dataclasses.dataclass(frozen=True)
+class DelayedTail:
+    """F(t) = (1 - alpha * exp(-lam * (m(t) - T))) * U(t - T)."""
+
+    lam: float
+    T: float = 0.0
+    alpha: float | None = None  # None => continuous at T
+    kind: str = "exp"  # "exp" | "pareto" | "weibull"
+    weibull_k: float = 2.0
+
+    def m(self, t: Array) -> Array:
+        if self.kind == "exp":
+            return t
+        if self.kind == "pareto":
+            return jnp.log1p(jnp.maximum(t, 0.0))
+        if self.kind == "weibull":
+            return jnp.maximum(t, 0.0) ** self.weibull_k
+        raise ValueError(f"unknown tail kind {self.kind!r}")
+
+    def _alpha(self) -> float:
+        if self.alpha is not None:
+            return self.alpha
+        mT = float(self.m(jnp.asarray(self.T)))
+        return float(jnp.exp(self.lam * (mT - self.T)))
+
+    def cdf(self, t: Array) -> Array:
+        a = self._alpha()
+        val = 1.0 - a * jnp.exp(-self.lam * (self.m(t) - self.T))
+        return jnp.clip(val, 0.0, 1.0) * _u(t, self.T)
+
+    def pdf_grid(self, t: Array) -> Array:
+        """Numerical PDF on a uniform grid (central differences of cdf).
+
+        Matches how the rust engine and the L1 kernels treat parallel
+        compositions, so oracles line up bit-for-bit in method.
+        """
+        c = self.cdf(t)
+        dt = t[1] - t[0]
+        interior = (c[2:] - c[:-2]) / (2.0 * dt)
+        first = (c[1:2] - c[0:1]) / dt
+        last = (c[-1:] - c[-2:-1]) / dt
+        return jnp.concatenate([first, interior, last])
+
+
+def delayed_exponential(lam: float, T: float = 0.0, alpha: float | None = None) -> DelayedTail:
+    return DelayedTail(lam=lam, T=T, alpha=alpha, kind="exp")
+
+
+def delayed_pareto(lam: float, T: float = 0.0, alpha: float | None = None) -> DelayedTail:
+    return DelayedTail(lam=lam, T=T, alpha=alpha, kind="pareto")
+
+
+def delayed_weibull(lam: float, k: float, T: float = 0.0) -> DelayedTail:
+    return DelayedTail(lam=lam, T=T, kind="weibull", weibull_k=k)
+
+
+@dataclasses.dataclass(frozen=True)
+class MultiModal:
+    """Convex mixture: F(t) = sum_i p_i F_i(t)  (paper's multi-modal rows)."""
+
+    components: Sequence[DelayedTail]
+    weights: Sequence[float]
+
+    def __post_init__(self):
+        w = jnp.asarray(self.weights)
+        if not jnp.allclose(jnp.sum(w), 1.0, atol=1e-6):
+            raise ValueError("mixture weights must sum to 1")
+        if jnp.any(w < 0):
+            raise ValueError("mixture weights must be non-negative")
+
+    def cdf(self, t: Array) -> Array:
+        acc = jnp.zeros_like(t)
+        for p, c in zip(self.weights, self.components):
+            acc = acc + p * c.cdf(t)
+        return acc
+
+    def pdf_grid(self, t: Array) -> Array:
+        acc = jnp.zeros_like(t)
+        for p, c in zip(self.weights, self.components):
+            acc = acc + p * c.pdf_grid(t)
+        return acc
+
+
+# ---------------------------------------------------------------- closed forms
+
+
+def exp_cdf(t: Array, lam: float) -> Array:
+    """Plain exponential (delayed exp with T=0, alpha=1)."""
+    return (1.0 - jnp.exp(-lam * t)) * _u(t, 0.0)
+
+
+def exp_pdf(t: Array, lam: float) -> Array:
+    return lam * jnp.exp(-lam * t) * _u(t, 0.0)
+
+
+def erlang_pdf(t: Array, n: int, lam: float) -> Array:
+    """Sum of n iid Exp(lam): the closed form behind paper Fig. 2."""
+    from jax.scipy.special import gammaln
+
+    logpdf = (
+        n * jnp.log(lam)
+        + (n - 1) * jnp.log(jnp.maximum(t, 1e-30))
+        - lam * t
+        - gammaln(float(n))
+    )
+    return jnp.exp(logpdf) * _u(t, 0.0)
+
+
+def hypoexp2_cdf(t: Array, lam1: float, lam2: float) -> Array:
+    """Paper Eq. (2): CDF of Exp(lam1) + Exp(lam2), lam1 != lam2."""
+    c1 = lam2 / (lam2 - lam1)
+    c2 = lam1 / (lam2 - lam1)
+    return (1.0 - c1 * jnp.exp(-lam1 * t) + c2 * jnp.exp(-lam2 * t)) * _u(t, 0.0)
+
+
+def max_exp2_cdf(t: Array, lam1: float, lam2: float) -> Array:
+    """Paper Eq. (4): CDF of max(Exp(lam1), Exp(lam2))."""
+    return (1.0 - jnp.exp(-lam1 * t)) * (1.0 - jnp.exp(-lam2 * t)) * _u(t, 0.0)

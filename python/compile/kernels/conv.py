@@ -1,0 +1,136 @@
+"""L1 pallas kernel: PDF convolution as tiled Toeplitz matmuls.
+
+Serial DCC composition (paper Eq. 1) is a truncated linear convolution
+
+    out[k] = dt * sum_{j<=k} f[j] * g[k-j],   k in [0, G)
+
+HARDWARE ADAPTATION (DESIGN.md §Hardware-Adaptation): on TPU the MACs
+should land on the MXU, so instead of a scalar/VPU sliding window we
+block the output into tiles of TILE and express each (output-tile i,
+diagonal d) contribution as a TILE x TILE matmul
+
+    out_tile(i) += f_tile(i-d) @ T_d          for d = 0..i
+
+where T_d[a, b] = g[d*TILE + b - a] (a banded Toeplitz block built once
+per g by `toeplitz_diags` — a gather, left to XLA at L2). The kernel
+below is then a canonical pallas matmul-accumulate pipeline: grid
+(B, i, d) with the output block revisited along the innermost reduction
+dimension d.
+
+VMEM per grid step: 3 blocks * TILE*TILE * 4 B = 192 KiB at TILE=128 —
+far under the 16 MiB VMEM budget, leaving room for double buffering.
+interpret=True everywhere (CPU image): numerics only; see DESIGN.md.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+Array = jnp.ndarray
+
+TILE = 128
+
+
+def toeplitz_diags(g: Array, tile: int = TILE) -> Array:
+    """Build the banded Toeplitz blocks T[d, a, b] = g[d*tile + b - a].
+
+    g: [..., G] PDF grid (G must be a multiple of `tile`).
+    Returns [..., D, tile, tile] with D = G // tile. Out-of-range indices
+    (b - a < -d*tile) hit the zero padding — they encode the causal
+    (j <= k) triangle of the convolution.
+    """
+    G = g.shape[-1]
+    if G % tile != 0:
+        raise ValueError(f"grid size {G} not a multiple of tile {tile}")
+    nt = G // tile
+    zeros = jnp.zeros(g.shape[:-1] + (G,), g.dtype)
+    gp = jnp.concatenate([zeros, g], axis=-1)  # gp[..., G+m] = g[..., m]
+    d = jnp.arange(nt)[:, None, None]
+    a = jnp.arange(tile)[None, :, None]
+    b = jnp.arange(tile)[None, None, :]
+    idx = G + d * tile + (b - a)  # in [G - tile + 1, 2G - 1]
+    return gp[..., idx]
+
+
+def _conv_kernel(f_ref, t_ref, o_ref):
+    """One (i, d) grid step: accumulate f_tile(i-d) @ T_d into out_tile(i)."""
+    i = pl.program_id(1)
+    d = pl.program_id(2)
+
+    @pl.when(d == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    @pl.when(d <= i)
+    def _acc():
+        o_ref[...] += jnp.dot(
+            f_ref[...], t_ref[0, 0], preferred_element_type=jnp.float32
+        )
+
+
+@functools.partial(jax.jit, static_argnames=("tile", "interpret"))
+def conv_pdf(f: Array, g: Array, dt: Array, *, tile: int = TILE, interpret: bool = True) -> Array:
+    """Batched truncated PDF convolution: ([B,G], [B,G], scalar) -> [B,G].
+
+    Matches `ref.conv_pdf_ref` per batch row to float32 tolerance.
+    """
+    if f.ndim == 1:
+        return conv_pdf(f[None], g[None], dt, tile=tile, interpret=interpret)[0]
+    B, G = f.shape
+    nt = G // tile
+    diags = toeplitz_diags(g, tile)  # [B, nt, tile, tile]
+
+    out = pl.pallas_call(
+        _conv_kernel,
+        grid=(B, nt, nt),
+        in_specs=[
+            # f block (1, tile) at row b, tile max(i-d, 0) (clamped; masked by pl.when)
+            pl.BlockSpec((1, tile), lambda b, i, d: (b, jnp.maximum(i - d, 0))),
+            # T block (1, 1, tile, tile) at row b, diagonal d
+            pl.BlockSpec((1, 1, tile, tile), lambda b, i, d: (b, d, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, tile), lambda b, i, d: (b, i)),
+        out_shape=jax.ShapeDtypeStruct((B, G), jnp.float32),
+        interpret=interpret,
+    )(f, diags)
+    # Trapezoid endpoint correction (see ref.conv_pdf_ref): elementwise,
+    # XLA fuses it into the epilogue.
+    return dt * (out - (f[:, :1] * g + f * g[:, :1]) / 2.0)
+
+
+@functools.partial(jax.jit, static_argnames=())
+def conv_pdf_fft(f: Array, g: Array, dt: Array) -> Array:
+    """FFT-path truncated PDF convolution: ([..., G], [..., G], dt) -> [..., G].
+
+    Numerically equivalent to `conv_pdf` (same trapezoid endpoint
+    correction). This is the **CPU-optimized** lowering used by the
+    `*_fast` AOT artifacts: interpret-mode pallas turns into an XLA
+    while-loop of dynamic slices on CPU (seconds per call), whereas the
+    rfft/irfft pair lowers to XLA's native FFT (sub-millisecond). The
+    pallas kernel remains the TPU-shaped artifact (MXU Toeplitz matmul);
+    see DESIGN.md §Perf.
+    """
+    G = f.shape[-1]
+    n = 2 * G
+    fz = jnp.fft.rfft(f, n=n, axis=-1)
+    gz = jnp.fft.rfft(g, n=n, axis=-1)
+    full = jnp.fft.irfft(fz * gz, n=n, axis=-1)[..., :G]
+    return dt * (full - (f[..., :1] * g + f * g[..., :1]) / 2.0)
+
+
+def serial_compose(pdfs: Array, dt: Array, *, tile: int = TILE, interpret: bool = True) -> Array:
+    """Fold conv_pdf over a stack [N, G] (or [B, N, G]) -> [G] / [B, G].
+
+    N is static (python loop unrolls into the jaxpr) — each workflow
+    template is lowered once at AOT time, so this is build-time only.
+    """
+    batched = pdfs.ndim == 3
+    stack = pdfs if batched else pdfs[None]  # [B, N, G]
+    out = stack[:, 0, :]
+    for i in range(1, stack.shape[1]):
+        out = conv_pdf(out, stack[:, i, :], dt, tile=tile, interpret=interpret)
+    return out if batched else out[0]

@@ -1,0 +1,92 @@
+"""Pure-jnp oracles for the L1 pallas kernels.
+
+These are the CORE correctness signal: every pallas kernel must match its
+oracle here to float32 tolerance under pytest (python/tests/), and the
+rust native engine reimplements the same math (cross-checked in rust
+integration tests through the AOT artifacts).
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+Array = jnp.ndarray
+
+
+def conv_pdf_ref(f: Array, g: Array, dt: float) -> Array:
+    """Serial composition (paper Eq. 1): linear convolution of two PDF
+    grids, truncated to the grid length.
+
+    out[k] = dt * ( sum_{j=0..k} f[j] * g[k-j]  -  (f[0]g[k] + f[k]g[0]) / 2 )
+
+    i.e. the *trapezoid* rule for the convolution integral (the endpoint
+    correction cuts the error of the plain Riemann sum by ~500x for
+    exponential-family PDFs, which jump at their left support edge).
+    Truncation to G points assumes the grid was sized to hold the
+    composed support (rust sizes t_max accordingly).
+    """
+    G = f.shape[-1]
+    full = jnp.convolve(f, g, mode="full")  # length 2G-1
+    return dt * (full[:G] - (f[..., :1] * g + f * g[..., :1]) / 2.0)
+
+
+def serial_compose_ref(pdfs: Array, dt: float) -> Array:
+    """Fold conv_pdf_ref over a stack [N, G] -> [G]."""
+    out = pdfs[0]
+    for i in range(1, pdfs.shape[0]):
+        out = conv_pdf_ref(out, pdfs[i], dt)
+    return out
+
+
+def cdf_product_ref(cdfs: Array) -> Array:
+    """Parallel (fork-join) composition (paper Eq. 3): product of CDFs."""
+    return jnp.prod(cdfs, axis=0)
+
+
+def pdf_from_cdf_ref(cdf: Array, dt: float) -> Array:
+    """Central-difference PDF of a CDF grid.
+
+    Interior: (c[k+1]-c[k-1])/(2dt); edges one-sided over dt (a /2dt edge
+    halves the boundary density and leaks ~f(0)*dt/2 of mass per
+    composition). Matches the rust engine (`dist::central_diff`) exactly.
+    """
+    interior = (cdf[2:] - cdf[:-2]) / (2.0 * dt)
+    first = (cdf[1:2] - cdf[0:1]) / dt
+    last = (cdf[-1:] - cdf[-2:-1]) / dt
+    return jnp.concatenate([first, interior, last])
+
+
+def cdf_from_pdf_ref(pdf: Array, dt: float) -> Array:
+    """Trapezoid cumulative integral, clipped to [0, 1]."""
+    cs = jnp.cumsum(pdf) * dt
+    return jnp.clip(cs - dt * (pdf + pdf[..., :1]) / 2.0, 0.0, 1.0)
+
+
+def moments_ref(pdf: Array, dt: float) -> tuple[Array, Array]:
+    """(mean, variance) of a PDF grid by Riemann sums.
+
+    Normalizes by the captured mass so that grid truncation does not bias
+    the moments of the retained part (rust does the same).
+    """
+    G = pdf.shape[-1]
+    t = jnp.arange(G, dtype=pdf.dtype) * dt
+    mass = jnp.sum(pdf) * dt
+    mass = jnp.maximum(mass, 1e-12)
+    mean = jnp.sum(t * pdf) * dt / mass
+    ex2 = jnp.sum(t * t * pdf) * dt / mass
+    return mean, ex2 - mean * mean
+
+
+def quantile_ref(pdf: Array, dt: float, q: float) -> Array:
+    """Smallest grid time with CDF >= q."""
+    cdf = cdf_from_pdf_ref(pdf, dt)
+    idx = jnp.argmax(cdf >= q)
+    # if never reached, report the grid end
+    idx = jnp.where(cdf[-1] < q, pdf.shape[-1] - 1, idx)
+    return idx.astype(pdf.dtype) * dt
+
+
+def score_ref(pdf: Array, dt: float, q: float = 0.99) -> Array:
+    """[mean, var, p_q] — the allocation-scorer output triple."""
+    mean, var = moments_ref(pdf, dt)
+    return jnp.stack([mean, var, quantile_ref(pdf, dt, q)])

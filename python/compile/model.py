@@ -1,0 +1,189 @@
+"""L2: jax workflow evaluator — the allocation-scoring compute graph.
+
+This is the paper's "model": given the per-server *response-time* grids
+(PDF and CDF, already conditioned on the candidate allocation and DAP
+rates by the rust L3), compose the workflow's end-to-end response-time
+distribution and its score triple [mean, variance, p99]:
+
+  * serial DCC   -> PDF convolution      (Eq. 1, L1 kernel conv.py)
+  * parallel DCC -> CDF product          (Eq. 3, L1 kernel cdfprod.py)
+
+Everything here is build-time: `aot.py` lowers these functions ONCE to
+HLO text; the rust coordinator executes the compiled artifacts on its
+request path (runtime/scorer.rs). Python is never on the request path.
+
+The Fig. 6 workflow template (the paper's evaluation workflow) is
+
+    DAP0 --> DCC0 = PDCC(slot0 || slot1)      lambda_DAP0 = 8
+         --> DAP1 --> DCC1 = SDCC(slot2 ; slot3)   lambda_DAP1 = 4
+         --> DAP2 --> DCC2 = PDCC(slot4 || slot5)  lambda_DAP2 = 2
+         --> DAP3
+
+(the paper fixes 3 DCCs and 6 offered servers; the 2/2/2 split is the
+smallest shape consistent with the figure — see DESIGN.md substitutions).
+The scorer is batched over B candidate allocations so that one PJRT
+execute scores a whole wavefront of the optimizer's search.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .kernels.cdfprod import cdf_from_pdf, cdf_product, pdf_from_cdf
+from .kernels.conv import conv_pdf, conv_pdf_fft
+
+Array = jnp.ndarray
+
+# Fig. 6 template: slot indices per DCC.
+FIG6_PARALLEL_0 = (0, 1)
+FIG6_SERIAL_1 = (2, 3)
+FIG6_PARALLEL_2 = (4, 5)
+FIG6_SLOTS = 6
+
+
+def moments(pdf: Array, dt: Array) -> tuple[Array, Array]:
+    """Batched (mean, var) of PDF grids [..., G], mass-normalized."""
+    G = pdf.shape[-1]
+    t = jnp.arange(G, dtype=pdf.dtype) * dt
+    mass = jnp.maximum(jnp.sum(pdf, axis=-1) * dt, 1e-12)
+    mean = jnp.sum(t * pdf, axis=-1) * dt / mass
+    ex2 = jnp.sum(t * t * pdf, axis=-1) * dt / mass
+    return mean, ex2 - mean * mean
+
+
+def quantile(pdf: Array, dt: Array, q: float = 0.99) -> Array:
+    """Batched q-quantile (first grid point with CDF >= q)."""
+    cdf = cdf_from_pdf(pdf, dt)
+    idx = jnp.argmax(cdf >= q, axis=-1)
+    idx = jnp.where(cdf[..., -1] < q, pdf.shape[-1] - 1, idx)
+    return idx.astype(pdf.dtype) * dt
+
+
+def score_pdf(pdf: Array, dt: Array, q: float = 0.99) -> Array:
+    """[..., G] PDF -> [..., 3] score triple (mean, var, p_q)."""
+    mean, var = moments(pdf, dt)
+    return jnp.stack([mean, var, quantile(pdf, dt, q)], axis=-1)
+
+
+def parallel_block(pdfs: Array, cdfs: Array, dt: Array) -> tuple[Array, Array]:
+    """PDCC: [B, N, G] branch grids -> (pdf[B, G], cdf[B, G]) of the max."""
+    cdf = cdf_product(cdfs)
+    return pdf_from_cdf(cdf, dt), cdf
+
+
+def serial_block(pdfs: Array, dt: Array) -> Array:
+    """SDCC: [B, N, G] stage PDFs -> composed PDF [B, G]."""
+    out = pdfs[:, 0, :]
+    for i in range(1, pdfs.shape[1]):
+        out = conv_pdf(out, pdfs[:, i, :], dt)
+    return out
+
+
+def fig6_total_pdf(pdf: Array, cdf: Array, dt: Array) -> Array:
+    """End-to-end response-time PDF of the Fig. 6 workflow.
+
+    pdf, cdf: [B, 6, G] per-slot response-time grids.
+    """
+    p0, _ = parallel_block(pdf[:, FIG6_PARALLEL_0, :], cdf[:, FIG6_PARALLEL_0, :], dt)
+    p1 = serial_block(pdf[:, FIG6_SERIAL_1, :], dt)
+    p2, _ = parallel_block(pdf[:, FIG6_PARALLEL_2, :], cdf[:, FIG6_PARALLEL_2, :], dt)
+    total = conv_pdf(p0, p1, dt)
+    total = conv_pdf(total, p2, dt)
+    return total
+
+
+def score_fig6(pdf: Array, cdf: Array, dt: Array) -> tuple[Array, Array]:
+    """Batched Fig. 6 scorer: ([B,6,G], [B,6,G], dt) -> ([B,3], [B,G]).
+
+    Returns the score triple per candidate and the total PDF (the latter
+    feeds Fig. 7 curves and rust-side cross-checks).
+    """
+    total = fig6_total_pdf(pdf, cdf, dt)
+    return score_pdf(total, dt), total
+
+
+# ------------------------------------------------------- generic primitives
+# Pairwise primitives: the rust engine composes ARBITRARY series-parallel
+# topologies by folding these (fixed shapes keep the PJRT executables
+# monomorphic; the fig6 scorer above fuses the whole template instead).
+
+
+def conv_pair(f: Array, g: Array, dt: Array) -> Array:
+    """([B,G], [B,G], dt) -> [B,G] serial pair composition."""
+    return conv_pdf(f, g, dt)
+
+
+def max_pair(cf: Array, cg: Array, dt: Array) -> tuple[Array, Array]:
+    """([B,G], [B,G]) CDFs -> (cdf[B,G], pdf[B,G]) of the max."""
+    cdf = cdf_product(jnp.stack([cf, cg], axis=1))
+    return cdf, pdf_from_cdf(cdf, dt)
+
+
+def score_batch(pdf: Array, dt: Array) -> Array:
+    """[B,G] PDFs -> [B,3] score triples (moment offload primitive)."""
+    return score_pdf(pdf, dt)
+
+
+# --------------------------------------------------------- CPU-fast variant
+# Same math with the FFT convolution (conv_pdf_fft) instead of the pallas
+# kernel: interpret-mode pallas lowers to an XLA while-loop of dynamic
+# slices that executes in seconds on CPU; the rfft/irfft pair executes in
+# sub-millisecond. The pallas artifact stays the TPU-shaped build; rust
+# prefers a `*_fast` artifact when the manifest offers one (§Perf).
+
+
+def serial_block_fast(pdfs: Array, dt: Array) -> Array:
+    """SDCC via FFT conv: [B, N, G] -> [B, G]."""
+    out = pdfs[:, 0, :]
+    for i in range(1, pdfs.shape[1]):
+        out = conv_pdf_fft(out, pdfs[:, i, :], dt)
+    return out
+
+
+def fig6_total_pdf_fast(pdf: Array, cdf: Array, dt: Array) -> Array:
+    """End-to-end Fig. 6 PDF, FFT path (matches fig6_total_pdf)."""
+    p0, _ = parallel_block(pdf[:, FIG6_PARALLEL_0, :], cdf[:, FIG6_PARALLEL_0, :], dt)
+    p1 = serial_block_fast(pdf[:, FIG6_SERIAL_1, :], dt)
+    p2, _ = parallel_block(pdf[:, FIG6_PARALLEL_2, :], cdf[:, FIG6_PARALLEL_2, :], dt)
+    total = conv_pdf_fft(p0, p1, dt)
+    total = conv_pdf_fft(total, p2, dt)
+    return total
+
+
+def score_fig6_fast(pdf: Array, cdf: Array, dt: Array) -> tuple[Array, Array]:
+    """Batched Fig. 6 scorer, FFT path: same contract as score_fig6."""
+    total = fig6_total_pdf_fast(pdf, cdf, dt)
+    return score_pdf(total, dt), total
+
+
+# ------------------------------------------------------ parametric scorer
+# Fully-fused pipeline: the host sends only the per-slot response-law
+# PARAMETERS (multi-modal delayed-exponential mixtures — every law our
+# rust ResponseModels emit), and the device builds the grids itself.
+# Marshalling drops from 2·B·6·G floats to 3·B·6·M (M = 4): ~170x less
+# host->device traffic per scoring wave (§Perf iteration 4).
+
+
+def mmde_grids(w: Array, lam: Array, delay: Array, dt: Array, G: int) -> tuple[Array, Array]:
+    """[B,S,M] mixture params -> (pdf[B,S,G], cdf[B,S,G]).
+
+    Modes with w == 0 are padding. Math matches
+    `kernels.grid_eval.mmde_cdf_ref` / the rust `ServiceDist` exactly
+    (continuous alpha, central-difference PDF with one-sided edges).
+    """
+    from .kernels.grid_eval import mmde_cdf_ref
+
+    B, S, M = w.shape
+    t = jnp.arange(G, dtype=jnp.float32) * dt
+    cdf = mmde_cdf_ref(t, w.reshape(B * S, M), lam.reshape(B * S, M), delay.reshape(B * S, M))
+    cdf = cdf.reshape(B, S, G)
+    pdf = pdf_from_cdf(cdf, dt)
+    return pdf, cdf
+
+
+def score_fig6_mmde(w: Array, lam: Array, delay: Array, dt: Array, G: int = 1024):
+    """Parametric Fig. 6 scorer: ([B,6,M]×3, dt) -> ([B,3], [B,G])."""
+    pdf, cdf = mmde_grids(w, lam, delay, dt, G)
+    total = fig6_total_pdf_fast(pdf, cdf, dt)
+    return score_pdf(total, dt), total

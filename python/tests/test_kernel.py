@@ -1,0 +1,212 @@
+"""L1 kernel vs pure-jnp oracle — the CORE correctness signal.
+
+Hypothesis sweeps shapes/seeds; fixed tests pin the paper's closed forms
+(Eq. 2 hypoexponential, Eq. 4 max-of-exponentials).
+"""
+
+import hypothesis
+import hypothesis.strategies as st
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile.kernels.cdfprod import cdf_from_pdf, cdf_product, parallel_compose, pdf_from_cdf
+from compile.kernels.conv import conv_pdf, conv_pdf_fft, serial_compose, toeplitz_diags
+from compile.kernels import ref
+from compile import distributions as dist
+
+SETTINGS = hypothesis.settings(max_examples=25, deadline=None)
+
+
+def _rand_pdf(rng, b, g):
+    """Random positive grids (not normalized — conv is bilinear, so
+    correctness on arbitrary positive vectors covers PDFs)."""
+    return jnp.asarray(rng.random((b, g)) + 0.01, jnp.float32)
+
+
+# ------------------------------------------------------------------ conv
+
+
+@SETTINGS
+@hypothesis.given(
+    g=st.sampled_from([128, 256, 384, 512]),
+    b=st.integers(1, 4),
+    tile=st.sampled_from([64, 128]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_conv_matches_ref(g, b, tile, seed):
+    if g % tile != 0:
+        hypothesis.assume(False)
+    rng = np.random.default_rng(seed)
+    f, h = _rand_pdf(rng, b, g), _rand_pdf(rng, b, g)
+    dt = jnp.float32(0.05)
+    out = conv_pdf(f, h, dt, tile=tile)
+    want = jnp.stack([ref.conv_pdf_ref(f[i], h[i], dt) for i in range(b)])
+    np.testing.assert_allclose(out, want, rtol=1e-4, atol=1e-5)
+
+
+@SETTINGS
+@hypothesis.given(
+    g=st.sampled_from([128, 256, 512]),
+    b=st.integers(1, 4),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_conv_fft_matches_pallas(g, b, seed):
+    """The CPU-optimized FFT lowering must be numerically interchangeable
+    with the pallas Toeplitz-matmul kernel (same *_fast artifact contract)."""
+    rng = np.random.default_rng(seed)
+    f, h = _rand_pdf(rng, b, g), _rand_pdf(rng, b, g)
+    dt = jnp.float32(0.03)
+    a = conv_pdf(f, h, dt)
+    c = conv_pdf_fft(f, h, dt)
+    np.testing.assert_allclose(a, c, rtol=1e-4, atol=1e-4)
+
+
+def test_conv_commutative():
+    rng = np.random.default_rng(1)
+    f, h = _rand_pdf(rng, 2, 256), _rand_pdf(rng, 2, 256)
+    dt = jnp.float32(0.02)
+    np.testing.assert_allclose(
+        conv_pdf(f, h, dt), conv_pdf(h, f, dt), rtol=1e-4, atol=1e-6
+    )
+
+
+def test_conv_preserves_mass():
+    """Mass of f*g equals mass(f)*mass(g) up to grid truncation: the
+    composed distribution of two PDFs is a PDF (trapezoid convention)."""
+    G, dt = 2048, 0.01
+    t = jnp.arange(G, dtype=jnp.float32) * dt
+    f = dist.exp_pdf(t, 3.0)[None]
+    g = dist.exp_pdf(t, 5.0)[None]
+    out = conv_pdf(f, g, jnp.float32(dt))
+    mass = float(jnp.sum(out) * dt - dt * (out[0, 0] + out[0, -1]) / 2)
+    assert abs(mass - 1.0) < 5e-3, mass
+
+
+def test_conv_1d_entrypoint():
+    rng = np.random.default_rng(3)
+    f, h = _rand_pdf(rng, 1, 128)[0], _rand_pdf(rng, 1, 128)[0]
+    dt = jnp.float32(0.1)
+    np.testing.assert_allclose(
+        conv_pdf(f, h, dt), ref.conv_pdf_ref(f, h, dt), rtol=1e-4, atol=1e-5
+    )
+
+
+def test_toeplitz_structure():
+    """T[d, a, b] must equal g[d*tile + b - a] (0 when negative index)."""
+    g = jnp.arange(1.0, 257.0, dtype=jnp.float32)
+    T = toeplitz_diags(g, 64)
+    gnp = np.asarray(g)
+    Tnp = np.asarray(T)
+    for d in range(4):
+        for a in range(0, 64, 17):
+            for b in range(0, 64, 13):
+                k = d * 64 + b - a
+                want = gnp[k] if k >= 0 else 0.0
+                assert Tnp[d, a, b] == want, (d, a, b)
+
+
+def test_conv_hypoexp_eq2():
+    """Paper Eq. 2: Exp(l1) * Exp(l2) = hypoexponential."""
+    G, dt = 2048, 0.01
+    t = jnp.arange(G, dtype=jnp.float32) * dt
+    l1, l2 = 2.0, 5.0
+    f1 = dist.exp_pdf(t, l1)[None]
+    f2 = dist.exp_pdf(t, l2)[None]
+    out_cdf = cdf_from_pdf(conv_pdf(f1, f2, jnp.float32(dt))[0], dt)
+    want = dist.hypoexp2_cdf(t, l1, l2)
+    np.testing.assert_allclose(out_cdf, want, atol=0.02)
+
+
+@SETTINGS
+@hypothesis.given(
+    n=st.integers(2, 5),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_serial_compose_matches_ref(n, seed):
+    rng = np.random.default_rng(seed)
+    G, dt = 256, 0.05
+    pdfs = jnp.asarray(rng.random((n, G)) * 0.2, jnp.float32)
+    out = serial_compose(pdfs, jnp.float32(dt))
+    want = ref.serial_compose_ref(pdfs, dt)
+    np.testing.assert_allclose(out, want, rtol=1e-3, atol=1e-5)
+
+
+# ------------------------------------------------------------------ cdfprod
+
+
+@SETTINGS
+@hypothesis.given(
+    g=st.sampled_from([256, 512, 1024]),
+    n=st.integers(2, 6),
+    b=st.integers(1, 3),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_cdf_product_matches_ref(g, n, b, seed):
+    rng = np.random.default_rng(seed)
+    c = jnp.asarray(np.sort(rng.random((b, n, g)), axis=-1), jnp.float32)
+    out = cdf_product(c)
+    want = jnp.stack([ref.cdf_product_ref(c[i]) for i in range(b)])
+    np.testing.assert_allclose(out, want, rtol=1e-6, atol=1e-7)
+
+
+def test_max_exp2_eq4():
+    """Paper Eq. 4: CDF of max(Exp(l1), Exp(l2)) = F1*F2."""
+    G, dt = 1024, 0.01
+    t = jnp.arange(G, dtype=jnp.float32) * dt
+    l1, l2 = 3.0, 7.0
+    cdfs = jnp.stack([dist.exp_cdf(t, l1), dist.exp_cdf(t, l2)])[None]
+    out = cdf_product(cdfs)[0]
+    want = dist.max_exp2_cdf(t, l1, l2)
+    np.testing.assert_allclose(out, want, atol=1e-6)
+
+
+def test_cdf_monotone_after_product():
+    rng = np.random.default_rng(7)
+    c = jnp.asarray(np.sort(rng.random((1, 4, 512)), axis=-1), jnp.float32)
+    out = np.asarray(cdf_product(c))[0]
+    assert np.all(np.diff(out) >= -1e-6)
+
+
+def test_pdf_from_cdf_roundtrip():
+    """pdf->cdf->pdf is near-identity for a smooth density."""
+    G, dt = 1024, 0.01
+    t = jnp.arange(G, dtype=jnp.float32) * dt
+    pdf = dist.erlang_pdf(t, 4, 2.0)
+    cdf = cdf_from_pdf(pdf, dt)
+    back = pdf_from_cdf(cdf, jnp.float32(dt))
+    # central differences smear one cell; compare away from the edges
+    np.testing.assert_allclose(back[2:-2], pdf[2:-2], atol=0.05)
+
+
+def test_parallel_compose_pair():
+    G, dt = 512, 0.02
+    t = jnp.arange(G, dtype=jnp.float32) * dt
+    cdfs = jnp.stack([dist.exp_cdf(t, 2.0), dist.exp_cdf(t, 4.0)])[None]
+    cdf, pdf = parallel_compose(cdfs, jnp.float32(dt))
+    np.testing.assert_allclose(cdf[0], dist.max_exp2_cdf(t, 2.0, 4.0), atol=1e-6)
+    # pdf integrates to ~the captured mass
+    assert abs(float(jnp.sum(pdf[0]) * dt) - float(cdf[0, -1])) < 0.05
+
+
+# ------------------------------------------------------------- moments/score
+
+
+def test_moments_erlang():
+    """Erlang(n, lam): mean n/lam, var n/lam^2 — grid moments must agree."""
+    G, dt = 4096, 0.005
+    t = jnp.arange(G, dtype=jnp.float32) * dt
+    n, lam = 5, 2.0
+    pdf = dist.erlang_pdf(t, n, lam)
+    mean, var = ref.moments_ref(pdf, dt)
+    assert abs(float(mean) - n / lam) < 0.01
+    assert abs(float(var) - n / lam**2) < 0.02
+
+
+def test_quantile_exponential():
+    G, dt = 4096, 0.005
+    t = jnp.arange(G, dtype=jnp.float32) * dt
+    lam = 1.0
+    pdf = dist.exp_pdf(t, lam)
+    p99 = float(ref.quantile_ref(pdf, dt, 0.99))
+    assert abs(p99 - (-np.log(0.01) / lam)) < 0.05

@@ -1,0 +1,141 @@
+"""L2 model tests: workflow composition vs oracles and closed forms."""
+
+import hypothesis
+import hypothesis.strategies as st
+import jax.numpy as jnp
+import numpy as np
+
+from compile import distributions as dist
+from compile import model
+from compile.kernels import ref
+from compile.kernels.cdfprod import cdf_from_pdf
+
+SETTINGS = hypothesis.settings(max_examples=15, deadline=None)
+
+
+def _grids_for(servers, G, dt):
+    """Per-server service PDFs/CDFs on the grid for exp rates `servers`."""
+    t = jnp.arange(G, dtype=jnp.float32) * dt
+    pdf = jnp.stack([dist.exp_pdf(t, mu) for mu in servers])
+    cdf = jnp.stack([dist.exp_cdf(t, mu) for mu in servers])
+    return pdf[None], cdf[None]  # B = 1
+
+
+def _fig6_ref(pdf, cdf, dt):
+    """Pure-jnp Fig.6 composition (no pallas): the L2 oracle."""
+    p0 = ref.pdf_from_cdf_ref(ref.cdf_product_ref(cdf[model.FIG6_PARALLEL_0, :]), dt)
+    p1 = ref.serial_compose_ref(pdf[model.FIG6_SERIAL_1, :], dt)
+    p2 = ref.pdf_from_cdf_ref(ref.cdf_product_ref(cdf[model.FIG6_PARALLEL_2, :]), dt)
+    return ref.conv_pdf_ref(ref.conv_pdf_ref(p0, p1, dt), p2, dt)
+
+
+def test_fig6_total_matches_ref():
+    G, dt = 1024, 0.02
+    rates = [9.0, 8.0, 7.0, 6.0, 5.0, 4.0]
+    pdf, cdf = _grids_for(rates, G, dt)
+    total = model.fig6_total_pdf(pdf, cdf, jnp.float32(dt))[0]
+    want = _fig6_ref(pdf[0], cdf[0], dt)
+    np.testing.assert_allclose(total, want, rtol=1e-3, atol=1e-4)
+
+
+@SETTINGS
+@hypothesis.given(seed=st.integers(0, 2**31 - 1))
+def test_fig6_scorer_batch_consistency(seed):
+    """Every batch row must score exactly like a singleton evaluation."""
+    rng = np.random.default_rng(seed)
+    G, dt, B = 512, 0.02, 3
+    rates = 2.0 + 8.0 * rng.random((B, 6))
+    t = jnp.arange(G, dtype=jnp.float32) * dt
+    pdf = jnp.stack([jnp.stack([dist.exp_pdf(t, m) for m in row]) for row in rates])
+    cdf = jnp.stack([jnp.stack([dist.exp_cdf(t, m) for m in row]) for row in rates])
+    scores, total = model.score_fig6(pdf, cdf, jnp.float32(dt))
+    for b in range(B):
+        s1, t1 = model.score_fig6(pdf[b : b + 1], cdf[b : b + 1], jnp.float32(dt))
+        np.testing.assert_allclose(scores[b], s1[0], rtol=1e-4, atol=1e-5)
+        np.testing.assert_allclose(total[b], t1[0], rtol=1e-4, atol=1e-5)
+
+
+def test_fig6_mean_bounds():
+    """End-to-end mean must exceed the slowest single stage's mean and be
+    below the sum of all six means (series of 4 effective stages)."""
+    G, dt = 2048, 0.01
+    rates = [9.0, 8.0, 7.0, 6.0, 5.0, 4.0]
+    pdf, cdf = _grids_for(rates, G, dt)
+    scores, _ = model.score_fig6(pdf, cdf, jnp.float32(dt))
+    mean = float(scores[0, 0])
+    assert mean > max(1.0 / r for r in rates)
+    assert mean < sum(1.0 / r for r in rates)
+
+
+def test_serial_block_erlang():
+    """SDCC of n iid Exp(lam) must match the Erlang closed form."""
+    G, dt, n, lam = 2048, 0.01, 4, 2.0
+    t = jnp.arange(G, dtype=jnp.float32) * dt
+    pdfs = jnp.stack([dist.exp_pdf(t, lam)] * n)[None]
+    out = model.serial_block(pdfs, jnp.float32(dt))[0]
+    want = dist.erlang_pdf(t, n, lam)
+    np.testing.assert_allclose(out, want, atol=0.02)
+
+
+def test_parallel_block_mean_grows_with_n():
+    """Fig. 3 effect: mean of max grows (logarithmically) with fan-out."""
+    G, dt = 2048, 0.01
+    t = jnp.arange(G, dtype=jnp.float32) * dt
+    means = []
+    for n in (2, 8, 32):
+        cdfs = jnp.stack([dist.exp_cdf(t, 1.0)] * n)[None]
+        pdfs = jnp.stack([dist.exp_pdf(t, 1.0)] * n)[None]
+        p, _ = model.parallel_block(pdfs, cdfs, jnp.float32(dt))
+        mean, _ = model.moments(p[0], jnp.float32(dt))
+        means.append(float(mean))
+    assert means[0] < means[1] < means[2]
+    # harmonic-number growth: H_32 ~ 4.06, H_2 = 1.5
+    assert means[2] > 2.0 * means[0] * 0.8
+
+
+def test_score_pdf_triple():
+    G, dt = 2048, 0.01
+    t = jnp.arange(G, dtype=jnp.float32) * dt
+    pdf = dist.exp_pdf(t, 2.0)
+    s = model.score_pdf(pdf, jnp.float32(dt))
+    assert abs(float(s[0]) - 0.5) < 0.01          # mean 1/2
+    assert abs(float(s[1]) - 0.25) < 0.01         # var 1/4
+    assert abs(float(s[2]) - (-np.log(0.01) / 2.0)) < 0.05  # p99
+
+
+def test_delayed_families_compose():
+    """Table-1 families flow through the same composition machinery."""
+    G, dt = 1024, 0.02
+    t = jnp.arange(G, dtype=jnp.float32) * dt
+    de = dist.delayed_exponential(3.0, T=0.5)
+    dp = dist.delayed_pareto(4.0, T=0.3)
+    mm = dist.MultiModal([dist.delayed_exponential(5.0, T=0.2),
+                          dist.delayed_exponential(1.0, T=2.0)], [0.9, 0.1])
+    pdfs = jnp.stack([d.pdf_grid(t) for d in (de, dp, mm)])[None]
+    out = model.serial_block(pdfs, jnp.float32(dt))[0]
+    mean, var = model.moments(out, jnp.float32(dt))
+    # series mean adds; each component mean > its delay T
+    assert float(mean) > 0.5 + 0.3 + 0.2
+    assert float(var) > 0.0
+
+
+def test_multimodal_weights_validation():
+    import pytest
+
+    with pytest.raises(ValueError):
+        dist.MultiModal([dist.delayed_exponential(1.0)], [0.5])
+    with pytest.raises(ValueError):
+        dist.MultiModal(
+            [dist.delayed_exponential(1.0), dist.delayed_exponential(2.0)],
+            [1.5, -0.5],
+        )
+
+
+def test_delayed_exp_atom_alpha():
+    """alpha < 1 puts an atom of mass (1 - alpha) at T."""
+    t = jnp.arange(4096, dtype=jnp.float32) * 0.005
+    d = dist.delayed_exponential(2.0, T=1.0, alpha=0.7)
+    c = np.asarray(d.cdf(t))
+    jump_idx = int(np.searchsorted(np.asarray(t), 1.0)) + 1
+    assert abs(c[jump_idx] - 0.3) < 0.02
+    assert c[jump_idx - 2] == 0.0

@@ -1,0 +1,127 @@
+//! ABL — ablations of the design choices DESIGN.md calls out:
+//!
+//!   A1  rate scheduling: equilibrium (Alg. 2) vs uniform split
+//!   A2  allocation seed: Alg. 1/2 sort-matching vs random seeds
+//!       (does the §3 balancing refinement rescue bad seeds?)
+//!   A3  grid resolution G: score error + runtime vs G
+//!   A4  monitor window: re-fit accuracy vs window length under drift
+//!
+//! Writes bench_out/ablations.csv.
+
+use dcflow::compose::grid::GridSpec;
+use dcflow::compose::score::score_allocation_with;
+use dcflow::dist::fit::fit_delayed_exponential;
+use dcflow::dist::ServiceDist;
+use dcflow::flow::Workflow;
+use dcflow::monitor::ServerMonitor;
+use dcflow::sched::server::Server;
+use dcflow::sched::{
+    baseline_allocate_split, proposed_allocate, refine, schedule_rates, Objective,
+    ResponseModel, SplitPolicy,
+};
+use dcflow::util::bench::{bench, fmt_time, Csv};
+use dcflow::util::rng::Rng;
+
+fn main() {
+    let wf = Workflow::fig6();
+    let servers = Server::pool_exponential(&[9.0, 8.0, 7.0, 6.0, 5.0, 4.0]);
+    let model = ResponseModel::Mm1;
+    let mut csv = Csv::new("ablations", "ablation,setting,mean,var,extra");
+
+    // ---- A1: equilibrium vs uniform rate split --------------------------
+    println!("== A1: rate scheduling (same placement, fig6) ==");
+    let (alloc, _) = proposed_allocate(&wf, &servers, model, Objective::Mean).unwrap();
+    let grid = GridSpec::auto_response(&alloc, &servers, model);
+    let eq = score_allocation_with(&wf, &alloc, &servers, &grid, model);
+    // same server placement, uniform splits
+    let uni_alloc = baseline_allocate_split(&wf, &servers, model, SplitPolicy::Uniform)
+        .map(|mut u| {
+            u.slot_server = alloc.slot_server.clone();
+            // recompute uniform rates for this placement: fig6 forks are
+            // 2-wide, so uniform = half the DAP rate
+            u.slot_rate = vec![4.0, 4.0, 4.0, 4.0, 1.0, 1.0];
+            u
+        })
+        .unwrap();
+    let uni = score_allocation_with(&wf, &uni_alloc, &servers, &grid, model);
+    println!("equilibrium: mean={:.4} var={:.4}", eq.mean, eq.var);
+    println!("uniform    : mean={:.4} var={:.4}", uni.mean, uni.var);
+    println!(
+        "equilibrium improves mean by {:+.2}%",
+        100.0 * (uni.mean - eq.mean) / uni.mean
+    );
+    assert!(eq.mean <= uni.mean + 1e-9, "equilibrium must not hurt");
+    csv.row(&["A1".into(), "equilibrium".into(), format!("{:.6}", eq.mean), format!("{:.6}", eq.var), String::new()]);
+    csv.row(&["A1".into(), "uniform".into(), format!("{:.6}", uni.mean), format!("{:.6}", uni.var), String::new()]);
+
+    // ---- A2: seed quality vs refinement ----------------------------------
+    println!("\n== A2: Alg.1/2 seed vs random seeds + refinement ==");
+    let mut rng = Rng::new(42);
+    let mut worst_refined: f64 = 0.0;
+    let mut worst_raw: f64 = 0.0;
+    for _ in 0..12 {
+        let mut assign: Vec<usize> = (0..6).collect();
+        rng.shuffle(&mut assign);
+        let Ok(a) = schedule_rates(&wf, assign, &servers, model) else { continue };
+        let raw = score_allocation_with(&wf, &a, &servers, &grid, model);
+        let (_, ref_s) = refine(&wf, a, &servers, &grid, model, Objective::Mean, 8).unwrap();
+        worst_raw = worst_raw.max(raw.mean);
+        worst_refined = worst_refined.max(ref_s.mean);
+    }
+    let (seeded, seeded_s) = proposed_allocate(&wf, &servers, model, Objective::Mean).unwrap();
+    let _ = seeded;
+    println!("worst random raw     mean: {worst_raw:.4}");
+    println!("worst random refined mean: {worst_refined:.4}");
+    println!("Alg.1/2 + refine     mean: {:.4}", seeded_s.mean);
+    assert!(
+        worst_refined <= seeded_s.mean * 1.10,
+        "refinement should rescue random seeds to within 10%"
+    );
+    csv.row(&["A2".into(), "random_raw_worst".into(), format!("{worst_raw:.6}"), String::new(), String::new()]);
+    csv.row(&["A2".into(), "random_refined_worst".into(), format!("{worst_refined:.6}"), String::new(), String::new()]);
+    csv.row(&["A2".into(), "alg12_refined".into(), format!("{:.6}", seeded_s.mean), String::new(), String::new()]);
+
+    // ---- A3: grid resolution ---------------------------------------------
+    println!("\n== A3: grid resolution (score error vs G, fig6) ==");
+    let fine = GridSpec { dt: grid.dt * (grid.n as f64) / 8192.0, n: 8192 };
+    let truth = score_allocation_with(&wf, &alloc, &servers, &fine, model);
+    println!("reference (G=8192): mean={:.6}", truth.mean);
+    for g in [128usize, 256, 512, 1024, 2048] {
+        let gs = GridSpec { dt: fine.dt * 8192.0 / g as f64, n: g };
+        let t = bench(1, 5, || score_allocation_with(&wf, &alloc, &servers, &gs, model));
+        let s = score_allocation_with(&wf, &alloc, &servers, &gs, model);
+        let err = 100.0 * (s.mean - truth.mean).abs() / truth.mean;
+        println!(
+            "G={g:>5}: mean={:.6} err={err:.3}% time={}",
+            s.mean,
+            fmt_time(t.mean_s)
+        );
+        csv.row(&["A3".into(), format!("G={g}"), format!("{:.6}", s.mean), format!("{err:.4}"), format!("{:.3}", t.ns() / 1e3)]);
+    }
+
+    // ---- A4: monitor window under drift ------------------------------------
+    println!("\n== A4: monitor window vs re-fit accuracy under drift ==");
+    let old = ServiceDist::exponential(9.0);
+    let new = ServiceDist::exponential(3.0);
+    for window in [256usize, 1024, 4096] {
+        let mut mon = ServerMonitor::new(window);
+        let mut r = Rng::new(7);
+        for _ in 0..6000 {
+            mon.observe(old.sample(&mut r));
+        }
+        for _ in 0..1500 {
+            mon.observe(new.sample(&mut r));
+        }
+        let fitted = fit_delayed_exponential(&mon.window_samples());
+        let err = 100.0 * (fitted.mean() - new.mean()).abs() / new.mean();
+        println!(
+            "window={window:>5}: fitted mean={:.4} (true {:.4}) err={err:.1}%",
+            fitted.mean(),
+            new.mean()
+        );
+        csv.row(&["A4".into(), format!("window={window}"), format!("{:.6}", fitted.mean()), format!("{err:.3}"), String::new()]);
+    }
+    println!("\n(small windows adapt faster but fit noisier laws — the re-opt cadence trade-off)");
+    csv.flush();
+    println!("ABL OK");
+}

@@ -1,0 +1,241 @@
+//! FIG7 + TAB2 — the paper's evaluation: response-time distribution of
+//! baseline vs ours vs optimal on the Fig. 6 workflow (Fig. 7a/7b), and
+//! the three-scenario mean/variance table (Table 2).
+//!
+//! Paper parameters: λ_DAP = 8/4/2, six servers with service rates
+//! 9,8,7,6,5,4. Scenario laws (Table 2 leaves their parameters open; we
+//! fix them and record the choice in EXPERIMENTS.md):
+//!   S1  delayed exponential  (delay = 20% of each server's mean)
+//!   S2  delayed pareto       (matched means, heavy tails)
+//!   S3  mixed DE/DP + one straggler mode
+//! Every scheme is scored analytically AND validated by DES on the same
+//! allocation. Writes bench_out/fig7_curves.csv and bench_out/table2.csv.
+
+use dcflow::compose::grid::GridSpec;
+use dcflow::compose::moments::cdf_from_pdf;
+use dcflow::compose::score::{score_allocation_with, Score};
+use dcflow::dist::{Mode, ServiceDist, TailKind};
+use dcflow::flow::{Dcc, Workflow};
+use dcflow::sched::server::Server;
+use dcflow::sched::{
+    baseline_allocate, optimal_allocate, proposed_allocate, Allocation, Objective,
+    ResponseModel,
+};
+use dcflow::sim::network::{simulate, SimConfig};
+use dcflow::util::bench::Csv;
+
+/// Delayed exponential with total mean 1/mu, delay = frac of the mean.
+fn de(mu: f64, frac: f64) -> ServiceDist {
+    let mean = 1.0 / mu;
+    let delay = frac * mean;
+    ServiceDist::delayed_exponential(1.0 / (mean - delay), delay)
+}
+
+/// Delayed pareto with mean matched to 1/mu (numerically tuned lam).
+fn dp(mu: f64) -> ServiceDist {
+    let target = 1.0 / mu;
+    // pareto tail with finite variance needs lam > 2; search lam so the
+    // (cached) mean hits the target
+    let (mut lo, mut hi) = (2.2, 400.0);
+    for _ in 0..60 {
+        let mid = 0.5 * (lo + hi);
+        if ServiceDist::delayed_pareto(mid, 0.1 * target).mean() > target {
+            lo = mid;
+        } else {
+            hi = mid;
+        }
+    }
+    ServiceDist::delayed_pareto(0.5 * (lo + hi), 0.1 * target)
+}
+
+fn scenario(id: usize) -> (String, Vec<Server>, ResponseModel) {
+    let mus = [9.0, 8.0, 7.0, 6.0, 5.0, 4.0];
+    match id {
+        1 => (
+            "S1 delayed-exponential".into(),
+            mus.iter()
+                .enumerate()
+                .map(|(i, &mu)| Server::new(i, de(mu, 0.2)))
+                .collect(),
+            ResponseModel::Mg1,
+        ),
+        2 => (
+            "S2 delayed-pareto".into(),
+            mus.iter()
+                .enumerate()
+                .map(|(i, &mu)| Server::new(i, dp(mu)))
+                .collect(),
+            ResponseModel::Mg1,
+        ),
+        _ => (
+            "S3 mixed + straggler".into(),
+            vec![
+                Server::new(0, de(9.0, 0.2)),
+                Server::new(1, dp(8.0)),
+                Server::new(2, de(7.0, 0.3)),
+                Server::new(3, dp(6.0)),
+                Server::new(
+                    4,
+                    ServiceDist::multimodal(vec![
+                        (0.92, Mode::continuous(6.5, 0.02, TailKind::Exponential)),
+                        (0.08, Mode::continuous(1.0, 0.25, TailKind::Exponential)),
+                    ]),
+                ),
+                Server::new(5, de(4.0, 0.2)),
+            ],
+            ResponseModel::Mg1,
+        ),
+    }
+}
+
+struct Row {
+    scheme: &'static str,
+    analytic: Score,
+    sim_mean: f64,
+    sim_var: f64,
+}
+
+fn eval(
+    wf: &Workflow,
+    alloc: &Allocation,
+    servers: &[Server],
+    grid: &GridSpec,
+    model: ResponseModel,
+    scheme: &'static str,
+) -> Row {
+    let analytic = score_allocation_with(wf, alloc, servers, grid, model);
+    let sim = simulate(
+        wf,
+        alloc,
+        servers,
+        &SimConfig {
+            n_tasks: 150_000,
+            warmup: 10_000,
+            seed: 0xF167,
+            queueing: true,
+        },
+    );
+    Row {
+        scheme,
+        analytic,
+        sim_mean: sim.mean,
+        sim_var: sim.var,
+    }
+}
+
+/// Fig. 6 with all DAP rates scaled by k (the paper does not pin the
+/// utilization its Table-2 scenarios ran at; we report k = 1.0 — the
+/// literal reading — and k = 1.3, where the baseline's homogeneity
+/// assumption starts to really hurt; see EXPERIMENTS.md).
+fn fig6_scaled(k: f64) -> Workflow {
+    let root = Dcc::serial_with_rates(
+        vec![
+            Dcc::parallel(vec![Dcc::queue(), Dcc::queue()]),
+            Dcc::serial(vec![Dcc::queue(), Dcc::queue()]),
+            Dcc::parallel(vec![Dcc::queue(), Dcc::queue()]),
+        ],
+        vec![Some(8.0 * k), Some(4.0 * k), Some(2.0 * k)],
+    );
+    Workflow::new(root, 8.0 * k).expect("valid")
+}
+
+fn main() {
+    let mut table = Csv::new(
+        "table2",
+        "scenario,load,scheme,mean,var,p99,sim_mean,sim_var,mean_improve_pct,var_improve_pct",
+    );
+
+    for (sid, load) in [(1, 1.0), (2, 1.0), (3, 1.0), (1, 1.4), (2, 1.4), (3, 1.4)] {
+        let wf = fig6_scaled(load);
+        let (name, servers, model) = scenario(sid);
+        println!("\n== TAB2 {name} @ load x{load} ==");
+        let (ours_alloc, _) =
+            proposed_allocate(&wf, &servers, model, Objective::Mean).expect("feasible");
+        let grid = GridSpec::auto_response(&ours_alloc, &servers, model);
+        let base_alloc = baseline_allocate(&wf, &servers, model).expect("feasible");
+        let (opt_alloc, _) =
+            optimal_allocate(&wf, &servers, &grid, Objective::Mean, model).expect("feasible");
+
+        let rows = [
+            eval(&wf, &ours_alloc, &servers, &grid, model, "ours"),
+            eval(&wf, &opt_alloc, &servers, &grid, model, "optimal"),
+            eval(&wf, &base_alloc, &servers, &grid, model, "baseline"),
+        ];
+
+        println!(
+            "{:<10} {:>9} {:>9} {:>9} {:>10} {:>10}",
+            "scheme", "mean", "var", "p99", "sim_mean", "sim_var"
+        );
+        let base = &rows[2];
+        for r in &rows {
+            println!(
+                "{:<10} {:>9.4} {:>9.4} {:>9.4} {:>10.4} {:>10.4}",
+                r.scheme, r.analytic.mean, r.analytic.var, r.analytic.p99, r.sim_mean, r.sim_var
+            );
+            let mi = 100.0 * (base.analytic.mean - r.analytic.mean) / base.analytic.mean;
+            let vi = 100.0 * (base.analytic.var - r.analytic.var) / base.analytic.var;
+            table.row(&[
+                name.clone(),
+                format!("{load}"),
+                r.scheme.to_string(),
+                format!("{:.6}", r.analytic.mean),
+                format!("{:.6}", r.analytic.var),
+                format!("{:.6}", r.analytic.p99),
+                format!("{:.6}", r.sim_mean),
+                format!("{:.6}", r.sim_var),
+                format!("{mi:.2}"),
+                format!("{vi:.2}"),
+            ]);
+        }
+        let ours = &rows[0];
+        let opt = &rows[1];
+        println!(
+            "improvement over baseline: mean {:+.1}%  var {:+.1}%  (optimal: {:+.1}% / {:+.1}%)",
+            100.0 * (base.analytic.mean - ours.analytic.mean) / base.analytic.mean,
+            100.0 * (base.analytic.var - ours.analytic.var) / base.analytic.var,
+            100.0 * (base.analytic.mean - opt.analytic.mean) / base.analytic.mean,
+            100.0 * (base.analytic.var - opt.analytic.var) / base.analytic.var,
+        );
+        // paper's ordering: optimal <= ours <= baseline (mean)
+        assert!(opt.analytic.mean <= ours.analytic.mean + 1e-6);
+        assert!(ours.analytic.mean <= base.analytic.mean + 1e-6);
+    }
+    table.flush();
+
+    // ---- FIG7: response-time distribution curves (scenario 1) ----------
+    println!("\n== FIG7 curves (scenario S1) ==");
+    let wf = Workflow::fig6();
+    let (_, servers, model) = scenario(1);
+    let (ours_alloc, _) =
+        proposed_allocate(&wf, &servers, model, Objective::Mean).expect("feasible");
+    let grid = GridSpec::auto_response(&ours_alloc, &servers, model);
+    let base_alloc = baseline_allocate(&wf, &servers, model).expect("feasible");
+    let (opt_alloc, _) =
+        optimal_allocate(&wf, &servers, &grid, Objective::Mean, model).expect("feasible");
+
+    let ours = score_allocation_with(&wf, &ours_alloc, &servers, &grid, model);
+    let opt = score_allocation_with(&wf, &opt_alloc, &servers, &grid, model);
+    let base = score_allocation_with(&wf, &base_alloc, &servers, &grid, model);
+    let (oc, pc, bc) = (
+        cdf_from_pdf(&ours.pdf, grid.dt),
+        cdf_from_pdf(&opt.pdf, grid.dt),
+        cdf_from_pdf(&base.pdf, grid.dt),
+    );
+    let mut curves = Csv::new(
+        "fig7_curves",
+        "t,ours_pdf,optimal_pdf,baseline_pdf,ours_cdf,optimal_cdf,baseline_cdf",
+    );
+    for k in (0..grid.n).step_by(4) {
+        curves.rowf(&[
+            k as f64 * grid.dt,
+            ours.pdf[k],
+            opt.pdf[k],
+            base.pdf[k],
+            oc[k],
+            pc[k],
+            bc[k],
+        ]);
+    }
+    curves.flush();
+    println!("FIG7/TAB2 OK");
+}

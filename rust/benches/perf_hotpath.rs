@@ -1,0 +1,202 @@
+//! PERF — hot-path throughput: candidate-allocation scoring (the
+//! optimizer's inner loop) across backends, plus the convolution
+//! microbenchmarks that correspond to the L1 kernel.
+//!
+//! Reported in EXPERIMENTS.md §Perf. Writes bench_out/perf_hotpath.csv.
+
+use dcflow::compose::conv::{conv_direct, conv_fft};
+use dcflow::compose::grid::GridSpec;
+use dcflow::compose::score::score_allocation_with;
+use dcflow::dist::ServiceDist;
+use dcflow::flow::Workflow;
+use dcflow::runtime::scorer::BatchScorer;
+use dcflow::runtime::ScorerBackend;
+use dcflow::sched::server::Server;
+use dcflow::sched::{schedule_rates, Allocation, ResponseModel};
+use dcflow::util::bench::{bench, fmt_time, Csv};
+use dcflow::util::rng::Rng;
+
+fn permutation_wave(n: usize, seed: u64) -> Vec<Vec<usize>> {
+    // n random permutations of 0..6
+    let mut rng = Rng::new(seed);
+    (0..n)
+        .map(|_| {
+            let mut p: Vec<usize> = (0..6).collect();
+            rng.shuffle(&mut p);
+            p
+        })
+        .collect()
+}
+
+fn main() {
+    println!("== PERF: allocation-scoring hot path ==");
+    let wf = Workflow::fig6();
+    let servers = Server::pool_exponential(&[9.0, 8.0, 7.0, 6.0, 5.0, 4.0]);
+    let model = ResponseModel::Mm1;
+    let mut csv = Csv::new("perf_hotpath", "metric,value,unit");
+
+    // prepare a wave of rate-scheduled candidate allocations
+    let waves: Vec<Allocation> = permutation_wave(64, 1)
+        .into_iter()
+        .filter_map(|assign| schedule_rates(&wf, assign, &servers, model).ok())
+        .collect();
+    println!("candidates in wave: {}", waves.len());
+    let grid = GridSpec::auto_response(&waves[0], &servers, model);
+
+    // --- native single scoring -----------------------------------------
+    let t_native_one = bench(3, 20, || {
+        score_allocation_with(&wf, &waves[0], &servers, &grid, model)
+    });
+    println!(
+        "native single score       : {} ({:.0}/s)",
+        fmt_time(t_native_one.mean_s),
+        t_native_one.per_sec()
+    );
+    csv.row(&[
+        "native_single_score_us".into(),
+        format!("{:.3}", t_native_one.ns() / 1e3),
+        "us".into(),
+    ]);
+
+    // --- native batch ----------------------------------------------------
+    let mut native = BatchScorer::native();
+    let t_native = bench(2, 10, || {
+        native.score_batch(&wf, &waves, &servers, &grid, model)
+    });
+    let per_cand_native = t_native.mean_s / waves.len() as f64;
+    println!(
+        "native batch (64)         : {} ({:.0} candidates/s)",
+        fmt_time(t_native.mean_s),
+        1.0 / per_cand_native
+    );
+    csv.row(&[
+        "native_batch_cand_per_s".into(),
+        format!("{:.1}", 1.0 / per_cand_native),
+        "cand/s".into(),
+    ]);
+
+    // --- XLA batch (AOT artifacts, A/B: fast FFT vs pallas-interpret) ----
+    // Measured baseline on this box (pallas-interpret artifact, §Perf
+    // "before"): 144.8 s / 64-candidate batch — the interpret-mode pallas
+    // grid lowers to an XLA while-loop of dynamic slices on CPU. The
+    // `score_fig6_fast` artifact replaces the convolution with rfft/irfft
+    // ("after"). Set DCFLOW_PERF_PALLAS=1 to re-measure the slow one.
+    let fast = dcflow::runtime::executable::ArtifactRegistry::open_default()
+        .ok()
+        .and_then(|reg| {
+            let name = reg
+                .names()
+                .iter()
+                .find(|n| n.starts_with("score_fig6_fast"))?
+                .to_string();
+            BatchScorer::xla_with(reg, &name).ok()
+        });
+    if let Some(mut xla) = fast {
+        assert_eq!(xla.backend(), ScorerBackend::Xla);
+        let xgrid = GridSpec { dt: grid.dt, n: xla.grid_n };
+        let t_compile = bench(0, 1, || {
+            xla.score_batch(&wf, &waves, &servers, &xgrid, model)
+        });
+        println!("xla(fast) compile+first   : {}", fmt_time(t_compile.mean_s));
+        let t_xla = bench(1, 5, || {
+            xla.score_batch(&wf, &waves, &servers, &xgrid, model)
+        });
+        let per_cand = t_xla.mean_s / waves.len() as f64;
+        println!(
+            "xla(fast) batch (64)      : {} ({:.0} candidates/s)",
+            fmt_time(t_xla.mean_s),
+            1.0 / per_cand
+        );
+        csv.row(&[
+            "xla_fast_batch_cand_per_s".into(),
+            format!("{:.1}", 1.0 / per_cand),
+            "cand/s".into(),
+        ]);
+        println!(
+            "xla(fast) vs native per-candidate speedup: {:.2}x",
+            per_cand_native / per_cand
+        );
+        csv.row(&[
+            "xla_fast_speedup_vs_native".into(),
+            format!("{:.3}", per_cand_native / per_cand),
+            "x".into(),
+        ]);
+        // NOTE: score_batch auto-prefers the fully-fused parametric
+        // (mmde) artifact when response laws allow — which they do for
+        // M/M/1 exponential pools — so the numbers above already measure
+        // the parametric path when artifacts are current. To compare the
+        // grid-marshalling path, xla_with pins score_fig6_fast_* without
+        // the mmde preference only when the mmde artifact is missing.
+    } else {
+        println!("xla/pjrt batch            : skipped (run `make artifacts`)");
+    }
+    if std::env::var("DCFLOW_PERF_PALLAS").is_ok() {
+        if let Ok(reg) = dcflow::runtime::executable::ArtifactRegistry::open_default() {
+            let name = reg
+                .names()
+                .iter()
+                .find(|n| n.starts_with("score_fig6_b"))
+                .map(|s| s.to_string());
+            if let Some(name) = name {
+                let mut slow = BatchScorer::xla_with(reg, &name).unwrap();
+                let xgrid = GridSpec { dt: grid.dt, n: slow.grid_n };
+                let t = bench(0, 1, || {
+                    slow.score_batch(&wf, &waves, &servers, &xgrid, model)
+                });
+                println!("xla(pallas-interpret)     : {} (before-optimization baseline)", fmt_time(t.mean_s));
+                csv.row(&[
+                    "xla_pallas_batch_s".into(),
+                    format!("{:.3}", t.mean_s),
+                    "s".into(),
+                ]);
+            }
+        }
+    }
+
+    // --- convolution micro (the L1 kernel's native twin) ------------------
+    println!("\n== PERF: convolution backends (G-point grids) ==");
+    for g in [512usize, 1024, 2048, 4096] {
+        let dt = 20.0 / g as f64;
+        let a = ServiceDist::exponential(2.0).pdf_grid(dt, g);
+        let b = ServiceDist::exponential(5.0).pdf_grid(dt, g);
+        let td = bench(2, 8, || conv_direct(&a, &b, dt));
+        let tf = bench(2, 20, || conv_fft(&a, &b, dt));
+        println!(
+            "G={g:>5}: direct {} | fft {} | speedup {:.1}x",
+            fmt_time(td.mean_s),
+            fmt_time(tf.mean_s),
+            td.mean_s / tf.mean_s
+        );
+        csv.row(&[
+            format!("conv_fft_g{g}_us"),
+            format!("{:.3}", tf.ns() / 1e3),
+            "us".into(),
+        ]);
+    }
+
+    // --- end-to-end optimizer sweep ---------------------------------------
+    use dcflow::sched::{optimal_allocate, proposed_allocate, Objective};
+    let t_prop = bench(1, 5, || {
+        proposed_allocate(&wf, &servers, model, Objective::Mean).unwrap()
+    });
+    let t_opt = bench(1, 3, || {
+        optimal_allocate(&wf, &servers, &grid, Objective::Mean, model).unwrap()
+    });
+    println!(
+        "\nproposed_allocate (fig6)  : {}\noptimal_allocate  (720)   : {}",
+        fmt_time(t_prop.mean_s),
+        fmt_time(t_opt.mean_s)
+    );
+    csv.row(&[
+        "proposed_allocate_ms".into(),
+        format!("{:.3}", t_prop.ns() / 1e6),
+        "ms".into(),
+    ]);
+    csv.row(&[
+        "optimal_allocate_ms".into(),
+        format!("{:.3}", t_opt.ns() / 1e6),
+        "ms".into(),
+    ]);
+    csv.flush();
+    println!("PERF OK");
+}

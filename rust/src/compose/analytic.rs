@@ -1,0 +1,145 @@
+//! Exponential-family closed forms used to validate the numeric engine
+//! (and to regenerate the paper's Fig. 2 analytically).
+
+/// Erlang(n, lam) PDF — the law of n iid Exp(lam) in series (Fig. 2).
+pub fn erlang_pdf(t: f64, n: u32, lam: f64) -> f64 {
+    if t < 0.0 {
+        return 0.0;
+    }
+    // lam^n t^(n-1) e^(-lam t) / (n-1)!  computed in log space
+    let n_f = n as f64;
+    let log = n_f * lam.ln() + (n_f - 1.0) * t.max(1e-300).ln() - lam * t - ln_factorial(n - 1);
+    log.exp()
+}
+
+/// Erlang(n, lam) CDF: `1 - e^(-lam t) * sum_{k<n} (lam t)^k / k!`.
+pub fn erlang_cdf(t: f64, n: u32, lam: f64) -> f64 {
+    if t <= 0.0 {
+        return 0.0;
+    }
+    let x = lam * t;
+    let mut term = 1.0; // (lam t)^0 / 0!
+    let mut sum = 1.0;
+    for k in 1..n {
+        term *= x / k as f64;
+        sum += term;
+    }
+    (1.0 - (-x).exp() * sum).clamp(0.0, 1.0)
+}
+
+/// Hypoexponential CDF — series of exponentials with *distinct* rates
+/// (generalizes paper Eq. 2): `F(t) = 1 - sum_i C_i e^(-lam_i t)` with
+/// `C_i = prod_{j != i} lam_j / (lam_j - lam_i)`.
+pub fn hypoexp_cdf(t: f64, lams: &[f64]) -> f64 {
+    if t <= 0.0 {
+        return 0.0;
+    }
+    assert!(!lams.is_empty());
+    let mut acc = 1.0;
+    for (i, &li) in lams.iter().enumerate() {
+        let mut c = 1.0;
+        for (j, &lj) in lams.iter().enumerate() {
+            if i != j {
+                assert!(
+                    (lj - li).abs() > 1e-12,
+                    "hypoexp requires distinct rates (use erlang for ties)"
+                );
+                c *= lj / (lj - li);
+            }
+        }
+        acc -= c * (-li * t).exp();
+    }
+    acc.clamp(0.0, 1.0)
+}
+
+/// CDF of `max` of independent exponentials (generalizes paper Eq. 4).
+pub fn max_exp_cdf(t: f64, lams: &[f64]) -> f64 {
+    if t <= 0.0 {
+        return 0.0;
+    }
+    lams.iter().map(|&l| 1.0 - (-l * t).exp()).product()
+}
+
+/// Mean of `max` of n iid Exp(lam): `H_n / lam` (harmonic number).
+pub fn max_iid_exp_mean(n: u32, lam: f64) -> f64 {
+    (1..=n).map(|i| 1.0 / i as f64).sum::<f64>() / lam
+}
+
+/// Variance of `max` of n iid Exp(lam): `sum 1/(i lam)^2`.
+pub fn max_iid_exp_var(n: u32, lam: f64) -> f64 {
+    (1..=n).map(|i| 1.0 / ((i as f64 * lam) * (i as f64 * lam))).sum()
+}
+
+/// M/M/1 sojourn (response) time: Exp(mu - lambda) for lambda < mu.
+/// Returns the response-time *rate* parameter.
+pub fn mm1_response_rate(mu: f64, lambda: f64) -> Option<f64> {
+    if lambda >= mu {
+        None // unstable queue
+    } else {
+        Some(mu - lambda)
+    }
+}
+
+fn ln_factorial(n: u32) -> f64 {
+    (2..=n as u64).map(|k| (k as f64).ln()).sum()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn erlang_pdf_integrates_to_one() {
+        let (n, dt) = (40_000, 0.001);
+        let mass: f64 = (0..n).map(|k| erlang_pdf(k as f64 * dt, 5, 2.0)).sum::<f64>() * dt;
+        assert!((mass - 1.0).abs() < 1e-3, "mass {mass}");
+    }
+
+    #[test]
+    fn erlang_cdf_is_integral_of_pdf() {
+        let dt = 0.0005;
+        let mut acc = 0.0;
+        for k in 0..20_000 {
+            acc += erlang_pdf(k as f64 * dt, 3, 1.5) * dt;
+        }
+        let want = erlang_cdf(20_000.0 * dt, 3, 1.5);
+        assert!((acc - want).abs() < 1e-3);
+    }
+
+    #[test]
+    fn hypoexp_two_rates_matches_eq2() {
+        // paper Eq. 2 exactly, lam = (2, 5)
+        for t in [0.1, 0.5, 1.0, 2.0] {
+            let want = 1.0 - (5.0 / 3.0) * (-2.0f64 * t).exp() + (2.0 / 3.0) * (-5.0f64 * t).exp();
+            assert!((hypoexp_cdf(t, &[2.0, 5.0]) - want).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn hypoexp_reduces_to_exponential() {
+        for t in [0.2, 1.0, 3.0] {
+            assert!((hypoexp_cdf(t, &[2.0]) - (1.0 - (-2.0f64 * t).exp())).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn max_exp_cdf_matches_eq4() {
+        for t in [0.1, 0.6, 1.5] {
+            let want = (1.0 - (-3.0f64 * t).exp()) * (1.0 - (-7.0f64 * t).exp());
+            assert!((max_exp_cdf(t, &[3.0, 7.0]) - want).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn harmonic_mean_of_max() {
+        assert!((max_iid_exp_mean(1, 2.0) - 0.5).abs() < 1e-12);
+        assert!((max_iid_exp_mean(3, 1.0) - (1.0 + 0.5 + 1.0 / 3.0)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn mm1_stability() {
+        assert_eq!(mm1_response_rate(5.0, 2.0), Some(3.0));
+        assert_eq!(mm1_response_rate(2.0, 2.0), None);
+        assert_eq!(mm1_response_rate(2.0, 3.0), None);
+    }
+}

@@ -1,0 +1,170 @@
+//! Self-contained radix-2 complex FFT (iterative Cooley–Tukey).
+//!
+//! Backs the fast convolution path in [`super::conv`]. No external
+//! dependencies; sizes must be powers of two (the conv layer pads).
+
+/// Complex number (f64).
+#[derive(Clone, Copy, Debug, PartialEq, Default)]
+pub struct C64 {
+    /// Real part.
+    pub re: f64,
+    /// Imaginary part.
+    pub im: f64,
+}
+
+impl C64 {
+    /// Construct.
+    #[inline]
+    pub fn new(re: f64, im: f64) -> C64 {
+        C64 { re, im }
+    }
+
+    #[inline]
+    fn mul(self, o: C64) -> C64 {
+        C64 {
+            re: self.re * o.re - self.im * o.im,
+            im: self.re * o.im + self.im * o.re,
+        }
+    }
+
+    #[inline]
+    fn add(self, o: C64) -> C64 {
+        C64 {
+            re: self.re + o.re,
+            im: self.im + o.im,
+        }
+    }
+
+    #[inline]
+    fn sub(self, o: C64) -> C64 {
+        C64 {
+            re: self.re - o.re,
+            im: self.im - o.im,
+        }
+    }
+}
+
+/// In-place iterative radix-2 FFT. `inverse` applies the conjugate
+/// transform *without* the 1/n normalization (callers normalize once).
+pub fn fft_inplace(buf: &mut [C64], inverse: bool) {
+    let n = buf.len();
+    assert!(n.is_power_of_two(), "fft size must be a power of two");
+    if n <= 1 {
+        return;
+    }
+
+    // bit-reversal permutation
+    let mut j = 0usize;
+    for i in 1..n {
+        let mut bit = n >> 1;
+        while j & bit != 0 {
+            j ^= bit;
+            bit >>= 1;
+        }
+        j |= bit;
+        if i < j {
+            buf.swap(i, j);
+        }
+    }
+
+    // butterflies
+    let sign = if inverse { 1.0 } else { -1.0 };
+    let mut len = 2usize;
+    while len <= n {
+        let ang = sign * 2.0 * std::f64::consts::PI / len as f64;
+        let wlen = C64::new(ang.cos(), ang.sin());
+        let mut i = 0;
+        while i < n {
+            let mut w = C64::new(1.0, 0.0);
+            for k in 0..len / 2 {
+                let u = buf[i + k];
+                let v = buf[i + k + len / 2].mul(w);
+                buf[i + k] = u.add(v);
+                buf[i + k + len / 2] = u.sub(v);
+                w = w.mul(wlen);
+            }
+            i += len;
+        }
+        len <<= 1;
+    }
+}
+
+/// Real linear convolution of `a` and `b` (lengths la, lb) returning
+/// `la + lb - 1` coefficients, via zero-padded complex FFT.
+pub fn convolve_real(a: &[f64], b: &[f64]) -> Vec<f64> {
+    let out_len = a.len() + b.len() - 1;
+    let size = out_len.next_power_of_two();
+    let mut fa: Vec<C64> = a.iter().map(|&x| C64::new(x, 0.0)).collect();
+    fa.resize(size, C64::default());
+    let mut fb: Vec<C64> = b.iter().map(|&x| C64::new(x, 0.0)).collect();
+    fb.resize(size, C64::default());
+    fft_inplace(&mut fa, false);
+    fft_inplace(&mut fb, false);
+    for (x, y) in fa.iter_mut().zip(fb.iter()) {
+        *x = x.mul(*y);
+    }
+    fft_inplace(&mut fa, true);
+    let norm = 1.0 / size as f64;
+    fa[..out_len].iter().map(|c| c.re * norm).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop;
+
+    fn naive_conv(a: &[f64], b: &[f64]) -> Vec<f64> {
+        let mut out = vec![0.0; a.len() + b.len() - 1];
+        for (i, &x) in a.iter().enumerate() {
+            for (j, &y) in b.iter().enumerate() {
+                out[i + j] += x * y;
+            }
+        }
+        out
+    }
+
+    #[test]
+    fn fft_roundtrip_identity() {
+        let mut buf: Vec<C64> = (0..16).map(|i| C64::new(i as f64, -(i as f64))).collect();
+        let orig = buf.clone();
+        fft_inplace(&mut buf, false);
+        fft_inplace(&mut buf, true);
+        for (a, b) in buf.iter().zip(orig.iter()) {
+            assert!((a.re / 16.0 - b.re).abs() < 1e-12);
+            assert!((a.im / 16.0 - b.im).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn fft_of_impulse_is_flat() {
+        let mut buf = vec![C64::default(); 8];
+        buf[0] = C64::new(1.0, 0.0);
+        fft_inplace(&mut buf, false);
+        for c in &buf {
+            assert!((c.re - 1.0).abs() < 1e-12 && c.im.abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn convolve_matches_naive_property() {
+        prop::run("fft conv == naive conv", 30, |g| {
+            let la = g.usize_in(1, 60);
+            let lb = g.usize_in(1, 60);
+            let a = g.vec_of(la, |g| g.f64_in(-2.0, 2.0));
+            let b = g.vec_of(lb, |g| g.f64_in(-2.0, 2.0));
+            let fast = convolve_real(&a, &b);
+            let slow = naive_conv(&a, &b);
+            assert_eq!(fast.len(), slow.len());
+            for (x, y) in fast.iter().zip(slow.iter()) {
+                assert!((x - y).abs() < 1e-9, "{x} vs {y}");
+            }
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "power of two")]
+    fn rejects_non_power_of_two() {
+        let mut buf = vec![C64::default(); 12];
+        fft_inplace(&mut buf, false);
+    }
+}

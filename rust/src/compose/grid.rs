@@ -1,0 +1,146 @@
+//! Uniform time grids for numeric distribution work.
+
+use crate::dist::ServiceDist;
+use crate::flow::Workflow;
+use crate::sched::server::Server;
+use crate::sched::Allocation;
+
+/// A uniform grid `t_k = k * dt`, `k = 0..n`.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct GridSpec {
+    /// Step size.
+    pub dt: f64,
+    /// Number of points.
+    pub n: usize,
+}
+
+impl GridSpec {
+    /// Fixed grid.
+    pub fn new(dt: f64, n: usize) -> GridSpec {
+        assert!(dt > 0.0 && n > 8, "grid needs dt>0 and a few points");
+        GridSpec { dt, n }
+    }
+
+    /// The canonical AOT grid (matches `python/compile/aot.py: G`).
+    pub const AOT_N: usize = 1024;
+
+    /// Auto-size a grid for a workflow + allocation: the end-to-end
+    /// support is at most the sum over serial depth of per-branch
+    /// high quantiles; pad by 2x for convolution truncation safety.
+    pub fn auto(alloc: &Allocation, servers: &[Server]) -> GridSpec {
+        let horizon: f64 = alloc
+            .assigned_servers()
+            .map(|sid| servers[sid].dist.quantile(0.9999))
+            .sum::<f64>()
+            .max(1e-6)
+            * 2.0;
+        GridSpec {
+            dt: horizon / Self::AOT_N as f64,
+            n: Self::AOT_N,
+        }
+    }
+
+    /// Auto-size from an explicit set of laws (workflow-independent upper
+    /// bound: every law could appear in series).
+    pub fn auto_for(dists: &[&ServiceDist]) -> GridSpec {
+        let horizon: f64 = dists
+            .iter()
+            .map(|d| d.quantile(0.9999))
+            .sum::<f64>()
+            .max(1e-6)
+            * 2.0;
+        GridSpec {
+            dt: horizon / Self::AOT_N as f64,
+            n: Self::AOT_N,
+        }
+    }
+
+    /// Auto-size for a whole server pool on a workflow (used before an
+    /// allocation exists, e.g. by the optimal exhaustive search).
+    pub fn auto_pool(_wf: &Workflow, servers: &[Server]) -> GridSpec {
+        let dists: Vec<&ServiceDist> = servers.iter().map(|s| &s.dist).collect();
+        Self::auto_for(&dists)
+    }
+
+    /// Auto-size from the *response* laws of an allocation under a
+    /// queueing model — response tails under load are much longer than
+    /// service tails, so p99-style scores need this sizing. Falls back
+    /// to [`GridSpec::auto`] if any queue is unstable.
+    pub fn auto_response(
+        alloc: &crate::sched::Allocation,
+        servers: &[Server],
+        model: crate::sched::ResponseModel,
+    ) -> GridSpec {
+        use crate::sched::response::{response_dist, Response};
+        let mut horizon = 0.0;
+        for slot in 0..alloc.slot_server.len() {
+            let service = &servers[alloc.server_for(slot)].dist;
+            match response_dist(model, service, alloc.rate_for(slot)) {
+                Response::Stable(d) => horizon += d.quantile(0.9999),
+                Response::Unstable => return Self::auto(alloc, servers),
+            }
+        }
+        GridSpec {
+            dt: (horizon * 1.25).max(1e-6) / Self::AOT_N as f64,
+            n: Self::AOT_N,
+        }
+    }
+
+    /// The largest response-aware grid over several allocations — lets a
+    /// comparison score every candidate on a *common* grid.
+    pub fn auto_response_common(
+        allocs: &[&crate::sched::Allocation],
+        servers: &[Server],
+        model: crate::sched::ResponseModel,
+    ) -> GridSpec {
+        allocs
+            .iter()
+            .map(|a| Self::auto_response(a, servers, model))
+            .max_by(|a, b| a.dt.partial_cmp(&b.dt).unwrap())
+            .unwrap_or(GridSpec {
+                dt: 0.01,
+                n: Self::AOT_N,
+            })
+    }
+
+    /// Grid times.
+    pub fn times(&self) -> Vec<f64> {
+        (0..self.n).map(|k| k as f64 * self.dt).collect()
+    }
+
+    /// Largest representable time.
+    pub fn t_max(&self) -> f64 {
+        (self.n - 1) as f64 * self.dt
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn times_are_uniform() {
+        let g = GridSpec::new(0.5, 16);
+        let t = g.times();
+        assert_eq!(t.len(), 16);
+        assert_eq!(t[0], 0.0);
+        assert!((t[3] - 1.5).abs() < 1e-12);
+        assert!((g.t_max() - 7.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn auto_for_covers_tails() {
+        let d1 = ServiceDist::exponential(1.0);
+        let d2 = ServiceDist::delayed_exponential(0.5, 2.0);
+        let g = GridSpec::auto_for(&[&d1, &d2]);
+        assert_eq!(g.n, GridSpec::AOT_N);
+        // t_max must exceed the sum of the 99.99% quantiles
+        assert!(g.t_max() > d1.quantile(0.9999) + d2.quantile(0.9999));
+    }
+
+    #[test]
+    #[should_panic(expected = "grid needs")]
+    fn rejects_degenerate() {
+        GridSpec::new(0.0, 100);
+    }
+}

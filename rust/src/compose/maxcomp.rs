@@ -1,0 +1,138 @@
+//! Parallel composition (paper Eq. 3–4): fork–join completes when the
+//! *last* branch finishes, so the composed CDF is the product of branch
+//! CDFs. Also provides min-composition (first-finisher, the cloning /
+//! speculative-execution primitive from the straggler literature [16]).
+
+use crate::dist::central_diff;
+
+/// CDF of `max(X_1..X_n)`: elementwise product of branch CDFs.
+pub fn max_cdf(cdfs: &[Vec<f64>]) -> Vec<f64> {
+    assert!(!cdfs.is_empty());
+    let n = cdfs[0].len();
+    assert!(cdfs.iter().all(|c| c.len() == n), "grids must match");
+    let mut out = vec![1.0; n];
+    for c in cdfs {
+        for (o, &x) in out.iter_mut().zip(c.iter()) {
+            *o *= x;
+        }
+    }
+    out
+}
+
+/// CDF of `min(X_1..X_n)`: `1 - prod_i (1 - F_i)`.
+pub fn min_cdf(cdfs: &[Vec<f64>]) -> Vec<f64> {
+    assert!(!cdfs.is_empty());
+    let n = cdfs[0].len();
+    assert!(cdfs.iter().all(|c| c.len() == n), "grids must match");
+    let mut surv = vec![1.0; n];
+    for c in cdfs {
+        for (s, &x) in surv.iter_mut().zip(c.iter()) {
+            *s *= 1.0 - x;
+        }
+    }
+    surv.iter().map(|s| 1.0 - s).collect()
+}
+
+/// Parallel composition returning `(cdf, pdf)` of the max, with the PDF
+/// recovered by the shared central-difference convention.
+pub fn parallel_compose(cdfs: &[Vec<f64>], dt: f64) -> (Vec<f64>, Vec<f64>) {
+    let cdf = max_cdf(cdfs);
+    let pdf = central_diff(&cdf, dt);
+    (cdf, pdf)
+}
+
+/// Cloning composition returning `(cdf, pdf)` of the min.
+pub fn cloning_compose(cdfs: &[Vec<f64>], dt: f64) -> (Vec<f64>, Vec<f64>) {
+    let cdf = min_cdf(cdfs);
+    let pdf = central_diff(&cdf, dt);
+    (cdf, pdf)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compose::moments::moments;
+    use crate::dist::ServiceDist;
+    use crate::util::prop;
+
+    #[test]
+    fn max_of_two_exponentials_eq4() {
+        let (n, dt) = (1024, 0.01);
+        let (l1, l2) = (3.0, 7.0);
+        let c1 = ServiceDist::exponential(l1).cdf_grid(dt, n);
+        let c2 = ServiceDist::exponential(l2).cdf_grid(dt, n);
+        let out = max_cdf(&[c1, c2]);
+        for k in (0..n).step_by(53) {
+            let t = k as f64 * dt;
+            let want = (1.0 - (-l1 * t).exp()) * (1.0 - (-l2 * t).exp());
+            assert!((out[k] - want).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn max_mean_grows_with_fanout() {
+        // Fig. 3 effect: E[max of n iid Exp(1)] = H_n (harmonic number)
+        let (n, dt) = (4096, 0.005);
+        let d = ServiceDist::exponential(1.0);
+        let mut prev = 0.0;
+        for fan in [1usize, 2, 4, 8, 16] {
+            let cdfs: Vec<Vec<f64>> = (0..fan).map(|_| d.cdf_grid(dt, n)).collect();
+            let (_, pdf) = parallel_compose(&cdfs, dt);
+            let (mean, _) = moments(&pdf, dt);
+            let harmonic: f64 = (1..=fan).map(|i| 1.0 / i as f64).sum();
+            assert!((mean - harmonic).abs() < 0.05, "fan={fan}: {mean} vs {harmonic}");
+            assert!(mean > prev);
+            prev = mean;
+        }
+    }
+
+    #[test]
+    fn min_of_exponentials_is_exponential() {
+        // min of Exp(a), Exp(b) = Exp(a+b)
+        let (n, dt) = (2048, 0.005);
+        let c1 = ServiceDist::exponential(2.0).cdf_grid(dt, n);
+        let c2 = ServiceDist::exponential(3.0).cdf_grid(dt, n);
+        let out = min_cdf(&[c1, c2]);
+        for k in (0..n).step_by(101) {
+            let t = k as f64 * dt;
+            let want = 1.0 - (-5.0 * t).exp();
+            assert!((out[k] - want).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn max_dominates_every_branch() {
+        prop::run("max stochastically dominates branches", 20, |g| {
+            let n = 256;
+            let dt = 0.05;
+            let fan = g.usize_in(2, 5);
+            let cdfs: Vec<Vec<f64>> = (0..fan)
+                .map(|_| ServiceDist::exponential(g.rate()).cdf_grid(dt, n))
+                .collect();
+            let out = max_cdf(&cdfs);
+            for c in &cdfs {
+                for (o, x) in out.iter().zip(c.iter()) {
+                    assert!(*o <= *x + 1e-12); // F_max <= F_i pointwise
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn min_faster_than_max() {
+        let (n, dt) = (2048, 0.005);
+        let d = ServiceDist::exponential(1.0);
+        let cdfs: Vec<Vec<f64>> = (0..4).map(|_| d.cdf_grid(dt, n)).collect();
+        let (_, pmax) = parallel_compose(&cdfs, dt);
+        let (_, pmin) = cloning_compose(&cdfs, dt);
+        let (mmax, _) = moments(&pmax, dt);
+        let (mmin, _) = moments(&pmin, dt);
+        assert!(mmin < mmax / 4.0, "min {mmin} max {mmax}");
+    }
+
+    #[test]
+    #[should_panic(expected = "grids must match")]
+    fn rejects_mismatched() {
+        max_cdf(&[vec![0.0; 8], vec![0.0; 9]]);
+    }
+}

@@ -1,0 +1,23 @@
+//! Analytic composition engine: turns per-server response-time laws into
+//! the workflow's end-to-end response-time distribution.
+//!
+//! * serial composition  — PDF convolution (paper Eq. 1–2): [`conv`]
+//!   (direct, trapezoid-corrected) and an FFT fast path ([`fft`]);
+//! * parallel composition — CDF product (paper Eq. 3–4): [`maxcomp`]
+//!   (plus min-composition for cloning ablations);
+//! * grid bookkeeping — [`grid`]; moments/quantiles — [`moments`];
+//! * exponential-family closed forms for validation — [`analytic`];
+//! * allocation scoring over a workflow tree — [`score`].
+//!
+//! The numeric conventions (trapezoid cumulative integral, trapezoid
+//! endpoint correction in the convolution, central-difference PDF of a
+//! CDF) are **identical** to `python/compile/kernels/ref.py`, so the
+//! native path and the AOT/PJRT path agree to float tolerance.
+
+pub mod analytic;
+pub mod conv;
+pub mod fft;
+pub mod grid;
+pub mod maxcomp;
+pub mod moments;
+pub mod score;

@@ -1,0 +1,97 @@
+//! Grid moments, quantiles and CDF/PDF conversions — the same trapezoid /
+//! central-difference conventions as `python/compile/kernels/ref.py`.
+
+/// Trapezoid cumulative integral of a PDF grid, clipped to [0, 1].
+pub fn cdf_from_pdf(pdf: &[f64], dt: f64) -> Vec<f64> {
+    let mut acc = 0.0;
+    let p0 = pdf.first().copied().unwrap_or(0.0);
+    pdf.iter()
+        .map(|&p| {
+            acc += p * dt;
+            (acc - dt * (p + p0) / 2.0).clamp(0.0, 1.0)
+        })
+        .collect()
+}
+
+/// (mean, variance) of a PDF grid by Riemann sums, normalized by the
+/// captured mass (grid truncation must not bias the retained part).
+pub fn moments(pdf: &[f64], dt: f64) -> (f64, f64) {
+    let mut mass = 0.0;
+    let mut m1 = 0.0;
+    let mut m2 = 0.0;
+    for (k, &p) in pdf.iter().enumerate() {
+        let t = k as f64 * dt;
+        mass += p;
+        m1 += t * p;
+        m2 += t * t * p;
+    }
+    let mass = (mass * dt).max(1e-12);
+    let mean = m1 * dt / mass;
+    let ex2 = m2 * dt / mass;
+    (mean, (ex2 - mean * mean).max(0.0))
+}
+
+/// Smallest grid time whose CDF reaches `q` (grid end if never reached).
+pub fn quantile(pdf: &[f64], dt: f64, q: f64) -> f64 {
+    let cdf = cdf_from_pdf(pdf, dt);
+    for (k, &c) in cdf.iter().enumerate() {
+        if c >= q {
+            return k as f64 * dt;
+        }
+    }
+    (pdf.len() - 1) as f64 * dt
+}
+
+/// Mass captured by the grid (sanity signal: < 0.99 means the grid
+/// truncated real probability and scores are suspect).
+pub fn captured_mass(pdf: &[f64], dt: f64) -> f64 {
+    pdf.iter().sum::<f64>() * dt
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dist::ServiceDist;
+
+    #[test]
+    fn exponential_moments() {
+        let (n, dt) = (8192, 0.005);
+        let pdf = ServiceDist::exponential(2.0).pdf_grid(dt, n);
+        let (mean, var) = moments(&pdf, dt);
+        assert!((mean - 0.5).abs() < 5e-3, "mean {mean}");
+        assert!((var - 0.25).abs() < 5e-3, "var {var}");
+    }
+
+    #[test]
+    fn cdf_matches_analytic() {
+        let (n, dt) = (4096, 0.005);
+        let d = ServiceDist::exponential(1.0);
+        let cdf = cdf_from_pdf(&d.pdf_grid(dt, n), dt);
+        for k in (1..n).step_by(211) {
+            let want = d.cdf(k as f64 * dt);
+            assert!((cdf[k] - want).abs() < 5e-3, "k={k}");
+        }
+    }
+
+    #[test]
+    fn quantile_median_of_exponential() {
+        let (n, dt) = (8192, 0.002);
+        let pdf = ServiceDist::exponential(1.0).pdf_grid(dt, n);
+        let med = quantile(&pdf, dt, 0.5);
+        assert!((med - (2.0f64).ln()).abs() < 0.01, "median {med}");
+    }
+
+    #[test]
+    fn captured_mass_near_one_when_grid_covers() {
+        let (n, dt) = (4096, 0.01);
+        let pdf = ServiceDist::exponential(2.0).pdf_grid(dt, n);
+        assert!((captured_mass(&pdf, dt) - 1.0).abs() < 0.01);
+    }
+
+    #[test]
+    fn quantile_saturates_at_grid_end() {
+        let (n, dt) = (64, 0.01); // deliberately truncated grid
+        let pdf = ServiceDist::exponential(0.1).pdf_grid(dt, n);
+        assert_eq!(quantile(&pdf, dt, 0.999), (n - 1) as f64 * dt);
+    }
+}

@@ -1,0 +1,209 @@
+//! Allocation scoring: end-to-end response-time law of a workflow under
+//! an allocation, plus the (mean, variance, p99) score triple.
+//!
+//! This is the native twin of the AOT fig6 scorer
+//! (`python/compile/model.py::score_fig6`): identical math, arbitrary
+//! topology. The PJRT path (`crate::runtime::scorer`) is preferred on
+//! the hot loop for the fig6 template; this path covers everything else
+//! and is the cross-check oracle.
+
+use crate::compose::conv::conv_auto;
+use crate::compose::grid::GridSpec;
+use crate::compose::maxcomp::max_cdf;
+use crate::compose::moments::{captured_mass, cdf_from_pdf, moments, quantile};
+use crate::dist::central_diff;
+use crate::flow::{Dcc, Workflow};
+use crate::sched::response::{response_dist, Response, ResponseModel};
+use crate::sched::server::Server;
+use crate::sched::Allocation;
+
+/// Score of one allocation.
+#[derive(Clone, Debug)]
+pub struct Score {
+    /// Mean end-to-end response time.
+    pub mean: f64,
+    /// Variance of the end-to-end response time.
+    pub var: f64,
+    /// 99th percentile.
+    pub p99: f64,
+    /// Probability mass captured by the grid (< 0.99 = suspect grid).
+    pub mass: f64,
+    /// End-to-end response-time PDF on the grid (Fig. 7 curves).
+    pub pdf: Vec<f64>,
+}
+
+impl Score {
+    /// Sentinel for unstable allocations (some queue diverges).
+    pub fn unstable(grid: &GridSpec) -> Score {
+        Score {
+            mean: f64::INFINITY,
+            var: f64::INFINITY,
+            p99: f64::INFINITY,
+            mass: 0.0,
+            pdf: vec![0.0; grid.n],
+        }
+    }
+
+    /// True when every queue in the allocation was stable.
+    pub fn is_stable(&self) -> bool {
+        self.mean.is_finite()
+    }
+}
+
+/// Score with the default M/M/1 response model.
+pub fn score_allocation(
+    wf: &Workflow,
+    alloc: &Allocation,
+    servers: &[Server],
+    grid: &GridSpec,
+) -> Score {
+    score_allocation_with(wf, alloc, servers, grid, ResponseModel::Mm1)
+}
+
+/// Score with an explicit response model.
+pub fn score_allocation_with(
+    wf: &Workflow,
+    alloc: &Allocation,
+    servers: &[Server],
+    grid: &GridSpec,
+    model: ResponseModel,
+) -> Score {
+    match compose_node(wf.root(), alloc, servers, grid, model) {
+        None => Score::unstable(grid),
+        Some((pdf, _cdf)) => {
+            let (mean, var) = moments(&pdf, grid.dt);
+            Score {
+                mean,
+                var,
+                p99: quantile(&pdf, grid.dt, 0.99),
+                mass: captured_mass(&pdf, grid.dt),
+                pdf,
+            }
+        }
+    }
+}
+
+/// End-to-end (pdf, cdf) of a subtree; None if any queue is unstable.
+fn compose_node(
+    node: &Dcc,
+    alloc: &Allocation,
+    servers: &[Server],
+    grid: &GridSpec,
+    model: ResponseModel,
+) -> Option<(Vec<f64>, Vec<f64>)> {
+    match node {
+        Dcc::Queue { slot } => {
+            let lambda = alloc.rate_for(*slot);
+            let service = &servers[alloc.server_for(*slot)].dist;
+            match response_dist(model, service, lambda) {
+                Response::Unstable => None,
+                Response::Stable(d) => {
+                    let cdf = d.cdf_grid(grid.dt, grid.n);
+                    let pdf = central_diff(&cdf, grid.dt);
+                    Some((pdf, cdf))
+                }
+            }
+        }
+        Dcc::Serial { children, .. } => {
+            let mut acc: Option<Vec<f64>> = None;
+            for c in children {
+                let (pdf, _) = compose_node(c, alloc, servers, grid, model)?;
+                acc = Some(match acc {
+                    None => pdf,
+                    Some(prev) => conv_auto(&prev, &pdf, grid.dt),
+                });
+            }
+            let pdf = acc.expect("serial has children");
+            let cdf = cdf_from_pdf(&pdf, grid.dt);
+            Some((pdf, cdf))
+        }
+        Dcc::Parallel { children, .. } => {
+            let mut cdfs = Vec::with_capacity(children.len());
+            for c in children {
+                let (_, cdf) = compose_node(c, alloc, servers, grid, model)?;
+                cdfs.push(cdf);
+            }
+            let cdf = max_cdf(&cdfs);
+            let pdf = central_diff(&cdf, grid.dt);
+            Some((pdf, cdf))
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compose::analytic;
+    use crate::sched::sdcc_allocate;
+
+    fn fig6_setup() -> (Workflow, Vec<Server>) {
+        (
+            Workflow::fig6(),
+            Server::pool_exponential(&[9.0, 8.0, 7.0, 6.0, 5.0, 4.0]),
+        )
+    }
+
+    #[test]
+    fn fig6_paper_scheme_scores_finite() {
+        let (wf, servers) = fig6_setup();
+        let alloc = sdcc_allocate(&wf, &servers).unwrap();
+        let grid = GridSpec::auto(&alloc, &servers);
+        let s = score_allocation(&wf, &alloc, &servers, &grid);
+        assert!(s.is_stable());
+        assert!(s.mean > 0.0 && s.var > 0.0 && s.p99 > s.mean);
+        assert!(s.mass > 0.95, "grid captured {}", s.mass);
+    }
+
+    #[test]
+    fn tandem_matches_hypoexponential() {
+        // two-queue tandem, ServiceOnly model: conv of two exponentials
+        let wf = Workflow::tandem(2, 1.0);
+        let servers = Server::pool_exponential(&[2.0, 5.0]);
+        let alloc = Allocation::new(vec![0, 1], vec![1.0, 1.0], &wf, 2).unwrap();
+        let grid = GridSpec::new(0.01, 2048);
+        let s = score_allocation_with(&wf, &alloc, &servers, &grid, ResponseModel::ServiceOnly);
+        let cdf = cdf_from_pdf(&s.pdf, grid.dt);
+        for k in (0..2048).step_by(173) {
+            let want = analytic::hypoexp_cdf(k as f64 * grid.dt, &[2.0, 5.0]);
+            assert!((cdf[k] - want).abs() < 5e-3, "k={k}");
+        }
+        // mean = 1/2 + 1/5
+        assert!((s.mean - 0.7).abs() < 0.01, "mean {}", s.mean);
+    }
+
+    #[test]
+    fn forkjoin_matches_max_law() {
+        let wf = Workflow::forkjoin(2, 1.0);
+        let servers = Server::pool_exponential(&[3.0, 7.0]);
+        let alloc = Allocation::new(vec![0, 1], vec![0.5, 0.5], &wf, 2).unwrap();
+        let grid = GridSpec::new(0.005, 2048);
+        let s = score_allocation_with(&wf, &alloc, &servers, &grid, ResponseModel::ServiceOnly);
+        let cdf = cdf_from_pdf(&s.pdf, grid.dt);
+        for k in (8..2048).step_by(191) {
+            let want = analytic::max_exp_cdf(k as f64 * grid.dt, &[3.0, 7.0]);
+            assert!((cdf[k] - want).abs() < 0.01, "k={k}: {} vs {want}", cdf[k]);
+        }
+    }
+
+    #[test]
+    fn unstable_allocation_scores_infinite() {
+        let wf = Workflow::tandem(1, 5.0);
+        let servers = Server::pool_exponential(&[2.0]); // mu < lambda
+        let alloc = Allocation::new(vec![0], vec![5.0], &wf, 1).unwrap();
+        let grid = GridSpec::new(0.01, 1024);
+        let s = score_allocation(&wf, &alloc, &servers, &grid);
+        assert!(!s.is_stable());
+        assert_eq!(s.mean, f64::INFINITY);
+    }
+
+    #[test]
+    fn mm1_tandem_mean_is_sum_of_sojourns() {
+        let wf = Workflow::tandem(2, 1.0);
+        let servers = Server::pool_exponential(&[3.0, 4.0]);
+        let alloc = Allocation::new(vec![0, 1], vec![1.0, 1.0], &wf, 2).unwrap();
+        let grid = GridSpec::new(0.005, 4096);
+        let s = score_allocation(&wf, &alloc, &servers, &grid);
+        let want = 1.0 / (3.0 - 1.0) + 1.0 / (4.0 - 1.0);
+        assert!((s.mean - want).abs() < 0.01, "mean {} want {want}", s.mean);
+    }
+}

@@ -1,0 +1,372 @@
+//! JSON-over-TCP service API: the deployment face of the coordinator.
+//!
+//! A thin line-delimited JSON protocol (one request object per line, one
+//! response object per line) so operators and sidecars can drive the
+//! scheduler without linking rust:
+//!
+//! ```text
+//! -> {"cmd":"score",    "workflow": {...}, "servers":[9,8,7], "model":"mm1"}
+//! <- {"ok":true, "policies": {"proposed": {"mean":..,"var":..,"p99":..}, ...}}
+//! -> {"cmd":"allocate", "workflow": {...}, "servers":[...]}
+//! <- {"ok":true, "slots":[2,0,1], "rates":[4.0,4.0,2.0], "mean":...}
+//! -> {"cmd":"capacity", "workflow": {...}, "servers":[...], "sla_mean": 2.0}
+//! <- {"ok":true, "max_throughput":.., "sla_throughput":..}
+//! -> {"cmd":"ping"}            <- {"ok":true,"service":"dcflow"}
+//! -> {"cmd":"shutdown"}        <- {"ok":true}   (server exits)
+//! ```
+//!
+//! Implementation: std TCP listener + one thread per connection (the
+//! scheduler calls are CPU-bound and short; no async runtime exists in
+//! the vendored crate set, and none is needed at this request scale).
+
+use crate::compose::grid::GridSpec;
+use crate::compose::score::score_allocation_with;
+use crate::flow::parse::workflow_from_json;
+use crate::flow::Workflow;
+use crate::sched::capacity::{max_throughput, max_throughput_under_sla, Sla};
+use crate::sched::server::Server;
+use crate::sched::{
+    baseline_allocate, proposed_allocate, Objective, ResponseModel,
+};
+use crate::util::json::Json;
+use std::collections::BTreeMap;
+use std::io::{BufRead, BufReader, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+
+/// Handle to a running API server.
+pub struct ApiServer {
+    addr: std::net::SocketAddr,
+    stop: Arc<AtomicBool>,
+    join: Option<std::thread::JoinHandle<()>>,
+}
+
+impl ApiServer {
+    /// Bind and serve on `addr` (use port 0 for an ephemeral port).
+    pub fn start(addr: &str) -> std::io::Result<ApiServer> {
+        let listener = TcpListener::bind(addr)?;
+        let local = listener.local_addr()?;
+        let stop = Arc::new(AtomicBool::new(false));
+        let stop2 = stop.clone();
+        let join = std::thread::Builder::new()
+            .name("dcflow-api".into())
+            .spawn(move || serve(listener, stop2))
+            .expect("spawn api server");
+        Ok(ApiServer {
+            addr: local,
+            stop,
+            join: Some(join),
+        })
+    }
+
+    /// Bound address (resolves ephemeral ports).
+    pub fn addr(&self) -> std::net::SocketAddr {
+        self.addr
+    }
+
+    /// Stop the server and join its thread.
+    pub fn stop(mut self) {
+        self.stop.store(true, Ordering::SeqCst);
+        // poke the accept loop
+        let _ = TcpStream::connect(self.addr);
+        if let Some(j) = self.join.take() {
+            let _ = j.join();
+        }
+    }
+}
+
+impl Drop for ApiServer {
+    fn drop(&mut self) {
+        self.stop.store(true, Ordering::SeqCst);
+        let _ = TcpStream::connect(self.addr);
+        if let Some(j) = self.join.take() {
+            let _ = j.join();
+        }
+    }
+}
+
+fn serve(listener: TcpListener, stop: Arc<AtomicBool>) {
+    for conn in listener.incoming() {
+        if stop.load(Ordering::SeqCst) {
+            break;
+        }
+        match conn {
+            Ok(stream) => {
+                let stop = stop.clone();
+                std::thread::spawn(move || handle_conn(stream, stop));
+            }
+            Err(_) => break,
+        }
+    }
+}
+
+fn handle_conn(stream: TcpStream, stop: Arc<AtomicBool>) {
+    let peer = stream.try_clone();
+    let reader = BufReader::new(stream);
+    let Ok(mut writer) = peer else { return };
+    for line in reader.lines() {
+        let Ok(line) = line else { return };
+        if line.trim().is_empty() {
+            continue;
+        }
+        let resp = dispatch(&line, &stop);
+        let _ = writeln!(writer, "{}", resp.to_string());
+        if stop.load(Ordering::SeqCst) {
+            return;
+        }
+    }
+}
+
+fn err(msg: &str) -> Json {
+    let mut m = BTreeMap::new();
+    m.insert("ok".into(), Json::Bool(false));
+    m.insert("error".into(), Json::Str(msg.into()));
+    Json::Obj(m)
+}
+
+fn parse_pool(v: &Json) -> Result<Vec<Server>, String> {
+    let arr = v
+        .get("servers")
+        .and_then(Json::as_arr)
+        .ok_or("missing 'servers' array")?;
+    let rates: Vec<f64> = arr
+        .iter()
+        .map(|x| x.as_f64().ok_or("non-numeric server rate".to_string()))
+        .collect::<Result<_, _>>()?;
+    if rates.is_empty() {
+        return Err("empty server pool".into());
+    }
+    Ok(Server::pool_exponential(&rates))
+}
+
+fn parse_model(v: &Json) -> Result<ResponseModel, String> {
+    match v.get("model").and_then(Json::as_str).unwrap_or("mm1") {
+        "service_only" => Ok(ResponseModel::ServiceOnly),
+        "mm1" => Ok(ResponseModel::Mm1),
+        "mg1" => Ok(ResponseModel::Mg1),
+        other => Err(format!("unknown model '{other}'")),
+    }
+}
+
+fn parse_workflow(v: &Json) -> Result<Workflow, String> {
+    let wf_v = v.get("workflow").ok_or("missing 'workflow'")?;
+    workflow_from_json(&wf_v.to_string()).map_err(|e| e.to_string())
+}
+
+fn score_obj(mean: f64, var: f64, p99: f64) -> Json {
+    let mut m = BTreeMap::new();
+    m.insert("mean".into(), Json::Num(mean));
+    m.insert("var".into(), Json::Num(var));
+    m.insert("p99".into(), Json::Num(p99));
+    Json::Obj(m)
+}
+
+fn dispatch(line: &str, stop: &AtomicBool) -> Json {
+    let req = match Json::parse(line) {
+        Ok(v) => v,
+        Err(e) => return err(&format!("bad json: {e}")),
+    };
+    let cmd = req.get("cmd").and_then(Json::as_str).unwrap_or("");
+    match cmd {
+        "ping" => {
+            let mut m = BTreeMap::new();
+            m.insert("ok".into(), Json::Bool(true));
+            m.insert("service".into(), Json::Str("dcflow".into()));
+            m.insert(
+                "version".into(),
+                Json::Str(env!("CARGO_PKG_VERSION").into()),
+            );
+            Json::Obj(m)
+        }
+        "shutdown" => {
+            stop.store(true, Ordering::SeqCst);
+            let mut m = BTreeMap::new();
+            m.insert("ok".into(), Json::Bool(true));
+            Json::Obj(m)
+        }
+        "score" => match cmd_score(&req) {
+            Ok(v) => v,
+            Err(e) => err(&e),
+        },
+        "allocate" => match cmd_allocate(&req) {
+            Ok(v) => v,
+            Err(e) => err(&e),
+        },
+        "capacity" => match cmd_capacity(&req) {
+            Ok(v) => v,
+            Err(e) => err(&e),
+        },
+        other => err(&format!("unknown cmd '{other}'")),
+    }
+}
+
+fn cmd_score(req: &Json) -> Result<Json, String> {
+    let wf = parse_workflow(req)?;
+    let servers = parse_pool(req)?;
+    let model = parse_model(req)?;
+    let (ours, s_ours) = proposed_allocate(&wf, &servers, model, Objective::Mean)
+        .map_err(|e| e.to_string())?;
+    let grid = GridSpec::auto_response(&ours, &servers, model);
+    let mut policies = BTreeMap::new();
+    policies.insert(
+        "proposed".into(),
+        score_obj(s_ours.mean, s_ours.var, s_ours.p99),
+    );
+    if let Ok(b) = baseline_allocate(&wf, &servers, model) {
+        let s = score_allocation_with(&wf, &b, &servers, &grid, model);
+        policies.insert("baseline".into(), score_obj(s.mean, s.var, s.p99));
+    }
+    let mut m = BTreeMap::new();
+    m.insert("ok".into(), Json::Bool(true));
+    m.insert("policies".into(), Json::Obj(policies));
+    Ok(Json::Obj(m))
+}
+
+fn cmd_allocate(req: &Json) -> Result<Json, String> {
+    let wf = parse_workflow(req)?;
+    let servers = parse_pool(req)?;
+    let model = parse_model(req)?;
+    let (alloc, score) = proposed_allocate(&wf, &servers, model, Objective::Mean)
+        .map_err(|e| e.to_string())?;
+    let mut m = BTreeMap::new();
+    m.insert("ok".into(), Json::Bool(true));
+    m.insert(
+        "slots".into(),
+        Json::Arr(
+            alloc
+                .slot_server
+                .iter()
+                .map(|&s| Json::Num(s as f64))
+                .collect(),
+        ),
+    );
+    m.insert(
+        "rates".into(),
+        Json::Arr(alloc.slot_rate.iter().map(|&r| Json::Num(r)).collect()),
+    );
+    m.insert("score".into(), score_obj(score.mean, score.var, score.p99));
+    Ok(Json::Obj(m))
+}
+
+fn cmd_capacity(req: &Json) -> Result<Json, String> {
+    let wf = parse_workflow(req)?;
+    let servers = parse_pool(req)?;
+    let model = parse_model(req)?;
+    let raw = max_throughput(&wf, &servers, model).map_err(|e| e.to_string())?;
+    let mut m = BTreeMap::new();
+    m.insert("ok".into(), Json::Bool(true));
+    m.insert("max_throughput".into(), Json::Num(raw));
+    if let Some(b) = req.get("sla_mean").and_then(Json::as_f64) {
+        let t = max_throughput_under_sla(&wf, &servers, model, Sla::Mean(b))
+            .map_err(|e| e.to_string())?;
+        m.insert("sla_throughput".into(), Json::Num(t));
+    }
+    if let Some(b) = req.get("sla_p99").and_then(Json::as_f64) {
+        let t = max_throughput_under_sla(&wf, &servers, model, Sla::P99(b))
+            .map_err(|e| e.to_string())?;
+        m.insert("sla_p99_throughput".into(), Json::Num(t));
+    }
+    Ok(Json::Obj(m))
+}
+
+/// Blocking one-shot client for the line protocol (used by the CLI and
+/// tests).
+pub fn request(addr: std::net::SocketAddr, req: &str) -> std::io::Result<Json> {
+    let mut stream = TcpStream::connect(addr)?;
+    writeln!(stream, "{req}")?;
+    let mut reader = BufReader::new(stream);
+    let mut line = String::new();
+    reader.read_line(&mut line)?;
+    Json::parse(&line).map_err(|e| std::io::Error::other(e.to_string()))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // NOTE: single-line (the wire protocol is line-delimited)
+    const FIG6ISH: &str = r#"{"type":"serial","children":[{"type":"parallel","rate":8.0,"children":[{"type":"queue"},{"type":"queue"}]},{"type":"queue","rate":4.0}]}"#;
+
+    fn req_with_workflow(cmd: &str, extra: &str) -> String {
+        format!(
+            r#"{{"cmd":"{cmd}","workflow":{{"arrival_rate":8.0,"root":{FIG6ISH}}},"servers":[9,8,7]{extra}}}"#
+        )
+    }
+
+    #[test]
+    fn ping_roundtrip() {
+        let srv = ApiServer::start("127.0.0.1:0").unwrap();
+        let resp = request(srv.addr(), r#"{"cmd":"ping"}"#).unwrap();
+        assert_eq!(resp.get("ok"), Some(&Json::Bool(true)));
+        assert_eq!(resp.get("service").and_then(Json::as_str), Some("dcflow"));
+        srv.stop();
+    }
+
+    #[test]
+    fn allocate_over_the_wire() {
+        let srv = ApiServer::start("127.0.0.1:0").unwrap();
+        let resp = request(srv.addr(), &req_with_workflow("allocate", "")).unwrap();
+        assert_eq!(resp.get("ok"), Some(&Json::Bool(true)), "{resp:?}");
+        let slots = resp.get("slots").and_then(Json::as_arr).unwrap();
+        assert_eq!(slots.len(), 3);
+        let mean = resp
+            .get("score")
+            .and_then(|s| s.get("mean"))
+            .and_then(Json::as_f64)
+            .unwrap();
+        assert!(mean > 0.0 && mean.is_finite());
+        srv.stop();
+    }
+
+    #[test]
+    fn score_compares_policies() {
+        let srv = ApiServer::start("127.0.0.1:0").unwrap();
+        let resp = request(srv.addr(), &req_with_workflow("score", "")).unwrap();
+        assert_eq!(resp.get("ok"), Some(&Json::Bool(true)), "{resp:?}");
+        let pol = resp.get("policies").unwrap();
+        assert!(pol.get("proposed").is_some());
+        assert!(pol.get("baseline").is_some());
+        srv.stop();
+    }
+
+    #[test]
+    fn capacity_with_sla() {
+        let srv = ApiServer::start("127.0.0.1:0").unwrap();
+        let resp =
+            request(srv.addr(), &req_with_workflow("capacity", r#","sla_mean":1.0"#)).unwrap();
+        assert_eq!(resp.get("ok"), Some(&Json::Bool(true)), "{resp:?}");
+        let raw = resp.get("max_throughput").and_then(Json::as_f64).unwrap();
+        let sla = resp.get("sla_throughput").and_then(Json::as_f64).unwrap();
+        assert!(sla <= raw && sla > 0.0);
+        srv.stop();
+    }
+
+    #[test]
+    fn bad_requests_get_errors_not_disconnects() {
+        let srv = ApiServer::start("127.0.0.1:0").unwrap();
+        for bad in [
+            "{not json",
+            r#"{"cmd":"nope"}"#,
+            r#"{"cmd":"allocate"}"#,
+            r#"{"cmd":"allocate","workflow":{"arrival_rate":1,"root":{"type":"queue"}},"servers":[]}"#,
+        ] {
+            let resp = request(srv.addr(), bad).unwrap();
+            assert_eq!(resp.get("ok"), Some(&Json::Bool(false)), "req {bad}");
+            assert!(resp.get("error").is_some());
+        }
+        srv.stop();
+    }
+
+    #[test]
+    fn shutdown_stops_server() {
+        let srv = ApiServer::start("127.0.0.1:0").unwrap();
+        let addr = srv.addr();
+        let resp = request(addr, r#"{"cmd":"shutdown"}"#).unwrap();
+        assert_eq!(resp.get("ok"), Some(&Json::Bool(true)));
+        srv.stop();
+        // subsequent connections should fail (listener gone)
+        std::thread::sleep(std::time::Duration::from_millis(50));
+        assert!(request(addr, r#"{"cmd":"ping"}"#).is_err());
+    }
+}

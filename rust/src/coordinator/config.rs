@@ -1,0 +1,134 @@
+//! Coordinator configuration (programmatic + JSON).
+
+use crate::sched::{Objective, ResponseModel};
+use crate::util::json::Json;
+
+/// Allocation policy the coordinator runs.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Policy {
+    /// The paper's scheme (Alg. 1–3).
+    Proposed,
+    /// §3 heuristic baseline.
+    Baseline,
+    /// Exhaustive optimal (small pools only).
+    Optimal,
+}
+
+/// Coordinator knobs.
+#[derive(Clone, Copy, Debug)]
+pub struct CoordinatorConfig {
+    /// RNG seed (workers fork from it).
+    pub seed: u64,
+    /// Sliding-window length per server monitor.
+    pub monitor_window: usize,
+    /// Samples required before a parametric re-fit is trusted.
+    pub min_fit_samples: usize,
+    /// Re-optimization check cadence in completed tasks (0 = never).
+    pub reopt_every: u64,
+    /// Only swap allocations when drift is detected (vs every check).
+    pub reopt_on_drift_only: bool,
+    /// Allocation policy.
+    pub policy: Policy,
+    /// Queueing model for scoring/scheduling.
+    pub model: ResponseModel,
+    /// Objective for the optimal policy.
+    pub objective: Objective,
+}
+
+impl Default for CoordinatorConfig {
+    fn default() -> Self {
+        CoordinatorConfig {
+            seed: 0xC0FFEE,
+            monitor_window: 2048,
+            min_fit_samples: 256,
+            reopt_every: 1000,
+            reopt_on_drift_only: true,
+            policy: Policy::Proposed,
+            model: ResponseModel::Mm1,
+            objective: Objective::Mean,
+        }
+    }
+}
+
+impl CoordinatorConfig {
+    /// Parse from JSON (missing fields keep defaults):
+    /// `{"seed": 1, "policy": "proposed", "reopt_every": 500, ...}`.
+    pub fn from_json(text: &str) -> Result<CoordinatorConfig, String> {
+        let v = Json::parse(text).map_err(|e| e.to_string())?;
+        let mut c = CoordinatorConfig::default();
+        if let Some(x) = v.get("seed").and_then(Json::as_f64) {
+            c.seed = x as u64;
+        }
+        if let Some(x) = v.get("monitor_window").and_then(Json::as_usize) {
+            c.monitor_window = x;
+        }
+        if let Some(x) = v.get("min_fit_samples").and_then(Json::as_usize) {
+            c.min_fit_samples = x;
+        }
+        if let Some(x) = v.get("reopt_every").and_then(Json::as_f64) {
+            c.reopt_every = x as u64;
+        }
+        if let Some(x) = v.get("reopt_on_drift_only").and_then(Json::as_bool) {
+            c.reopt_on_drift_only = x;
+        }
+        if let Some(p) = v.get("policy").and_then(Json::as_str) {
+            c.policy = match p {
+                "proposed" | "ours" => Policy::Proposed,
+                "baseline" => Policy::Baseline,
+                "optimal" => Policy::Optimal,
+                other => return Err(format!("unknown policy '{other}'")),
+            };
+        }
+        if let Some(m) = v.get("model").and_then(Json::as_str) {
+            c.model = match m {
+                "service_only" => ResponseModel::ServiceOnly,
+                "mm1" => ResponseModel::Mm1,
+                "mg1" => ResponseModel::Mg1,
+                other => return Err(format!("unknown model '{other}'")),
+            };
+        }
+        if let Some(o) = v.get("objective").and_then(Json::as_str) {
+            c.objective = match o {
+                "mean" => Objective::Mean,
+                "variance" | "var" => Objective::Variance,
+                "p99" => Objective::P99,
+                other => return Err(format!("unknown objective '{other}'")),
+            };
+        }
+        Ok(c)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_are_sane() {
+        let c = CoordinatorConfig::default();
+        assert_eq!(c.policy, Policy::Proposed);
+        assert!(c.monitor_window >= c.min_fit_samples);
+    }
+
+    #[test]
+    fn json_overrides() {
+        let c = CoordinatorConfig::from_json(
+            r#"{"seed": 7, "policy": "baseline", "model": "mg1",
+                "objective": "p99", "reopt_every": 250,
+                "reopt_on_drift_only": false}"#,
+        )
+        .unwrap();
+        assert_eq!(c.seed, 7);
+        assert_eq!(c.policy, Policy::Baseline);
+        assert_eq!(c.model, ResponseModel::Mg1);
+        assert_eq!(c.objective, Objective::P99);
+        assert_eq!(c.reopt_every, 250);
+        assert!(!c.reopt_on_drift_only);
+    }
+
+    #[test]
+    fn bad_policy_rejected() {
+        assert!(CoordinatorConfig::from_json(r#"{"policy": "nope"}"#).is_err());
+        assert!(CoordinatorConfig::from_json("{bad").is_err());
+    }
+}

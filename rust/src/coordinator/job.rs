@@ -1,0 +1,41 @@
+//! Jobs and tasks flowing through the coordinator.
+
+use crate::flow::Workflow;
+
+/// A submitted job: a workflow plus bookkeeping identity.
+#[derive(Clone, Debug)]
+pub struct Job {
+    /// Job id (coordinator-assigned).
+    pub id: u64,
+    /// Human-readable name.
+    pub name: String,
+    /// The workflow to run.
+    pub workflow: Workflow,
+}
+
+/// One datum traversing a job's workflow.
+#[derive(Clone, Copy, Debug)]
+pub struct Task {
+    /// Owning job.
+    pub job_id: u64,
+    /// Sequence number within the job.
+    pub seq: u64,
+    /// Arrival time (virtual clock).
+    pub arrival: f64,
+}
+
+/// Completion record for one task.
+#[derive(Clone, Copy, Debug)]
+pub struct Completion {
+    /// The task.
+    pub task: Task,
+    /// Completion time (virtual clock).
+    pub finish: f64,
+}
+
+impl Completion {
+    /// End-to-end latency.
+    pub fn latency(&self) -> f64 {
+        self.finish - self.task.arrival
+    }
+}

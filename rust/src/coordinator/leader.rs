@@ -1,0 +1,465 @@
+//! The leader: Algorithm 3 as a running system.
+//!
+//! ```text
+//! loop per arriving task:
+//!     dispatch through the workflow tree using the current allocation
+//!     (virtual per-server clocks; real worker threads draw services)
+//! every reopt_every completions:
+//!     refresh the believed pool from the monitors (dist::fit)
+//!     if drift detected (or always, per config):
+//!         re-run the allocator; swap allocations if changed
+//! ```
+//!
+//! The leader never sees a worker's hidden law — only observed service
+//! times, exactly the information the paper's Alg. 3 assumes.
+
+use crate::coordinator::config::{CoordinatorConfig, Policy};
+use crate::coordinator::job::{Completion, Job, Task};
+use crate::coordinator::metrics::Metrics;
+use crate::coordinator::worker::{WorkerHandle, WorkerSpec};
+use crate::compose::grid::GridSpec;
+use crate::flow::Dcc;
+use crate::monitor::MonitorRegistry;
+use crate::sched::{baseline_allocate, optimal_allocate, proposed_allocate, Allocation, SchedError};
+use crate::sched::server::Server;
+use crate::sim::trace::Trace;
+
+/// Outcome of a coordinator run.
+#[derive(Clone, Debug)]
+pub struct RunReport {
+    /// Aggregated metrics.
+    pub metrics: Metrics,
+    /// Allocation in force at the end of the run.
+    pub final_allocation: Allocation,
+    /// Allocation swaps performed (time, reason).
+    pub swaps: Vec<(u64, String)>,
+}
+
+/// The coordinator: owns workers, monitors and the allocation loop.
+pub struct Coordinator {
+    workers: Vec<WorkerHandle>,
+    /// The leader's *believed* server laws (refreshed from monitors).
+    pool_view: Vec<Server>,
+    monitors: MonitorRegistry,
+    cfg: CoordinatorConfig,
+    next_job_id: u64,
+}
+
+impl Coordinator {
+    /// Spawn one worker per spec. `initial_view` is the leader's prior
+    /// belief about each server's law (ids must match specs).
+    pub fn new(
+        specs: Vec<WorkerSpec>,
+        initial_view: Vec<Server>,
+        cfg: CoordinatorConfig,
+    ) -> Coordinator {
+        assert_eq!(specs.len(), initial_view.len());
+        let n = specs.len();
+        let workers = specs
+            .into_iter()
+            .map(|s| WorkerHandle::spawn(s, cfg.seed))
+            .collect();
+        Coordinator {
+            workers,
+            pool_view: initial_view,
+            monitors: MonitorRegistry::new(n, cfg.monitor_window, cfg.min_fit_samples),
+            cfg,
+            next_job_id: 1,
+        }
+    }
+
+    /// Convenience: workers that exactly match the leader's prior.
+    pub fn with_truthful_priors(servers: Vec<Server>, cfg: CoordinatorConfig) -> Coordinator {
+        let specs = servers
+            .iter()
+            .map(|s| WorkerSpec::stable(s.id, s.dist.clone()))
+            .collect();
+        Coordinator::new(specs, servers, cfg)
+    }
+
+    /// Create a job handle.
+    pub fn submit(&mut self, name: &str, workflow: crate::flow::Workflow) -> Job {
+        let id = self.next_job_id;
+        self.next_job_id += 1;
+        Job {
+            id,
+            name: name.to_string(),
+            workflow,
+        }
+    }
+
+    /// The leader's current believed pool.
+    pub fn pool_view(&self) -> &[Server] {
+        &self.pool_view
+    }
+
+    /// Monitor registry (read access for reporting).
+    pub fn monitors(&self) -> &MonitorRegistry {
+        &self.monitors
+    }
+
+    fn allocate(&self, job: &Job) -> Result<Allocation, SchedError> {
+        match self.cfg.policy {
+            Policy::Proposed => proposed_allocate(
+                &job.workflow,
+                &self.pool_view,
+                self.cfg.model,
+                self.cfg.objective,
+            )
+            .map(|(a, _)| a),
+            Policy::Baseline => {
+                baseline_allocate(&job.workflow, &self.pool_view, self.cfg.model)
+            }
+            Policy::Optimal => {
+                let grid = GridSpec::auto_pool(&job.workflow, &self.pool_view);
+                optimal_allocate(
+                    &job.workflow,
+                    &self.pool_view,
+                    &grid,
+                    self.cfg.objective,
+                    self.cfg.model,
+                )
+                .map(|(a, _)| a)
+            }
+        }
+    }
+
+    /// Run a job over an arrival trace to completion.
+    pub fn run_job(&mut self, job: &Job, trace: &Trace) -> Result<RunReport, SchedError> {
+        let mut alloc = self.allocate(job)?;
+        let mut metrics = Metrics::new(self.workers.len());
+        let mut swaps = Vec::new();
+        let mut next_free = vec![0.0f64; self.workers.len()];
+
+        for (seq, &arrival) in trace.arrivals.iter().enumerate() {
+            let task = Task {
+                job_id: job.id,
+                seq: seq as u64,
+                arrival,
+            };
+            let finish =
+                self.dispatch(job.workflow.root(), &alloc, arrival, 1.0, &mut next_free, &mut metrics);
+            let completion = Completion { task, finish };
+            metrics.record_completion(completion.latency(), finish);
+
+            // Algorithm 3's periodic re-optimization
+            if self.cfg.reopt_every > 0 && metrics.completed % self.cfg.reopt_every == 0 {
+                let drifted = self.monitors.any_drifted(self.cfg.min_fit_samples / 2);
+                if drifted || !self.cfg.reopt_on_drift_only {
+                    self.monitors.refresh_pool(&mut self.pool_view);
+                    if let Ok(new_alloc) = self.allocate(job) {
+                        if new_alloc != alloc {
+                            alloc = new_alloc;
+                            metrics.record_reopt();
+                            swaps.push((
+                                metrics.completed,
+                                if drifted {
+                                    "drift".to_string()
+                                } else {
+                                    "periodic".to_string()
+                                },
+                            ));
+                        }
+                    }
+                }
+            }
+        }
+
+        Ok(RunReport {
+            metrics,
+            final_allocation: alloc,
+            swaps,
+        })
+    }
+
+    /// Recursive dispatch of one datum through the tree at virtual time
+    /// `start`; returns the completion time.
+    ///
+    /// Parallel DCCs use *partitioned-data* fork–join semantics (the
+    /// paper's "data is partitioned and sent through a set of DCCs in
+    /// parallel"): every branch is visited, and a branch holding a
+    /// fraction w_i of the DAP's scheduled rate processes w_i·n of the
+    /// datum — its drawn service time is scaled by w_i·n (uniform split
+    /// ⇒ scale 1). This is what makes Algorithm 2's rate schedule
+    /// meaningful on the live path: equilibrium splits balance branch
+    /// completion times, uniform splits let the slowest branch dominate
+    /// the join. (The steady-state DES in `sim::network` instead models
+    /// rate-split stations, matching the Eq. 1–3 analytics; the two
+    /// semantics are cross-compared in EXPERIMENTS.md.)
+    fn dispatch(
+        &mut self,
+        node: &Dcc,
+        alloc: &Allocation,
+        start: f64,
+        scale: f64,
+        next_free: &mut [f64],
+        metrics: &mut Metrics,
+    ) -> f64 {
+        match node {
+            Dcc::Queue { slot } => {
+                let sid = alloc.server_for(*slot);
+                let service = self.workers[sid].draw() * scale;
+                let begin = start.max(next_free[sid]);
+                let finish = begin + service;
+                next_free[sid] = finish;
+                // monitors see the *unit* service time (the server's own
+                // speed), not the data-share-scaled one
+                self.monitors.observe(sid, service / scale.max(1e-12));
+                metrics.record_service(sid, service);
+                finish
+            }
+            Dcc::Serial { children, .. } => {
+                let mut t = start;
+                for c in children {
+                    t = self.dispatch(c, alloc, t, scale, next_free, metrics);
+                }
+                t
+            }
+            Dcc::Parallel { children, .. } => {
+                // partitioned fork–join: branch i gets data share w_i
+                let rates: Vec<f64> = children
+                    .iter()
+                    .map(|c| Self::entry_rate(c, alloc))
+                    .collect();
+                let total: f64 = rates.iter().sum();
+                let n = children.len() as f64;
+                children
+                    .iter()
+                    .zip(&rates)
+                    .map(|(c, &r)| {
+                        let w = if total > 0.0 { r * n / total } else { 1.0 };
+                        self.dispatch(c, alloc, start, scale * w, next_free, metrics)
+                    })
+                    .fold(start, f64::max)
+            }
+        }
+    }
+
+    /// Scheduled arrival rate at a branch's entry DAP (its first leaf).
+    fn entry_rate(node: &Dcc, alloc: &Allocation) -> f64 {
+        match node {
+            Dcc::Queue { slot } => alloc.rate_for(*slot),
+            Dcc::Serial { children, .. } | Dcc::Parallel { children, .. } => children
+                .first()
+                .map(|c| Self::entry_rate(c, alloc))
+                .unwrap_or(0.0),
+        }
+    }
+
+    /// Shut all workers down; returns per-worker served counts.
+    pub fn shutdown(self) -> Vec<u64> {
+        self.workers.into_iter().map(|w| w.shutdown()).collect()
+    }
+
+    // ---- membership plumbing (see coordinator::churn) -------------------
+
+    pub(crate) fn workers_len(&self) -> usize {
+        self.workers.len()
+    }
+
+    pub(crate) fn seed(&self) -> u64 {
+        self.cfg.seed
+    }
+
+    pub(crate) fn push_worker(&mut self, w: crate::coordinator::worker::WorkerHandle, prior: Server) {
+        self.workers.push(w);
+        self.pool_view.push(prior);
+        let window = self.cfg.monitor_window;
+        let min_fit = self.cfg.min_fit_samples;
+        let n = self.workers.len();
+        // extend the registry by rebuilding (windows restart for all —
+        // acceptable at membership-change epochs)
+        self.monitors = crate::monitor::MonitorRegistry::new(n, window, min_fit);
+    }
+
+    pub(crate) fn pop_worker(&mut self) -> Option<crate::coordinator::worker::WorkerHandle> {
+        let w = self.workers.pop();
+        if w.is_some() {
+            self.pool_view.pop();
+            let n = self.workers.len();
+            self.monitors = crate::monitor::MonitorRegistry::new(
+                n,
+                self.cfg.monitor_window,
+                self.cfg.min_fit_samples,
+            );
+        }
+        w
+    }
+
+    pub(crate) fn monitors_mut(&mut self) -> &mut crate::monitor::MonitorRegistry {
+        &mut self.monitors
+    }
+
+    /// Run several jobs concurrently over one shared cluster: the pool is
+    /// partitioned with [`crate::sched::multijob::multijob_allocate`],
+    /// then arrivals from all traces are interleaved in time order and
+    /// dispatched against each job's own allocation (server clocks are
+    /// shared — a slow cluster shows up in every job's tail).
+    pub fn run_multi(
+        &mut self,
+        jobs: &[(Job, Trace)],
+        objective: crate::sched::Objective,
+    ) -> Result<Vec<RunReport>, SchedError> {
+        let wfs: Vec<&crate::flow::Workflow> =
+            jobs.iter().map(|(j, _)| &j.workflow).collect();
+        let plans = crate::sched::multijob::multijob_allocate(
+            &wfs,
+            &self.pool_view,
+            self.cfg.model,
+            objective,
+        )?;
+
+        // merge arrivals: (time, job index, seq)
+        let mut events: Vec<(f64, usize, u64)> = Vec::new();
+        for (ji, (_, trace)) in jobs.iter().enumerate() {
+            for (seq, &t) in trace.arrivals.iter().enumerate() {
+                events.push((t, ji, seq as u64));
+            }
+        }
+        events.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+
+        let mut next_free = vec![0.0f64; self.workers.len()];
+        let mut metrics: Vec<Metrics> = jobs
+            .iter()
+            .map(|_| Metrics::new(self.workers.len()))
+            .collect();
+        for (t, ji, _seq) in events {
+            let alloc = &plans[ji].alloc;
+            let root = jobs[ji].0.workflow.root().clone();
+            let finish = self.dispatch(&root, alloc, t, 1.0, &mut next_free, &mut metrics[ji]);
+            metrics[ji].record_completion(finish - t, finish);
+        }
+        Ok(plans
+            .into_iter()
+            .zip(metrics)
+            .map(|(plan, m)| RunReport {
+                metrics: m,
+                final_allocation: plan.alloc,
+                swaps: Vec::new(),
+            })
+            .collect())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dist::ServiceDist;
+    use crate::flow::Workflow;
+    use crate::sim::trace::{ArrivalProcess, Trace};
+    use crate::util::rng::Rng;
+
+    fn poisson_trace(rate: f64, n: usize, seed: u64) -> Trace {
+        let mut rng = Rng::new(seed);
+        Trace::generate(ArrivalProcess::Poisson { rate }, n, &mut rng)
+    }
+
+    fn quiet_cfg() -> CoordinatorConfig {
+        CoordinatorConfig {
+            reopt_every: 0,
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn runs_fig6_end_to_end() {
+        let servers = Server::pool_exponential(&[9.0, 8.0, 7.0, 6.0, 5.0, 4.0]);
+        let mut coord = Coordinator::with_truthful_priors(servers, quiet_cfg());
+        let job = coord.submit("fig6", Workflow::fig6());
+        let trace = poisson_trace(2.0, 5_000, 11);
+        let report = coord.run_job(&job, &trace).unwrap();
+        assert_eq!(report.metrics.completed, 5_000);
+        assert!(report.metrics.mean_latency() > 0.0);
+        assert!(report.metrics.latency_quantile(0.99) > report.metrics.mean_latency());
+        let served = coord.shutdown();
+        // every dispatch hits all 6 slots (fork-join counts each branch)
+        assert_eq!(served.iter().sum::<u64>(), 5_000 * 6);
+    }
+
+    #[test]
+    fn proposed_beats_baseline_latency() {
+        let run = |policy: Policy| {
+            let servers = Server::pool_exponential(&[9.0, 8.0, 7.0, 6.0, 5.0, 4.0]);
+            let cfg = CoordinatorConfig {
+                policy,
+                reopt_every: 0,
+                ..Default::default()
+            };
+            let mut coord = Coordinator::with_truthful_priors(servers, cfg);
+            let job = coord.submit("fig6", Workflow::fig6());
+            let trace = poisson_trace(3.0, 30_000, 13);
+            let r = coord.run_job(&job, &trace).unwrap();
+            coord.shutdown();
+            r.metrics.mean_latency()
+        };
+        let ours = run(Policy::Proposed);
+        let base = run(Policy::Baseline);
+        assert!(
+            ours < base,
+            "proposed {ours} should beat baseline {base}"
+        );
+    }
+
+    #[test]
+    fn drift_triggers_reallocation() {
+        // server 0 starts fast, degrades badly; the monitor must catch it
+        // and the coordinator must swap the allocation
+        let mut specs: Vec<WorkerSpec> = (0..6)
+            .map(|i| {
+                WorkerSpec::stable(i, ServiceDist::exponential([9.0, 8.0, 7.0, 6.0, 5.0, 4.0][i]))
+            })
+            .collect();
+        specs[0] = WorkerSpec::drifting(
+            0,
+            ServiceDist::exponential(9.0),
+            4_000,
+            ServiceDist::exponential(1.5),
+        );
+        let view = Server::pool_exponential(&[9.0, 8.0, 7.0, 6.0, 5.0, 4.0]);
+        let cfg = CoordinatorConfig {
+            reopt_every: 500,
+            min_fit_samples: 256,
+            monitor_window: 1024,
+            ..Default::default()
+        };
+        let mut coord = Coordinator::new(specs, view, cfg);
+        let job = coord.submit("fig6", Workflow::fig6());
+        let trace = poisson_trace(2.0, 20_000, 17);
+        let report = coord.run_job(&job, &trace).unwrap();
+        coord.shutdown();
+        assert!(
+            report.metrics.reoptimizations >= 1,
+            "expected at least one swap, got {:?}",
+            report.swaps
+        );
+        // after refresh, the leader's belief about server 0 must be slow
+        // (lam near 1.5, i.e. mean near 0.67)
+    }
+
+    #[test]
+    fn static_run_never_swaps() {
+        let servers = Server::pool_exponential(&[5.0, 5.0, 4.0]);
+        let mut coord = Coordinator::with_truthful_priors(servers, quiet_cfg());
+        let job = coord.submit("tandem", Workflow::tandem(3, 1.0));
+        let trace = poisson_trace(1.0, 2_000, 19);
+        let report = coord.run_job(&job, &trace).unwrap();
+        coord.shutdown();
+        assert_eq!(report.metrics.reoptimizations, 0);
+        assert!(report.swaps.is_empty());
+    }
+
+    #[test]
+    fn utilization_accounting_consistent() {
+        let servers = Server::pool_exponential(&[4.0, 4.0]);
+        let mut coord = Coordinator::with_truthful_priors(servers, quiet_cfg());
+        let job = coord.submit("fj", Workflow::forkjoin(2, 1.0));
+        let trace = poisson_trace(1.0, 5_000, 23);
+        let report = coord.run_job(&job, &trace).unwrap();
+        coord.shutdown();
+        for sid in 0..2 {
+            let u = report.metrics.utilization(sid);
+            assert!(u > 0.0 && u < 1.0, "utilization {u}");
+            assert_eq!(report.metrics.tasks_per_server[sid], 5_000);
+        }
+    }
+}

@@ -1,0 +1,131 @@
+//! Coordinator metrics: latency, throughput, utilization, re-planning.
+
+use crate::util::stats::{quantile, Welford};
+
+/// Aggregated run metrics.
+#[derive(Clone, Debug, Default)]
+pub struct Metrics {
+    latency: Welford,
+    latencies: Vec<f64>,
+    /// Busy time accumulated per server (virtual seconds).
+    pub busy_time: Vec<f64>,
+    /// Number of tasks dispatched to each server.
+    pub tasks_per_server: Vec<u64>,
+    /// Tasks completed end-to-end.
+    pub completed: u64,
+    /// Re-optimization events (allocation swaps).
+    pub reoptimizations: u64,
+    /// Virtual time of the last completion.
+    pub makespan: f64,
+}
+
+impl Metrics {
+    /// Metrics for `n_servers` servers.
+    pub fn new(n_servers: usize) -> Metrics {
+        Metrics {
+            busy_time: vec![0.0; n_servers],
+            tasks_per_server: vec![0; n_servers],
+            ..Default::default()
+        }
+    }
+
+    /// Record a completed task.
+    pub fn record_completion(&mut self, latency: f64, finish: f64) {
+        self.latency.push(latency);
+        self.latencies.push(latency);
+        self.completed += 1;
+        self.makespan = self.makespan.max(finish);
+    }
+
+    /// Record one server-side service interval.
+    pub fn record_service(&mut self, server_id: usize, service_time: f64) {
+        self.busy_time[server_id] += service_time;
+        self.tasks_per_server[server_id] += 1;
+    }
+
+    /// Record an allocation swap.
+    pub fn record_reopt(&mut self) {
+        self.reoptimizations += 1;
+    }
+
+    /// Mean end-to-end latency.
+    pub fn mean_latency(&self) -> f64 {
+        self.latency.mean()
+    }
+
+    /// Latency variance.
+    pub fn var_latency(&self) -> f64 {
+        self.latency.variance()
+    }
+
+    /// Latency quantile (q in [0,1]).
+    pub fn latency_quantile(&self, q: f64) -> f64 {
+        if self.latencies.is_empty() {
+            return 0.0;
+        }
+        let mut v = self.latencies.clone();
+        v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        quantile(&v, q)
+    }
+
+    /// Completed tasks per virtual second.
+    pub fn throughput(&self) -> f64 {
+        if self.makespan <= 0.0 {
+            return 0.0;
+        }
+        self.completed as f64 / self.makespan
+    }
+
+    /// Utilization of a server over the run.
+    pub fn utilization(&self, server_id: usize) -> f64 {
+        if self.makespan <= 0.0 {
+            return 0.0;
+        }
+        self.busy_time[server_id] / self.makespan
+    }
+
+    /// One-line human summary.
+    pub fn summary(&self) -> String {
+        format!(
+            "tasks={} mean={:.4} var={:.4} p50={:.4} p99={:.4} thru={:.3}/s reopt={}",
+            self.completed,
+            self.mean_latency(),
+            self.var_latency(),
+            self.latency_quantile(0.5),
+            self.latency_quantile(0.99),
+            self.throughput(),
+            self.reoptimizations
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn records_and_summarizes() {
+        let mut m = Metrics::new(2);
+        m.record_completion(1.0, 10.0);
+        m.record_completion(3.0, 12.0);
+        m.record_service(0, 0.5);
+        m.record_service(1, 2.0);
+        m.record_service(1, 1.0);
+        m.record_reopt();
+        assert_eq!(m.completed, 2);
+        assert!((m.mean_latency() - 2.0).abs() < 1e-12);
+        assert!((m.var_latency() - 1.0).abs() < 1e-12);
+        assert_eq!(m.tasks_per_server, vec![1, 2]);
+        assert!((m.utilization(1) - 3.0 / 12.0).abs() < 1e-12);
+        assert!((m.throughput() - 2.0 / 12.0).abs() < 1e-12);
+        assert!(m.summary().contains("tasks=2"));
+    }
+
+    #[test]
+    fn empty_metrics_are_zero() {
+        let m = Metrics::new(1);
+        assert_eq!(m.mean_latency(), 0.0);
+        assert_eq!(m.throughput(), 0.0);
+        assert_eq!(m.latency_quantile(0.99), 0.0);
+    }
+}

@@ -1,0 +1,23 @@
+//! The L3 coordinator: the paper's Algorithm 3 as a running system.
+//!
+//! A leader thread owns the allocation loop; worker threads simulate the
+//! heterogeneous servers (hidden service laws, real message passing,
+//! virtual time — see [`worker`] for the model). The leader monitors
+//! observed service times ([`crate::monitor`]), periodically re-fits the
+//! believed pool, re-runs the allocator ([`crate::sched`]) and swaps
+//! allocations when the cluster drifts.
+
+pub mod api;
+pub mod churn;
+pub mod config;
+pub mod job;
+pub mod leader;
+pub mod metrics;
+pub mod worker;
+
+pub use api::ApiServer;
+pub use config::{CoordinatorConfig, Policy};
+pub use job::{Completion, Job, Task};
+pub use leader::{Coordinator, RunReport};
+pub use metrics::Metrics;
+pub use worker::{WorkerHandle, WorkerSpec};

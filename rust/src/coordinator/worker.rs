@@ -1,0 +1,185 @@
+//! Worker threads: the simulated heterogeneous servers.
+//!
+//! Each worker owns a *hidden* service-time law the coordinator never
+//! sees directly — the leader only observes per-task service times, the
+//! way a real cluster only exposes measurements. Workers run as real OS
+//! threads answering draw requests over channels (the leader/worker
+//! message-passing topology of a real deployment), while *time itself is
+//! virtual*: the leader keeps per-server clocks, so runs are fast and
+//! deterministic (DESIGN.md §substitutions).
+//!
+//! Failure injection: a worker can be configured to switch to a second
+//! law after `drift_after` draws (degradation / straggler onset), which
+//! is what the monitor + re-optimization loop must catch.
+
+use crate::dist::ServiceDist;
+use crate::util::rng::Rng;
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::thread::JoinHandle;
+
+/// Worker behavior specification.
+#[derive(Clone, Debug)]
+pub struct WorkerSpec {
+    /// Server id this worker impersonates.
+    pub server_id: usize,
+    /// Hidden service-time law.
+    pub dist: ServiceDist,
+    /// Optional drift: after this many draws, switch to `drift_to`.
+    pub drift_after: Option<u64>,
+    /// Law after the drift point.
+    pub drift_to: Option<ServiceDist>,
+}
+
+impl WorkerSpec {
+    /// Stationary worker.
+    pub fn stable(server_id: usize, dist: ServiceDist) -> WorkerSpec {
+        WorkerSpec {
+            server_id,
+            dist,
+            drift_after: None,
+            drift_to: None,
+        }
+    }
+
+    /// Worker that degrades to `drift_to` after `after` tasks.
+    pub fn drifting(server_id: usize, dist: ServiceDist, after: u64, drift_to: ServiceDist) -> WorkerSpec {
+        WorkerSpec {
+            server_id,
+            dist,
+            drift_after: Some(after),
+            drift_to: Some(drift_to),
+        }
+    }
+}
+
+enum Request {
+    Draw(Sender<f64>),
+    Shutdown,
+}
+
+/// Handle to a running worker thread.
+pub struct WorkerHandle {
+    tx: Sender<Request>,
+    join: Option<JoinHandle<u64>>,
+    /// Server id.
+    pub server_id: usize,
+}
+
+impl WorkerHandle {
+    /// Spawn the worker thread.
+    pub fn spawn(spec: WorkerSpec, seed: u64) -> WorkerHandle {
+        let (tx, rx): (Sender<Request>, Receiver<Request>) = channel();
+        let server_id = spec.server_id;
+        let join = std::thread::Builder::new()
+            .name(format!("dcflow-worker-{server_id}"))
+            .spawn(move || worker_main(spec, seed, rx))
+            .expect("spawn worker");
+        WorkerHandle {
+            tx,
+            join: Some(join),
+            server_id,
+        }
+    }
+
+    /// Synchronously draw one service time (blocking round-trip —
+    /// the "execute task" RPC of the simulated cluster).
+    pub fn draw(&self) -> f64 {
+        let (reply_tx, reply_rx) = channel();
+        self.tx
+            .send(Request::Draw(reply_tx))
+            .expect("worker alive");
+        reply_rx.recv().expect("worker replies")
+    }
+
+    /// Stop the worker; returns the number of tasks it served.
+    pub fn shutdown(mut self) -> u64 {
+        let _ = self.tx.send(Request::Shutdown);
+        self.join
+            .take()
+            .expect("not yet joined")
+            .join()
+            .expect("worker thread exits cleanly")
+    }
+}
+
+impl Drop for WorkerHandle {
+    fn drop(&mut self) {
+        let _ = self.tx.send(Request::Shutdown);
+        if let Some(j) = self.join.take() {
+            let _ = j.join();
+        }
+    }
+}
+
+fn worker_main(spec: WorkerSpec, seed: u64, rx: Receiver<Request>) -> u64 {
+    let mut rng = Rng::new(seed ^ (spec.server_id as u64).wrapping_mul(0x9E3779B97F4A7C15));
+    let mut served = 0u64;
+    loop {
+        match rx.recv() {
+            Ok(Request::Draw(reply)) => {
+                let drifted = spec
+                    .drift_after
+                    .map(|after| served >= after)
+                    .unwrap_or(false);
+                let dist = if drifted {
+                    spec.drift_to.as_ref().unwrap_or(&spec.dist)
+                } else {
+                    &spec.dist
+                };
+                served += 1;
+                // ignore send failure: leader may have moved on
+                let _ = reply.send(dist.sample(&mut rng));
+            }
+            Ok(Request::Shutdown) | Err(_) => return served,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn draws_match_hidden_law() {
+        let spec = WorkerSpec::stable(0, ServiceDist::exponential(4.0));
+        let w = WorkerHandle::spawn(spec, 1);
+        let n = 20_000;
+        let mean: f64 = (0..n).map(|_| w.draw()).sum::<f64>() / n as f64;
+        assert!((mean - 0.25).abs() < 0.01, "mean {mean}");
+        assert_eq!(w.shutdown(), n);
+    }
+
+    #[test]
+    fn drift_switches_law() {
+        let spec = WorkerSpec::drifting(
+            1,
+            ServiceDist::exponential(10.0),
+            1000,
+            ServiceDist::exponential(1.0),
+        );
+        let w = WorkerHandle::spawn(spec, 2);
+        let before: f64 = (0..1000).map(|_| w.draw()).sum::<f64>() / 1000.0;
+        let after: f64 = (0..1000).map(|_| w.draw()).sum::<f64>() / 1000.0;
+        assert!(before < 0.15, "before {before}");
+        assert!(after > 0.7, "after {after}");
+        w.shutdown();
+    }
+
+    #[test]
+    fn deterministic_per_seed() {
+        let mk = || {
+            let w = WorkerHandle::spawn(WorkerSpec::stable(3, ServiceDist::exponential(2.0)), 9);
+            let v: Vec<f64> = (0..50).map(|_| w.draw()).collect();
+            w.shutdown();
+            v
+        };
+        assert_eq!(mk(), mk());
+    }
+
+    #[test]
+    fn drop_shuts_down_cleanly() {
+        let w = WorkerHandle::spawn(WorkerSpec::stable(4, ServiceDist::exponential(1.0)), 5);
+        w.draw();
+        drop(w); // must not hang or panic
+    }
+}

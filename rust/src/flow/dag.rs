@@ -1,0 +1,305 @@
+//! General workflow DAGs and series–parallel recognition.
+//!
+//! The paper models workflows as series–parallel compositions (its
+//! citation [17, 18]: "any distributed job can be modeled as series and
+//! parallel servers"). Real dataflow graphs arrive as DAGs; this module
+//! provides the bridge:
+//!
+//! * [`FlowDag`] — an arbitrary DAG of stages between a source and a
+//!   sink DAP, with validation (acyclicity, reachability);
+//! * [`FlowDag::to_series_parallel`] — recognizes two-terminal
+//!   series–parallel DAGs by exhaustive series/parallel reduction and
+//!   emits the equivalent [`Dcc`] tree (the classic TTSP algorithm:
+//!   a DAG is TTSP iff it reduces to a single edge);
+//! * non-SP DAGs are rejected with a precise error naming an
+//!   irreducible vertex, so callers can fall back to simulation-only
+//!   treatment.
+
+use crate::flow::node::Dcc;
+use crate::flow::FlowError;
+use std::collections::{BTreeMap, BTreeSet};
+
+/// A stage graph: nodes are DAPs, edges are processing stages (each
+/// edge will become one leaf queue in the SP tree).
+#[derive(Clone, Debug, Default)]
+pub struct FlowDag {
+    /// Edge list: (from DAP, to DAP, stage label).
+    edges: Vec<(usize, usize, String)>,
+    n_nodes: usize,
+}
+
+impl FlowDag {
+    /// Empty DAG.
+    pub fn new() -> FlowDag {
+        FlowDag::default()
+    }
+
+    /// Add a processing stage from DAP `from` to DAP `to`.
+    pub fn stage(mut self, from: usize, to: usize, label: &str) -> FlowDag {
+        self.n_nodes = self.n_nodes.max(from + 1).max(to + 1);
+        self.edges.push((from, to, label.to_string()));
+        self
+    }
+
+    /// Number of DAP nodes.
+    pub fn nodes(&self) -> usize {
+        self.n_nodes
+    }
+
+    /// Number of stages (edges).
+    pub fn stages(&self) -> usize {
+        self.edges.len()
+    }
+
+    /// Validate: nonempty, no self-loops, acyclic, every node reachable
+    /// from `source` and co-reachable from `sink`.
+    pub fn validate(&self, source: usize, sink: usize) -> Result<(), FlowError> {
+        if self.edges.is_empty() {
+            return Err(FlowError("dag has no stages".into()));
+        }
+        if self.edges.iter().any(|(a, b, _)| a == b) {
+            return Err(FlowError("self-loop stage".into()));
+        }
+        // Kahn topological sort for acyclicity
+        let mut indeg = vec![0usize; self.n_nodes];
+        let mut adj: Vec<Vec<usize>> = vec![Vec::new(); self.n_nodes];
+        let mut radj: Vec<Vec<usize>> = vec![Vec::new(); self.n_nodes];
+        for (a, b, _) in &self.edges {
+            indeg[*b] += 1;
+            adj[*a].push(*b);
+            radj[*b].push(*a);
+        }
+        let mut queue: Vec<usize> = (0..self.n_nodes).filter(|&v| indeg[v] == 0).collect();
+        let mut seen = 0;
+        let mut indeg_mut = indeg.clone();
+        while let Some(v) = queue.pop() {
+            seen += 1;
+            for &w in &adj[v] {
+                indeg_mut[w] -= 1;
+                if indeg_mut[w] == 0 {
+                    queue.push(w);
+                }
+            }
+        }
+        if seen != self.n_nodes {
+            return Err(FlowError("workflow graph has a cycle".into()));
+        }
+        // reachability from source / co-reachability from sink
+        let reach = |start: usize, adj: &Vec<Vec<usize>>| -> BTreeSet<usize> {
+            let mut seen = BTreeSet::from([start]);
+            let mut stack = vec![start];
+            while let Some(v) = stack.pop() {
+                for &w in &adj[v] {
+                    if seen.insert(w) {
+                        stack.push(w);
+                    }
+                }
+            }
+            seen
+        };
+        let fwd = reach(source, &adj);
+        let bwd = reach(sink, &radj);
+        for v in 0..self.n_nodes {
+            let touched = self.edges.iter().any(|(a, b, _)| *a == v || *b == v);
+            if touched && (!fwd.contains(&v) || !bwd.contains(&v)) {
+                return Err(FlowError(format!(
+                    "DAP {v} is not on a source→sink path"
+                )));
+            }
+        }
+        Ok(())
+    }
+
+    /// Recognize a two-terminal series–parallel DAG and build the
+    /// equivalent [`Dcc`] tree.
+    ///
+    /// Repeatedly applies
+    /// * **series reduction**: an interior DAP with in-degree 1 and
+    ///   out-degree 1 merges its two stages into one `Serial`;
+    /// * **parallel reduction**: multi-edges between the same DAP pair
+    ///   merge into one `Parallel`.
+    /// The DAG is TTSP iff this terminates with the single edge
+    /// (source, sink) (Valdes–Tarjan–Lawler).
+    pub fn to_series_parallel(&self, source: usize, sink: usize) -> Result<Dcc, FlowError> {
+        self.validate(source, sink)?;
+        // working multigraph: edges carry their partial Dcc trees
+        let mut edges: Vec<(usize, usize, Dcc)> = self
+            .edges
+            .iter()
+            .map(|(a, b, _)| (*a, *b, Dcc::queue()))
+            .collect();
+
+        loop {
+            let mut changed = false;
+
+            // ---- parallel reduction: group multi-edges --------------------
+            let mut groups: BTreeMap<(usize, usize), Vec<usize>> = BTreeMap::new();
+            for (i, (a, b, _)) in edges.iter().enumerate() {
+                groups.entry((*a, *b)).or_default().push(i);
+            }
+            let mut to_merge: Vec<Vec<usize>> =
+                groups.into_values().filter(|v| v.len() > 1).collect();
+            if let Some(idxs) = to_merge.pop() {
+                let (a, b, _) = edges[idxs[0]].clone();
+                let children: Vec<Dcc> = idxs.iter().map(|&i| edges[i].2.clone()).collect();
+                // remove merged edges (descending index order)
+                let mut sorted = idxs.clone();
+                sorted.sort_unstable_by(|x, y| y.cmp(x));
+                for i in sorted {
+                    edges.remove(i);
+                }
+                edges.push((a, b, Dcc::parallel(children)));
+                changed = true;
+            }
+
+            // ---- series reduction: interior deg(1,1) DAP -------------------
+            if !changed {
+                let mut indeg: BTreeMap<usize, Vec<usize>> = BTreeMap::new();
+                let mut outdeg: BTreeMap<usize, Vec<usize>> = BTreeMap::new();
+                for (i, (a, b, _)) in edges.iter().enumerate() {
+                    outdeg.entry(*a).or_default().push(i);
+                    indeg.entry(*b).or_default().push(i);
+                }
+                let candidate = indeg.iter().find_map(|(v, ins)| {
+                    if *v != source
+                        && *v != sink
+                        && ins.len() == 1
+                        && outdeg.get(v).map(|o| o.len()) == Some(1)
+                    {
+                        Some((ins[0], outdeg[v][0]))
+                    } else {
+                        None
+                    }
+                });
+                if let Some((e_in, e_out)) = candidate {
+                    let (a, _, first) = edges[e_in].clone();
+                    let (_, c, second) = edges[e_out].clone();
+                    let merged = Dcc::serial(vec![first, second]);
+                    let mut rm = [e_in, e_out];
+                    rm.sort_unstable_by(|x, y| y.cmp(x));
+                    for i in rm {
+                        edges.remove(i);
+                    }
+                    edges.push((a, c, merged));
+                    changed = true;
+                }
+            }
+
+            if !changed {
+                break;
+            }
+        }
+
+        match edges.as_slice() {
+            [(a, b, tree)] if *a == source && *b == sink => Ok(tree.clone()),
+            _ => {
+                // name an irreducible interior DAP for the error
+                let stuck = edges
+                    .iter()
+                    .flat_map(|(a, b, _)| [*a, *b])
+                    .find(|v| *v != source && *v != sink);
+                Err(FlowError(format!(
+                    "workflow DAG is not two-terminal series-parallel \
+                     ({} irreducible stages{}); simulate it directly instead",
+                    edges.len(),
+                    stuck
+                        .map(|v| format!(", e.g. around DAP {v}"))
+                        .unwrap_or_default()
+                )))
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::flow::Workflow;
+
+    #[test]
+    fn diamond_is_parallel() {
+        // 0 -> 1 (two stages), i.e. a 2-branch fork-join as multi-edges
+        let dag = FlowDag::new().stage(0, 1, "a").stage(0, 1, "b");
+        let tree = dag.to_series_parallel(0, 1).unwrap();
+        assert_eq!(tree.slot_count(), 2);
+        assert!(matches!(tree, Dcc::Parallel { .. }));
+    }
+
+    #[test]
+    fn chain_is_serial() {
+        let dag = FlowDag::new().stage(0, 1, "a").stage(1, 2, "b").stage(2, 3, "c");
+        let tree = dag.to_series_parallel(0, 3).unwrap();
+        assert_eq!(tree.slot_count(), 3);
+        assert_eq!(tree.clone().canonicalize().serial_depth(), 3);
+    }
+
+    #[test]
+    fn fig6_like_dag_recognized() {
+        // 0 =2⇒ 1 → 2 → 3 =2⇒ 4  (fork; two serial stages; fork)
+        let dag = FlowDag::new()
+            .stage(0, 1, "map-a")
+            .stage(0, 1, "map-b")
+            .stage(1, 2, "s1")
+            .stage(2, 3, "s2")
+            .stage(3, 4, "red-a")
+            .stage(3, 4, "red-b");
+        let tree = dag.to_series_parallel(0, 4).unwrap();
+        assert_eq!(tree.slot_count(), 6);
+        let wf = Workflow::new(tree, 8.0).unwrap();
+        assert_eq!(wf.serial_depth(), 4);
+    }
+
+    #[test]
+    fn nested_sp_recognized() {
+        // branch 1: 0->1->3 (series of 2); branch 2: 0->3 direct
+        let dag = FlowDag::new()
+            .stage(0, 1, "x")
+            .stage(1, 3, "y")
+            .stage(0, 3, "z");
+        let tree = dag.to_series_parallel(0, 3).unwrap();
+        assert_eq!(tree.slot_count(), 3);
+        match tree {
+            Dcc::Parallel { children, .. } => {
+                assert_eq!(children.len(), 2);
+                assert!(children.iter().any(|c| matches!(c, Dcc::Serial { .. })));
+            }
+            other => panic!("expected parallel, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn wheatstone_bridge_rejected() {
+        // the canonical non-SP graph: 0->1, 0->2, 1->2 (bridge), 1->3, 2->3
+        let dag = FlowDag::new()
+            .stage(0, 1, "a")
+            .stage(0, 2, "b")
+            .stage(1, 2, "bridge")
+            .stage(1, 3, "c")
+            .stage(2, 3, "d");
+        let err = dag.to_series_parallel(0, 3).unwrap_err();
+        assert!(err.0.contains("not two-terminal series-parallel"), "{err}");
+    }
+
+    #[test]
+    fn cycle_rejected() {
+        let dag = FlowDag::new().stage(0, 1, "a").stage(1, 2, "b").stage(2, 0, "back");
+        assert!(dag.validate(0, 2).is_err());
+    }
+
+    #[test]
+    fn dangling_node_rejected() {
+        let dag = FlowDag::new().stage(0, 1, "a").stage(2, 3, "island");
+        assert!(dag.validate(0, 1).is_err());
+    }
+
+    #[test]
+    fn self_loop_rejected() {
+        let dag = FlowDag::new().stage(0, 0, "loop");
+        assert!(dag.validate(0, 0).is_err());
+    }
+
+    #[test]
+    fn empty_rejected() {
+        assert!(FlowDag::new().validate(0, 0).is_err());
+    }
+}

@@ -1,0 +1,184 @@
+//! Workflow graphs: series–parallel trees of DCCs joined at DAPs.
+//!
+//! The paper assumes "the logical graph of the job workflow is known
+//! using a computational algorithm (out of the scope of this paper)";
+//! here workflows arrive either programmatically ([`Workflow::fig6`],
+//! builders in [`node`]) or as JSON specs ([`parse`]).
+
+pub mod dag;
+pub mod node;
+pub mod parse;
+
+pub use node::Dcc;
+
+/// A validated workflow: canonicalized series–parallel tree with leaf
+/// slots numbered `0..slots` in DFS order, plus the job arrival rate at
+/// the entry DAP.
+#[derive(Clone, Debug)]
+pub struct Workflow {
+    root: Dcc,
+    slots: usize,
+    /// Task arrival rate at the entry DAP (λ_DAP0).
+    pub arrival_rate: f64,
+}
+
+/// Validation failure for a workflow spec.
+#[derive(Debug, Clone, PartialEq)]
+pub struct FlowError(pub String);
+
+impl std::fmt::Display for FlowError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "workflow error: {}", self.0)
+    }
+}
+
+impl std::error::Error for FlowError {}
+
+impl Workflow {
+    /// Build, canonicalize and validate a workflow.
+    pub fn new(root: Dcc, arrival_rate: f64) -> Result<Workflow, FlowError> {
+        if !(arrival_rate > 0.0) {
+            return Err(FlowError(format!(
+                "arrival rate must be positive (got {arrival_rate})"
+            )));
+        }
+        validate(&root)?; // before canonicalize: singleton unwrapping must
+                          // not hide invalid rates from validation
+        let mut root = root.canonicalize();
+        validate(&root)?;
+        let mut next = 0usize;
+        root.assign_slots(&mut next);
+        Ok(Workflow {
+            root,
+            slots: next,
+            arrival_rate,
+        })
+    }
+
+    /// The paper's Fig. 6 evaluation workflow:
+    /// `PDCC(2) ; SDCC(2) ; PDCC(2)` with DAP rates 8 → 4 → 2.
+    pub fn fig6() -> Workflow {
+        let root = Dcc::serial_with_rates(
+            vec![
+                Dcc::parallel(vec![Dcc::queue(), Dcc::queue()]),
+                Dcc::serial(vec![Dcc::queue(), Dcc::queue()]),
+                Dcc::parallel(vec![Dcc::queue(), Dcc::queue()]),
+            ],
+            vec![Some(8.0), Some(4.0), Some(2.0)],
+        );
+        Workflow::new(root, 8.0).expect("fig6 is valid")
+    }
+
+    /// A linear MapReduce-style chain: `n_stages` serial stages, each a
+    /// PDCC with `fanout` branches (Fig. 1's repeated pattern).
+    pub fn chain(n_stages: usize, fanout: usize, arrival_rate: f64) -> Workflow {
+        let stages: Vec<Dcc> = (0..n_stages)
+            .map(|_| {
+                if fanout <= 1 {
+                    Dcc::queue()
+                } else {
+                    Dcc::parallel((0..fanout).map(|_| Dcc::queue()).collect())
+                }
+            })
+            .collect();
+        Workflow::new(Dcc::serial(stages), arrival_rate).expect("chain is valid")
+    }
+
+    /// Pure tandem queue of `n` slots (Fig. 2 / Fig. 4 shape).
+    pub fn tandem(n: usize, arrival_rate: f64) -> Workflow {
+        Workflow::new(Dcc::serial((0..n).map(|_| Dcc::queue()).collect()), arrival_rate)
+            .expect("tandem is valid")
+    }
+
+    /// Pure fork–join of `n` branches (Fig. 3 / Fig. 5 shape).
+    pub fn forkjoin(n: usize, arrival_rate: f64) -> Workflow {
+        Workflow::new(
+            Dcc::parallel((0..n).map(|_| Dcc::queue()).collect()),
+            arrival_rate,
+        )
+        .expect("forkjoin is valid")
+    }
+
+    /// Root of the tree.
+    pub fn root(&self) -> &Dcc {
+        &self.root
+    }
+
+    /// Number of server slots (leaves).
+    pub fn slots(&self) -> usize {
+        self.slots
+    }
+
+    /// Longest tandem path length (tail-growth driver).
+    pub fn serial_depth(&self) -> usize {
+        self.root.serial_depth()
+    }
+}
+
+fn validate(root: &Dcc) -> Result<(), FlowError> {
+    match root {
+        Dcc::Queue { .. } => Ok(()),
+        Dcc::Serial { children, rates } | Dcc::Parallel { children, rates } => {
+            if children.is_empty() {
+                return Err(FlowError("composition with no children".into()));
+            }
+            if children.len() != rates.len() {
+                return Err(FlowError("rates/children length mismatch".into()));
+            }
+            if let Some(r) = rates.iter().flatten().find(|r| !(**r > 0.0)) {
+                return Err(FlowError(format!("non-positive DAP rate {r}")));
+            }
+            children.iter().try_for_each(validate)
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fig6_shape() {
+        let wf = Workflow::fig6();
+        assert_eq!(wf.slots(), 6);
+        assert_eq!(wf.arrival_rate, 8.0);
+        assert_eq!(wf.serial_depth(), 4); // par(1) + 2 serial + par(1)
+        match wf.root() {
+            Dcc::Serial { children, rates } => {
+                assert_eq!(children.len(), 4); // canonicalized: inner SDCC flattened
+                assert_eq!(rates[0], Some(8.0));
+            }
+            other => panic!("fig6 root should be serial, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn slots_are_dfs_ordered() {
+        let wf = Workflow::fig6();
+        let mut seen = Vec::new();
+        wf.root().for_each_leaf(&mut |s| seen.push(s));
+        assert_eq!(seen, vec![0, 1, 2, 3, 4, 5]);
+    }
+
+    #[test]
+    fn tandem_and_forkjoin() {
+        assert_eq!(Workflow::tandem(10, 1.0).serial_depth(), 10);
+        assert_eq!(Workflow::forkjoin(10, 1.0).serial_depth(), 1);
+        assert_eq!(Workflow::forkjoin(10, 1.0).slots(), 10);
+    }
+
+    #[test]
+    fn chain_builder() {
+        let wf = Workflow::chain(3, 4, 2.0);
+        assert_eq!(wf.slots(), 12);
+        assert_eq!(wf.serial_depth(), 3);
+    }
+
+    #[test]
+    fn rejects_bad_rate() {
+        assert!(Workflow::new(Dcc::queue(), 0.0).is_err());
+        assert!(Workflow::new(Dcc::queue(), -1.0).is_err());
+        let bad = Dcc::serial_with_rates(vec![Dcc::queue()], vec![Some(-2.0)]);
+        assert!(Workflow::new(bad, 1.0).is_err());
+    }
+}

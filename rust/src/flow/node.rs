@@ -1,0 +1,244 @@
+//! Series–parallel DCC tree nodes.
+
+/// A Data Computing Component: a leaf queue (one server slot) or a
+/// serial / parallel composition of child DCCs (paper Fig. 1/4/5).
+#[derive(Clone, Debug, PartialEq)]
+pub enum Dcc {
+    /// A single queue: one server slot, identified by its DFS leaf index.
+    Queue {
+        /// Leaf slot index (assigned by [`super::Workflow::new`]).
+        slot: usize,
+    },
+    /// Sequential composition (SDCC): data passes through every child in
+    /// order — a tandem queue. Each child may sit behind its own DAP with
+    /// its own monitored arrival rate.
+    Serial {
+        /// Children in pipeline order.
+        children: Vec<Dcc>,
+        /// Per-child DAP arrival rates where monitored (None = inherit).
+        rates: Vec<Option<f64>>,
+    },
+    /// Parallel composition (PDCC): data is partitioned over the branches
+    /// at a fork DAP and joined when the **last** branch completes.
+    Parallel {
+        /// Fork branches.
+        children: Vec<Dcc>,
+        /// Per-branch split rates where known a priori (None = to be set
+        /// by the rate scheduler / equilibrium solver).
+        rates: Vec<Option<f64>>,
+    },
+}
+
+impl Dcc {
+    /// Leaf constructor (slot is re-indexed by `Workflow::new`).
+    pub fn queue() -> Dcc {
+        Dcc::Queue { slot: usize::MAX }
+    }
+
+    /// Serial composition with unspecified child DAP rates.
+    pub fn serial(children: Vec<Dcc>) -> Dcc {
+        let n = children.len();
+        Dcc::Serial {
+            children,
+            rates: vec![None; n],
+        }
+    }
+
+    /// Serial composition with explicit child DAP rates.
+    pub fn serial_with_rates(children: Vec<Dcc>, rates: Vec<Option<f64>>) -> Dcc {
+        assert_eq!(children.len(), rates.len());
+        Dcc::Serial { children, rates }
+    }
+
+    /// Parallel composition with scheduler-decided branch rates.
+    pub fn parallel(children: Vec<Dcc>) -> Dcc {
+        let n = children.len();
+        Dcc::Parallel {
+            children,
+            rates: vec![None; n],
+        }
+    }
+
+    /// Number of leaf queues (server slots) under this node.
+    pub fn slot_count(&self) -> usize {
+        match self {
+            Dcc::Queue { .. } => 1,
+            Dcc::Serial { children, .. } | Dcc::Parallel { children, .. } => {
+                children.iter().map(|c| c.slot_count()).sum()
+            }
+        }
+    }
+
+    /// Depth of the tree (1 for a leaf).
+    pub fn depth(&self) -> usize {
+        match self {
+            Dcc::Queue { .. } => 1,
+            Dcc::Serial { children, .. } | Dcc::Parallel { children, .. } => {
+                1 + children.iter().map(|c| c.depth()).max().unwrap_or(0)
+            }
+        }
+    }
+
+    /// The *serial depth*: number of queues any single datum traverses on
+    /// the longest path (tail-growth driver, paper Fig. 2).
+    pub fn serial_depth(&self) -> usize {
+        match self {
+            Dcc::Queue { .. } => 1,
+            Dcc::Serial { children, .. } => children.iter().map(|c| c.serial_depth()).sum(),
+            Dcc::Parallel { children, .. } => {
+                children.iter().map(|c| c.serial_depth()).max().unwrap_or(0)
+            }
+        }
+    }
+
+    /// Visit leaves in DFS order.
+    pub fn for_each_leaf(&self, f: &mut impl FnMut(usize)) {
+        match self {
+            Dcc::Queue { slot } => f(*slot),
+            Dcc::Serial { children, .. } | Dcc::Parallel { children, .. } => {
+                for c in children {
+                    c.for_each_leaf(f);
+                }
+            }
+        }
+    }
+
+    pub(crate) fn assign_slots(&mut self, next: &mut usize) {
+        match self {
+            Dcc::Queue { slot } => {
+                *slot = *next;
+                *next += 1;
+            }
+            Dcc::Serial { children, .. } | Dcc::Parallel { children, .. } => {
+                for c in children {
+                    c.assign_slots(next);
+                }
+            }
+        }
+    }
+
+    /// Flatten directly nested compositions of the same kind
+    /// (Serial(Serial(a,b),c) == Serial(a,b,c)); rates of collapsed
+    /// children are preserved positionally.
+    pub fn canonicalize(self) -> Dcc {
+        match self {
+            Dcc::Queue { slot } => Dcc::Queue { slot },
+            Dcc::Serial { children, rates } => {
+                let mut out_c = Vec::new();
+                let mut out_r = Vec::new();
+                for (c, r) in children.into_iter().zip(rates) {
+                    match c.canonicalize() {
+                        Dcc::Serial {
+                            children: inner_c,
+                            rates: inner_r,
+                        } => {
+                            // the inner chain inherits the outer DAP rate
+                            // for its first element unless it had its own
+                            for (i, (ic, ir)) in inner_c.into_iter().zip(inner_r).enumerate() {
+                                out_c.push(ic);
+                                out_r.push(if i == 0 { ir.or(r) } else { ir });
+                            }
+                        }
+                        other => {
+                            out_c.push(other);
+                            out_r.push(r);
+                        }
+                    }
+                }
+                if out_c.len() == 1 {
+                    out_c.pop().unwrap()
+                } else {
+                    Dcc::Serial {
+                        children: out_c,
+                        rates: out_r,
+                    }
+                }
+            }
+            Dcc::Parallel { children, rates } => {
+                let mut out_c = Vec::new();
+                let mut out_r = Vec::new();
+                for (c, r) in children.into_iter().zip(rates) {
+                    match c.canonicalize() {
+                        Dcc::Parallel {
+                            children: inner_c,
+                            rates: inner_r,
+                        } => {
+                            out_c.extend(inner_c);
+                            out_r.extend(inner_r);
+                        }
+                        other => {
+                            out_c.push(other);
+                            out_r.push(r);
+                        }
+                    }
+                }
+                if out_c.len() == 1 {
+                    out_c.pop().unwrap()
+                } else {
+                    Dcc::Parallel {
+                        children: out_c,
+                        rates: out_r,
+                    }
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn slot_count_and_depth() {
+        let d = Dcc::serial(vec![
+            Dcc::parallel(vec![Dcc::queue(), Dcc::queue()]),
+            Dcc::queue(),
+        ]);
+        assert_eq!(d.slot_count(), 3);
+        assert_eq!(d.depth(), 3);
+        assert_eq!(d.serial_depth(), 2); // parallel stage + queue
+    }
+
+    #[test]
+    fn canonicalize_flattens_nested_serial() {
+        let d = Dcc::serial(vec![
+            Dcc::serial(vec![Dcc::queue(), Dcc::queue()]),
+            Dcc::queue(),
+        ]);
+        match d.canonicalize() {
+            Dcc::Serial { children, .. } => assert_eq!(children.len(), 3),
+            other => panic!("expected serial, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn canonicalize_unwraps_singletons() {
+        let d = Dcc::serial(vec![Dcc::parallel(vec![Dcc::queue()])]);
+        assert_eq!(d.canonicalize(), Dcc::Queue { slot: usize::MAX });
+    }
+
+    #[test]
+    fn canonicalize_preserves_rates() {
+        let inner = Dcc::serial_with_rates(
+            vec![Dcc::queue(), Dcc::queue()],
+            vec![Some(4.0), Some(2.0)],
+        );
+        let outer = Dcc::serial_with_rates(vec![inner, Dcc::queue()], vec![Some(8.0), None]);
+        match outer.canonicalize() {
+            Dcc::Serial { rates, .. } => {
+                assert_eq!(rates, vec![Some(4.0), Some(2.0), None]);
+            }
+            other => panic!("expected serial, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn serial_depth_through_parallel() {
+        let d = Dcc::parallel(vec![
+            Dcc::serial(vec![Dcc::queue(), Dcc::queue(), Dcc::queue()]),
+            Dcc::queue(),
+        ]);
+        assert_eq!(d.serial_depth(), 3);
+    }
+}

@@ -1,0 +1,160 @@
+//! JSON workflow specs.
+//!
+//! ```json
+//! {
+//!   "arrival_rate": 8.0,
+//!   "root": {
+//!     "type": "serial",
+//!     "children": [
+//!       {"type": "parallel", "rate": 8.0,
+//!        "children": [{"type": "queue"}, {"type": "queue"}]},
+//!       {"type": "queue", "rate": 4.0}
+//!     ]
+//!   }
+//! }
+//! ```
+//!
+//! `rate` on a child of a serial node is the DAP arrival rate feeding it
+//! (paper: monitored per-DAP); on a child of a parallel node it is an
+//! a-priori split rate (otherwise the rate scheduler decides).
+
+use super::{Dcc, FlowError, Workflow};
+use crate::util::json::Json;
+
+/// Parse a workflow from JSON text.
+pub fn workflow_from_json(text: &str) -> Result<Workflow, FlowError> {
+    let v = Json::parse(text).map_err(|e| FlowError(format!("invalid json: {e}")))?;
+    let rate = v
+        .get("arrival_rate")
+        .and_then(Json::as_f64)
+        .ok_or_else(|| FlowError("missing numeric 'arrival_rate'".into()))?;
+    let root_v = v
+        .get("root")
+        .ok_or_else(|| FlowError("missing 'root'".into()))?;
+    let (root, _) = node_from_json(root_v)?;
+    Workflow::new(root, rate)
+}
+
+/// Serialize a workflow back to JSON (round-trips through
+/// [`workflow_from_json`] up to canonicalization).
+pub fn workflow_to_json(wf: &Workflow) -> String {
+    fn node(d: &Dcc, my_rate: Option<f64>) -> Json {
+        let mut obj = std::collections::BTreeMap::new();
+        match d {
+            Dcc::Queue { .. } => {
+                obj.insert("type".into(), Json::Str("queue".into()));
+            }
+            Dcc::Serial { children, rates } | Dcc::Parallel { children, rates } => {
+                let ty = if matches!(d, Dcc::Serial { .. }) {
+                    "serial"
+                } else {
+                    "parallel"
+                };
+                obj.insert("type".into(), Json::Str(ty.into()));
+                obj.insert(
+                    "children".into(),
+                    Json::Arr(
+                        children
+                            .iter()
+                            .zip(rates)
+                            .map(|(c, r)| node(c, *r))
+                            .collect(),
+                    ),
+                );
+            }
+        }
+        if let Some(r) = my_rate {
+            obj.insert("rate".into(), Json::Num(r));
+        }
+        Json::Obj(obj)
+    }
+    let mut top = std::collections::BTreeMap::new();
+    top.insert("arrival_rate".into(), Json::Num(wf.arrival_rate));
+    top.insert("root".into(), node(wf.root(), None));
+    Json::Obj(top).to_string()
+}
+
+fn node_from_json(v: &Json) -> Result<(Dcc, Option<f64>), FlowError> {
+    let ty = v
+        .get("type")
+        .and_then(Json::as_str)
+        .ok_or_else(|| FlowError("node missing 'type'".into()))?;
+    let rate = v.get("rate").and_then(Json::as_f64);
+    let dcc = match ty {
+        "queue" => Dcc::queue(),
+        "serial" | "parallel" => {
+            let kids = v
+                .get("children")
+                .and_then(Json::as_arr)
+                .ok_or_else(|| FlowError(format!("'{ty}' node missing 'children'")))?;
+            let mut children = Vec::with_capacity(kids.len());
+            let mut rates = Vec::with_capacity(kids.len());
+            for k in kids {
+                let (c, r) = node_from_json(k)?;
+                children.push(c);
+                rates.push(r);
+            }
+            if ty == "serial" {
+                Dcc::serial_with_rates(children, rates)
+            } else {
+                Dcc::Parallel { children, rates }
+            }
+        }
+        other => return Err(FlowError(format!("unknown node type '{other}'"))),
+    };
+    Ok((dcc, rate))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const FIG6_JSON: &str = r#"{
+        "arrival_rate": 8.0,
+        "root": {
+            "type": "serial",
+            "children": [
+                {"type": "parallel", "rate": 8.0,
+                 "children": [{"type": "queue"}, {"type": "queue"}]},
+                {"type": "serial", "rate": 4.0,
+                 "children": [{"type": "queue"}, {"type": "queue"}]},
+                {"type": "parallel", "rate": 2.0,
+                 "children": [{"type": "queue"}, {"type": "queue"}]}
+            ]
+        }
+    }"#;
+
+    #[test]
+    fn parses_fig6_spec() {
+        let wf = workflow_from_json(FIG6_JSON).unwrap();
+        assert_eq!(wf.slots(), 6);
+        assert_eq!(wf.arrival_rate, 8.0);
+        assert_eq!(wf.serial_depth(), 4);
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        let wf = workflow_from_json(FIG6_JSON).unwrap();
+        let text = workflow_to_json(&wf);
+        let wf2 = workflow_from_json(&text).unwrap();
+        assert_eq!(wf.slots(), wf2.slots());
+        assert_eq!(wf.root(), wf2.root());
+    }
+
+    #[test]
+    fn rejects_missing_fields() {
+        assert!(workflow_from_json("{}").is_err());
+        assert!(workflow_from_json(r#"{"arrival_rate": 1}"#).is_err());
+        assert!(
+            workflow_from_json(r#"{"arrival_rate": 1, "root": {"type": "nope"}}"#).is_err()
+        );
+        assert!(
+            workflow_from_json(r#"{"arrival_rate": 1, "root": {"type": "serial"}}"#).is_err()
+        );
+    }
+
+    #[test]
+    fn rejects_invalid_json() {
+        assert!(workflow_from_json("{not json").is_err());
+    }
+}

@@ -1,0 +1,75 @@
+//! # dcflow — stochastic optimization of data computing flows
+//!
+//! Production-quality reproduction of *“Towards Optimizing Data Computing
+//! Flow in the Cloud”* (Farhat, Tootaghaj, Arjomand, 2016): jobs are
+//! series–parallel compositions of **Data Computing Components (DCCs)**
+//! joined at **Data Access Points (DAPs)**; every server is a stochastic
+//! queue whose service time follows one of the paper's Table-1 delayed-tail
+//! families. The library provides
+//!
+//! * [`dist`] — the Table-1 distribution families (delayed exponential /
+//!   pareto / weibull, multi-modal mixtures, empirical) with grid
+//!   evaluation, sampling and moments;
+//! * [`compose`] — the analytic engine: serial composition by PDF
+//!   convolution (Eq. 1–2, direct + FFT), parallel composition by CDF
+//!   product (Eq. 3–4), grid moments/quantiles, and exponential-family
+//!   closed forms used for validation;
+//! * [`flow`] — the series–parallel workflow graph and its JSON spec;
+//! * [`sched`] — the paper's contribution: `SDCC_allocate` (Alg. 1),
+//!   `PDCC_allocate` (Alg. 2) with the rate-equilibrium solver, the
+//!   heuristic baseline and the exhaustive optimal reference;
+//! * [`sim`] — a discrete-event fork–join queueing simulator used to
+//!   validate the analytic engine and regenerate the paper's figures;
+//! * [`monitor`] — online per-server service-time estimation (the input
+//!   to Alg. 3's periodic re-optimization) with drift detection;
+//! * [`runtime`] — the PJRT hot path: loads the AOT-compiled XLA
+//!   artifacts (pallas/jax, lowered to HLO text at build time) and scores
+//!   candidate allocations in batches; falls back to the native engine;
+//! * [`coordinator`] — the L3 system: leader/worker runtime implementing
+//!   Alg. 3 (monitor → re-optimize → dispatch) over simulated clusters.
+//!
+//! ## Quickstart
+//!
+//! ```no_run
+//! use dcflow::prelude::*;
+//!
+//! // Six heterogeneous servers (exponential service, rates 9..4).
+//! let servers: Vec<Server> = [9.0, 8.0, 7.0, 6.0, 5.0, 4.0]
+//!     .iter().enumerate()
+//!     .map(|(i, &mu)| Server::new(i, ServiceDist::exponential(mu)))
+//!     .collect();
+//!
+//! // The paper's Fig. 6 workflow: PDCC ; SDCC ; PDCC with DAP rates 8/4/2.
+//! let wf = Workflow::fig6();
+//!
+//! // Allocate + rate-schedule with the paper's algorithms, score analytically.
+//! let plan = sdcc_allocate(&wf, &servers).expect("allocation");
+//! let grid = GridSpec::auto(&plan, &servers);
+//! let score = score_allocation(&wf, &plan, &servers, &grid);
+//! println!("mean={:.3} var={:.3} p99={:.3}", score.mean, score.var, score.p99);
+//! ```
+#![deny(missing_docs)]
+#![warn(clippy::all)]
+
+pub mod compose;
+pub mod coordinator;
+pub mod dist;
+pub mod flow;
+pub mod monitor;
+pub mod runtime;
+pub mod sched;
+pub mod sim;
+pub mod util;
+
+/// Convenience re-exports covering the common API surface.
+pub mod prelude {
+    pub use crate::compose::grid::GridSpec;
+    pub use crate::compose::score::{score_allocation, Score};
+    pub use crate::dist::{ServiceDist, TailKind};
+    pub use crate::flow::{Dcc, Workflow};
+    pub use crate::sched::{
+        baseline_allocate, optimal_allocate, sdcc_allocate, Allocation, Objective,
+    };
+    pub use crate::sched::server::Server;
+    pub use crate::sim::network::{SimConfig, SimResult};
+}

@@ -1,0 +1,320 @@
+//! dcflow CLI — leader entrypoint.
+//!
+//! Subcommands:
+//!   run       run a workflow over a synthetic trace with the coordinator
+//!   score     analytically score all three policies on a workflow
+//!   fig7      reproduce the paper's Fig. 7 / Table 2 comparison quickly
+//!   info      show artifact/runtime status
+//!
+//! Examples:
+//!   dcflow score --servers 9,8,7,6,5,4
+//!   dcflow run --policy proposed --tasks 20000 --rate 3.0
+//!   dcflow run --workflow my_flow.json --servers 5,5,4,4
+//!   dcflow fig7
+
+use dcflow::compose::grid::GridSpec;
+use dcflow::compose::score::score_allocation_with;
+use dcflow::coordinator::{Coordinator, CoordinatorConfig, Policy};
+use dcflow::flow::parse::workflow_from_json;
+use dcflow::flow::Workflow;
+use dcflow::runtime::{ArtifactRegistry, BatchScorer, ScorerBackend};
+use dcflow::sched::{
+    baseline_allocate, baseline_allocate_split, optimal_allocate, proposed_allocate,
+    sdcc_allocate, Objective, ResponseModel, SplitPolicy,
+};
+use dcflow::sched::server::Server;
+use dcflow::sim::trace::{ArrivalProcess, Trace};
+use dcflow::util::cli::Cli;
+use dcflow::util::rng::Rng;
+
+fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let (cmd, rest) = match argv.split_first() {
+        Some((c, r)) => (c.as_str(), r.to_vec()),
+        None => {
+            eprintln!("{}", usage());
+            std::process::exit(2);
+        }
+    };
+    let code = match cmd {
+        "run" => cmd_run(&rest),
+        "score" => cmd_score(&rest),
+        "fig7" => cmd_fig7(&rest),
+        "capacity" => cmd_capacity(&rest),
+        "serve" => cmd_serve(&rest),
+        "info" => cmd_info(),
+        "--help" | "-h" | "help" => {
+            println!("{}", usage());
+            0
+        }
+        other => {
+            eprintln!("unknown command '{other}'\n{}", usage());
+            2
+        }
+    };
+    std::process::exit(code);
+}
+
+fn usage() -> String {
+    "dcflow — stochastic optimization of data computing flows\n\
+     commands:\n\
+     \x20 run    run a workflow on the coordinator over a synthetic trace\n\
+     \x20 score  analytically score proposed/baseline/optimal allocations\n\
+     \x20 fig7   reproduce the paper's Fig. 7 / Table 2 comparison\n\
+     \x20 info   artifact/runtime status\n\
+     run '<cmd> --help' for per-command options"
+        .to_string()
+}
+
+fn parse_servers(spec: &str) -> Vec<Server> {
+    let rates: Vec<f64> = spec
+        .split(',')
+        .map(|s| s.trim().parse::<f64>().unwrap_or_else(|_| die(&format!("bad rate '{s}'"))))
+        .collect();
+    Server::pool_exponential(&rates)
+}
+
+fn die(msg: &str) -> ! {
+    eprintln!("dcflow: {msg}");
+    std::process::exit(2)
+}
+
+fn load_workflow(path: &str) -> Workflow {
+    if path.is_empty() {
+        return Workflow::fig6();
+    }
+    let text = std::fs::read_to_string(path)
+        .unwrap_or_else(|e| die(&format!("cannot read workflow {path}: {e}")));
+    workflow_from_json(&text).unwrap_or_else(|e| die(&e.to_string()))
+}
+
+fn cmd_run(argv: &[String]) -> i32 {
+    let cli = Cli::new("dcflow run", "coordinator run over a synthetic trace")
+        .opt("workflow", "", "workflow JSON path (default: fig6)")
+        .opt("servers", "9,8,7,6,5,4", "exponential service rates")
+        .opt("policy", "proposed", "proposed|baseline|optimal")
+        .opt("tasks", "10000", "number of arrivals")
+        .opt("rate", "2.0", "Poisson arrival rate")
+        .opt("seed", "7", "rng seed")
+        .opt("reopt-every", "1000", "re-optimization cadence (0=never)")
+        .flag("reopt-always", "swap on every check, not only on drift");
+    let a = match cli.parse(argv) {
+        Ok(a) => a,
+        Err(msg) => {
+            eprintln!("{msg}");
+            return 2;
+        }
+    };
+    let wf = load_workflow(a.get("workflow"));
+    let servers = parse_servers(a.get("servers"));
+    let policy = match a.get("policy") {
+        "proposed" | "ours" => Policy::Proposed,
+        "baseline" => Policy::Baseline,
+        "optimal" => Policy::Optimal,
+        p => die(&format!("unknown policy '{p}'")),
+    };
+    let cfg = CoordinatorConfig {
+        seed: a.get_as::<u64>("seed").unwrap_or(7),
+        policy,
+        reopt_every: a.get_as::<u64>("reopt-every").unwrap_or(1000),
+        reopt_on_drift_only: !a.has("reopt-always"),
+        ..Default::default()
+    };
+    let n_tasks = a.get_as::<usize>("tasks").unwrap_or(10_000);
+    let rate = a.get_as::<f64>("rate").unwrap_or(2.0);
+
+    let mut rng = Rng::new(cfg.seed);
+    let trace = Trace::generate(ArrivalProcess::Poisson { rate }, n_tasks, &mut rng);
+    let mut coord = Coordinator::with_truthful_priors(servers, cfg);
+    let job = coord.submit("cli-run", wf);
+    match coord.run_job(&job, &trace) {
+        Ok(report) => {
+            println!("{}", report.metrics.summary());
+            for (at, why) in &report.swaps {
+                println!("  swap @task {at}: {why}");
+            }
+            coord.shutdown();
+            0
+        }
+        Err(e) => {
+            eprintln!("dcflow: {e}");
+            1
+        }
+    }
+}
+
+fn cmd_score(argv: &[String]) -> i32 {
+    let cli = Cli::new("dcflow score", "analytic policy comparison")
+        .opt("workflow", "", "workflow JSON path (default: fig6)")
+        .opt("servers", "9,8,7,6,5,4", "exponential service rates")
+        .opt("model", "mm1", "service_only|mm1|mg1");
+    let a = match cli.parse(argv) {
+        Ok(a) => a,
+        Err(msg) => {
+            eprintln!("{msg}");
+            return 2;
+        }
+    };
+    let wf = load_workflow(a.get("workflow"));
+    let servers = parse_servers(a.get("servers"));
+    let model = match a.get("model") {
+        "service_only" => ResponseModel::ServiceOnly,
+        "mm1" => ResponseModel::Mm1,
+        "mg1" => ResponseModel::Mg1,
+        m => die(&format!("unknown model '{m}'")),
+    };
+    let (ours, _) = proposed_allocate(&wf, &servers, model, Objective::Mean)
+        .unwrap_or_else(|e| die(&e.to_string()));
+    let grid = GridSpec::auto_response(&ours, &servers, model);
+    println!("{:<10} {:>10} {:>10} {:>10}", "policy", "mean", "var", "p99");
+    let s = score_allocation_with(&wf, &ours, &servers, &grid, model);
+    println!("{:<10} {:>10.4} {:>10.4} {:>10.4}", "proposed", s.mean, s.var, s.p99);
+    if let Ok(seed) = sdcc_allocate(&wf, &servers) {
+        let s = score_allocation_with(&wf, &seed, &servers, &grid, model);
+        println!("{:<10} {:>10.4} {:>10.4} {:>10.4}", "alg1-seed", s.mean, s.var, s.p99);
+    }
+    if let Ok(b) = baseline_allocate(&wf, &servers, model) {
+        let s = score_allocation_with(&wf, &b, &servers, &grid, model);
+        println!("{:<10} {:>10.4} {:>10.4} {:>10.4}", "baseline", s.mean, s.var, s.p99);
+    }
+    if let Ok((_, s)) = optimal_allocate(&wf, &servers, &grid, Objective::Mean, model) {
+        println!("{:<10} {:>10.4} {:>10.4} {:>10.4}", "optimal", s.mean, s.var, s.p99);
+    }
+    0
+}
+
+fn cmd_fig7(_argv: &[String]) -> i32 {
+    let wf = Workflow::fig6();
+    let servers = Server::pool_exponential(&[9.0, 8.0, 7.0, 6.0, 5.0, 4.0]);
+    let model = ResponseModel::Mm1;
+
+    let (ours, _) = proposed_allocate(&wf, &servers, model, Objective::Mean)
+        .expect("fig6 feasible");
+    let grid = GridSpec::auto_response(&ours, &servers, model);
+    let base = baseline_allocate(&wf, &servers, model).expect("fig6 feasible");
+    let base_eq = baseline_allocate_split(&wf, &servers, model, SplitPolicy::Equilibrium)
+        .expect("fig6 feasible");
+    let (_, opt) = optimal_allocate(&wf, &servers, &grid, Objective::Mean, model)
+        .expect("fig6 feasible");
+    let s_ours = score_allocation_with(&wf, &ours, &servers, &grid, model);
+    let s_base = score_allocation_with(&wf, &base, &servers, &grid, model);
+    let s_base_eq = score_allocation_with(&wf, &base_eq, &servers, &grid, model);
+
+    println!("Fig.7 / Table 2 (analytic, M/M/1 model, λ_DAP = 8/4/2, μ = 9..4):");
+    println!("{:<14} {:>10} {:>10}", "scheme", "mean", "variance");
+    println!("{:<14} {:>10.4} {:>10.4}", "ours", s_ours.mean, s_ours.var);
+    println!("{:<14} {:>10.4} {:>10.4}", "optimal", opt.mean, opt.var);
+    println!("{:<14} {:>10.4} {:>10.4}", "baseline", s_base.mean, s_base.var);
+    println!("{:<14} {:>10.4} {:>10.4}", "fair-baseline", s_base_eq.mean, s_base_eq.var);
+    println!(
+        "improvement over baseline: mean {:.1}%  variance {:.1}%",
+        100.0 * (s_base.mean - s_ours.mean) / s_base.mean,
+        100.0 * (s_base.var - s_ours.var) / s_base.var
+    );
+    0
+}
+
+fn cmd_capacity(argv: &[String]) -> i32 {
+    let cli = Cli::new("dcflow capacity", "capacity planning")
+        .opt("workflow", "", "workflow JSON path (default: fig6)")
+        .opt("servers", "9,8,7,6,5,4", "exponential service rates")
+        .opt("model", "mm1", "service_only|mm1|mg1")
+        .opt("sla-mean", "", "mean response-time bound")
+        .opt("sla-p99", "", "p99 response-time bound");
+    let a = match cli.parse(argv) {
+        Ok(a) => a,
+        Err(msg) => {
+            eprintln!("{msg}");
+            return 2;
+        }
+    };
+    let wf = load_workflow(a.get("workflow"));
+    let servers = parse_servers(a.get("servers"));
+    let model = match a.get("model") {
+        "service_only" => ResponseModel::ServiceOnly,
+        "mm1" => ResponseModel::Mm1,
+        "mg1" => ResponseModel::Mg1,
+        m => die(&format!("unknown model '{m}'")),
+    };
+    use dcflow::sched::capacity::{max_throughput, max_throughput_under_sla, Sla};
+    match max_throughput(&wf, &servers, model) {
+        Ok(cap) => println!(
+            "max throughput: {cap:.4} tasks/s (declared: {})",
+            wf.arrival_rate
+        ),
+        Err(e) => {
+            eprintln!("dcflow: {e}");
+            return 1;
+        }
+    }
+    if !a.get("sla-mean").is_empty() {
+        let b: f64 = a.get_as("sla-mean").unwrap_or_else(|e| die(&e));
+        match max_throughput_under_sla(&wf, &servers, model, Sla::Mean(b)) {
+            Ok(t) => println!("throughput under mean<={b}: {t:.4} tasks/s"),
+            Err(e) => eprintln!("sla-mean: {e}"),
+        }
+    }
+    if !a.get("sla-p99").is_empty() {
+        let b: f64 = a.get_as("sla-p99").unwrap_or_else(|e| die(&e));
+        match max_throughput_under_sla(&wf, &servers, model, Sla::P99(b)) {
+            Ok(t) => println!("throughput under p99<={b}: {t:.4} tasks/s"),
+            Err(e) => eprintln!("sla-p99: {e}"),
+        }
+    }
+    0
+}
+
+fn cmd_serve(argv: &[String]) -> i32 {
+    let cli = Cli::new("dcflow serve", "JSON-over-TCP scheduling service")
+        .opt("addr", "127.0.0.1:7411", "bind address");
+    let a = match cli.parse(argv) {
+        Ok(a) => a,
+        Err(msg) => {
+            eprintln!("{msg}");
+            return 2;
+        }
+    };
+    match dcflow::coordinator::ApiServer::start(a.get("addr")) {
+        Ok(srv) => {
+            println!("dcflow api listening on {}", srv.addr());
+            println!("protocol: one JSON request per line; cmd = ping|score|allocate|capacity|shutdown");
+            // park until a shutdown request kills the listener
+            loop {
+                std::thread::sleep(std::time::Duration::from_millis(200));
+                if std::net::TcpStream::connect(srv.addr()).is_err() {
+                    break;
+                }
+            }
+            0
+        }
+        Err(e) => {
+            eprintln!("dcflow: cannot bind: {e}");
+            1
+        }
+    }
+}
+
+fn cmd_info() -> i32 {
+    println!("dcflow {}", env!("CARGO_PKG_VERSION"));
+    match ArtifactRegistry::open_default() {
+        Ok(reg) => {
+            println!("artifacts: available");
+            let mut names = reg.names().into_iter().map(String::from).collect::<Vec<_>>();
+            names.sort();
+            for n in names {
+                let m = reg.meta(&n).unwrap();
+                println!("  {n}: inputs {:?} outputs {}", m.inputs, m.num_outputs);
+            }
+        }
+        Err(e) => println!("artifacts: unavailable ({e})"),
+    }
+    let scorer = BatchScorer::open_auto();
+    println!(
+        "scorer backend: {}",
+        match scorer.backend() {
+            ScorerBackend::Xla => "xla/pjrt",
+            ScorerBackend::Native => "native",
+        }
+    );
+    0
+}

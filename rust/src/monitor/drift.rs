@@ -1,0 +1,85 @@
+//! Distribution drift detection: decides *when* the coordinator should
+//! re-run the optimizer (paper Alg. 3's "gradually updated" loop).
+//!
+//! Splits the monitor window into a reference half and a recent half and
+//! compares them with the two-sample KS statistic. Threshold defaults to
+//! the 1%-significance asymptotic critical value `1.63·sqrt(2/n)`.
+
+use crate::util::stats::ks_statistic;
+
+/// Drift verdict for one server.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct DriftReport {
+    /// Two-sample KS statistic between reference and recent halves.
+    pub ks: f64,
+    /// Critical value used.
+    pub threshold: f64,
+    /// true when ks > threshold.
+    pub drifted: bool,
+}
+
+/// Detect drift within a window of samples (chronological order).
+/// Returns None when fewer than `2 * min_half` samples are available.
+pub fn detect_drift(samples: &[f64], min_half: usize) -> Option<DriftReport> {
+    let n = samples.len();
+    if n < 2 * min_half {
+        return None;
+    }
+    let mid = n / 2;
+    let mut a = samples[..mid].to_vec();
+    let mut b = samples[mid..].to_vec();
+    a.sort_by(|x, y| x.partial_cmp(y).unwrap());
+    b.sort_by(|x, y| x.partial_cmp(y).unwrap());
+    let ks = ks_statistic(&a, &b);
+    let half = mid.min(n - mid) as f64;
+    let threshold = 1.63 * (2.0 / half).sqrt();
+    Some(DriftReport {
+        ks,
+        threshold,
+        drifted: ks > threshold,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dist::ServiceDist;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn stable_server_no_drift() {
+        let d = ServiceDist::exponential(3.0);
+        let mut rng = Rng::new(21);
+        let samples: Vec<f64> = (0..4000).map(|_| d.sample(&mut rng)).collect();
+        let r = detect_drift(&samples, 100).unwrap();
+        assert!(!r.drifted, "ks {} thr {}", r.ks, r.threshold);
+    }
+
+    #[test]
+    fn degradation_detected() {
+        let fast = ServiceDist::exponential(10.0);
+        let slow = ServiceDist::exponential(3.0);
+        let mut rng = Rng::new(23);
+        let mut samples: Vec<f64> = (0..2000).map(|_| fast.sample(&mut rng)).collect();
+        samples.extend((0..2000).map(|_| slow.sample(&mut rng)));
+        let r = detect_drift(&samples, 100).unwrap();
+        assert!(r.drifted, "ks {} thr {}", r.ks, r.threshold);
+    }
+
+    #[test]
+    fn straggler_onset_detected() {
+        // mode shift: 0% -> 20% straggling in the second half
+        let clean = ServiceDist::exponential(8.0);
+        let straggly = ServiceDist::straggler(8.0, 0.4, 0.2, 0.0);
+        let mut rng = Rng::new(25);
+        let mut samples: Vec<f64> = (0..3000).map(|_| clean.sample(&mut rng)).collect();
+        samples.extend((0..3000).map(|_| straggly.sample(&mut rng)));
+        assert!(detect_drift(&samples, 100).unwrap().drifted);
+    }
+
+    #[test]
+    fn needs_enough_samples() {
+        assert!(detect_drift(&[1.0; 50], 100).is_none());
+        assert!(detect_drift(&[1.0; 199], 100).is_none());
+    }
+}

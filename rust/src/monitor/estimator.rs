@@ -1,0 +1,147 @@
+//! Sliding-window service-time estimation for one server.
+
+use crate::dist::empirical::Empirical;
+use crate::dist::fit::{select_family, Family};
+use crate::dist::ServiceDist;
+use crate::util::stats::Welford;
+use std::collections::VecDeque;
+
+/// Monitors one server: keeps the last `window` observed service times,
+/// streaming lifetime moments, and (re)fits a Table-1 family on demand.
+#[derive(Clone, Debug)]
+pub struct ServerMonitor {
+    window: usize,
+    samples: VecDeque<f64>,
+    lifetime: Welford,
+}
+
+impl ServerMonitor {
+    /// Monitor with a sliding window of `window` samples.
+    pub fn new(window: usize) -> ServerMonitor {
+        assert!(window >= 8, "window too small to estimate anything");
+        ServerMonitor {
+            window,
+            samples: VecDeque::with_capacity(window),
+            lifetime: Welford::new(),
+        }
+    }
+
+    /// Record one observed service time.
+    pub fn observe(&mut self, service_time: f64) {
+        debug_assert!(service_time.is_finite() && service_time >= 0.0);
+        if self.samples.len() == self.window {
+            self.samples.pop_front();
+        }
+        self.samples.push_back(service_time);
+        self.lifetime.push(service_time);
+    }
+
+    /// Number of samples currently in the window.
+    pub fn window_len(&self) -> usize {
+        self.samples.len()
+    }
+
+    /// Total observations ever.
+    pub fn count(&self) -> u64 {
+        self.lifetime.count()
+    }
+
+    /// Window mean (None until the window has >= 2 samples).
+    pub fn mean(&self) -> Option<f64> {
+        if self.samples.len() < 2 {
+            return None;
+        }
+        Some(self.samples.iter().sum::<f64>() / self.samples.len() as f64)
+    }
+
+    /// Windowed samples, oldest first.
+    pub fn window_samples(&self) -> Vec<f64> {
+        self.samples.iter().copied().collect()
+    }
+
+    /// Non-parametric estimate from the current window.
+    pub fn empirical(&self) -> Option<Empirical> {
+        if self.samples.len() < 8 {
+            return None;
+        }
+        Some(Empirical::from_samples(&self.window_samples()))
+    }
+
+    /// Parametric re-fit: best Table-1 family for the current window
+    /// (None until enough samples; `min_samples` gates fit stability).
+    pub fn fitted(&self, min_samples: usize) -> Option<(Family, ServiceDist, f64)> {
+        if self.samples.len() < min_samples.max(8) {
+            return None;
+        }
+        Some(select_family(&self.window_samples()))
+    }
+
+    /// Lifetime mean (all observations, not just the window).
+    pub fn lifetime_mean(&self) -> f64 {
+        self.lifetime.mean()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dist::ServiceDist;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn window_slides() {
+        let mut m = ServerMonitor::new(8);
+        for i in 0..20 {
+            m.observe(i as f64);
+        }
+        assert_eq!(m.window_len(), 8);
+        assert_eq!(m.count(), 20);
+        assert_eq!(m.window_samples(), (12..20).map(|i| i as f64).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn fit_recovers_law_from_window() {
+        let truth = ServiceDist::delayed_exponential(5.0, 0.2);
+        let mut rng = Rng::new(3);
+        let mut m = ServerMonitor::new(4096);
+        for _ in 0..4096 {
+            m.observe(truth.sample(&mut rng));
+        }
+        let (_, fitted, ks) = m.fitted(512).unwrap();
+        assert!(ks < 0.05, "ks {ks}");
+        assert!((fitted.mean() - truth.mean()).abs() < 0.05 * truth.mean());
+    }
+
+    #[test]
+    fn tracks_regime_change() {
+        // server degrades mid-stream: window forgets the old regime
+        let fast = ServiceDist::exponential(10.0);
+        let slow = ServiceDist::exponential(1.0);
+        let mut rng = Rng::new(5);
+        let mut m = ServerMonitor::new(1000);
+        for _ in 0..5000 {
+            m.observe(fast.sample(&mut rng));
+        }
+        for _ in 0..1500 {
+            m.observe(slow.sample(&mut rng));
+        }
+        // window now holds only slow samples
+        assert!((m.mean().unwrap() - 1.0).abs() < 0.15, "mean {:?}", m.mean());
+        // lifetime mean is blended
+        assert!(m.lifetime_mean() < 0.5);
+    }
+
+    #[test]
+    fn gates_until_enough_samples() {
+        let mut m = ServerMonitor::new(64);
+        assert!(m.mean().is_none());
+        assert!(m.empirical().is_none());
+        assert!(m.fitted(16).is_none());
+        for i in 0..16 {
+            m.observe(1.0 + i as f64 * 0.01);
+        }
+        assert!(m.mean().is_some());
+        assert!(m.empirical().is_some());
+        assert!(m.fitted(16).is_some());
+    }
+}

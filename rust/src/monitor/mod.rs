@@ -1,0 +1,17 @@
+//! Online per-server service-time monitoring — the input side of the
+//! paper's Algorithm 3 ("the necessary information to manage job
+//! workflow is the performance distribution of each server which is
+//! gradually updated over the time").
+//!
+//! * [`estimator::ServerMonitor`] — sliding-window sample store with
+//!   streaming moments and parametric re-fitting ([`crate::dist::fit`]);
+//! * [`drift`] — KS-based change detection that tells the coordinator
+//!   when a server's law has shifted enough to warrant re-optimization;
+//! * [`registry::MonitorRegistry`] — the per-cluster collection.
+
+pub mod drift;
+pub mod estimator;
+pub mod registry;
+
+pub use estimator::ServerMonitor;
+pub use registry::MonitorRegistry;

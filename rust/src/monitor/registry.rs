@@ -1,0 +1,117 @@
+//! Cluster-wide monitor registry: one [`ServerMonitor`] per server plus
+//! the aggregated re-optimization trigger the coordinator polls.
+
+use crate::dist::ServiceDist;
+use crate::monitor::drift::{detect_drift, DriftReport};
+use crate::monitor::estimator::ServerMonitor;
+use crate::sched::server::Server;
+
+/// Monitors for a pool of servers.
+#[derive(Clone, Debug)]
+pub struct MonitorRegistry {
+    monitors: Vec<ServerMonitor>,
+    min_fit_samples: usize,
+}
+
+impl MonitorRegistry {
+    /// One monitor per server, each with `window` samples.
+    pub fn new(n_servers: usize, window: usize, min_fit_samples: usize) -> MonitorRegistry {
+        MonitorRegistry {
+            monitors: (0..n_servers).map(|_| ServerMonitor::new(window)).collect(),
+            min_fit_samples,
+        }
+    }
+
+    /// Record a service-time observation for `server_id`.
+    pub fn observe(&mut self, server_id: usize, service_time: f64) {
+        self.monitors[server_id].observe(service_time);
+    }
+
+    /// Access a monitor.
+    pub fn monitor(&self, server_id: usize) -> &ServerMonitor {
+        &self.monitors[server_id]
+    }
+
+    /// Number of monitored servers.
+    pub fn len(&self) -> usize {
+        self.monitors.len()
+    }
+
+    /// True when no servers are registered.
+    pub fn is_empty(&self) -> bool {
+        self.monitors.is_empty()
+    }
+
+    /// Refresh a server pool with fitted laws where available: servers
+    /// without enough observations keep their prior law. Returns the
+    /// number of servers whose law was refreshed.
+    pub fn refresh_pool(&self, servers: &mut [Server]) -> usize {
+        let mut updated = 0;
+        for s in servers.iter_mut() {
+            if let Some((_, fitted, _)) = self.monitors[s.id].fitted(self.min_fit_samples) {
+                s.dist = fitted;
+                updated += 1;
+            }
+        }
+        updated
+    }
+
+    /// Fitted law for one server, if estimable.
+    pub fn fitted_dist(&self, server_id: usize) -> Option<ServiceDist> {
+        self.monitors[server_id]
+            .fitted(self.min_fit_samples)
+            .map(|(_, d, _)| d)
+    }
+
+    /// Drift reports for all servers with enough data.
+    pub fn drift_reports(&self, min_half: usize) -> Vec<(usize, DriftReport)> {
+        self.monitors
+            .iter()
+            .enumerate()
+            .filter_map(|(id, m)| detect_drift(&m.window_samples(), min_half).map(|r| (id, r)))
+            .collect()
+    }
+
+    /// True when any server drifted — the Alg. 3 re-optimization trigger.
+    pub fn any_drifted(&self, min_half: usize) -> bool {
+        self.drift_reports(min_half).iter().any(|(_, r)| r.drifted)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn refresh_updates_only_observed_servers() {
+        let truth = ServiceDist::exponential(4.0);
+        let mut reg = MonitorRegistry::new(3, 4096, 256);
+        let mut rng = Rng::new(31);
+        for _ in 0..2000 {
+            reg.observe(1, truth.sample(&mut rng));
+        }
+        let mut pool = Server::pool_exponential(&[1.0, 1.0, 1.0]);
+        let updated = reg.refresh_pool(&mut pool);
+        assert_eq!(updated, 1);
+        assert!((pool[1].dist.mean() - 0.25).abs() < 0.02);
+        assert!((pool[0].dist.mean() - 1.0).abs() < 1e-9); // prior kept
+    }
+
+    #[test]
+    fn drift_trigger_fires_cluster_wide() {
+        let mut reg = MonitorRegistry::new(2, 4096, 256);
+        let fast = ServiceDist::exponential(10.0);
+        let slow = ServiceDist::exponential(2.0);
+        let mut rng = Rng::new(33);
+        for _ in 0..1000 {
+            reg.observe(0, fast.sample(&mut rng));
+            reg.observe(1, fast.sample(&mut rng));
+        }
+        assert!(!reg.any_drifted(100));
+        for _ in 0..1000 {
+            reg.observe(1, slow.sample(&mut rng));
+        }
+        assert!(reg.any_drifted(100));
+    }
+}

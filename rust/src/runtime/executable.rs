@@ -1,0 +1,290 @@
+//! Artifact loading and execution over the PJRT C API (`xla` crate).
+
+use crate::util::json::Json;
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+/// Runtime failure.
+#[derive(Debug)]
+pub enum RuntimeError {
+    /// artifacts/ directory or manifest missing / unreadable.
+    MissingArtifacts(String),
+    /// Unknown artifact name.
+    UnknownArtifact(String),
+    /// Underlying XLA/PJRT error.
+    Xla(xla::Error),
+    /// Input arity/shape mismatch against the manifest.
+    BadInput(String),
+}
+
+impl std::fmt::Display for RuntimeError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            RuntimeError::MissingArtifacts(p) => {
+                write!(f, "artifacts unavailable: {p} (run `make artifacts`)")
+            }
+            RuntimeError::UnknownArtifact(n) => write!(f, "unknown artifact '{n}'"),
+            RuntimeError::Xla(e) => write!(f, "xla error: {e:?}"),
+            RuntimeError::BadInput(m) => write!(f, "bad input: {m}"),
+        }
+    }
+}
+
+impl std::error::Error for RuntimeError {}
+
+impl From<xla::Error> for RuntimeError {
+    fn from(e: xla::Error) -> Self {
+        RuntimeError::Xla(e)
+    }
+}
+
+/// Manifest entry for one artifact.
+#[derive(Clone, Debug)]
+pub struct ArtifactMeta {
+    /// File name within the artifact directory.
+    pub path: String,
+    /// Input shapes (as listed by aot.py).
+    pub inputs: Vec<Vec<usize>>,
+    /// Number of tuple outputs.
+    pub num_outputs: usize,
+}
+
+/// PJRT CPU client + lazily compiled executables for every artifact in
+/// `manifest.json`. Compilation happens once per artifact per process;
+/// the hot path only executes.
+pub struct ArtifactRegistry {
+    client: xla::PjRtClient,
+    dir: PathBuf,
+    meta: HashMap<String, ArtifactMeta>,
+    compiled: HashMap<String, xla::PjRtLoadedExecutable>,
+}
+
+impl ArtifactRegistry {
+    /// Open an artifact directory (reads `manifest.json`, creates the
+    /// PJRT CPU client; compilation is deferred per artifact).
+    pub fn open(dir: impl AsRef<Path>) -> Result<ArtifactRegistry, RuntimeError> {
+        let dir = dir.as_ref().to_path_buf();
+        let manifest_path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&manifest_path)
+            .map_err(|e| RuntimeError::MissingArtifacts(format!("{manifest_path:?}: {e}")))?;
+        let v = Json::parse(&text)
+            .map_err(|e| RuntimeError::MissingArtifacts(format!("manifest parse: {e}")))?;
+        let arts = v
+            .get("artifacts")
+            .and_then(Json::as_obj)
+            .ok_or_else(|| RuntimeError::MissingArtifacts("manifest has no artifacts".into()))?;
+        let mut meta = HashMap::new();
+        for (name, m) in arts {
+            let path = m
+                .get("path")
+                .and_then(Json::as_str)
+                .ok_or_else(|| RuntimeError::MissingArtifacts(format!("{name}: no path")))?
+                .to_string();
+            let inputs = m
+                .get("inputs")
+                .and_then(Json::as_arr)
+                .map(|arr| {
+                    arr.iter()
+                        .map(|shape| {
+                            shape
+                                .as_arr()
+                                .unwrap_or(&[])
+                                .iter()
+                                .filter_map(Json::as_usize)
+                                .collect()
+                        })
+                        .collect()
+                })
+                .unwrap_or_default();
+            let num_outputs = m
+                .get("num_outputs")
+                .and_then(Json::as_usize)
+                .unwrap_or(1);
+            meta.insert(
+                name.clone(),
+                ArtifactMeta {
+                    path,
+                    inputs,
+                    num_outputs,
+                },
+            );
+        }
+        let client = xla::PjRtClient::cpu()?;
+        Ok(ArtifactRegistry {
+            client,
+            dir,
+            meta,
+            compiled: HashMap::new(),
+        })
+    }
+
+    /// Default location: `$DCFLOW_ARTIFACTS` or `./artifacts`.
+    pub fn open_default() -> Result<ArtifactRegistry, RuntimeError> {
+        let dir = std::env::var("DCFLOW_ARTIFACTS").unwrap_or_else(|_| "artifacts".to_string());
+        Self::open(dir)
+    }
+
+    /// Artifact names available.
+    pub fn names(&self) -> Vec<&str> {
+        self.meta.keys().map(|s| s.as_str()).collect()
+    }
+
+    /// Manifest metadata for an artifact.
+    pub fn meta(&self, name: &str) -> Option<&ArtifactMeta> {
+        self.meta.get(name)
+    }
+
+    /// Compile (or fetch the cached executable for) an artifact.
+    pub fn ensure_compiled(&mut self, name: &str) -> Result<(), RuntimeError> {
+        if self.compiled.contains_key(name) {
+            return Ok(());
+        }
+        let m = self
+            .meta
+            .get(name)
+            .ok_or_else(|| RuntimeError::UnknownArtifact(name.to_string()))?;
+        let path = self.dir.join(&m.path);
+        let proto = xla::HloModuleProto::from_text_file(&path)?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self.client.compile(&comp)?;
+        self.compiled.insert(name.to_string(), exe);
+        Ok(())
+    }
+
+    /// Execute an artifact on f32 tensors. `args` are (data, shape)
+    /// pairs; returns the flattened f32 data of every tuple output.
+    pub fn execute_f32(
+        &mut self,
+        name: &str,
+        args: &[(&[f32], &[usize])],
+    ) -> Result<Vec<Vec<f32>>, RuntimeError> {
+        self.ensure_compiled(name)?;
+        let m = &self.meta[name];
+        if m.inputs.len() != args.len() {
+            return Err(RuntimeError::BadInput(format!(
+                "{name} expects {} inputs, got {}",
+                m.inputs.len(),
+                args.len()
+            )));
+        }
+        for (i, ((data, shape), want)) in args.iter().zip(&m.inputs).enumerate() {
+            let n: usize = shape.iter().product::<usize>().max(1);
+            if shape[..] != want[..] {
+                return Err(RuntimeError::BadInput(format!(
+                    "{name} input {i}: shape {shape:?} != manifest {want:?}"
+                )));
+            }
+            if data.len() != n {
+                return Err(RuntimeError::BadInput(format!(
+                    "{name} input {i}: {} elements for shape {shape:?}",
+                    data.len()
+                )));
+            }
+        }
+        let literals: Vec<xla::Literal> = args
+            .iter()
+            .map(|(data, shape)| {
+                let lit = xla::Literal::vec1(data);
+                if shape.is_empty() {
+                    // scalar: reshape to rank-0
+                    lit.reshape(&[])
+                } else {
+                    let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+                    lit.reshape(&dims)
+                }
+            })
+            .collect::<Result<_, _>>()?;
+
+        let exe = &self.compiled[name];
+        let result = exe.execute::<xla::Literal>(&literals)?[0][0].to_literal_sync()?;
+        let outs = result.to_tuple()?;
+        if outs.len() != m.num_outputs {
+            return Err(RuntimeError::BadInput(format!(
+                "{name}: manifest says {} outputs, got {}",
+                m.num_outputs,
+                outs.len()
+            )));
+        }
+        outs.into_iter()
+            .map(|l| l.to_vec::<f32>().map_err(RuntimeError::from))
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn artifacts_dir() -> Option<PathBuf> {
+        let p = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        p.join("manifest.json").exists().then_some(p)
+    }
+
+    #[test]
+    fn open_missing_dir_errors() {
+        assert!(matches!(
+            ArtifactRegistry::open("/nonexistent/path"),
+            Err(RuntimeError::MissingArtifacts(_))
+        ));
+    }
+
+    #[test]
+    fn manifest_round_trip() {
+        let Some(dir) = artifacts_dir() else {
+            eprintln!("skipping: run `make artifacts` first");
+            return;
+        };
+        let reg = ArtifactRegistry::open(&dir).unwrap();
+        assert!(reg.names().iter().any(|n| n.starts_with("score_fig6")));
+        let meta = reg.meta(reg.names()[0]).unwrap();
+        assert!(!meta.path.is_empty());
+    }
+
+    #[test]
+    fn executes_conv_pair_artifact() {
+        let Some(dir) = artifacts_dir() else {
+            eprintln!("skipping: run `make artifacts` first");
+            return;
+        };
+        let mut reg = ArtifactRegistry::open(&dir).unwrap();
+        let name = "conv_pair_b8_g1024";
+        if reg.meta(name).is_none() {
+            eprintln!("skipping: {name} not in manifest");
+            return;
+        }
+        let (b, g) = (8usize, 1024usize);
+        let dt = 0.01f32;
+        // exp(2) and exp(5) pdfs, same in every batch row
+        let mut f = vec![0f32; b * g];
+        let mut h = vec![0f32; b * g];
+        for row in 0..b {
+            for k in 0..g {
+                let t = k as f32 * dt;
+                f[row * g + k] = 2.0 * (-2.0 * t).exp();
+                h[row * g + k] = 5.0 * (-5.0 * t).exp();
+            }
+        }
+        let outs = reg
+            .execute_f32(
+                name,
+                &[(&f, &[b, g]), (&h, &[b, g]), (&[dt], &[])],
+            )
+            .unwrap();
+        assert_eq!(outs.len(), 1);
+        let out = &outs[0];
+        assert_eq!(out.len(), b * g);
+        // compare against the native engine
+        let tgrid: Vec<f64> = (0..g).map(|k| k as f64 * dt as f64).collect();
+        let fr: Vec<f64> = tgrid.iter().map(|&t| 2.0 * (-2.0 * t).exp()).collect();
+        let hr: Vec<f64> = tgrid.iter().map(|&t| 5.0 * (-5.0 * t).exp()).collect();
+        let want = crate::compose::conv::conv_fft(&fr, &hr, dt as f64);
+        for k in (0..g).step_by(37) {
+            assert!(
+                (out[k] as f64 - want[k]).abs() < 1e-3,
+                "k={k}: {} vs {}",
+                out[k],
+                want[k]
+            );
+        }
+    }
+}

@@ -1,0 +1,18 @@
+//! PJRT runtime: loads the AOT artifacts (jax/pallas lowered to HLO text
+//! at build time) and executes them from the rust hot path.
+//!
+//! Python never runs here — `make artifacts` is the only python step.
+//! The interchange format is HLO *text*: jax ≥ 0.5 serializes protos with
+//! 64-bit instruction ids that xla_extension 0.5.1 rejects; the text
+//! parser reassigns ids (see /opt/xla-example/README.md).
+//!
+//! * [`executable`] — client + compiled-executable cache keyed by
+//!   artifact name, with f32-literal marshalling helpers;
+//! * [`scorer`] — the batched fig6 allocation scorer (the optimizer's
+//!   inner loop) with a bit-compatible native fallback.
+
+pub mod executable;
+pub mod scorer;
+
+pub use executable::{ArtifactRegistry, RuntimeError};
+pub use scorer::{BatchScorer, ScorerBackend};

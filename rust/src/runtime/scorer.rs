@@ -1,0 +1,436 @@
+//! Batched allocation scoring — the optimizer's hot path.
+//!
+//! The exhaustive/heuristic searches need to score many candidate
+//! allocations. For the Fig. 6 template the whole composition is one AOT
+//! artifact (`score_fig6_b{B}_g{G}`): rust builds the per-slot
+//! response-law grids, packs a `[B, 6, G]` wavefront, and one PJRT
+//! execute returns `[B, 3]` score triples (+ total PDFs). Arbitrary
+//! topologies and artifact-less environments fall back to the native
+//! engine — same math (`compose::score`), cross-checked in tests.
+
+use crate::compose::grid::GridSpec;
+use crate::compose::score::{score_allocation_with, Score};
+use crate::dist::central_diff;
+use crate::flow::{Dcc, Workflow};
+use crate::runtime::executable::{ArtifactRegistry, RuntimeError};
+use crate::sched::response::{response_dist, Response, ResponseModel};
+use crate::sched::server::Server;
+use crate::sched::Allocation;
+
+/// Score triple for one candidate (mean, variance, p99).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Triple {
+    /// Mean end-to-end response time.
+    pub mean: f64,
+    /// Variance.
+    pub var: f64,
+    /// 99th percentile.
+    pub p99: f64,
+}
+
+impl Triple {
+    const UNSTABLE: Triple = Triple {
+        mean: f64::INFINITY,
+        var: f64::INFINITY,
+        p99: f64::INFINITY,
+    };
+
+    /// From a native Score.
+    pub fn from_score(s: &Score) -> Triple {
+        Triple {
+            mean: s.mean,
+            var: s.var,
+            p99: s.p99,
+        }
+    }
+}
+
+/// Which engine scored the batch.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ScorerBackend {
+    /// AOT artifact via PJRT.
+    Xla,
+    /// Pure-rust composition engine.
+    Native,
+}
+
+/// Batched scorer with automatic fallback.
+pub struct BatchScorer {
+    registry: Option<ArtifactRegistry>,
+    artifact: Option<String>,
+    /// Fully-fused parametric scorer artifact, when the manifest has one.
+    mmde_artifact: Option<(String, usize)>, // (name, M modes)
+    /// Wavefront size of the artifact (B).
+    pub batch: usize,
+    /// Grid points of the artifact (G).
+    pub grid_n: usize,
+}
+
+impl BatchScorer {
+    /// Try to open the artifact registry; fall back to native silently.
+    pub fn open_auto() -> BatchScorer {
+        match ArtifactRegistry::open_default() {
+            Ok(reg) => Self::from_registry(reg),
+            Err(_) => Self::native(),
+        }
+    }
+
+    /// Force the native backend.
+    pub fn native() -> BatchScorer {
+        BatchScorer {
+            registry: None,
+            artifact: None,
+            mmde_artifact: None,
+            batch: 64,
+            grid_n: GridSpec::AOT_N,
+        }
+    }
+
+    /// XLA backend from an opened registry (errors if the fig6 scorer
+    /// artifact is absent). Prefers the CPU-optimized `score_fig6_fast_*`
+    /// artifact (FFT convolution) over the TPU-shaped pallas one — on the
+    /// CPU PJRT backend the interpret-mode pallas grid executes as an XLA
+    /// while-loop and is orders of magnitude slower (§Perf).
+    pub fn xla(reg: ArtifactRegistry) -> Result<BatchScorer, RuntimeError> {
+        let names = reg.names();
+        let name = names
+            .iter()
+            .find(|n| n.starts_with("score_fig6_fast"))
+            .or_else(|| names.iter().find(|n| n.starts_with("score_fig6")))
+            .map(|s| s.to_string())
+            .ok_or_else(|| RuntimeError::UnknownArtifact("score_fig6_*".into()))?;
+        Self::xla_with(reg, &name)
+    }
+
+    /// XLA backend pinned to a specific scorer artifact (perf A/B runs).
+    pub fn xla_with(reg: ArtifactRegistry, name: &str) -> Result<BatchScorer, RuntimeError> {
+        let meta = reg
+            .meta(name)
+            .ok_or_else(|| RuntimeError::UnknownArtifact(name.to_string()))?;
+        let (batch, grid_n) = (meta.inputs[0][0], meta.inputs[0][2]);
+        // the fully-fused parametric scorer, when lowered
+        let mmde_artifact = reg
+            .names()
+            .iter()
+            .find(|n| n.starts_with("score_fig6_mmde"))
+            .map(|n| {
+                let m = reg.meta(n).unwrap().inputs[0][2];
+                (n.to_string(), m)
+            });
+        Ok(BatchScorer {
+            registry: Some(reg),
+            artifact: Some(name.to_string()),
+            mmde_artifact,
+            batch,
+            grid_n,
+        })
+    }
+
+    fn from_registry(reg: ArtifactRegistry) -> BatchScorer {
+        Self::xla(reg).unwrap_or_else(|_| Self::native())
+    }
+
+    /// Active backend.
+    pub fn backend(&self) -> ScorerBackend {
+        if self.registry.is_some() {
+            ScorerBackend::Xla
+        } else {
+            ScorerBackend::Native
+        }
+    }
+
+    /// Score a wave of candidate allocations on a workflow.
+    ///
+    /// Uses the fused PJRT artifact when (a) the backend is XLA and
+    /// (b) the workflow matches the Fig. 6 template slot layout;
+    /// otherwise scores natively. Unstable candidates get infinite
+    /// triples either way.
+    pub fn score_batch(
+        &mut self,
+        wf: &Workflow,
+        allocs: &[Allocation],
+        servers: &[Server],
+        grid: &GridSpec,
+        model: ResponseModel,
+    ) -> Vec<Triple> {
+        if self.registry.is_some() && is_fig6_shape(wf) && grid.n == self.grid_n {
+            // prefer the fully-fused parametric path when every response
+            // law in the wave is an (atomless) delayed-exp mixture
+            if self.mmde_artifact.is_some() {
+                if let Some(t) = self.try_score_batch_mmde(allocs, servers, grid, model) {
+                    return t;
+                }
+            }
+            match self.score_batch_xla(allocs, servers, grid, model) {
+                Ok(t) => return t,
+                Err(e) => {
+                    // fall back once and remember
+                    eprintln!("dcflow: xla scorer failed ({e}); falling back to native");
+                    self.registry = None;
+                }
+            }
+        }
+        allocs
+            .iter()
+            .map(|a| Triple::from_score(&score_allocation_with(wf, a, servers, grid, model)))
+            .collect()
+    }
+
+    fn score_batch_xla(
+        &mut self,
+        allocs: &[Allocation],
+        servers: &[Server],
+        grid: &GridSpec,
+        model: ResponseModel,
+    ) -> Result<Vec<Triple>, RuntimeError> {
+        let (b, g) = (self.batch, self.grid_n);
+        let name = self.artifact.clone().expect("xla backend has artifact");
+        let reg = self.registry.as_mut().expect("xla backend has registry");
+        let mut out = Vec::with_capacity(allocs.len());
+
+        for wave in allocs.chunks(b) {
+            let mut pdf = vec![0f32; b * 6 * g];
+            let mut cdf = vec![0f32; b * 6 * g];
+            // rows beyond the wave stay zero (scored then discarded)
+            let mut stable = vec![true; wave.len()];
+            for (row, alloc) in wave.iter().enumerate() {
+                for slot in 0..6 {
+                    let service = &servers[alloc.server_for(slot)].dist;
+                    match response_dist(model, service, alloc.rate_for(slot)) {
+                        Response::Unstable => {
+                            stable[row] = false;
+                            break;
+                        }
+                        Response::Stable(d) => {
+                            let c = d.cdf_grid(grid.dt, g);
+                            let p = central_diff(&c, grid.dt);
+                            let base = (row * 6 + slot) * g;
+                            for k in 0..g {
+                                pdf[base + k] = p[k] as f32;
+                                cdf[base + k] = c[k] as f32;
+                            }
+                        }
+                    }
+                }
+            }
+            let outs = reg.execute_f32(
+                &name,
+                &[
+                    (&pdf, &[b, 6, g]),
+                    (&cdf, &[b, 6, g]),
+                    (&[grid.dt as f32], &[]),
+                ],
+            )?;
+            let scores = &outs[0]; // [B, 3]
+            for (row, &ok) in stable.iter().enumerate() {
+                if !ok {
+                    out.push(Triple::UNSTABLE);
+                } else {
+                    out.push(Triple {
+                        mean: scores[row * 3] as f64,
+                        var: scores[row * 3 + 1] as f64,
+                        p99: scores[row * 3 + 2] as f64,
+                    });
+                }
+            }
+        }
+        Ok(out)
+    }
+}
+
+impl BatchScorer {
+    /// Parametric path: pack response-law mixture parameters per slot and
+    /// run the fully-fused `score_fig6_mmde_*` artifact. Returns None when
+    /// any stable law in the wave is not an atomless delayed-exp mixture
+    /// with at most M modes (the caller then uses the grid path).
+    fn try_score_batch_mmde(
+        &mut self,
+        allocs: &[Allocation],
+        servers: &[Server],
+        grid: &GridSpec,
+        model: ResponseModel,
+    ) -> Option<Vec<Triple>> {
+        let (name, m_modes) = self.mmde_artifact.clone()?;
+        let b = self.batch;
+        let mut out = Vec::with_capacity(allocs.len());
+        // pre-extract params; bail out (None) on unrepresentable laws
+        let mut packed: Vec<Option<Vec<[f32; 3]>>> = Vec::with_capacity(allocs.len() * 6);
+        for alloc in allocs {
+            for slot in 0..6 {
+                let service = &servers[alloc.server_for(slot)].dist;
+                match response_dist(model, service, alloc.rate_for(slot)) {
+                    Response::Unstable => packed.push(Some(Vec::new())), // marker: unstable row
+                    Response::Stable(d) => {
+                        let params = mmde_params(&d, m_modes)?;
+                        packed.push(Some(params));
+                    }
+                }
+            }
+        }
+
+        let reg = self.registry.as_mut()?;
+        for (wave_idx, wave) in allocs.chunks(b).enumerate() {
+            let mut w = vec![0f32; b * 6 * m_modes];
+            let mut lam = vec![1f32; b * 6 * m_modes];
+            let mut delay = vec![0f32; b * 6 * m_modes];
+            let mut stable = vec![true; wave.len()];
+            for (row, _alloc) in wave.iter().enumerate() {
+                for slot in 0..6 {
+                    let entry = &packed[(wave_idx * b + row) * 6 + slot];
+                    let params = entry.as_ref().expect("pre-extracted");
+                    if params.is_empty() {
+                        stable[row] = false;
+                        continue;
+                    }
+                    for (k, p) in params.iter().enumerate() {
+                        let base = (row * 6 + slot) * m_modes + k;
+                        w[base] = p[0];
+                        lam[base] = p[1];
+                        delay[base] = p[2];
+                    }
+                }
+            }
+            let outs = reg
+                .execute_f32(
+                    &name,
+                    &[
+                        (&w, &[b, 6, m_modes]),
+                        (&lam, &[b, 6, m_modes]),
+                        (&delay, &[b, 6, m_modes]),
+                        (&[grid.dt as f32], &[]),
+                    ],
+                )
+                .ok()?;
+            let scores = &outs[0];
+            for (row, &ok) in stable.iter().enumerate() {
+                out.push(if ok {
+                    Triple {
+                        mean: scores[row * 3] as f64,
+                        var: scores[row * 3 + 1] as f64,
+                        p99: scores[row * 3 + 2] as f64,
+                    }
+                } else {
+                    Triple::UNSTABLE
+                });
+            }
+        }
+        Some(out)
+    }
+}
+
+/// Extract (weight, lam, delay) mixture parameters when the law is an
+/// atomless multi-modal delayed exponential with at most `max_modes`
+/// modes (exactly what the device-side grid builder evaluates).
+pub fn mmde_params(d: &crate::dist::ServiceDist, max_modes: usize) -> Option<Vec<[f32; 3]>> {
+    use crate::dist::TailKind;
+    let modes = d.modes();
+    if modes.len() > max_modes {
+        return None;
+    }
+    let mut out = Vec::with_capacity(modes.len());
+    for (p, m) in modes {
+        if !matches!(m.kind, TailKind::Exponential) {
+            return None;
+        }
+        // device formula has no alpha: requires the continuous (atomless)
+        // parameterization, alpha == 1 for the exponential clock
+        if (m.alpha - 1.0).abs() > 1e-9 {
+            return None;
+        }
+        out.push([*p as f32, m.lam as f32, m.delay as f32]);
+    }
+    Some(out)
+}
+
+/// True when the workflow is the Fig. 6 template the fused artifact was
+/// lowered for: Serial[Parallel(2), Queue, Queue, Parallel(2)] over 6
+/// slots (the canonicalized fig6 shape).
+pub fn is_fig6_shape(wf: &Workflow) -> bool {
+    if wf.slots() != 6 {
+        return false;
+    }
+    match wf.root() {
+        Dcc::Serial { children, .. } if children.len() == 4 => {
+            matches!(&children[0], Dcc::Parallel { children: c, .. } if c.len() == 2
+                && c.iter().all(|x| matches!(x, Dcc::Queue { .. })))
+                && matches!(&children[1], Dcc::Queue { .. })
+                && matches!(&children[2], Dcc::Queue { .. })
+                && matches!(&children[3], Dcc::Parallel { children: c, .. } if c.len() == 2
+                && c.iter().all(|x| matches!(x, Dcc::Queue { .. })))
+        }
+        _ => false,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sched::{baseline_allocate, sdcc_allocate};
+
+    fn fig6() -> (Workflow, Vec<Server>) {
+        (
+            Workflow::fig6(),
+            Server::pool_exponential(&[9.0, 8.0, 7.0, 6.0, 5.0, 4.0]),
+        )
+    }
+
+    #[test]
+    fn fig6_shape_detector() {
+        assert!(is_fig6_shape(&Workflow::fig6()));
+        assert!(!is_fig6_shape(&Workflow::tandem(6, 1.0)));
+        assert!(!is_fig6_shape(&Workflow::forkjoin(6, 1.0)));
+    }
+
+    #[test]
+    fn native_scorer_matches_direct_scoring() {
+        let (wf, servers) = fig6();
+        let a1 = sdcc_allocate(&wf, &servers).unwrap();
+        let a2 = baseline_allocate(&wf, &servers, ResponseModel::Mm1).unwrap();
+        let grid = GridSpec::auto(&a1, &servers);
+        let mut scorer = BatchScorer::native();
+        let triples = scorer.score_batch(
+            &wf,
+            &[a1.clone(), a2.clone()],
+            &servers,
+            &grid,
+            ResponseModel::Mm1,
+        );
+        let d1 = score_allocation_with(&wf, &a1, &servers, &grid, ResponseModel::Mm1);
+        assert!((triples[0].mean - d1.mean).abs() < 1e-12);
+        assert!((triples[0].var - d1.var).abs() < 1e-12);
+    }
+
+    #[test]
+    fn xla_scorer_matches_native_when_artifacts_present() {
+        let dir = std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        if !dir.join("manifest.json").exists() {
+            eprintln!("skipping: run `make artifacts` first");
+            return;
+        }
+        let (wf, servers) = fig6();
+        let a1 = sdcc_allocate(&wf, &servers).unwrap();
+        let a2 = baseline_allocate(&wf, &servers, ResponseModel::Mm1).unwrap();
+        let grid = GridSpec::auto(&a1, &servers);
+        let reg = ArtifactRegistry::open(&dir).unwrap();
+        let mut xla_scorer = BatchScorer::xla(reg).unwrap();
+        assert_eq!(xla_scorer.backend(), ScorerBackend::Xla);
+        let grid = GridSpec {
+            dt: grid.dt,
+            n: xla_scorer.grid_n,
+        };
+        let xla_t =
+            xla_scorer.score_batch(&wf, &[a1.clone(), a2.clone()], &servers, &grid, ResponseModel::Mm1);
+        let mut native = BatchScorer::native();
+        let nat_t = native.score_batch(&wf, &[a1, a2], &servers, &grid, ResponseModel::Mm1);
+        for (x, n) in xla_t.iter().zip(nat_t.iter()) {
+            // f32 artifact vs f64 native: loose but tight enough to catch
+            // any composition mismatch
+            assert!((x.mean - n.mean).abs() < 2e-3 * (1.0 + n.mean), "{x:?} vs {n:?}");
+            assert!((x.var - n.var).abs() < 5e-3 * (1.0 + n.var), "{x:?} vs {n:?}");
+            // p99 crosses the CDF where the density is nearly flat, so a
+            // ~1e-4 f32-cumsum wobble moves it by many grid cells: allow
+            // 3% relative
+            assert!((x.p99 - n.p99).abs() < 0.03 * n.p99 + 3.0 * grid.dt, "{x:?} vs {n:?}");
+        }
+    }
+}

@@ -1,0 +1,384 @@
+//! The paper's allocation algorithms.
+//!
+//! * [`sdcc_allocate`] — Algorithm 1 + Algorithm 2, applied recursively
+//!   from the workflow root (Algorithm 3's core step): slower servers go
+//!   to lower-arrival-rate DCCs, then fork rates are set by the
+//!   equilibrium of Algorithm 2.
+//! * [`baseline_allocate`] — the §3 heuristic baseline: fastest servers
+//!   to SDCCs first ("intuitively bottleneck servers"), PDCCs get the
+//!   rest; rate scheduling is the same equilibrium ("to be fair" — the
+//!   paper grants the baseline optimal task scheduling too).
+//! * [`schedule_rates`] — phase 2 alone, for external assignments (the
+//!   optimal search and the coordinator's re-planning reuse it).
+//!
+//! Interpretation notes (the paper's pseudocode is terse):
+//! * Alg. 1 sorts servers by expected response DESC and DCCs by arrival
+//!   rate ASC, pairing head-to-head — so the *slowest* server lands on
+//!   the *lowest-rate* DCC, i.e. "faster servers are placed into the DCC
+//!   with higher data arrival rates" (paper §3). We implement exactly
+//!   that by drawing from the slow end of the pool for low-rate DCCs.
+//! * Alg. 2's unknown-λ branch sorts fork branches "by the number of
+//!   internal DAPs in descending order". Read literally against the
+//!   descending RES_Array this would give the *slowest* server to the
+//!   *deepest* branch, which contradicts the paper's own principle
+//!   (deep branches are the heavy ones). We resolve the inconsistency in
+//!   favor of the principle: deeper branches draw from the fast end.
+//!   DESIGN.md §substitutions records this choice.
+
+use crate::flow::{Dcc, Workflow};
+use crate::sched::allocation::{Allocation, SchedError};
+use crate::sched::equilibrium::{equilibrium, uniform_split, BranchRt, FnBranch};
+use crate::sched::response::{mean_response, ResponseModel};
+use crate::sched::server::Server;
+
+/// Paper's scheme (Alg. 1 + 2 + equilibrium) with the default M/M/1
+/// response model.
+pub fn sdcc_allocate(wf: &Workflow, servers: &[Server]) -> Result<Allocation, SchedError> {
+    allocate_with(wf, servers, ResponseModel::Mm1)
+}
+
+/// Paper's scheme with an explicit response model.
+pub fn allocate_with(
+    wf: &Workflow,
+    servers: &[Server],
+    model: ResponseModel,
+) -> Result<Allocation, SchedError> {
+    let mut pool = sorted_pool(wf, servers)?;
+    let mut assign = vec![usize::MAX; wf.slots()];
+    place(wf.root(), wf.arrival_rate, &mut pool, servers, &mut assign);
+    finish(wf, servers, assign, model, SplitPolicy::Equilibrium)
+}
+
+/// How fork rates are split when the spec leaves them open.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SplitPolicy {
+    /// Algorithm 2's equilibrium `λ_i·RT_i = const`.
+    Equilibrium,
+    /// Uniform `λ/n` — the "homogeneous assumption" the paper says real
+    /// schedulers make (§3 parenthetical). The paper's Table-2 baseline
+    /// gap is only reproducible with this split; the equilibrium-split
+    /// baseline is kept as the `fair-baseline` ablation.
+    Uniform,
+}
+
+/// §3 heuristic baseline: fastest servers to serial slots first, uniform
+/// (homogeneous-assumption) fork splits. See [`SplitPolicy::Uniform`].
+pub fn baseline_allocate(
+    wf: &Workflow,
+    servers: &[Server],
+    model: ResponseModel,
+) -> Result<Allocation, SchedError> {
+    baseline_allocate_split(wf, servers, model, SplitPolicy::Uniform)
+}
+
+/// Baseline with an explicit split policy (`Equilibrium` = the paper's
+/// "to be fair, optimal task scheduling" variant).
+pub fn baseline_allocate_split(
+    wf: &Workflow,
+    servers: &[Server],
+    model: ResponseModel,
+    split: SplitPolicy,
+) -> Result<Allocation, SchedError> {
+    let mut pool = sorted_pool(wf, servers)?; // slowest-first
+    let mut assign = vec![usize::MAX; wf.slots()];
+
+    // serial-context slots get the fastest (pool back), others the rest
+    let mut serial_slots = Vec::new();
+    let mut parallel_slots = Vec::new();
+    classify_slots(wf.root(), false, &mut serial_slots, &mut parallel_slots);
+    for slot in serial_slots {
+        assign[slot] = pool.pop().expect("pool sized in sorted_pool");
+    }
+    for slot in parallel_slots {
+        assign[slot] = pool.pop().expect("pool sized in sorted_pool");
+    }
+    finish(wf, servers, assign, model, split)
+}
+
+/// Phase 2 only: equilibrium rate scheduling for an existing assignment.
+pub fn schedule_rates(
+    wf: &Workflow,
+    assign: Vec<usize>,
+    servers: &[Server],
+    model: ResponseModel,
+) -> Result<Allocation, SchedError> {
+    finish(wf, servers, assign, model, SplitPolicy::Equilibrium)
+}
+
+// ---------------------------------------------------------------- phase 1
+
+/// Servers sorted by expected response time DESC (slowest first), as a
+/// pool drawn from both ends: front = slowest, back = fastest.
+fn sorted_pool(wf: &Workflow, servers: &[Server]) -> Result<Vec<usize>, SchedError> {
+    if servers.len() < wf.slots() {
+        return Err(SchedError::NotEnoughServers {
+            need: wf.slots(),
+            have: servers.len(),
+        });
+    }
+    let mut pool: Vec<usize> = (0..servers.len()).collect();
+    // sort by mean service time ASC then reverse => DESC (slowest first);
+    // ties broken by id for determinism
+    pool.sort_by(|&a, &b| {
+        servers[a]
+            .mean_service()
+            .partial_cmp(&servers[b].mean_service())
+            .unwrap()
+            .then(a.cmp(&b))
+    });
+    pool.reverse();
+    // drop the globally slowest surplus servers: the paper assumes
+    // exactly-sized pools; with surplus we keep the fastest `slots()`.
+    let surplus = servers.len() - wf.slots();
+    Ok(pool[surplus..].to_vec())
+}
+
+/// Recursive placement (Alg. 1 for serial, Alg. 2 for parallel).
+fn place(
+    node: &Dcc,
+    rate: f64,
+    pool: &mut Vec<usize>,
+    servers: &[Server],
+    assign: &mut [usize],
+) {
+    match node {
+        Dcc::Queue { slot } => {
+            // head of RES_Array = slowest remaining
+            assign[*slot] = pool.remove(0);
+        }
+        Dcc::Serial { children, rates } => {
+            // Alg. 1: DCCs ascending by arrival rate; slowest servers to
+            // the lowest-rate DCCs. A child without its own DAP rate
+            // inherits the stream from the previous stage (tandem flow).
+            let mut order: Vec<usize> = (0..children.len()).collect();
+            let mut eff = Vec::with_capacity(children.len());
+            let mut current = rate;
+            for r in rates {
+                current = r.unwrap_or(current);
+                eff.push(current);
+            }
+            order.sort_by(|&a, &b| eff[a].partial_cmp(&eff[b]).unwrap().then(a.cmp(&b)));
+            for i in order {
+                place(&children[i], eff[i], pool, servers, assign);
+            }
+        }
+        Dcc::Parallel { children, rates } => {
+            let known = rates.iter().all(|r| r.is_some());
+            let mut order: Vec<usize> = (0..children.len()).collect();
+            if known {
+                // Alg. 2, known λ_i: ascending by λ — slowest to lightest.
+                order.sort_by(|&a, &b| {
+                    rates[a]
+                        .unwrap()
+                        .partial_cmp(&rates[b].unwrap())
+                        .unwrap()
+                        .then(a.cmp(&b))
+                });
+                for i in order {
+                    place(&children[i], rates[i].unwrap(), pool, servers, assign);
+                }
+            } else {
+                // Alg. 2, unknown λ_i: shallow branches first (they draw
+                // the slow pool head), deep branches last (fast end).
+                order.sort_by_key(|&i| children[i].slot_count());
+                // provisional per-branch rate for recursion ordering only:
+                // uniform share (the real split comes from phase 2).
+                let share = rate / children.len() as f64;
+                for i in order {
+                    place(&children[i], share, pool, servers, assign);
+                }
+            }
+        }
+    }
+}
+
+fn classify_slots(node: &Dcc, in_parallel: bool, ser: &mut Vec<usize>, par: &mut Vec<usize>) {
+    match node {
+        Dcc::Queue { slot } => {
+            if in_parallel {
+                par.push(*slot);
+            } else {
+                ser.push(*slot);
+            }
+        }
+        Dcc::Serial { children, .. } => {
+            for c in children {
+                classify_slots(c, in_parallel, ser, par);
+            }
+        }
+        Dcc::Parallel { children, .. } => {
+            for c in children {
+                classify_slots(c, true, ser, par);
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------- phase 2
+
+fn finish(
+    wf: &Workflow,
+    servers: &[Server],
+    assign: Vec<usize>,
+    model: ResponseModel,
+    split: SplitPolicy,
+) -> Result<Allocation, SchedError> {
+    debug_assert!(assign.iter().all(|&s| s != usize::MAX));
+    let mut slot_rate = vec![0.0; wf.slots()];
+    set_rates(
+        wf.root(),
+        wf.arrival_rate,
+        &assign,
+        servers,
+        model,
+        split,
+        &mut slot_rate,
+    )?;
+    Allocation::new(assign, slot_rate, wf, servers.len())
+}
+
+/// Walk the tree, resolving DAP rates and solving fork equilibria.
+fn set_rates(
+    node: &Dcc,
+    rate: f64,
+    assign: &[usize],
+    servers: &[Server],
+    model: ResponseModel,
+    split: SplitPolicy,
+    out: &mut [f64],
+) -> Result<(), SchedError> {
+    match node {
+        Dcc::Queue { slot } => {
+            // leaf stability: a queue whose load meets/exceeds capacity
+            // has no finite response law under this model
+            if mean_response(model, &servers[assign[*slot]].dist, rate).is_none() {
+                return Err(SchedError::Infeasible(format!(
+                    "slot {slot}: server {} (mean service {:.4}) cannot absorb rate {rate:.4}",
+                    assign[*slot],
+                    servers[assign[*slot]].mean_service()
+                )));
+            }
+            out[*slot] = rate;
+            Ok(())
+        }
+        Dcc::Serial { children, rates } => {
+            // tandem flow: rate persists from the last specified DAP
+            let mut current = rate;
+            for (c, r) in children.iter().zip(rates) {
+                current = r.unwrap_or(current);
+                set_rates(c, current, assign, servers, model, split, out)?;
+            }
+            Ok(())
+        }
+        Dcc::Parallel { children, rates } => {
+            let branch_rates: Vec<f64> = if rates.iter().all(|r| r.is_some()) {
+                rates.iter().map(|r| r.unwrap()).collect()
+            } else if split == SplitPolicy::Uniform {
+                uniform_split(children.len(), rate)
+            } else {
+                // Algorithm 2's equilibrium over branch mean-RT curves
+                let branches: Vec<FnBranch<Box<dyn Fn(f64) -> Option<f64>>>> = children
+                    .iter()
+                    .map(|c| {
+                        let cap = branch_capacity(c, assign, servers);
+                        let c = c.clone();
+                        let assign = assign.to_vec();
+                        let servers = servers.to_vec();
+                        FnBranch {
+                            f: Box::new(move |l: f64| {
+                                branch_mean_rt(&c, l, &assign, &servers, model)
+                            }) as Box<dyn Fn(f64) -> Option<f64>>,
+                            cap,
+                        }
+                    })
+                    .collect();
+                let refs: Vec<&dyn BranchRt> =
+                    branches.iter().map(|b| b as &dyn BranchRt).collect();
+                equilibrium(&refs, rate)
+                    .map_err(|e| SchedError::Infeasible(e.to_string()))?
+            };
+            for (c, l) in children.iter().zip(branch_rates) {
+                set_rates(c, l, assign, servers, model, split, out)?;
+            }
+            Ok(())
+        }
+    }
+}
+
+/// Cheap recursive mean-RT estimator for a branch under load `lambda`:
+/// serial = sum of stage means, parallel = max of branch means after an
+/// inner equilibrium split. None = unstable anywhere inside.
+pub fn branch_mean_rt(
+    node: &Dcc,
+    lambda: f64,
+    assign: &[usize],
+    servers: &[Server],
+    model: ResponseModel,
+) -> Option<f64> {
+    match node {
+        Dcc::Queue { slot } => mean_response(model, &servers[assign[*slot]].dist, lambda),
+        Dcc::Serial { children, rates } => {
+            let mut total = 0.0;
+            let mut current = lambda;
+            for (c, r) in children.iter().zip(rates) {
+                current = r.unwrap_or(current);
+                total += branch_mean_rt(c, current, assign, servers, model)?;
+            }
+            Some(total)
+        }
+        Dcc::Parallel { children, rates } => {
+            let split: Vec<f64> = if rates.iter().all(|r| r.is_some()) {
+                rates.iter().map(|r| r.unwrap()).collect()
+            } else {
+                let branches: Vec<FnBranch<Box<dyn Fn(f64) -> Option<f64>>>> = children
+                    .iter()
+                    .map(|c| {
+                        let c = c.clone();
+                        let assign = assign.to_vec();
+                        let servers = servers.to_vec();
+                        let cap = branch_capacity(&c, &assign, &servers);
+                        FnBranch {
+                            f: Box::new(move |l: f64| {
+                                branch_mean_rt(&c, l, &assign, &servers, model)
+                            }) as Box<dyn Fn(f64) -> Option<f64>>,
+                            cap,
+                        }
+                    })
+                    .collect();
+                let refs: Vec<&dyn BranchRt> =
+                    branches.iter().map(|b| b as &dyn BranchRt).collect();
+                equilibrium(&refs, lambda).ok()?
+            };
+            let mut worst = 0.0f64;
+            for (c, l) in children.iter().zip(split) {
+                let m = branch_mean_rt(c, l, assign, servers, model)?;
+                worst = worst.max(m);
+            }
+            Some(worst)
+        }
+    }
+}
+
+/// Capacity bound of a branch: leaf = service rate; serial = min over
+/// inherited-rate children; parallel = sum over branches.
+pub fn branch_capacity(node: &Dcc, assign: &[usize], servers: &[Server]) -> f64 {
+    match node {
+        Dcc::Queue { slot } => servers[assign[*slot]].service_rate(),
+        Dcc::Serial { children, rates } => {
+            // only the prefix before the first fixed-rate DAP sees the
+            // branch's input stream (tandem flow-through semantics)
+            let mut cap = f64::INFINITY;
+            for (c, r) in children.iter().zip(rates) {
+                if r.is_some() {
+                    break;
+                }
+                cap = cap.min(branch_capacity(c, assign, servers));
+            }
+            cap
+        }
+        Dcc::Parallel { children, .. } => children
+            .iter()
+            .map(|c| branch_capacity(c, assign, servers))
+            .sum(),
+    }
+}

@@ -1,0 +1,146 @@
+//! Allocation results and their invariants.
+
+use crate::flow::Workflow;
+
+/// Result of resource allocation + task (rate) scheduling: which server
+/// sits in each leaf slot and what arrival rate it receives.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Allocation {
+    /// slot index (DFS order) -> server id.
+    pub slot_server: Vec<usize>,
+    /// slot index -> Poisson arrival rate λ_i routed to that slot.
+    pub slot_rate: Vec<f64>,
+}
+
+/// Scheduler failure.
+#[derive(Debug, Clone, PartialEq)]
+pub enum SchedError {
+    /// Fewer servers than workflow slots.
+    NotEnoughServers {
+        /// Slots required by the workflow.
+        need: usize,
+        /// Servers offered.
+        have: usize,
+    },
+    /// No feasible (stable) allocation exists for the offered load.
+    Infeasible(String),
+}
+
+impl std::fmt::Display for SchedError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            SchedError::NotEnoughServers { need, have } => {
+                write!(f, "need {need} servers, have {have}")
+            }
+            SchedError::Infeasible(why) => write!(f, "infeasible allocation: {why}"),
+        }
+    }
+}
+
+impl std::error::Error for SchedError {}
+
+impl Allocation {
+    /// Construct with invariant checks against a workflow and pool size.
+    pub fn new(
+        slot_server: Vec<usize>,
+        slot_rate: Vec<f64>,
+        wf: &Workflow,
+        pool_size: usize,
+    ) -> Result<Allocation, SchedError> {
+        let a = Allocation {
+            slot_server,
+            slot_rate,
+        };
+        a.validate(wf, pool_size)?;
+        Ok(a)
+    }
+
+    /// Invariants: every slot filled, each server used at most once,
+    /// server ids in range, all rates positive and finite.
+    pub fn validate(&self, wf: &Workflow, pool_size: usize) -> Result<(), SchedError> {
+        if self.slot_server.len() != wf.slots() || self.slot_rate.len() != wf.slots() {
+            return Err(SchedError::Infeasible(format!(
+                "allocation covers {} slots; workflow has {}",
+                self.slot_server.len(),
+                wf.slots()
+            )));
+        }
+        let mut used = vec![false; pool_size];
+        for &sid in &self.slot_server {
+            if sid >= pool_size {
+                return Err(SchedError::Infeasible(format!("server id {sid} out of range")));
+            }
+            if used[sid] {
+                return Err(SchedError::Infeasible(format!("server {sid} used twice")));
+            }
+            used[sid] = true;
+        }
+        if let Some(r) = self.slot_rate.iter().find(|r| !(**r > 0.0) || !r.is_finite()) {
+            return Err(SchedError::Infeasible(format!("bad slot rate {r}")));
+        }
+        Ok(())
+    }
+
+    /// Iterator over assigned server ids.
+    pub fn assigned_servers(&self) -> impl Iterator<Item = usize> + '_ {
+        self.slot_server.iter().copied()
+    }
+
+    /// Server id in a slot.
+    pub fn server_for(&self, slot: usize) -> usize {
+        self.slot_server[slot]
+    }
+
+    /// Arrival rate into a slot.
+    pub fn rate_for(&self, slot: usize) -> f64 {
+        self.slot_rate[slot]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::flow::Workflow;
+
+    #[test]
+    fn valid_allocation_passes() {
+        let wf = Workflow::fig6();
+        let a = Allocation::new(vec![0, 1, 2, 3, 4, 5], vec![4.0; 6], &wf, 6);
+        assert!(a.is_ok());
+    }
+
+    #[test]
+    fn duplicate_server_rejected() {
+        let wf = Workflow::fig6();
+        let a = Allocation::new(vec![0, 0, 2, 3, 4, 5], vec![4.0; 6], &wf, 6);
+        assert!(matches!(a, Err(SchedError::Infeasible(_))));
+    }
+
+    #[test]
+    fn out_of_range_rejected() {
+        let wf = Workflow::fig6();
+        let a = Allocation::new(vec![0, 1, 2, 3, 4, 9], vec![4.0; 6], &wf, 6);
+        assert!(a.is_err());
+    }
+
+    #[test]
+    fn wrong_arity_rejected() {
+        let wf = Workflow::fig6();
+        let a = Allocation::new(vec![0, 1, 2], vec![4.0; 3], &wf, 6);
+        assert!(a.is_err());
+    }
+
+    #[test]
+    fn bad_rate_rejected() {
+        let wf = Workflow::fig6();
+        let a = Allocation::new(vec![0, 1, 2, 3, 4, 5], vec![0.0; 6], &wf, 6);
+        assert!(a.is_err());
+        let a = Allocation::new(
+            vec![0, 1, 2, 3, 4, 5],
+            vec![1.0, 1.0, 1.0, 1.0, 1.0, f64::NAN],
+            &wf,
+            6,
+        );
+        assert!(a.is_err());
+    }
+}

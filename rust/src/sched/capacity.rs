@@ -1,0 +1,257 @@
+//! Capacity planning: the paper's dual objective ("minimizing response
+//! time … is the dual optimization of maximizing the throughput", §3).
+//!
+//! * [`max_throughput`] — the largest entry-DAP rate λ* a server pool can
+//!   sustain on a workflow (bisection over λ with feasibility given by
+//!   the allocator — every queue stable and the equilibrium solvable);
+//! * [`max_throughput_under_sla`] — λ* subject to a response-time SLA
+//!   (mean or p99 bound), the knob an operator actually sets;
+//! * [`required_speedup`] — how much faster a *uniform* pool would have
+//!   to be to match a target load (sizing what heterogeneity costs).
+
+use crate::compose::grid::GridSpec;
+use crate::compose::score::score_allocation_with;
+use crate::flow::{Dcc, Workflow};
+use crate::sched::refine::proposed_allocate;
+use crate::sched::response::ResponseModel;
+use crate::sched::server::Server;
+use crate::sched::{Objective, SchedError};
+
+/// Rebuild a workflow with every DAP rate scaled by `k` (shape preserved).
+pub fn scale_rates(wf: &Workflow, k: f64) -> Workflow {
+    fn scale(d: &Dcc, k: f64) -> Dcc {
+        match d {
+            Dcc::Queue { .. } => Dcc::queue(),
+            Dcc::Serial { children, rates } => Dcc::Serial {
+                children: children.iter().map(|c| scale(c, k)).collect(),
+                rates: rates.iter().map(|r| r.map(|x| x * k)).collect(),
+            },
+            Dcc::Parallel { children, rates } => Dcc::Parallel {
+                children: children.iter().map(|c| scale(c, k)).collect(),
+                rates: rates.iter().map(|r| r.map(|x| x * k)).collect(),
+            },
+        }
+    }
+    Workflow::new(scale(wf.root(), k), wf.arrival_rate * k).expect("scaled workflow valid")
+}
+
+/// Feasibility of the workflow at load scale `k` for this pool.
+fn feasible(wf: &Workflow, servers: &[Server], model: ResponseModel, k: f64) -> bool {
+    let scaled = scale_rates(wf, k);
+    proposed_allocate(&scaled, servers, model, Objective::Mean)
+        .map(|(_, s)| s.is_stable())
+        .unwrap_or(false)
+}
+
+/// Largest load scale `k*` (relative to the workflow's declared rates)
+/// the pool sustains, to `tol` relative precision.
+pub fn max_load_scale(
+    wf: &Workflow,
+    servers: &[Server],
+    model: ResponseModel,
+    tol: f64,
+) -> Result<f64, SchedError> {
+    if !feasible(wf, servers, model, 1e-6) {
+        return Err(SchedError::Infeasible(
+            "pool cannot sustain any load on this workflow".into(),
+        ));
+    }
+    let (mut lo, mut hi) = (1e-6f64, 1.0f64);
+    while feasible(wf, servers, model, hi) {
+        lo = hi;
+        hi *= 2.0;
+        if hi > 1e6 {
+            break;
+        }
+    }
+    while (hi - lo) / hi > tol {
+        let mid = 0.5 * (lo + hi);
+        if feasible(wf, servers, model, mid) {
+            lo = mid;
+        } else {
+            hi = mid;
+        }
+    }
+    Ok(lo)
+}
+
+/// Largest sustainable entry rate λ* = k* · λ_declared.
+pub fn max_throughput(
+    wf: &Workflow,
+    servers: &[Server],
+    model: ResponseModel,
+) -> Result<f64, SchedError> {
+    Ok(max_load_scale(wf, servers, model, 1e-3)? * wf.arrival_rate)
+}
+
+/// SLA bound kind for [`max_throughput_under_sla`].
+#[derive(Clone, Copy, Debug)]
+pub enum Sla {
+    /// Mean end-to-end response time ≤ bound.
+    Mean(f64),
+    /// 99th percentile ≤ bound.
+    P99(f64),
+}
+
+/// Largest entry rate whose *optimized* allocation still meets the SLA.
+pub fn max_throughput_under_sla(
+    wf: &Workflow,
+    servers: &[Server],
+    model: ResponseModel,
+    sla: Sla,
+) -> Result<f64, SchedError> {
+    let meets = |k: f64| -> bool {
+        let scaled = scale_rates(wf, k);
+        let Ok((alloc, _)) = proposed_allocate(&scaled, servers, model, Objective::Mean)
+        else {
+            return false;
+        };
+        let grid = GridSpec::auto_response(&alloc, servers, model);
+        let s = score_allocation_with(&scaled, &alloc, servers, &grid, model);
+        if !s.is_stable() {
+            return false;
+        }
+        match sla {
+            Sla::Mean(b) => s.mean <= b,
+            Sla::P99(b) => s.p99 <= b,
+        }
+    };
+    if !meets(1e-6) {
+        return Err(SchedError::Infeasible(
+            "SLA unreachable even at negligible load".into(),
+        ));
+    }
+    let (mut lo, mut hi) = (1e-6f64, 1.0f64);
+    while meets(hi) {
+        lo = hi;
+        hi *= 2.0;
+        if hi > 1e6 {
+            break;
+        }
+    }
+    for _ in 0..30 {
+        let mid = 0.5 * (lo + hi);
+        if meets(mid) {
+            lo = mid;
+        } else {
+            hi = mid;
+        }
+    }
+    Ok(lo * wf.arrival_rate)
+}
+
+/// Uniform-pool service rate needed to sustain the workflow at its
+/// declared rates (heterogeneity cost probe): the smallest `mu` such
+/// that `slots()` copies of Exp(mu) are feasible at k = 1.
+pub fn required_speedup(wf: &Workflow, model: ResponseModel) -> f64 {
+    let feas = |mu: f64| -> bool {
+        let servers = Server::pool_exponential(&vec![mu; wf.slots()]);
+        feasible(wf, &servers, model, 1.0)
+    };
+    let (mut lo, mut hi) = (1e-3f64, 1.0f64);
+    while !feas(hi) {
+        lo = hi;
+        hi *= 2.0;
+        if hi > 1e9 {
+            return hi;
+        }
+    }
+    for _ in 0..40 {
+        let mid = 0.5 * (lo + hi);
+        if feas(mid) {
+            hi = mid;
+        } else {
+            lo = mid;
+        }
+    }
+    hi
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn single_queue_capacity_is_mu() {
+        // tandem(1): capacity = the (single, fastest-kept) server rate
+        let wf = Workflow::tandem(1, 1.0);
+        let servers = Server::pool_exponential(&[5.0]);
+        let cap = max_throughput(&wf, &servers, ResponseModel::Mm1).unwrap();
+        assert!((cap - 5.0).abs() < 0.02 * 5.0, "cap {cap}");
+    }
+
+    #[test]
+    fn forkjoin_capacity_is_sum() {
+        // 2-branch fork with equilibrium split: capacity = mu1 + mu2
+        let wf = Workflow::forkjoin(2, 1.0);
+        let servers = Server::pool_exponential(&[4.0, 2.0]);
+        let cap = max_throughput(&wf, &servers, ResponseModel::Mm1).unwrap();
+        assert!((cap - 6.0).abs() < 0.05 * 6.0, "cap {cap}");
+    }
+
+    #[test]
+    fn fig6_capacity_reasonable() {
+        // fig6 bottleneck: SDCC stages carry λ/2 each relative to entry 8;
+        // with refinement the binding constraint is an SDCC single queue
+        let wf = Workflow::fig6();
+        let servers = Server::pool_exponential(&[9.0, 8.0, 7.0, 6.0, 5.0, 4.0]);
+        let k = max_load_scale(&wf, &servers, ResponseModel::Mm1, 1e-3).unwrap();
+        // from the load sweep: feasible at 1.5, infeasible by ~2
+        assert!(k > 1.4 && k < 2.2, "k* = {k}");
+    }
+
+    #[test]
+    fn sla_throughput_below_raw_capacity() {
+        let wf = Workflow::fig6();
+        let servers = Server::pool_exponential(&[9.0, 8.0, 7.0, 6.0, 5.0, 4.0]);
+        let raw = max_throughput(&wf, &servers, ResponseModel::Mm1).unwrap();
+        let sla = max_throughput_under_sla(
+            &wf,
+            &servers,
+            ResponseModel::Mm1,
+            Sla::Mean(2.0),
+        )
+        .unwrap();
+        assert!(sla < raw, "sla {sla} raw {raw}");
+        assert!(sla > 0.2 * raw, "sla {sla} unreasonably small vs {raw}");
+    }
+
+    #[test]
+    fn tighter_sla_lower_throughput() {
+        let wf = Workflow::fig6();
+        let servers = Server::pool_exponential(&[9.0, 8.0, 7.0, 6.0, 5.0, 4.0]);
+        let loose = max_throughput_under_sla(&wf, &servers, ResponseModel::Mm1, Sla::Mean(3.0))
+            .unwrap();
+        let tight = max_throughput_under_sla(&wf, &servers, ResponseModel::Mm1, Sla::Mean(1.6))
+            .unwrap();
+        assert!(tight < loose, "tight {tight} loose {loose}");
+    }
+
+    #[test]
+    fn required_speedup_matches_bottleneck() {
+        // fig6 at declared rates: a uniform pool must cover the SDCC's
+        // λ=4 single-queue stages, so mu must exceed 4
+        let wf = Workflow::fig6();
+        let mu = required_speedup(&wf, ResponseModel::Mm1);
+        assert!(mu > 4.0 && mu < 8.0, "mu {mu}");
+    }
+
+    #[test]
+    fn infeasible_pool_reported() {
+        let wf = Workflow::tandem(2, 1.0);
+        let servers = Server::pool_exponential(&[1.0]); // too few servers
+        assert!(max_throughput(&wf, &servers, ResponseModel::Mm1).is_err());
+    }
+
+    #[test]
+    fn scale_rates_preserves_shape() {
+        let wf = Workflow::fig6();
+        let scaled = scale_rates(&wf, 2.0);
+        assert_eq!(scaled.slots(), wf.slots());
+        assert_eq!(scaled.arrival_rate, 16.0);
+        match scaled.root() {
+            Dcc::Serial { rates, .. } => assert_eq!(rates[0], Some(16.0)),
+            _ => panic!("shape changed"),
+        }
+    }
+}

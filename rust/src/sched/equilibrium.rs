@@ -1,0 +1,269 @@
+//! Rate scheduling: the paper's equilibrium (Algorithm 2, bottom).
+//!
+//! Split a fork DAP's arrival rate λ over n parallel branches so that
+//!
+//! ```text
+//! λ_1·RT_1(λ_1) = λ_2·RT_2(λ_2) = … = λ_n·RT_n(λ_n),   Σ λ_i = λ
+//! ```
+//!
+//! where `RT_i(λ_i)` is the branch's mean response time under load λ_i.
+//! Since `g_i(λ_i) = λ_i·RT_i(λ_i)` is continuous and strictly increasing
+//! on the branch's stable range (RT is nondecreasing in load), each
+//! branch has a well-defined inverse `λ_i(c) = g_i⁻¹(c)`, and
+//! `c ↦ Σ_i λ_i(c)` is strictly increasing — so the equilibrium is found
+//! by bisection on `c`. For M/M/1 branches there is a closed form:
+//! `λ_i = c·μ_i/(1+c)` with `c = λ/(Σμ − λ)` — used as a fast path and
+//! as the oracle in tests.
+
+/// A branch's load→mean-response curve. Returns `None` when the branch
+/// is unstable at that load (finite capacity exceeded).
+pub trait BranchRt {
+    /// Mean response time at arrival rate `lambda` (None = unstable).
+    fn mean_rt(&self, lambda: f64) -> Option<f64>;
+    /// Capacity upper bound: loads >= this are certainly unstable.
+    fn capacity(&self) -> f64;
+}
+
+/// M/M/1 branch with service rate `mu`.
+#[derive(Clone, Copy, Debug)]
+pub struct Mm1Branch {
+    /// Service rate.
+    pub mu: f64,
+}
+
+impl BranchRt for Mm1Branch {
+    fn mean_rt(&self, lambda: f64) -> Option<f64> {
+        if lambda >= self.mu {
+            None
+        } else {
+            Some(1.0 / (self.mu - lambda))
+        }
+    }
+    fn capacity(&self) -> f64 {
+        self.mu
+    }
+}
+
+/// Closure-backed branch (used by the scheduler for composite sub-DCCs).
+pub struct FnBranch<F: Fn(f64) -> Option<f64>> {
+    /// Load → mean RT.
+    pub f: F,
+    /// Capacity bound.
+    pub cap: f64,
+}
+
+impl<F: Fn(f64) -> Option<f64>> BranchRt for FnBranch<F> {
+    fn mean_rt(&self, lambda: f64) -> Option<f64> {
+        (self.f)(lambda)
+    }
+    fn capacity(&self) -> f64 {
+        self.cap
+    }
+}
+
+/// Equilibrium failure.
+#[derive(Debug, Clone, PartialEq)]
+pub enum EquilibriumError {
+    /// Σ capacities <= λ: no stable split exists.
+    Overloaded {
+        /// Offered load.
+        lambda: f64,
+        /// Total capacity.
+        capacity: f64,
+    },
+}
+
+impl std::fmt::Display for EquilibriumError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            EquilibriumError::Overloaded { lambda, capacity } => write!(
+                f,
+                "offered load {lambda} exceeds total branch capacity {capacity}"
+            ),
+        }
+    }
+}
+
+impl std::error::Error for EquilibriumError {}
+
+/// Closed-form equilibrium for all-M/M/1 branches:
+/// `c = λ/(Σμ − λ)`, `λ_i = c·μ_i/(1+c)`.
+pub fn equilibrium_mm1(mus: &[f64], lambda: f64) -> Result<Vec<f64>, EquilibriumError> {
+    let total: f64 = mus.iter().sum();
+    if lambda >= total {
+        return Err(EquilibriumError::Overloaded {
+            lambda,
+            capacity: total,
+        });
+    }
+    let c = lambda / (total - lambda);
+    Ok(mus.iter().map(|&mu| c * mu / (1.0 + c)).collect())
+}
+
+/// General equilibrium by nested bisection.
+///
+/// Outer bisection on the common value `c`; inner bisection inverts each
+/// branch's `g_i(λ) = λ·RT_i(λ)` (strictly increasing on `[0, cap_i)`).
+pub fn equilibrium(
+    branches: &[&dyn BranchRt],
+    lambda: f64,
+) -> Result<Vec<f64>, EquilibriumError> {
+    assert!(!branches.is_empty() && lambda > 0.0);
+    let capacity: f64 = branches.iter().map(|b| b.capacity()).sum();
+    if lambda >= capacity {
+        return Err(EquilibriumError::Overloaded { lambda, capacity });
+    }
+
+    // λ_i(c): invert g_i by bisection on [0, min(cap_i, λ)] — no branch
+    // can ever receive more than the whole offered load, which also
+    // bounds infinite-capacity branches (e.g. constant-RT models).
+    let lam_of_c = |b: &dyn BranchRt, c: f64| -> f64 {
+        let cap = b.capacity();
+        let mut hi = if cap.is_finite() {
+            (cap * (1.0 - 1e-12)).min(lambda)
+        } else {
+            lambda
+        };
+        // shrink hi until stable (mean_rt defined)
+        while b.mean_rt(hi).is_none() {
+            hi *= 0.999;
+            if hi < 1e-300 {
+                return 0.0;
+            }
+        }
+        let g = |x: f64| x * b.mean_rt(x).unwrap_or(f64::INFINITY);
+        // g(hi) below c: the whole bound is allocatable at this c
+        if g(hi) <= c {
+            return hi;
+        }
+        let mut lo = 0.0;
+        for _ in 0..100 {
+            let mid = 0.5 * (lo + hi);
+            if g(mid) < c {
+                lo = mid;
+            } else {
+                hi = mid;
+            }
+        }
+        0.5 * (lo + hi)
+    };
+
+    // outer bisection on c: Σ λ_i(c) = λ
+    let total_at = |c: f64| -> f64 { branches.iter().map(|b| lam_of_c(*b, c)).sum() };
+    let mut c_lo = 1e-12;
+    let mut c_hi = 1.0;
+    while total_at(c_hi) < lambda {
+        c_hi *= 2.0;
+        if c_hi > 1e18 {
+            break;
+        }
+    }
+    for _ in 0..100 {
+        let mid = 0.5 * (c_lo + c_hi);
+        if total_at(mid) < lambda {
+            c_lo = mid;
+        } else {
+            c_hi = mid;
+        }
+    }
+    let c = 0.5 * (c_lo + c_hi);
+    let mut rates: Vec<f64> = branches.iter().map(|b| lam_of_c(*b, c)).collect();
+
+    // normalize the residual bisection error so Σλ_i = λ exactly
+    let sum: f64 = rates.iter().sum();
+    if sum > 0.0 {
+        let k = lambda / sum;
+        rates.iter_mut().for_each(|r| *r *= k);
+    }
+    Ok(rates)
+}
+
+/// Uniform split (the "homogeneous assumption" the paper's baseline
+/// discussion warns about) — kept as an ablation comparator.
+pub fn uniform_split(n: usize, lambda: f64) -> Vec<f64> {
+    vec![lambda / n as f64; n]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop;
+
+    #[test]
+    fn mm1_closed_form_balances() {
+        let mus = [9.0, 8.0, 7.0];
+        let lambda = 8.0;
+        let rates = equilibrium_mm1(&mus, lambda).unwrap();
+        assert!((rates.iter().sum::<f64>() - lambda).abs() < 1e-9);
+        // λ_i RT_i all equal
+        let g: Vec<f64> = rates
+            .iter()
+            .zip(mus.iter())
+            .map(|(&l, &mu)| l / (mu - l))
+            .collect();
+        for w in g.windows(2) {
+            assert!((w[0] - w[1]).abs() < 1e-9, "{g:?}");
+        }
+    }
+
+    #[test]
+    fn mm1_overload_rejected() {
+        assert!(equilibrium_mm1(&[2.0, 3.0], 5.0).is_err());
+        assert!(equilibrium_mm1(&[2.0, 3.0], 6.0).is_err());
+    }
+
+    #[test]
+    fn general_matches_closed_form() {
+        let mus = [9.0, 8.0, 7.0, 4.0];
+        let lambda = 11.0;
+        let branches: Vec<Mm1Branch> = mus.iter().map(|&mu| Mm1Branch { mu }).collect();
+        let refs: Vec<&dyn BranchRt> = branches.iter().map(|b| b as &dyn BranchRt).collect();
+        let got = equilibrium(&refs, lambda).unwrap();
+        let want = equilibrium_mm1(&mus, lambda).unwrap();
+        for (g, w) in got.iter().zip(want.iter()) {
+            assert!((g - w).abs() < 1e-6, "{got:?} vs {want:?}");
+        }
+    }
+
+    #[test]
+    fn equilibrium_property_balanced_and_feasible() {
+        prop::run("equilibrium balances λ·RT", 40, |g| {
+            let n = g.usize_in(2, 6);
+            let mus: Vec<f64> = (0..n).map(|_| g.f64_in(1.0, 20.0)).collect();
+            let cap: f64 = mus.iter().sum();
+            let lambda = g.f64_in(0.1, 0.95) * cap;
+            let rates = equilibrium_mm1(&mus, lambda).unwrap();
+            assert!((rates.iter().sum::<f64>() - lambda).abs() < 1e-8);
+            for (&l, &mu) in rates.iter().zip(mus.iter()) {
+                assert!(l > 0.0 && l < mu, "rate {l} vs mu {mu}");
+            }
+            let g0 = rates[0] / (mus[0] - rates[0]);
+            for (&l, &mu) in rates.iter().zip(mus.iter()).skip(1) {
+                assert!((l / (mu - l) - g0).abs() < 1e-8);
+            }
+        });
+    }
+
+    #[test]
+    fn faster_branches_get_more_load() {
+        let rates = equilibrium_mm1(&[10.0, 2.0], 6.0).unwrap();
+        assert!(rates[0] > rates[1] * 3.0, "{rates:?}");
+    }
+
+    #[test]
+    fn fn_branch_with_fixed_rt() {
+        // constant RT branches: equilibrium λ_i ∝ 1/RT_i
+        let b1 = FnBranch {
+            f: |_l| Some(2.0),
+            cap: f64::INFINITY,
+        };
+        let b2 = FnBranch {
+            f: |_l| Some(1.0),
+            cap: f64::INFINITY,
+        };
+        let refs: Vec<&dyn BranchRt> = vec![&b1, &b2];
+        let rates = equilibrium(&refs, 3.0).unwrap();
+        assert!((rates[0] - 1.0).abs() < 1e-6, "{rates:?}");
+        assert!((rates[1] - 2.0).abs() < 1e-6, "{rates:?}");
+    }
+}

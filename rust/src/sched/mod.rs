@@ -1,0 +1,177 @@
+//! Resource allocation and task (rate) scheduling — the paper's
+//! contribution (Algorithms 1–3).
+//!
+//! * [`sdcc_allocate`] / [`allocate_with`] — the proposed scheme;
+//! * [`baseline_allocate`] — the §3 heuristic comparator;
+//! * [`optimal_allocate`] — exhaustive-search reference;
+//! * [`equilibrium`] — Algorithm 2's rate scheduling;
+//! * [`response`] — service-law → response-law queueing models.
+
+pub mod algorithms;
+pub mod allocation;
+pub mod capacity;
+pub mod multijob;
+pub mod equilibrium;
+pub mod optimal;
+pub mod refine;
+pub mod response;
+pub mod server;
+
+pub use algorithms::{
+    allocate_with, baseline_allocate, baseline_allocate_split, schedule_rates, sdcc_allocate,
+    SplitPolicy,
+};
+pub use allocation::{Allocation, SchedError};
+pub use optimal::optimal_allocate;
+pub use refine::{proposed_allocate, refine};
+pub use response::ResponseModel;
+
+use crate::compose::score::Score;
+
+/// What the administrator optimizes (paper §3: "we aim for throughput or
+/// response time; our strategy can also be used for other objectives").
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Objective {
+    /// Minimize mean end-to-end response time.
+    Mean,
+    /// Minimize response-time variance (tail stabilization).
+    Variance,
+    /// Minimize the 99th percentile.
+    P99,
+}
+
+impl Objective {
+    /// Sort key: smaller is better.
+    pub fn key(&self, s: &Score) -> f64 {
+        match self {
+            Objective::Mean => s.mean,
+            Objective::Variance => s.var,
+            Objective::P99 => s.p99,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compose::grid::GridSpec;
+    use crate::compose::score::score_allocation_with;
+    use crate::flow::{Dcc, Workflow};
+    use crate::sched::server::Server;
+    use crate::util::prop;
+
+    fn fig6() -> (Workflow, Vec<Server>) {
+        (
+            Workflow::fig6(),
+            Server::pool_exponential(&[9.0, 8.0, 7.0, 6.0, 5.0, 4.0]),
+        )
+    }
+
+    #[test]
+    fn paper_scheme_beats_baseline_on_fig6() {
+        // the paper's headline claim (Table 2): ours <= baseline in mean,
+        // with the full proposed scheme (Alg. 1/2 + §3 balancing)
+        let (wf, servers) = fig6();
+        let model = ResponseModel::Mm1;
+        let (ours_alloc, s_ours) =
+            proposed_allocate(&wf, &servers, model, Objective::Mean).unwrap();
+        let grid = GridSpec::auto_response(&ours_alloc, &servers, model);
+        let base = baseline_allocate(&wf, &servers, model).unwrap();
+        let s_base = score_allocation_with(&wf, &base, &servers, &grid, model);
+        assert!(s_ours.is_stable() && s_base.is_stable());
+        assert!(
+            s_ours.mean < s_base.mean + 1e-9,
+            "ours {} vs baseline {}",
+            s_ours.mean,
+            s_base.mean
+        );
+    }
+
+    #[test]
+    fn fast_servers_go_to_high_rate_dccs() {
+        // paper §3: "faster servers are placed into the DCC with higher
+        // data arrival rates". Fig6 slots 0,1 belong to the λ=8 PDCC.
+        let (wf, servers) = fig6();
+        let alloc = sdcc_allocate(&wf, &servers).unwrap();
+        let rate_of = |slot: usize| servers[alloc.server_for(slot)].service_rate();
+        // λ=8 PDCC (slots 0,1) should hold the two fastest servers
+        let mut top: Vec<f64> = (0..6).map(rate_of).collect();
+        top.sort_by(|a, b| b.partial_cmp(a).unwrap());
+        let got: Vec<f64> = [0usize, 1].iter().map(|&s| rate_of(s)).collect();
+        assert!(
+            got.contains(&top[0]) && got.contains(&top[1]),
+            "λ=8 PDCC got {got:?}, fastest are {top:?}"
+        );
+    }
+
+    #[test]
+    fn allocations_always_valid_property() {
+        prop::run("scheduler output is always a valid allocation", 30, |g| {
+            let n_slots = g.usize_in(2, 5);
+            let wf = match g.usize_in(0, 2) {
+                0 => Workflow::tandem(n_slots, 0.5),
+                1 => Workflow::forkjoin(n_slots, 0.5),
+                _ => Workflow::new(
+                    Dcc::serial(vec![
+                        Dcc::parallel((0..n_slots).map(|_| Dcc::queue()).collect()),
+                        Dcc::queue(),
+                    ]),
+                    0.5,
+                )
+                .unwrap(),
+            };
+            let extra = g.usize_in(0, 2);
+            let rates: Vec<f64> = (0..wf.slots() + extra).map(|_| g.f64_in(2.0, 20.0)).collect();
+            let servers = Server::pool_exponential(&rates);
+            for res in [
+                sdcc_allocate(&wf, &servers),
+                baseline_allocate(&wf, &servers, ResponseModel::Mm1),
+            ] {
+                match res {
+                    Ok(a) => a.validate(&wf, servers.len()).unwrap(),
+                    Err(SchedError::Infeasible(_)) => {} // overload is legal
+                    Err(e) => panic!("unexpected error {e}"),
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn equilibrium_rates_flow_to_slots() {
+        // fig6 DCC0 (λ=8) slots must have rates summing to 8
+        let (wf, servers) = fig6();
+        let alloc = sdcc_allocate(&wf, &servers).unwrap();
+        let sum01 = alloc.rate_for(0) + alloc.rate_for(1);
+        assert!((sum01 - 8.0).abs() < 1e-6, "PDCC0 split {sum01}");
+        // SDCC slots see the full DAP1 rate
+        assert!((alloc.rate_for(2) - 4.0).abs() < 1e-9);
+        assert!((alloc.rate_for(3) - 4.0).abs() < 1e-9);
+        // PDCC2 splits λ=2
+        let sum45 = alloc.rate_for(4) + alloc.rate_for(5);
+        assert!((sum45 - 2.0).abs() < 1e-6, "PDCC2 split {sum45}");
+    }
+
+    #[test]
+    fn not_enough_servers_reported() {
+        let wf = Workflow::fig6();
+        let servers = Server::pool_exponential(&[5.0, 5.5]);
+        assert!(matches!(
+            sdcc_allocate(&wf, &servers),
+            Err(SchedError::NotEnoughServers { need: 6, have: 2 })
+        ));
+    }
+
+    #[test]
+    fn objective_keys() {
+        let s = Score {
+            mean: 1.0,
+            var: 2.0,
+            p99: 3.0,
+            mass: 1.0,
+            pdf: vec![],
+        };
+        assert_eq!(Objective::Mean.key(&s), 1.0);
+        assert_eq!(Objective::Variance.key(&s), 2.0);
+        assert_eq!(Objective::P99.key(&s), 3.0);
+    }
+}

@@ -1,0 +1,193 @@
+//! The exhaustive "optimal" reference (paper §3: "chooses the best
+//! allocation of servers, using exhaustive search over all possible
+//! cases, to DCCs and uses optimal task scheduling for PDCCs").
+//!
+//! Two-stage search keeps exact scoring affordable:
+//! 1. enumerate every injective assignment of servers to slots and rank
+//!    by the cheap recursive mean-RT estimator (`branch_mean_rt`);
+//! 2. exactly (grid-)score the `SHORTLIST` best candidates and return the
+//!    winner under the requested [`Objective`].
+//!
+//! With the paper's 6-server / 6-slot Fig. 6 setup this is 720 cheap
+//! evaluations + 32 exact scores. A hard cap guards against accidental
+//! factorial blowups on big pools.
+
+use crate::compose::grid::GridSpec;
+use crate::compose::score::{score_allocation_with, Score};
+use crate::flow::Workflow;
+use crate::sched::algorithms::{branch_mean_rt, schedule_rates};
+use crate::sched::allocation::{Allocation, SchedError};
+use crate::sched::response::ResponseModel;
+use crate::sched::server::Server;
+use crate::sched::Objective;
+
+/// Exact-scored shortlist size.
+const SHORTLIST: usize = 32;
+/// Refuse to enumerate more candidate assignments than this.
+const MAX_CANDIDATES: usize = 2_000_000;
+
+/// Exhaustive optimal allocation under `objective`.
+///
+/// Returns the winning allocation and its exact score.
+pub fn optimal_allocate(
+    wf: &Workflow,
+    servers: &[Server],
+    grid: &GridSpec,
+    objective: Objective,
+    model: ResponseModel,
+) -> Result<(Allocation, Score), SchedError> {
+    let slots = wf.slots();
+    if servers.len() < slots {
+        return Err(SchedError::NotEnoughServers {
+            need: slots,
+            have: servers.len(),
+        });
+    }
+    let n_cand = count_injections(servers.len(), slots);
+    if n_cand > MAX_CANDIDATES {
+        return Err(SchedError::Infeasible(format!(
+            "exhaustive search over {n_cand} assignments exceeds cap {MAX_CANDIDATES}"
+        )));
+    }
+
+    // stage 1: cheap ranking of every injective assignment
+    let mut ranked: Vec<(f64, Vec<usize>)> = Vec::new();
+    let mut current = Vec::with_capacity(slots);
+    let mut used = vec![false; servers.len()];
+    enumerate(
+        wf,
+        servers,
+        model,
+        &mut current,
+        &mut used,
+        slots,
+        &mut ranked,
+    );
+    if ranked.is_empty() {
+        return Err(SchedError::Infeasible(
+            "no stable assignment exists for the offered load".into(),
+        ));
+    }
+    ranked.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+
+    // stage 2: exact scoring of the shortlist
+    let mut best: Option<(Allocation, Score)> = None;
+    for (_, assign) in ranked.into_iter().take(SHORTLIST) {
+        let alloc = match schedule_rates(wf, assign, servers, model) {
+            Ok(a) => a,
+            Err(_) => continue,
+        };
+        let score = score_allocation_with(wf, &alloc, servers, grid, model);
+        if !score.is_stable() {
+            continue;
+        }
+        let better = match &best {
+            None => true,
+            Some((_, b)) => objective.key(&score) < objective.key(b),
+        };
+        if better {
+            best = Some((alloc, score));
+        }
+    }
+    best.ok_or_else(|| SchedError::Infeasible("no stable shortlist candidate".into()))
+}
+
+fn enumerate(
+    wf: &Workflow,
+    servers: &[Server],
+    model: ResponseModel,
+    current: &mut Vec<usize>,
+    used: &mut [bool],
+    slots: usize,
+    out: &mut Vec<(f64, Vec<usize>)>,
+) {
+    if current.len() == slots {
+        // cheap estimator: recursive mean RT from the root
+        if let Some(mean) = branch_mean_rt(wf.root(), wf.arrival_rate, current, servers, model)
+        {
+            out.push((mean, current.clone()));
+        }
+        return;
+    }
+    for sid in 0..servers.len() {
+        if !used[sid] {
+            used[sid] = true;
+            current.push(sid);
+            enumerate(wf, servers, model, current, used, slots, out);
+            current.pop();
+            used[sid] = false;
+        }
+    }
+}
+
+fn count_injections(pool: usize, slots: usize) -> usize {
+    ((pool - slots + 1)..=pool).product()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sched::algorithms::{baseline_allocate, sdcc_allocate};
+
+    fn fig6() -> (Workflow, Vec<Server>, GridSpec) {
+        let wf = Workflow::fig6();
+        let servers = Server::pool_exponential(&[9.0, 8.0, 7.0, 6.0, 5.0, 4.0]);
+        let grid = GridSpec::auto_pool(&wf, &servers);
+        (wf, servers, grid)
+    }
+
+    #[test]
+    fn optimal_beats_or_ties_everyone() {
+        let (wf, servers, grid) = fig6();
+        let model = ResponseModel::Mm1;
+        let (_, opt) =
+            optimal_allocate(&wf, &servers, &grid, Objective::Mean, model).unwrap();
+        let ours = sdcc_allocate(&wf, &servers).unwrap();
+        let ours_s = score_allocation_with(&wf, &ours, &servers, &grid, model);
+        let base = baseline_allocate(&wf, &servers, model).unwrap();
+        let base_s = score_allocation_with(&wf, &base, &servers, &grid, model);
+        assert!(opt.mean <= ours_s.mean + 1e-6, "opt {} ours {}", opt.mean, ours_s.mean);
+        assert!(opt.mean <= base_s.mean + 1e-6, "opt {} base {}", opt.mean, base_s.mean);
+    }
+
+    #[test]
+    fn injection_count() {
+        assert_eq!(count_injections(6, 6), 720);
+        assert_eq!(count_injections(8, 6), 20160);
+        assert_eq!(count_injections(6, 1), 6);
+    }
+
+    #[test]
+    fn too_few_servers_rejected() {
+        let wf = Workflow::fig6();
+        let servers = Server::pool_exponential(&[9.0, 8.0]);
+        let grid = GridSpec::new(0.01, 1024);
+        assert!(matches!(
+            optimal_allocate(&wf, &servers, &grid, Objective::Mean, ResponseModel::Mm1),
+            Err(SchedError::NotEnoughServers { .. })
+        ));
+    }
+
+    #[test]
+    fn overload_is_infeasible() {
+        // tandem of 2 with lambda above every server's capacity
+        let wf = Workflow::tandem(2, 10.0);
+        let servers = Server::pool_exponential(&[2.0, 3.0]);
+        let grid = GridSpec::new(0.01, 1024);
+        assert!(optimal_allocate(&wf, &servers, &grid, Objective::Mean, ResponseModel::Mm1)
+            .is_err());
+    }
+
+    #[test]
+    fn surplus_pool_allowed() {
+        // 7 servers, 6 slots: 5040 assignments, still fast
+        let wf = Workflow::fig6();
+        let servers = Server::pool_exponential(&[9.0, 8.0, 7.0, 6.0, 5.0, 4.0, 3.5]);
+        let grid = GridSpec::auto_pool(&wf, &servers);
+        let (alloc, score) =
+            optimal_allocate(&wf, &servers, &grid, Objective::Mean, ResponseModel::Mm1)
+                .unwrap();
+        assert!(score.is_stable());
+        alloc.validate(&wf, servers.len()).unwrap();
+    }
+}

@@ -1,0 +1,204 @@
+//! Response-time models: from (service law, arrival rate) to the law the
+//! composition engine actually composes.
+//!
+//! The paper treats each server as "a queue, where tasks come for service
+//! with a specific service rate". How waiting time enters the composed
+//! law is a model choice:
+//!
+//! * [`ResponseModel::ServiceOnly`] — response = service time (no
+//!   queueing). This is what the paper's Fig. 2/3 tail plots use.
+//! * [`ResponseModel::Mm1`] — exact M/M/1 sojourn: `Exp(mu - lambda)`
+//!   for exponential service (plus the delay for delayed-exponential).
+//! * [`ResponseModel::Mg1`] — M/G/1 Pollaczek–Khinchine *mean* mapped
+//!   back into a delayed exponential with the service law's minimum as
+//!   the delay. The family approximation keeps grid composition closed;
+//!   mean is exact, higher moments approximate. Used for pareto /
+//!   multi-modal service laws.
+
+use crate::dist::{ServiceDist, TailKind};
+
+/// Queueing model used to turn service laws into response laws.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ResponseModel {
+    /// No queueing: response = service.
+    ServiceOnly,
+    /// M/M/1 sojourn time (exact for exponential service).
+    Mm1,
+    /// M/G/1 P-K mean folded into a delayed exponential (approximation).
+    Mg1,
+}
+
+/// Outcome of applying a response model at one server.
+#[derive(Clone, Debug)]
+pub enum Response {
+    /// Stable queue with the given response-time law.
+    Stable(ServiceDist),
+    /// `lambda >= mu`: the queue diverges; no finite response law.
+    Unstable,
+}
+
+/// Response-time law of one server receiving Poisson arrivals at `lambda`.
+pub fn response_dist(model: ResponseModel, service: &ServiceDist, lambda: f64) -> Response {
+    match model {
+        ResponseModel::ServiceOnly => Response::Stable(service.clone()),
+        ResponseModel::Mm1 => {
+            // treat the tail beyond the deterministic delay as exponential:
+            // X = T + Exp(mu_tail); the queue serves at effective rate
+            // 1/mean overall.
+            let delay = service.min_time();
+            let mean = service.mean();
+            let mu = 1.0 / mean;
+            if lambda >= mu {
+                return Response::Unstable;
+            }
+            // M/M/1 sojourn for the memoryless part, delay preserved:
+            // mean response = delay + 1/((1/(mean-delay)) - lambda_eff)
+            // where the delay portion is capacity the queue also spends.
+            // Standard simplification (documented): Exp(mu - lambda)
+            // shifted by nothing when delay = 0.
+            if delay <= f64::EPSILON {
+                Response::Stable(ServiceDist::exponential(mu - lambda))
+            } else {
+                // Effective tail rate so that the P-K mean is matched for
+                // the delayed-exponential service law.
+                mg1_response(service, lambda)
+            }
+        }
+        ResponseModel::Mg1 => mg1_response(service, lambda),
+    }
+}
+
+/// Mean response time under the model without building the law —
+/// the cheap estimator the equilibrium solver iterates on.
+pub fn mean_response(model: ResponseModel, service: &ServiceDist, lambda: f64) -> Option<f64> {
+    match model {
+        ResponseModel::ServiceOnly => Some(service.mean()),
+        ResponseModel::Mm1 => {
+            let mu = 1.0 / service.mean();
+            if lambda >= mu {
+                None
+            } else {
+                Some(1.0 / (mu - lambda))
+            }
+        }
+        ResponseModel::Mg1 => pk_mean(service, lambda),
+    }
+}
+
+/// Pollaczek–Khinchine mean response: `E[S] + lambda E[S^2] / (2 (1-rho))`.
+fn pk_mean(service: &ServiceDist, lambda: f64) -> Option<f64> {
+    let es = service.mean();
+    let rho = lambda * es;
+    if rho >= 1.0 {
+        return None;
+    }
+    let es2 = service.variance() + es * es;
+    Some(es + lambda * es2 / (2.0 * (1.0 - rho)))
+}
+
+fn mg1_response(service: &ServiceDist, lambda: f64) -> Response {
+    match pk_mean(service, lambda) {
+        None => Response::Unstable,
+        Some(mean_resp) => {
+            let delay = service.min_time();
+            let tail_mean = (mean_resp - delay).max(1e-9);
+            Response::Stable(ServiceDist::delayed_exponential(1.0 / tail_mean, delay))
+        }
+    }
+}
+
+/// Convenience: the paper's plain-exponential case, `Exp(mu - lambda)`.
+pub fn mm1_exponential(mu: f64, lambda: f64) -> Response {
+    if lambda >= mu {
+        Response::Unstable
+    } else {
+        Response::Stable(ServiceDist::exponential(mu - lambda))
+    }
+}
+
+/// True if the service law is plain exponential (T=0, single mode).
+pub fn is_plain_exponential(d: &ServiceDist) -> bool {
+    d.modes().len() == 1 && {
+        let m = d.modes()[0].1;
+        m.delay == 0.0 && matches!(m.kind, TailKind::Exponential)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn service_only_passthrough() {
+        let s = ServiceDist::exponential(3.0);
+        match response_dist(ResponseModel::ServiceOnly, &s, 100.0) {
+            Response::Stable(d) => assert!((d.mean() - s.mean()).abs() < 1e-12),
+            _ => panic!("service-only never unstable"),
+        }
+    }
+
+    #[test]
+    fn mm1_exact_for_exponential() {
+        let s = ServiceDist::exponential(5.0);
+        match response_dist(ResponseModel::Mm1, &s, 2.0) {
+            Response::Stable(d) => assert!((d.mean() - 1.0 / 3.0).abs() < 1e-9),
+            _ => panic!("stable"),
+        }
+        assert!(matches!(
+            response_dist(ResponseModel::Mm1, &s, 5.0),
+            Response::Unstable
+        ));
+        assert!(matches!(
+            response_dist(ResponseModel::Mm1, &s, 7.0),
+            Response::Unstable
+        ));
+    }
+
+    #[test]
+    fn mm1_mean_matches_formula() {
+        let s = ServiceDist::exponential(4.0);
+        assert!((mean_response(ResponseModel::Mm1, &s, 1.0).unwrap() - 1.0 / 3.0).abs() < 1e-12);
+        assert!(mean_response(ResponseModel::Mm1, &s, 4.5).is_none());
+    }
+
+    #[test]
+    fn pk_reduces_to_mm1_for_exponential() {
+        // M/M/1 sojourn mean = 1/(mu-lambda); P-K with exp service agrees
+        let s = ServiceDist::exponential(3.0);
+        let pk = mean_response(ResponseModel::Mg1, &s, 1.0).unwrap();
+        assert!((pk - 0.5).abs() < 1e-6, "pk {pk}");
+    }
+
+    #[test]
+    fn mg1_heavier_service_waits_longer() {
+        let light = ServiceDist::exponential(2.0);
+        let heavy = ServiceDist::delayed_pareto(3.0, 0.0); // fatter tail
+        let ml = mean_response(ResponseModel::Mg1, &light, 1.0).unwrap();
+        // pick lambda so both are stable
+        let lam = 0.5 / heavy.mean().max(0.5);
+        let mh = mean_response(ResponseModel::Mg1, &heavy, lam);
+        if let Some(mh) = mh {
+            assert!(mh.is_finite() && ml.is_finite());
+        }
+    }
+
+    #[test]
+    fn mg1_preserves_delay() {
+        let s = ServiceDist::delayed_exponential(4.0, 0.5);
+        match response_dist(ResponseModel::Mg1, &s, 0.8) {
+            Response::Stable(d) => {
+                assert!((d.min_time() - 0.5).abs() < 1e-9);
+                let want = mean_response(ResponseModel::Mg1, &s, 0.8).unwrap();
+                assert!((d.mean() - want).abs() < 1e-6);
+            }
+            _ => panic!("stable"),
+        }
+    }
+
+    #[test]
+    fn plain_exponential_detector() {
+        assert!(is_plain_exponential(&ServiceDist::exponential(1.0)));
+        assert!(!is_plain_exponential(&ServiceDist::delayed_exponential(1.0, 0.1)));
+        assert!(!is_plain_exponential(&ServiceDist::delayed_pareto(2.0, 0.0)));
+    }
+}

@@ -1,0 +1,55 @@
+//! Server descriptors.
+
+use crate::dist::ServiceDist;
+
+/// A compute server: an identity plus its (monitored or declared)
+/// service-time law. The paper's "compute power of a server, i.e. recent
+/// waiting time distribution" (Alg. 3 input).
+#[derive(Clone, Debug)]
+pub struct Server {
+    /// Stable id; also its index in the pool slice handed to schedulers.
+    pub id: usize,
+    /// Service-time distribution.
+    pub dist: ServiceDist,
+}
+
+impl Server {
+    /// New server.
+    pub fn new(id: usize, dist: ServiceDist) -> Server {
+        Server { id, dist }
+    }
+
+    /// Pool of exponential servers from service rates (the paper's
+    /// "servers with service rates 9, 8, 7, 6, 5, 4" style setup).
+    pub fn pool_exponential(rates: &[f64]) -> Vec<Server> {
+        rates
+            .iter()
+            .enumerate()
+            .map(|(i, &mu)| Server::new(i, ServiceDist::exponential(mu)))
+            .collect()
+    }
+
+    /// Mean service time.
+    pub fn mean_service(&self) -> f64 {
+        self.dist.mean()
+    }
+
+    /// Nominal service rate (1 / mean service time).
+    pub fn service_rate(&self) -> f64 {
+        self.dist.rate()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pool_builder() {
+        let pool = Server::pool_exponential(&[9.0, 8.0, 7.0]);
+        assert_eq!(pool.len(), 3);
+        assert_eq!(pool[2].id, 2);
+        assert!((pool[0].service_rate() - 9.0).abs() < 1e-6);
+        assert!((pool[1].mean_service() - 0.125).abs() < 1e-6);
+    }
+}

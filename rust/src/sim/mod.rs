@@ -1,0 +1,10 @@
+//! Discrete-event simulation of data computing flows.
+//!
+//! Validates the analytic engine and regenerates the paper's figures:
+//! exact Lindley-recursion station dynamics ([`queueing`]), recursive
+//! series/parallel composition over workflows ([`network`]), and
+//! synthetic arrival traces ([`trace`]).
+
+pub mod network;
+pub mod queueing;
+pub mod trace;

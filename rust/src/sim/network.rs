@@ -1,0 +1,260 @@
+//! Whole-workflow simulation: the Monte-Carlo twin of the analytic
+//! composition engine.
+//!
+//! Semantics (matching the paper's model and our analytic engine):
+//! every station runs at its *scheduled* steady-state load — leaf slot i
+//! receives Poisson(λ_i) arrivals of its own — and the end-to-end
+//! response of a virtual datum is
+//!
+//! * serial DCC:   sum of per-stage response samples (Eq. 1's
+//!   independence),
+//! * parallel DCC: max over branch response samples (Eq. 3's fork–join).
+//!
+//! Because each station is simulated with the exact Lindley recursion,
+//! the simulator captures true M/G/1 queueing that the analytic M/M/1 /
+//! P-K models only approximate — this gap is part of what Table 2's
+//! "our approach vs optimal" columns measure.
+
+use crate::flow::{Dcc, Workflow};
+use crate::sched::server::Server;
+use crate::sched::Allocation;
+use crate::sim::queueing::{sample_service, simulate_station};
+use crate::util::rng::Rng;
+use crate::util::stats::{quantile, Welford};
+
+/// Simulation parameters.
+#[derive(Clone, Copy, Debug)]
+pub struct SimConfig {
+    /// Post-warmup samples per station (= end-to-end samples produced).
+    pub n_tasks: usize,
+    /// Warmup tasks discarded per station.
+    pub warmup: usize,
+    /// RNG seed (every run is reproducible).
+    pub seed: u64,
+    /// true: stations queue (Lindley); false: response = service draw
+    /// (the Fig. 2/3 setting).
+    pub queueing: bool,
+}
+
+impl Default for SimConfig {
+    fn default() -> Self {
+        SimConfig {
+            n_tasks: 100_000,
+            warmup: 5_000,
+            seed: 0xDCF10,
+            queueing: true,
+        }
+    }
+}
+
+/// Simulation outcome.
+#[derive(Clone, Debug)]
+pub struct SimResult {
+    /// Mean end-to-end response time.
+    pub mean: f64,
+    /// Variance.
+    pub var: f64,
+    /// Median.
+    pub p50: f64,
+    /// 99th percentile.
+    pub p99: f64,
+    /// Sorted end-to-end samples (for CDF plots / KS tests).
+    pub samples: Vec<f64>,
+}
+
+impl SimResult {
+    fn from_samples(mut samples: Vec<f64>) -> SimResult {
+        let mut w = Welford::new();
+        samples.iter().for_each(|&x| w.push(x));
+        samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        SimResult {
+            mean: w.mean(),
+            var: w.variance(),
+            p50: quantile(&samples, 0.5),
+            p99: quantile(&samples, 0.99),
+            samples,
+        }
+    }
+
+    /// Empirical CDF of the samples evaluated at `t`.
+    pub fn cdf_at(&self, t: f64) -> f64 {
+        let idx = self.samples.partition_point(|&x| x <= t);
+        idx as f64 / self.samples.len() as f64
+    }
+}
+
+/// Simulate a workflow under an allocation.
+pub fn simulate(
+    wf: &Workflow,
+    alloc: &Allocation,
+    servers: &[Server],
+    cfg: &SimConfig,
+) -> SimResult {
+    let mut rng = Rng::new(cfg.seed);
+    let samples = node_samples(wf.root(), alloc, servers, cfg, &mut rng);
+    SimResult::from_samples(samples)
+}
+
+fn node_samples(
+    node: &Dcc,
+    alloc: &Allocation,
+    servers: &[Server],
+    cfg: &SimConfig,
+    rng: &mut Rng,
+) -> Vec<f64> {
+    match node {
+        Dcc::Queue { slot } => {
+            let service = &servers[alloc.server_for(*slot)].dist;
+            let mut local = rng.fork();
+            if cfg.queueing {
+                simulate_station(
+                    service,
+                    alloc.rate_for(*slot),
+                    cfg.n_tasks,
+                    cfg.warmup,
+                    &mut local,
+                )
+            } else {
+                sample_service(service, cfg.n_tasks, &mut local)
+            }
+        }
+        Dcc::Serial { children, .. } => {
+            let mut acc = vec![0.0; cfg.n_tasks];
+            for c in children {
+                let s = node_samples(c, alloc, servers, cfg, rng);
+                for (a, x) in acc.iter_mut().zip(s) {
+                    *a += x;
+                }
+            }
+            acc
+        }
+        Dcc::Parallel { children, .. } => {
+            let mut acc = vec![0.0f64; cfg.n_tasks];
+            for c in children {
+                let s = node_samples(c, alloc, servers, cfg, rng);
+                for (a, x) in acc.iter_mut().zip(s) {
+                    *a = a.max(x);
+                }
+            }
+            acc
+        }
+    }
+}
+
+/// Convenience: simulate n iid service draws composed serially
+/// (the paper's Fig. 2 experiment).
+pub fn simulate_serial_iid(dist_rate: f64, n_servers: usize, cfg: &SimConfig) -> SimResult {
+    let wf = Workflow::tandem(n_servers, 1.0);
+    let servers = Server::pool_exponential(&vec![dist_rate; n_servers]);
+    let assign: Vec<usize> = (0..n_servers).collect();
+    let alloc = Allocation {
+        slot_server: assign,
+        slot_rate: vec![1.0; n_servers],
+    };
+    let mut c = *cfg;
+    c.queueing = false;
+    simulate(&wf, &alloc, &servers, &c)
+}
+
+/// Convenience: n iid parallel branches (the paper's Fig. 3 experiment).
+pub fn simulate_parallel_iid(dist_rate: f64, n_servers: usize, cfg: &SimConfig) -> SimResult {
+    let wf = Workflow::forkjoin(n_servers, 1.0);
+    let servers = Server::pool_exponential(&vec![dist_rate; n_servers]);
+    let assign: Vec<usize> = (0..n_servers).collect();
+    let alloc = Allocation {
+        slot_server: assign,
+        slot_rate: vec![1.0; n_servers],
+    };
+    let mut c = *cfg;
+    c.queueing = false;
+    simulate(&wf, &alloc, &servers, &c)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compose::analytic;
+
+    fn cfg(n: usize) -> SimConfig {
+        SimConfig {
+            n_tasks: n,
+            warmup: n / 20,
+            seed: 77,
+            queueing: true,
+        }
+    }
+
+    #[test]
+    fn serial_iid_matches_erlang() {
+        // Fig. 2 ground truth: n iid Exp(1) in series = Erlang(n, 1)
+        let r = simulate_serial_iid(1.0, 10, &cfg(200_000));
+        assert!((r.mean - 10.0).abs() < 0.1, "mean {}", r.mean);
+        assert!((r.var - 10.0).abs() < 0.4, "var {}", r.var);
+        // CDF spot check
+        for t in [5.0, 10.0, 15.0] {
+            let want = analytic::erlang_cdf(t, 10, 1.0);
+            assert!((r.cdf_at(t) - want).abs() < 0.01, "t={t}");
+        }
+    }
+
+    #[test]
+    fn parallel_iid_matches_harmonic() {
+        // Fig. 3 ground truth: E[max of n Exp(1)] = H_n
+        let r = simulate_parallel_iid(1.0, 20, &cfg(200_000));
+        let want = analytic::max_iid_exp_mean(20, 1.0);
+        assert!((r.mean - want).abs() < 0.05, "mean {} want {want}", r.mean);
+        let vwant = analytic::max_iid_exp_var(20, 1.0);
+        assert!((r.var - vwant).abs() < 0.1, "var {} want {vwant}", r.var);
+    }
+
+    #[test]
+    fn serial_tail_grows_faster_than_parallel() {
+        // the paper's central observation (Figs. 2-3): serial growth in
+        // mean is linear, parallel is logarithmic
+        let s10 = simulate_serial_iid(1.0, 10, &cfg(50_000));
+        let s50 = simulate_serial_iid(1.0, 50, &cfg(50_000));
+        let p10 = simulate_parallel_iid(1.0, 10, &cfg(50_000));
+        let p50 = simulate_parallel_iid(1.0, 50, &cfg(50_000));
+        let serial_growth = s50.mean / s10.mean; // ~5
+        let parallel_growth = p50.mean / p10.mean; // ~H50/H10 ~ 1.54
+        assert!(serial_growth > 4.5);
+        assert!(parallel_growth < 2.0);
+        assert!(serial_growth > 2.0 * parallel_growth);
+    }
+
+    #[test]
+    fn fig6_sim_close_to_analytic_score() {
+        use crate::compose::grid::GridSpec;
+        use crate::compose::score::score_allocation;
+        use crate::sched::sdcc_allocate;
+
+        let wf = Workflow::fig6();
+        let servers = Server::pool_exponential(&[9.0, 8.0, 7.0, 6.0, 5.0, 4.0]);
+        let alloc = sdcc_allocate(&wf, &servers).unwrap();
+        let grid = GridSpec::auto(&alloc, &servers);
+        let analytic_score = score_allocation(&wf, &alloc, &servers, &grid);
+        let sim = simulate(&wf, &alloc, &servers, &cfg(300_000));
+        // all-exponential service => M/M/1 model is exact; sim and
+        // analytics must agree within MC noise
+        assert!(
+            (sim.mean - analytic_score.mean).abs() < 0.05 * analytic_score.mean,
+            "sim {} vs analytic {}",
+            sim.mean,
+            analytic_score.mean
+        );
+        assert!(
+            (sim.var - analytic_score.var).abs() < 0.15 * analytic_score.var,
+            "sim var {} vs analytic var {}",
+            sim.var,
+            analytic_score.var
+        );
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let r1 = simulate_serial_iid(2.0, 5, &cfg(10_000));
+        let r2 = simulate_serial_iid(2.0, 5, &cfg(10_000));
+        assert_eq!(r1.mean, r2.mean);
+        assert_eq!(r1.samples, r2.samples);
+    }
+}

@@ -1,0 +1,124 @@
+//! Single-station FCFS queue simulation (Lindley recursion).
+//!
+//! Each leaf slot of a workflow is one station receiving a Poisson task
+//! stream at its scheduled rate. For a single FCFS server the full
+//! event-calendar machinery reduces to the Lindley recursion
+//!
+//! ```text
+//! depart[i]   = max(arrive[i], depart[i-1]) + service[i]
+//! response[i] = depart[i] - arrive[i]
+//! ```
+//!
+//! which gives the *exact* M/G/1-FCFS sample path — the ground truth the
+//! analytic response models (`sched::response`) approximate.
+
+use crate::dist::ServiceDist;
+use crate::util::rng::Rng;
+
+/// Simulate one FCFS station: Poisson(λ) arrivals, iid service draws.
+///
+/// Returns `n` post-warmup response-time samples (the first `warmup`
+/// tasks are simulated but discarded so the queue reaches steady state).
+pub fn simulate_station(
+    service: &ServiceDist,
+    lambda: f64,
+    n: usize,
+    warmup: usize,
+    rng: &mut Rng,
+) -> Vec<f64> {
+    assert!(lambda > 0.0 && n > 0);
+    let total = n + warmup;
+    let mut out = Vec::with_capacity(n);
+    let mut arrive = 0.0f64;
+    let mut depart_prev = 0.0f64;
+    for i in 0..total {
+        arrive += rng.exponential(lambda);
+        let start = arrive.max(depart_prev);
+        let depart = start + service.sample(rng);
+        if i >= warmup {
+            out.push(depart - arrive);
+        }
+        depart_prev = depart;
+    }
+    out
+}
+
+/// Service-only samples (no queueing): the Fig. 2/3 setting.
+pub fn sample_service(service: &ServiceDist, n: usize, rng: &mut Rng) -> Vec<f64> {
+    (0..n).map(|_| service.sample(rng)).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::stats::Welford;
+
+    fn mean_of(xs: &[f64]) -> f64 {
+        xs.iter().sum::<f64>() / xs.len() as f64
+    }
+
+    #[test]
+    fn mm1_mean_response_matches_formula() {
+        // M/M/1: E[R] = 1/(mu - lambda)
+        let (mu, lambda) = (5.0, 3.0);
+        let mut rng = Rng::new(42);
+        let samples = simulate_station(
+            &ServiceDist::exponential(mu),
+            lambda,
+            400_000,
+            20_000,
+            &mut rng,
+        );
+        let want = 1.0 / (mu - lambda);
+        let got = mean_of(&samples);
+        assert!((got - want).abs() < 0.03 * want, "got {got} want {want}");
+    }
+
+    #[test]
+    fn mg1_mean_matches_pollaczek_khinchine() {
+        // deterministic-ish service (delayed exp with tiny tail) ≈ M/D/1
+        let service = ServiceDist::delayed_exponential(50.0, 0.18); // mean 0.2
+        let lambda = 3.0;
+        let es = service.mean();
+        let es2 = service.variance() + es * es;
+        let rho = lambda * es;
+        let want = es + lambda * es2 / (2.0 * (1.0 - rho));
+        let mut rng = Rng::new(7);
+        let samples = simulate_station(&service, lambda, 400_000, 20_000, &mut rng);
+        let got = mean_of(&samples);
+        assert!((got - want).abs() < 0.05 * want, "got {got} want {want}");
+    }
+
+    #[test]
+    fn low_load_response_is_service() {
+        // lambda -> 0: response ≈ service
+        let service = ServiceDist::delayed_pareto(4.0, 0.3);
+        let mut rng = Rng::new(9);
+        let samples = simulate_station(&service, 0.01, 100_000, 1_000, &mut rng);
+        let got = mean_of(&samples);
+        let want = service.mean();
+        assert!((got - want).abs() < 0.05 * want, "got {got} want {want}");
+    }
+
+    #[test]
+    fn utilization_grows_variance() {
+        let service = ServiceDist::exponential(5.0);
+        let mut rng = Rng::new(11);
+        let mut prev_var = 0.0;
+        for lambda in [1.0, 3.0, 4.5] {
+            let samples = simulate_station(&service, lambda, 200_000, 10_000, &mut rng);
+            let mut w = Welford::new();
+            samples.iter().for_each(|&x| w.push(x));
+            assert!(w.variance() > prev_var, "lambda {lambda}");
+            prev_var = w.variance();
+        }
+    }
+
+    #[test]
+    fn warmup_discarded() {
+        let mut rng = Rng::new(13);
+        let s = simulate_station(&ServiceDist::exponential(2.0), 1.0, 100, 50, &mut rng);
+        assert_eq!(s.len(), 100);
+        assert!(s.iter().all(|&x| x > 0.0));
+    }
+}

@@ -1,0 +1,158 @@
+//! Synthetic workload traces for the coordinator and the end-to-end
+//! examples: arrival processes with controllable burstiness and drift,
+//! standing in for the production traces the paper's setting assumes
+//! (DESIGN.md §substitutions).
+
+use crate::util::rng::Rng;
+
+/// Arrival process shapes.
+#[derive(Clone, Copy, Debug)]
+pub enum ArrivalProcess {
+    /// Poisson with constant rate.
+    Poisson {
+        /// Arrival rate.
+        rate: f64,
+    },
+    /// Markov-modulated Poisson: alternates between a base and a burst
+    /// rate with exponential dwell times — the bursty ingest pattern of
+    /// log/analytics pipelines.
+    Mmpp {
+        /// Base arrival rate.
+        base_rate: f64,
+        /// Burst arrival rate.
+        burst_rate: f64,
+        /// Mean dwell time in the base state.
+        base_dwell: f64,
+        /// Mean dwell time in the burst state.
+        burst_dwell: f64,
+    },
+    /// Deterministic (paced) arrivals.
+    Paced {
+        /// Fixed inter-arrival gap.
+        interval: f64,
+    },
+}
+
+/// A generated trace: absolute arrival times.
+#[derive(Clone, Debug)]
+pub struct Trace {
+    /// Monotone arrival timestamps.
+    pub arrivals: Vec<f64>,
+}
+
+impl Trace {
+    /// Generate `n` arrivals.
+    pub fn generate(process: ArrivalProcess, n: usize, rng: &mut Rng) -> Trace {
+        let mut arrivals = Vec::with_capacity(n);
+        let mut t = 0.0;
+        match process {
+            ArrivalProcess::Poisson { rate } => {
+                for _ in 0..n {
+                    t += rng.exponential(rate);
+                    arrivals.push(t);
+                }
+            }
+            ArrivalProcess::Paced { interval } => {
+                for _ in 0..n {
+                    t += interval;
+                    arrivals.push(t);
+                }
+            }
+            ArrivalProcess::Mmpp {
+                base_rate,
+                burst_rate,
+                base_dwell,
+                burst_dwell,
+            } => {
+                let mut in_burst = false;
+                let mut switch_at = rng.exponential(1.0 / base_dwell);
+                for _ in 0..n {
+                    let rate = if in_burst { burst_rate } else { base_rate };
+                    t += rng.exponential(rate);
+                    while t > switch_at {
+                        in_burst = !in_burst;
+                        let dwell = if in_burst { burst_dwell } else { base_dwell };
+                        switch_at += rng.exponential(1.0 / dwell);
+                    }
+                    arrivals.push(t);
+                }
+            }
+        }
+        Trace { arrivals }
+    }
+
+    /// Observed mean arrival rate.
+    pub fn mean_rate(&self) -> f64 {
+        if self.arrivals.len() < 2 {
+            return 0.0;
+        }
+        (self.arrivals.len() - 1) as f64 / (self.arrivals.last().unwrap() - self.arrivals[0])
+    }
+
+    /// Squared coefficient of variation of inter-arrival gaps
+    /// (1 = Poisson, > 1 = bursty, 0 = paced).
+    pub fn cv2(&self) -> f64 {
+        let gaps: Vec<f64> = self.arrivals.windows(2).map(|w| w[1] - w[0]).collect();
+        if gaps.is_empty() {
+            return 0.0;
+        }
+        let mean = gaps.iter().sum::<f64>() / gaps.len() as f64;
+        let var = gaps.iter().map(|g| (g - mean) * (g - mean)).sum::<f64>() / gaps.len() as f64;
+        var / (mean * mean)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn poisson_rate_and_cv2() {
+        let mut rng = Rng::new(1);
+        let t = Trace::generate(ArrivalProcess::Poisson { rate: 4.0 }, 100_000, &mut rng);
+        assert!((t.mean_rate() - 4.0).abs() < 0.1);
+        assert!((t.cv2() - 1.0).abs() < 0.05);
+    }
+
+    #[test]
+    fn paced_has_zero_cv2() {
+        let mut rng = Rng::new(2);
+        let t = Trace::generate(ArrivalProcess::Paced { interval: 0.25 }, 1_000, &mut rng);
+        assert!((t.mean_rate() - 4.0).abs() < 0.01);
+        assert!(t.cv2() < 1e-20);
+    }
+
+    #[test]
+    fn mmpp_is_burstier_than_poisson() {
+        let mut rng = Rng::new(3);
+        let t = Trace::generate(
+            ArrivalProcess::Mmpp {
+                base_rate: 2.0,
+                burst_rate: 20.0,
+                base_dwell: 5.0,
+                burst_dwell: 1.0,
+            },
+            100_000,
+            &mut rng,
+        );
+        assert!(t.cv2() > 1.5, "cv2 {}", t.cv2());
+    }
+
+    #[test]
+    fn arrivals_are_monotone() {
+        let mut rng = Rng::new(4);
+        for p in [
+            ArrivalProcess::Poisson { rate: 1.0 },
+            ArrivalProcess::Paced { interval: 1.0 },
+            ArrivalProcess::Mmpp {
+                base_rate: 1.0,
+                burst_rate: 5.0,
+                base_dwell: 2.0,
+                burst_dwell: 0.5,
+            },
+        ] {
+            let t = Trace::generate(p, 5_000, &mut rng);
+            assert!(t.arrivals.windows(2).all(|w| w[1] >= w[0]));
+        }
+    }
+}

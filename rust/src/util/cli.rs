@@ -1,0 +1,202 @@
+//! Tiny CLI argument parser (clap is not in the vendored crate set).
+//!
+//! Supports `--key value`, `--key=value`, boolean `--flag`, positional
+//! arguments, and generates usage text from the declared options.
+
+use std::collections::BTreeMap;
+
+/// One declared option.
+#[derive(Clone, Debug)]
+struct OptSpec {
+    name: String,
+    help: String,
+    default: Option<String>,
+    is_flag: bool,
+}
+
+/// Declarative CLI parser.
+#[derive(Debug, Default)]
+pub struct Cli {
+    program: String,
+    about: String,
+    opts: Vec<OptSpec>,
+}
+
+/// Parsed argument values.
+#[derive(Debug, Default)]
+pub struct Args {
+    values: BTreeMap<String, String>,
+    flags: Vec<String>,
+    /// Positional (non-option) arguments in order.
+    pub positional: Vec<String>,
+}
+
+impl Cli {
+    /// New parser with program name and one-line description.
+    pub fn new(program: &str, about: &str) -> Self {
+        Cli {
+            program: program.to_string(),
+            about: about.to_string(),
+            opts: Vec::new(),
+        }
+    }
+
+    /// Declare `--name <value>` with a default.
+    pub fn opt(mut self, name: &str, default: &str, help: &str) -> Self {
+        self.opts.push(OptSpec {
+            name: name.to_string(),
+            help: help.to_string(),
+            default: Some(default.to_string()),
+            is_flag: false,
+        });
+        self
+    }
+
+    /// Declare a boolean `--name` flag.
+    pub fn flag(mut self, name: &str, help: &str) -> Self {
+        self.opts.push(OptSpec {
+            name: name.to_string(),
+            help: help.to_string(),
+            default: None,
+            is_flag: true,
+        });
+        self
+    }
+
+    /// Usage text.
+    pub fn usage(&self) -> String {
+        let mut s = format!("{} — {}\n\noptions:\n", self.program, self.about);
+        for o in &self.opts {
+            let lhs = if o.is_flag {
+                format!("  --{}", o.name)
+            } else {
+                format!("  --{} <v>", o.name)
+            };
+            let def = o
+                .default
+                .as_ref()
+                .map(|d| format!(" [default: {d}]"))
+                .unwrap_or_default();
+            s.push_str(&format!("{lhs:<26}{}{def}\n", o.help));
+        }
+        s
+    }
+
+    /// Parse an argv slice (without the program name). Returns Err with a
+    /// message (or the usage text for `--help`).
+    pub fn parse(&self, argv: &[String]) -> Result<Args, String> {
+        let mut out = Args::default();
+        for o in &self.opts {
+            if let Some(d) = &o.default {
+                out.values.insert(o.name.clone(), d.clone());
+            }
+        }
+        let mut i = 0;
+        while i < argv.len() {
+            let a = &argv[i];
+            if a == "--help" || a == "-h" {
+                return Err(self.usage());
+            }
+            if let Some(body) = a.strip_prefix("--") {
+                let (key, inline) = match body.split_once('=') {
+                    Some((k, v)) => (k.to_string(), Some(v.to_string())),
+                    None => (body.to_string(), None),
+                };
+                let spec = self
+                    .opts
+                    .iter()
+                    .find(|o| o.name == key)
+                    .ok_or_else(|| format!("unknown option --{key}\n\n{}", self.usage()))?;
+                if spec.is_flag {
+                    if inline.is_some() {
+                        return Err(format!("flag --{key} takes no value"));
+                    }
+                    out.flags.push(key);
+                } else {
+                    let v = match inline {
+                        Some(v) => v,
+                        None => {
+                            i += 1;
+                            argv.get(i)
+                                .cloned()
+                                .ok_or_else(|| format!("option --{key} needs a value"))?
+                        }
+                    };
+                    out.values.insert(key, v);
+                }
+            } else {
+                out.positional.push(a.clone());
+            }
+            i += 1;
+        }
+        Ok(out)
+    }
+}
+
+impl Args {
+    /// String value of an option (present by construction if it had a default).
+    pub fn get(&self, name: &str) -> &str {
+        self.values
+            .get(name)
+            .map(|s| s.as_str())
+            .unwrap_or_else(|| panic!("option --{name} was not declared with a default"))
+    }
+
+    /// Parse an option as any FromStr type.
+    pub fn get_as<T: std::str::FromStr>(&self, name: &str) -> Result<T, String> {
+        self.get(name)
+            .parse::<T>()
+            .map_err(|_| format!("option --{name}: cannot parse {:?}", self.get(name)))
+    }
+
+    /// Whether a boolean flag was passed.
+    pub fn has(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn argv(items: &[&str]) -> Vec<String> {
+        items.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn defaults_and_overrides() {
+        let cli = Cli::new("x", "test").opt("n", "10", "count").opt("mode", "fast", "mode");
+        let a = cli.parse(&argv(&["--n", "20"])).unwrap();
+        assert_eq!(a.get_as::<u32>("n").unwrap(), 20);
+        assert_eq!(a.get("mode"), "fast");
+    }
+
+    #[test]
+    fn equals_syntax_and_flags() {
+        let cli = Cli::new("x", "test").opt("seed", "0", "seed").flag("verbose", "talk");
+        let a = cli.parse(&argv(&["--seed=99", "--verbose", "pos1"])).unwrap();
+        assert_eq!(a.get_as::<u64>("seed").unwrap(), 99);
+        assert!(a.has("verbose"));
+        assert_eq!(a.positional, vec!["pos1".to_string()]);
+    }
+
+    #[test]
+    fn unknown_option_errors() {
+        let cli = Cli::new("x", "test");
+        assert!(cli.parse(&argv(&["--nope"])).is_err());
+    }
+
+    #[test]
+    fn missing_value_errors() {
+        let cli = Cli::new("x", "test").opt("n", "1", "count");
+        assert!(cli.parse(&argv(&["--n"])).is_err());
+    }
+
+    #[test]
+    fn help_returns_usage() {
+        let cli = Cli::new("prog", "about").opt("n", "1", "count");
+        let err = cli.parse(&argv(&["--help"])).unwrap_err();
+        assert!(err.contains("prog — about"));
+        assert!(err.contains("--n"));
+    }
+}

@@ -1,0 +1,16 @@
+//! Self-contained infrastructure: PRNG, JSON, statistics, property-test
+//! harness, CLI parsing.
+//!
+//! The build image is fully offline with a vendored crate set that carries
+//! only the `xla` dependency chain, so the usual ecosystem crates
+//! (`rand`, `serde`, `clap`, `proptest`, `criterion`) are unavailable.
+//! Everything in this module is a deliberately small, well-tested,
+//! dependency-free replacement for exactly the slices of those crates the
+//! rest of the library needs.
+
+pub mod bench;
+pub mod cli;
+pub mod json;
+pub mod prop;
+pub mod rng;
+pub mod stats;

@@ -1,0 +1,146 @@
+//! Mini property-based testing harness (proptest is not in the vendored
+//! crate set).
+//!
+//! A property is a closure over a [`Gen`] (a seeded value source). The
+//! runner executes it for `cases` random seeds; on failure it reports the
+//! failing seed so the case can be replayed deterministically:
+//!
+//! ```
+//! use dcflow::util::prop::{run, Gen};
+//! run("addition commutes", 200, |g: &mut Gen| {
+//!     let (a, b) = (g.f64_in(-1e6, 1e6), g.f64_in(-1e6, 1e6));
+//!     assert_eq!(a + b, b + a);
+//! });
+//! ```
+
+use crate::util::rng::Rng;
+
+/// Random value source handed to each property case.
+pub struct Gen {
+    rng: Rng,
+    /// Seed of this case (printed on failure for replay).
+    pub seed: u64,
+}
+
+impl Gen {
+    /// Uniform f64 in `[lo, hi)`.
+    pub fn f64_in(&mut self, lo: f64, hi: f64) -> f64 {
+        self.rng.range_f64(lo, hi)
+    }
+
+    /// Uniform usize in `[lo, hi]` (inclusive).
+    pub fn usize_in(&mut self, lo: usize, hi: usize) -> usize {
+        lo + self.rng.below((hi - lo + 1) as u64) as usize
+    }
+
+    /// Biased coin.
+    pub fn bool(&mut self, p_true: f64) -> bool {
+        self.rng.f64() < p_true
+    }
+
+    /// Pick one element of a slice.
+    pub fn choose<'a, T>(&mut self, xs: &'a [T]) -> &'a T {
+        &xs[self.rng.below(xs.len() as u64) as usize]
+    }
+
+    /// Vector of values from a generator function.
+    pub fn vec_of<T>(&mut self, len: usize, mut f: impl FnMut(&mut Gen) -> T) -> Vec<T> {
+        (0..len).map(|_| f(self)).collect()
+    }
+
+    /// A positive rate-like value, log-uniform over [0.1, 20).
+    pub fn rate(&mut self) -> f64 {
+        (self.f64_in(0.1f64.ln(), 20.0f64.ln())).exp()
+    }
+
+    /// Access to the raw RNG.
+    pub fn rng(&mut self) -> &mut Rng {
+        &mut self.rng
+    }
+}
+
+/// Run `prop` for `cases` deterministic seeds derived from the property
+/// name (stable across runs/machines). Panics with the failing seed.
+pub fn run(name: &str, cases: u64, mut prop: impl FnMut(&mut Gen)) {
+    let base = fnv1a(name.as_bytes());
+    for case in 0..cases {
+        let seed = base ^ case.wrapping_mul(0x9E3779B97F4A7C15);
+        let mut g = Gen {
+            rng: Rng::new(seed),
+            seed,
+        };
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| prop(&mut g)));
+        if let Err(e) = result {
+            let msg = e
+                .downcast_ref::<String>()
+                .map(|s| s.as_str())
+                .or_else(|| e.downcast_ref::<&str>().copied())
+                .unwrap_or("<non-string panic>");
+            panic!("property '{name}' failed at case {case} (replay seed {seed:#x}): {msg}");
+        }
+    }
+}
+
+/// Replay a single failing case by seed.
+pub fn replay(seed: u64, mut prop: impl FnMut(&mut Gen)) {
+    let mut g = Gen {
+        rng: Rng::new(seed),
+        seed,
+    };
+    prop(&mut g);
+}
+
+fn fnv1a(data: &[u8]) -> u64 {
+    let mut h: u64 = 0xcbf29ce484222325;
+    for &b in data {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100000001b3);
+    }
+    h
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_passes() {
+        run("tautology", 50, |g| {
+            let x = g.f64_in(0.0, 1.0);
+            assert!((0.0..1.0).contains(&x));
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "replay seed")]
+    fn failing_property_reports_seed() {
+        run("always-fails", 5, |_| panic!("boom"));
+    }
+
+    #[test]
+    fn usize_in_bounds_inclusive() {
+        run("usize_in bounds", 100, |g| {
+            let lo = g.usize_in(0, 10);
+            let hi = lo + g.usize_in(0, 10);
+            let x = g.usize_in(lo, hi);
+            assert!(x >= lo && x <= hi);
+        });
+    }
+
+    #[test]
+    fn rate_is_positive_bounded() {
+        run("rate positive", 200, |g| {
+            let r = g.rate();
+            assert!(r >= 0.1 && r < 20.0, "rate {r}");
+        });
+    }
+
+    #[test]
+    fn replay_is_deterministic() {
+        let mut v1 = 0.0;
+        replay(12345, |g| v1 = g.f64_in(0.0, 1.0));
+        let mut v2 = 0.0;
+        replay(12345, |g| v2 = g.f64_in(0.0, 1.0));
+        assert_eq!(v1, v2);
+    }
+}

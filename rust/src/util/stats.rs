@@ -1,0 +1,310 @@
+//! Streaming statistics: Welford moments, histograms, empirical quantiles,
+//! and two-sample Kolmogorov–Smirnov — the numeric backbone of the
+//! monitors (`crate::monitor`) and the simulator's result reporting.
+
+/// Numerically stable streaming mean/variance (Welford's algorithm),
+/// plus min/max tracking.
+#[derive(Clone, Debug, Default)]
+pub struct Welford {
+    n: u64,
+    mean: f64,
+    m2: f64,
+    min: f64,
+    max: f64,
+}
+
+impl Welford {
+    /// Empty accumulator.
+    pub fn new() -> Self {
+        Welford {
+            n: 0,
+            mean: 0.0,
+            m2: 0.0,
+            min: f64::INFINITY,
+            max: f64::NEG_INFINITY,
+        }
+    }
+
+    /// Fold in one observation.
+    #[inline]
+    pub fn push(&mut self, x: f64) {
+        self.n += 1;
+        let d = x - self.mean;
+        self.mean += d / self.n as f64;
+        self.m2 += d * (x - self.mean);
+        self.min = self.min.min(x);
+        self.max = self.max.max(x);
+    }
+
+    /// Number of observations.
+    pub fn count(&self) -> u64 {
+        self.n
+    }
+
+    /// Sample mean (0 for the empty accumulator).
+    pub fn mean(&self) -> f64 {
+        if self.n == 0 {
+            0.0
+        } else {
+            self.mean
+        }
+    }
+
+    /// Population variance (÷ n).
+    pub fn variance(&self) -> f64 {
+        if self.n == 0 {
+            0.0
+        } else {
+            self.m2 / self.n as f64
+        }
+    }
+
+    /// Sample variance (÷ n-1).
+    pub fn sample_variance(&self) -> f64 {
+        if self.n < 2 {
+            0.0
+        } else {
+            self.m2 / (self.n - 1) as f64
+        }
+    }
+
+    /// Standard deviation (population).
+    pub fn std(&self) -> f64 {
+        self.variance().sqrt()
+    }
+
+    /// Smallest observation seen.
+    pub fn min(&self) -> f64 {
+        self.min
+    }
+
+    /// Largest observation seen.
+    pub fn max(&self) -> f64 {
+        self.max
+    }
+
+    /// Merge another accumulator (parallel Welford / Chan et al.).
+    pub fn merge(&mut self, other: &Welford) {
+        if other.n == 0 {
+            return;
+        }
+        if self.n == 0 {
+            *self = other.clone();
+            return;
+        }
+        let n = self.n + other.n;
+        let d = other.mean - self.mean;
+        self.m2 += other.m2 + d * d * (self.n as f64 * other.n as f64) / n as f64;
+        self.mean += d * other.n as f64 / n as f64;
+        self.n = n;
+        self.min = self.min.min(other.min);
+        self.max = self.max.max(other.max);
+    }
+}
+
+/// Fixed-range uniform histogram with overflow bucket.
+#[derive(Clone, Debug)]
+pub struct Histogram {
+    lo: f64,
+    width: f64,
+    counts: Vec<u64>,
+    overflow: u64,
+    total: u64,
+}
+
+impl Histogram {
+    /// `bins` uniform buckets over `[lo, hi)`; values above `hi` land in
+    /// the overflow bucket, values below `lo` clamp into bucket 0.
+    pub fn new(lo: f64, hi: f64, bins: usize) -> Self {
+        assert!(hi > lo && bins > 0);
+        Histogram {
+            lo,
+            width: (hi - lo) / bins as f64,
+            counts: vec![0; bins],
+            overflow: 0,
+            total: 0,
+        }
+    }
+
+    /// Record one observation.
+    pub fn push(&mut self, x: f64) {
+        self.total += 1;
+        let idx = ((x - self.lo) / self.width).floor();
+        if idx < 0.0 {
+            self.counts[0] += 1;
+        } else if (idx as usize) < self.counts.len() {
+            self.counts[idx as usize] += 1;
+        } else {
+            self.overflow += 1;
+        }
+    }
+
+    /// Total observations recorded.
+    pub fn count(&self) -> u64 {
+        self.total
+    }
+
+    /// Fraction of observations in the overflow bucket.
+    pub fn overflow_frac(&self) -> f64 {
+        if self.total == 0 {
+            0.0
+        } else {
+            self.overflow as f64 / self.total as f64
+        }
+    }
+
+    /// Empirical CDF evaluated at bucket right edges; the final entry
+    /// excludes overflow mass (so it is < 1 when the range clipped).
+    pub fn cdf(&self) -> Vec<f64> {
+        let mut acc = 0u64;
+        self.counts
+            .iter()
+            .map(|&c| {
+                acc += c;
+                acc as f64 / self.total.max(1) as f64
+            })
+            .collect()
+    }
+
+    /// Normalized PDF estimate (density per unit x) at bucket centers.
+    pub fn pdf(&self) -> Vec<f64> {
+        let norm = self.total.max(1) as f64 * self.width;
+        self.counts.iter().map(|&c| c as f64 / norm).collect()
+    }
+
+    /// Approximate q-quantile by scanning the CDF (bucket right edge).
+    pub fn quantile(&self, q: f64) -> f64 {
+        let mut acc = 0u64;
+        let need = (q * self.total as f64).ceil() as u64;
+        for (i, &c) in self.counts.iter().enumerate() {
+            acc += c;
+            if acc >= need {
+                return self.lo + (i + 1) as f64 * self.width;
+            }
+        }
+        self.lo + self.counts.len() as f64 * self.width
+    }
+
+    /// Bucket centers (x coordinates for `pdf()`).
+    pub fn centers(&self) -> Vec<f64> {
+        (0..self.counts.len())
+            .map(|i| self.lo + (i as f64 + 0.5) * self.width)
+            .collect()
+    }
+}
+
+/// Exact empirical quantile of a sample (interpolated, type-7 like numpy).
+pub fn quantile(sorted: &[f64], q: f64) -> f64 {
+    assert!(!sorted.is_empty());
+    let h = (sorted.len() - 1) as f64 * q.clamp(0.0, 1.0);
+    let lo = h.floor() as usize;
+    let hi = h.ceil() as usize;
+    sorted[lo] + (sorted[hi] - sorted[lo]) * (h - lo as f64)
+}
+
+/// Two-sample Kolmogorov–Smirnov statistic: sup |F_a - F_b|.
+/// Both inputs must be sorted ascending.
+pub fn ks_statistic(a: &[f64], b: &[f64]) -> f64 {
+    assert!(!a.is_empty() && !b.is_empty());
+    let (mut i, mut j) = (0usize, 0usize);
+    let mut d: f64 = 0.0;
+    while i < a.len() && j < b.len() {
+        if a[i] <= b[j] {
+            i += 1;
+        } else {
+            j += 1;
+        }
+        let fa = i as f64 / a.len() as f64;
+        let fb = j as f64 / b.len() as f64;
+        d = d.max((fa - fb).abs());
+    }
+    d
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn welford_matches_naive() {
+        let xs = [1.0, 2.0, 4.0, 8.0, 16.0];
+        let mut w = Welford::new();
+        for &x in &xs {
+            w.push(x);
+        }
+        let mean = xs.iter().sum::<f64>() / xs.len() as f64;
+        let var = xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / xs.len() as f64;
+        assert!((w.mean() - mean).abs() < 1e-12);
+        assert!((w.variance() - var).abs() < 1e-12);
+        assert_eq!(w.count(), 5);
+        assert_eq!(w.min(), 1.0);
+        assert_eq!(w.max(), 16.0);
+    }
+
+    #[test]
+    fn welford_merge_equals_sequential() {
+        let mut r = Rng::new(3);
+        let xs: Vec<f64> = (0..1000).map(|_| r.f64() * 10.0).collect();
+        let mut whole = Welford::new();
+        xs.iter().for_each(|&x| whole.push(x));
+        let mut a = Welford::new();
+        let mut b = Welford::new();
+        xs[..300].iter().for_each(|&x| a.push(x));
+        xs[300..].iter().for_each(|&x| b.push(x));
+        a.merge(&b);
+        assert!((a.mean() - whole.mean()).abs() < 1e-10);
+        assert!((a.variance() - whole.variance()).abs() < 1e-10);
+    }
+
+    #[test]
+    fn histogram_pdf_integrates_to_one() {
+        let mut r = Rng::new(5);
+        let mut h = Histogram::new(0.0, 10.0, 100);
+        for _ in 0..10_000 {
+            h.push(r.exponential(1.0));
+        }
+        let integral: f64 = h.pdf().iter().sum::<f64>() * 0.1;
+        assert!((integral + h.overflow_frac() - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn histogram_quantile_exponential() {
+        let mut r = Rng::new(7);
+        let mut h = Histogram::new(0.0, 20.0, 2000);
+        for _ in 0..100_000 {
+            h.push(r.exponential(1.0));
+        }
+        let med = h.quantile(0.5);
+        assert!((med - (2.0f64).ln()).abs() < 0.05, "median {med}");
+    }
+
+    #[test]
+    fn exact_quantile_interpolates() {
+        let xs = [0.0, 1.0, 2.0, 3.0, 4.0];
+        assert_eq!(quantile(&xs, 0.5), 2.0);
+        assert!((quantile(&xs, 0.25) - 1.0).abs() < 1e-12);
+        assert_eq!(quantile(&xs, 0.0), 0.0);
+        assert_eq!(quantile(&xs, 1.0), 4.0);
+    }
+
+    #[test]
+    fn ks_same_distribution_small() {
+        let mut r = Rng::new(11);
+        let mut a: Vec<f64> = (0..5000).map(|_| r.exponential(2.0)).collect();
+        let mut b: Vec<f64> = (0..5000).map(|_| r.exponential(2.0)).collect();
+        a.sort_by(|x, y| x.partial_cmp(y).unwrap());
+        b.sort_by(|x, y| x.partial_cmp(y).unwrap());
+        assert!(ks_statistic(&a, &b) < 0.05);
+    }
+
+    #[test]
+    fn ks_different_distribution_large() {
+        let mut r = Rng::new(13);
+        let mut a: Vec<f64> = (0..5000).map(|_| r.exponential(1.0)).collect();
+        let mut b: Vec<f64> = (0..5000).map(|_| r.exponential(4.0)).collect();
+        a.sort_by(|x, y| x.partial_cmp(y).unwrap());
+        b.sort_by(|x, y| x.partial_cmp(y).unwrap());
+        assert!(ks_statistic(&a, &b) > 0.3);
+    }
+}

@@ -1,0 +1,176 @@
+//! Coordinator integration: the full Algorithm-3 loop under failures,
+//! drift and bursty load.
+
+use dcflow::coordinator::{
+    Coordinator, CoordinatorConfig, Policy, WorkerSpec,
+};
+use dcflow::dist::ServiceDist;
+use dcflow::flow::{Dcc, Workflow};
+use dcflow::sched::server::Server;
+use dcflow::sim::trace::{ArrivalProcess, Trace};
+use dcflow::util::rng::Rng;
+
+fn poisson(rate: f64, n: usize, seed: u64) -> Trace {
+    let mut rng = Rng::new(seed);
+    Trace::generate(ArrivalProcess::Poisson { rate }, n, &mut rng)
+}
+
+#[test]
+fn adaptive_beats_static_under_degradation() {
+    // server degrades mid-run; adaptive coordinator must end up better
+    let rates = [9.0, 8.0, 7.0, 6.0, 5.0, 4.0];
+    let build = |adaptive: bool| {
+        let specs: Vec<WorkerSpec> = rates
+            .iter()
+            .enumerate()
+            .map(|(i, &mu)| {
+                if i == 0 {
+                    WorkerSpec::drifting(
+                        i,
+                        ServiceDist::exponential(mu),
+                        5_000,
+                        ServiceDist::exponential(1.2),
+                    )
+                } else {
+                    WorkerSpec::stable(i, ServiceDist::exponential(mu))
+                }
+            })
+            .collect();
+        let cfg = CoordinatorConfig {
+            seed: 11,
+            policy: Policy::Proposed,
+            reopt_every: if adaptive { 800 } else { 0 },
+            monitor_window: 1_536,
+            min_fit_samples: 256,
+            ..Default::default()
+        };
+        let mut coord = Coordinator::new(specs, Server::pool_exponential(&rates), cfg);
+        let job = coord.submit("fig6", Workflow::fig6());
+        let trace = poisson(2.0, 30_000, 21);
+        let r = coord.run_job(&job, &trace).unwrap();
+        coord.shutdown();
+        r
+    };
+    let adaptive = build(true);
+    let static_ = build(false);
+    assert!(adaptive.metrics.reoptimizations >= 1, "no swap happened");
+    // compare tail latency over the whole run: adaptation must help
+    assert!(
+        adaptive.metrics.latency_quantile(0.99) < static_.metrics.latency_quantile(0.99),
+        "adaptive p99 {} vs static p99 {}",
+        adaptive.metrics.latency_quantile(0.99),
+        static_.metrics.latency_quantile(0.99)
+    );
+}
+
+#[test]
+fn coordinator_handles_bursty_arrivals() {
+    let servers = Server::pool_exponential(&[10.0, 9.0, 8.0, 7.0, 6.0, 5.0]);
+    let cfg = CoordinatorConfig {
+        reopt_every: 0,
+        ..Default::default()
+    };
+    let mut coord = Coordinator::with_truthful_priors(servers, cfg);
+    let job = coord.submit("fig6", Workflow::fig6());
+    let mut rng = Rng::new(5);
+    let trace = Trace::generate(
+        ArrivalProcess::Mmpp {
+            base_rate: 1.0,
+            burst_rate: 6.0,
+            base_dwell: 20.0,
+            burst_dwell: 5.0,
+        },
+        15_000,
+        &mut rng,
+    );
+    let r = coord.run_job(&job, &trace).unwrap();
+    coord.shutdown();
+    assert_eq!(r.metrics.completed, 15_000);
+    assert!(r.metrics.throughput() > 0.0);
+    // bursty load must show a heavier tail than mean
+    assert!(r.metrics.latency_quantile(0.99) > 2.0 * r.metrics.mean_latency());
+}
+
+#[test]
+fn multi_stage_chain_workflow_runs() {
+    // deeper chain than fig6: ingest -> 3-wide map -> shuffle -> reduce
+    let root = Dcc::serial_with_rates(
+        vec![
+            Dcc::queue(),
+            Dcc::parallel((0..3).map(|_| Dcc::queue()).collect()),
+            Dcc::queue(),
+            Dcc::queue(),
+        ],
+        vec![Some(3.0), Some(3.0), Some(1.5), Some(1.0)],
+    );
+    let wf = Workflow::new(root, 3.0).unwrap();
+    let servers = Server::pool_exponential(&[12.0, 10.0, 8.0, 7.0, 6.0, 5.0]);
+    let cfg = CoordinatorConfig {
+        reopt_every: 0,
+        ..Default::default()
+    };
+    let mut coord = Coordinator::with_truthful_priors(servers, cfg);
+    let job = coord.submit("chain", wf);
+    let r = coord.run_job(&job, &poisson(1.5, 8_000, 9)).unwrap();
+    let served = coord.shutdown();
+    assert_eq!(r.metrics.completed, 8_000);
+    // every task touches all 6 slots
+    assert_eq!(served.iter().sum::<u64>(), 8_000 * 6);
+}
+
+#[test]
+fn optimal_policy_works_on_small_pools() {
+    let servers = Server::pool_exponential(&[8.0, 6.0, 5.0]);
+    let cfg = CoordinatorConfig {
+        policy: Policy::Optimal,
+        reopt_every: 0,
+        ..Default::default()
+    };
+    let mut coord = Coordinator::with_truthful_priors(servers, cfg);
+    let job = coord.submit("tandem", Workflow::tandem(3, 1.0));
+    let r = coord.run_job(&job, &poisson(1.0, 5_000, 3)).unwrap();
+    coord.shutdown();
+    assert_eq!(r.metrics.completed, 5_000);
+}
+
+#[test]
+fn overload_reported_as_error_not_hang() {
+    let servers = Server::pool_exponential(&[2.0, 2.0, 2.0, 2.0, 2.0, 2.0]);
+    let cfg = CoordinatorConfig::default();
+    let mut coord = Coordinator::with_truthful_priors(servers, cfg);
+    let job = coord.submit("fig6-overload", Workflow::fig6()); // λ=8 > capacity
+    let err = coord.run_job(&job, &poisson(8.0, 100, 1));
+    coord.shutdown();
+    assert!(err.is_err(), "overloaded job must be rejected");
+}
+
+#[test]
+fn monitors_converge_to_hidden_laws() {
+    let rates = [9.0, 4.0];
+    let specs: Vec<WorkerSpec> = rates
+        .iter()
+        .enumerate()
+        .map(|(i, &mu)| WorkerSpec::stable(i, ServiceDist::exponential(mu)))
+        .collect();
+    // deliberately WRONG priors
+    let priors = Server::pool_exponential(&[1.0, 1.0]);
+    let cfg = CoordinatorConfig {
+        reopt_every: 500,
+        reopt_on_drift_only: false, // refresh aggressively
+        min_fit_samples: 256,
+        ..Default::default()
+    };
+    let mut coord = Coordinator::new(specs, priors, cfg);
+    let job = coord.submit("fj", Workflow::forkjoin(2, 1.0));
+    let _ = coord.run_job(&job, &poisson(1.0, 6_000, 7)).unwrap();
+    // the believed pool must now be close to the hidden truth
+    for (i, &mu) in rates.iter().enumerate() {
+        let believed = coord.pool_view()[i].dist.mean();
+        let truth = 1.0 / mu;
+        assert!(
+            (believed - truth).abs() < 0.15 * truth,
+            "server {i}: believed mean {believed} vs truth {truth}"
+        );
+    }
+    coord.shutdown();
+}

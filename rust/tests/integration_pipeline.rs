@@ -1,0 +1,215 @@
+//! Cross-module integration: distributions → composition → scheduling →
+//! simulation must tell one consistent story.
+
+use dcflow::compose::grid::GridSpec;
+use dcflow::compose::score::score_allocation_with;
+use dcflow::dist::ServiceDist;
+use dcflow::flow::parse::{workflow_from_json, workflow_to_json};
+use dcflow::flow::{Dcc, Workflow};
+use dcflow::sched::server::Server;
+use dcflow::sched::{
+    baseline_allocate, optimal_allocate, proposed_allocate, schedule_rates, Allocation,
+    Objective, ResponseModel,
+};
+use dcflow::sim::network::{simulate, SimConfig};
+use dcflow::util::prop;
+use dcflow::util::rng::Rng;
+
+fn sim_cfg(seed: u64) -> SimConfig {
+    SimConfig {
+        n_tasks: 120_000,
+        warmup: 8_000,
+        seed,
+        queueing: true,
+    }
+}
+
+#[test]
+fn analytic_equals_sim_for_exponential_cluster() {
+    // all-exponential ⇒ M/M/1 analytics are exact; analytic engine and
+    // DES must agree on the full fig6 pipeline for every policy
+    let wf = Workflow::fig6();
+    let servers = Server::pool_exponential(&[9.0, 8.0, 7.0, 6.0, 5.0, 4.0]);
+    let model = ResponseModel::Mm1;
+    let (ours, _) = proposed_allocate(&wf, &servers, model, Objective::Mean).unwrap();
+    let base = baseline_allocate(&wf, &servers, model).unwrap();
+    let grid = GridSpec::auto_response(&ours, &servers, model);
+    for (name, alloc) in [("ours", &ours), ("baseline", &base)] {
+        let s = score_allocation_with(&wf, alloc, &servers, &grid, model);
+        let sim = simulate(&wf, alloc, &servers, &sim_cfg(31));
+        assert!(
+            (s.mean - sim.mean).abs() < 0.05 * sim.mean,
+            "{name}: analytic {} vs sim {}",
+            s.mean,
+            sim.mean
+        );
+        assert!(
+            (s.var - sim.var).abs() < 0.20 * sim.var,
+            "{name}: analytic var {} vs sim var {}",
+            s.var,
+            sim.var
+        );
+    }
+}
+
+#[test]
+fn policy_ordering_holds_in_simulation() {
+    // Table-2 ordering must hold not just analytically but in the DES
+    let wf = Workflow::fig6();
+    let servers = Server::pool_exponential(&[9.0, 8.0, 7.0, 6.0, 5.0, 4.0]);
+    let model = ResponseModel::Mm1;
+    let (ours, _) = proposed_allocate(&wf, &servers, model, Objective::Mean).unwrap();
+    let base = baseline_allocate(&wf, &servers, model).unwrap();
+    let grid = GridSpec::auto_response(&ours, &servers, model);
+    let (opt, _) = optimal_allocate(&wf, &servers, &grid, Objective::Mean, model).unwrap();
+
+    let s_ours = simulate(&wf, &ours, &servers, &sim_cfg(77)).mean;
+    let s_base = simulate(&wf, &base, &servers, &sim_cfg(77)).mean;
+    let s_opt = simulate(&wf, &opt, &servers, &sim_cfg(77)).mean;
+    assert!(s_opt <= s_ours * 1.02, "opt {s_opt} ours {s_ours}");
+    assert!(s_ours <= s_base * 1.02, "ours {s_ours} base {s_base}");
+}
+
+#[test]
+fn mg1_approximation_tracks_heavy_tail_sim() {
+    // delayed-pareto service: the P-K mean is exact, the in-family tail
+    // approximation is not — mean must track tightly, variance loosely
+    let wf = Workflow::tandem(2, 1.5);
+    let servers = vec![
+        Server::new(0, ServiceDist::delayed_pareto(4.0, 0.05)),
+        Server::new(1, ServiceDist::delayed_pareto(5.0, 0.02)),
+    ];
+    let model = ResponseModel::Mg1;
+    let assign = vec![0usize, 1];
+    let alloc = schedule_rates(&wf, assign, &servers, model).unwrap();
+    let grid = GridSpec::auto_response(&alloc, &servers, model);
+    let s = score_allocation_with(&wf, &alloc, &servers, &grid, model);
+    let sim = simulate(&wf, &alloc, &servers, &sim_cfg(13));
+    assert!(
+        (s.mean - sim.mean).abs() < 0.10 * sim.mean,
+        "analytic {} vs sim {}",
+        s.mean,
+        sim.mean
+    );
+}
+
+#[test]
+fn json_spec_to_simulation_end_to_end() {
+    // JSON spec → parse → allocate → simulate, all layers composing
+    let spec = r#"{
+        "arrival_rate": 3.0,
+        "root": {"type": "serial", "children": [
+            {"type": "parallel", "rate": 3.0,
+             "children": [{"type": "queue"}, {"type": "queue"}]},
+            {"type": "queue", "rate": 1.5}
+        ]}
+    }"#;
+    let wf = workflow_from_json(spec).unwrap();
+    let servers = Server::pool_exponential(&[8.0, 6.0, 5.0]);
+    let (alloc, score) =
+        proposed_allocate(&wf, &servers, ResponseModel::Mm1, Objective::Mean).unwrap();
+    let sim = simulate(&wf, &alloc, &servers, &sim_cfg(5));
+    assert!((score.mean - sim.mean).abs() < 0.08 * sim.mean);
+    // round-trip the spec too
+    let wf2 = workflow_from_json(&workflow_to_json(&wf)).unwrap();
+    assert_eq!(wf.root(), wf2.root());
+}
+
+#[test]
+fn random_workflows_analytic_vs_sim_property() {
+    // property: for random series-parallel exponential workflows, the
+    // analytic engine tracks the DES within MC tolerance
+    prop::run("analytic tracks sim on random workflows", 6, |g| {
+        let fan = g.usize_in(2, 3);
+        let wf = Workflow::new(
+            Dcc::serial(vec![
+                Dcc::parallel((0..fan).map(|_| Dcc::queue()).collect()),
+                Dcc::queue(),
+            ]),
+            g.f64_in(0.5, 1.5),
+        )
+        .unwrap();
+        let rates: Vec<f64> = (0..wf.slots()).map(|_| g.f64_in(4.0, 12.0)).collect();
+        let servers = Server::pool_exponential(&rates);
+        let model = ResponseModel::Mm1;
+        let Ok((alloc, score)) = proposed_allocate(&wf, &servers, model, Objective::Mean)
+        else {
+            return; // infeasible draw: fine
+        };
+        let cfg = SimConfig {
+            n_tasks: 60_000,
+            warmup: 5_000,
+            seed: g.seed,
+            queueing: true,
+        };
+        let sim = simulate(&wf, &alloc, &servers, &cfg);
+        assert!(
+            (score.mean - sim.mean).abs() < 0.08 * sim.mean + 0.01,
+            "analytic {} vs sim {} (wf {wf:?})",
+            score.mean,
+            sim.mean
+        );
+    });
+}
+
+#[test]
+fn monitored_refit_recovers_scoring_accuracy() {
+    // fit a pool from observations only, then check allocations made
+    // from the fitted pool score like the truth
+    let truth = Server::pool_exponential(&[9.0, 8.0, 7.0, 6.0, 5.0, 4.0]);
+    let mut rng = Rng::new(3);
+    let mut reg = dcflow::monitor::MonitorRegistry::new(6, 8192, 512);
+    for (sid, s) in truth.iter().enumerate() {
+        for _ in 0..6000 {
+            reg.observe(sid, s.dist.sample(&mut rng));
+        }
+    }
+    let mut believed = Server::pool_exponential(&[1.0; 6]); // wrong priors
+    assert_eq!(reg.refresh_pool(&mut believed), 6);
+
+    let wf = Workflow::fig6();
+    let model = ResponseModel::Mm1;
+    let (alloc_believed, _) =
+        proposed_allocate(&wf, &believed, model, Objective::Mean).unwrap();
+    let (alloc_truth, s_truth) =
+        proposed_allocate(&wf, &truth, model, Objective::Mean).unwrap();
+    // score the believed allocation against the TRUE laws
+    let grid = GridSpec::auto_response(&alloc_truth, &truth, model);
+    let s_believed = score_allocation_with(&wf, &alloc_believed, &truth, &grid, model);
+    assert!(
+        s_believed.mean <= s_truth.mean * 1.05,
+        "fitted-pool allocation {} vs truth-pool {}",
+        s_believed.mean,
+        s_truth.mean
+    );
+}
+
+#[test]
+fn surplus_servers_and_validation() {
+    let wf = Workflow::fig6();
+    let servers = Server::pool_exponential(&[9.0, 8.0, 7.0, 6.0, 5.0, 4.0, 3.0, 2.0]);
+    let (alloc, _) =
+        proposed_allocate(&wf, &servers, ResponseModel::Mm1, Objective::Mean).unwrap();
+    alloc.validate(&wf, servers.len()).unwrap();
+    // the two slowest surplus servers must be unused
+    let used: Vec<usize> = alloc.assigned_servers().collect();
+    assert!(!used.contains(&6) && !used.contains(&7), "slowest surplus used: {used:?}");
+}
+
+#[test]
+fn infeasible_load_is_rejected_everywhere() {
+    let wf = Workflow::tandem(2, 20.0);
+    let servers = Server::pool_exponential(&[3.0, 4.0]);
+    let model = ResponseModel::Mm1;
+    assert!(proposed_allocate(&wf, &servers, model, Objective::Mean).is_err());
+    assert!(baseline_allocate(&wf, &servers, model).is_err());
+    let grid = GridSpec::new(0.01, 512);
+    assert!(optimal_allocate(&wf, &servers, &grid, Objective::Mean, model).is_err());
+    // manual unstable allocation scores infinite rather than panicking
+    let alloc = Allocation {
+        slot_server: vec![0, 1],
+        slot_rate: vec![20.0, 20.0],
+    };
+    let s = score_allocation_with(&wf, &alloc, &servers, &grid, model);
+    assert!(!s.is_stable());
+}

@@ -1,0 +1,253 @@
+//! Runtime integration: AOT artifacts through PJRT vs the native engine.
+//!
+//! These tests exercise the real request path (rust → PJRT compiled
+//! executables, python nowhere in sight). They self-skip when
+//! `artifacts/` has not been built (`make artifacts`).
+
+use dcflow::compose::grid::GridSpec;
+use dcflow::compose::score::score_allocation_with;
+use dcflow::flow::Workflow;
+use dcflow::runtime::executable::ArtifactRegistry;
+use dcflow::runtime::scorer::{is_fig6_shape, BatchScorer};
+use dcflow::runtime::ScorerBackend;
+use dcflow::sched::server::Server;
+use dcflow::sched::{
+    baseline_allocate, proposed_allocate, schedule_rates, Allocation, Objective,
+    ResponseModel,
+};
+use dcflow::util::rng::Rng;
+use std::path::PathBuf;
+
+fn artifacts() -> Option<PathBuf> {
+    let p = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    p.join("manifest.json").exists().then_some(p)
+}
+
+#[test]
+fn registry_enumerates_manifest() {
+    let Some(dir) = artifacts() else {
+        eprintln!("SKIP: no artifacts");
+        return;
+    };
+    let reg = ArtifactRegistry::open(&dir).unwrap();
+    let names = reg.names();
+    for want in ["score_fig6", "conv_pair", "max_pair", "score_batch"] {
+        assert!(
+            names.iter().any(|n| n.starts_with(want)),
+            "missing artifact family {want}: {names:?}"
+        );
+    }
+}
+
+#[test]
+fn max_pair_artifact_matches_native() {
+    let Some(dir) = artifacts() else {
+        eprintln!("SKIP: no artifacts");
+        return;
+    };
+    let mut reg = ArtifactRegistry::open(&dir).unwrap();
+    let name = "max_pair_b8_g1024";
+    let Some(meta) = reg.meta(name).cloned() else {
+        eprintln!("SKIP: {name} absent");
+        return;
+    };
+    let (b, g) = (meta.inputs[0][0], meta.inputs[0][1]);
+    let dt = 0.01f32;
+    // cdfs of Exp(2+i), Exp(4+i)
+    let mut cf = vec![0f32; b * g];
+    let mut cg = vec![0f32; b * g];
+    for row in 0..b {
+        for k in 0..g {
+            let t = k as f32 * dt;
+            cf[row * g + k] = 1.0 - (-(2.0 + row as f32) * t).exp();
+            cg[row * g + k] = 1.0 - (-(4.0 + row as f32) * t).exp();
+        }
+    }
+    let outs = reg
+        .execute_f32(name, &[(&cf, &[b, g]), (&cg, &[b, g]), (&[dt], &[])])
+        .unwrap();
+    assert_eq!(outs.len(), 2); // (cdf, pdf)
+    for row in 0..b {
+        for k in (0..g).step_by(97) {
+            let want = cf[row * g + k] * cg[row * g + k];
+            let got = outs[0][row * g + k];
+            assert!((got - want).abs() < 1e-5, "row={row} k={k}");
+        }
+    }
+}
+
+#[test]
+fn batched_scorer_agrees_with_native_on_permutation_wave() {
+    let Some(_) = artifacts() else {
+        eprintln!("SKIP: no artifacts");
+        return;
+    };
+    let wf = Workflow::fig6();
+    assert!(is_fig6_shape(&wf));
+    let servers = Server::pool_exponential(&[9.0, 8.0, 7.0, 6.0, 5.0, 4.0]);
+    let model = ResponseModel::Mm1;
+
+    // a wave of 100 random rate-scheduled candidates (crosses one PJRT
+    // batch boundary: B=64)
+    let mut rng = Rng::new(99);
+    let mut waves: Vec<Allocation> = Vec::new();
+    while waves.len() < 100 {
+        let mut p: Vec<usize> = (0..6).collect();
+        rng.shuffle(&mut p);
+        if let Ok(a) = schedule_rates(&wf, p, &servers, model) {
+            waves.push(a);
+        }
+    }
+    let grid_probe = GridSpec::auto_response(&waves[0], &servers, model);
+
+    let mut xla = BatchScorer::open_auto();
+    if xla.backend() != ScorerBackend::Xla {
+        eprintln!("SKIP: xla backend unavailable");
+        return;
+    }
+    let grid = GridSpec {
+        dt: grid_probe.dt,
+        n: xla.grid_n,
+    };
+    let fast = xla.score_batch(&wf, &waves, &servers, &grid, model);
+    let mut native = BatchScorer::native();
+    let slow = native.score_batch(&wf, &waves, &servers, &grid, model);
+    assert_eq!(fast.len(), slow.len());
+    for (i, (f, n)) in fast.iter().zip(slow.iter()).enumerate() {
+        assert!(
+            (f.mean - n.mean).abs() < 3e-3 * (1.0 + n.mean),
+            "cand {i}: xla {f:?} native {n:?}"
+        );
+        assert!(
+            (f.var - n.var).abs() < 8e-3 * (1.0 + n.var),
+            "cand {i}: xla {f:?} native {n:?}"
+        );
+    }
+
+    // and the argmin (what the optimizer actually consumes) must agree
+    let arg_fast = fast
+        .iter()
+        .enumerate()
+        .min_by(|a, b| a.1.mean.partial_cmp(&b.1.mean).unwrap())
+        .unwrap()
+        .0;
+    let arg_slow = slow
+        .iter()
+        .enumerate()
+        .min_by(|a, b| a.1.mean.partial_cmp(&b.1.mean).unwrap())
+        .unwrap()
+        .0;
+    assert!(
+        (fast[arg_slow].mean - fast[arg_fast].mean).abs() < 1e-3,
+        "backend argmin mismatch: {arg_fast} vs {arg_slow}"
+    );
+}
+
+#[test]
+fn xla_scorer_handles_unstable_candidates() {
+    let Some(_) = artifacts() else {
+        eprintln!("SKIP: no artifacts");
+        return;
+    };
+    let wf = Workflow::fig6();
+    let servers = Server::pool_exponential(&[9.0, 8.0, 7.0, 6.0, 5.0, 4.0]);
+    let model = ResponseModel::Mm1;
+    let (good, _) = proposed_allocate(&wf, &servers, model, Objective::Mean).unwrap();
+    // force an unstable candidate: slot 2 (SDCC, λ=4) gets the μ=4 server
+    // at rate 4 -> rho = 1
+    let bad = Allocation {
+        slot_server: vec![0, 1, 5, 2, 3, 4],
+        slot_rate: vec![4.0, 4.0, 4.0, 4.0, 1.0, 1.0],
+    };
+    let mut xla = BatchScorer::open_auto();
+    if xla.backend() != ScorerBackend::Xla {
+        eprintln!("SKIP: xla backend unavailable");
+        return;
+    }
+    let grid = GridSpec {
+        dt: GridSpec::auto_response(&good, &servers, model).dt,
+        n: xla.grid_n,
+    };
+    let out = xla.score_batch(&wf, &[good, bad], &servers, &grid, model);
+    assert!(out[0].mean.is_finite());
+    assert!(out[1].mean.is_infinite(), "unstable candidate must be INF");
+}
+
+#[test]
+fn native_fallback_on_non_fig6_topologies() {
+    let wf = Workflow::tandem(3, 1.0);
+    let servers = Server::pool_exponential(&[6.0, 5.0, 4.0]);
+    let model = ResponseModel::Mm1;
+    let (alloc, _) = proposed_allocate(&wf, &servers, model, Objective::Mean).unwrap();
+    let grid = GridSpec::auto_response(&alloc, &servers, model);
+    let mut scorer = BatchScorer::open_auto(); // xla if available
+    let t = scorer.score_batch(&wf, &[alloc.clone()], &servers, &grid, model);
+    let direct = score_allocation_with(&wf, &alloc, &servers, &grid, model);
+    assert!((t[0].mean - direct.mean).abs() < 1e-9, "non-fig6 must use native path");
+    // baseline comparators flow through too
+    let _ = baseline_allocate(&wf, &servers, model);
+}
+
+#[test]
+fn parametric_mmde_path_matches_native() {
+    // the fully-fused parametric artifact must agree with the native
+    // engine (all-exponential pool -> every M/M/1 response law is a
+    // 1-mode atomless delayed-exp mixture, so the mmde path activates)
+    let Some(_) = artifacts() else {
+        eprintln!("SKIP: no artifacts");
+        return;
+    };
+    let wf = Workflow::fig6();
+    let servers = Server::pool_exponential(&[9.0, 8.0, 7.0, 6.0, 5.0, 4.0]);
+    let model = ResponseModel::Mm1;
+    let mut rng = Rng::new(4242);
+    let mut waves: Vec<Allocation> = Vec::new();
+    while waves.len() < 16 {
+        let mut p: Vec<usize> = (0..6).collect();
+        rng.shuffle(&mut p);
+        if let Ok(a) = schedule_rates(&wf, p, &servers, model) {
+            waves.push(a);
+        }
+    }
+    let probe = GridSpec::auto_response(&waves[0], &servers, model);
+    let mut xla = BatchScorer::open_auto();
+    if xla.backend() != ScorerBackend::Xla {
+        eprintln!("SKIP: xla backend unavailable");
+        return;
+    }
+    let grid = GridSpec { dt: probe.dt, n: xla.grid_n };
+    let fast = xla.score_batch(&wf, &waves, &servers, &grid, model);
+    let mut native = BatchScorer::native();
+    let slow = native.score_batch(&wf, &waves, &servers, &grid, model);
+    for (i, (f, n)) in fast.iter().zip(slow.iter()).enumerate() {
+        assert!(
+            (f.mean - n.mean).abs() < 3e-3 * (1.0 + n.mean),
+            "cand {i}: mmde {f:?} native {n:?}"
+        );
+        assert!(
+            (f.var - n.var).abs() < 8e-3 * (1.0 + n.var),
+            "cand {i}: mmde {f:?} native {n:?}"
+        );
+    }
+}
+
+#[test]
+fn mmde_param_extraction_rules() {
+    use dcflow::dist::ServiceDist;
+    use dcflow::runtime::scorer::mmde_params;
+    // plain exponential: 1 mode
+    let p = mmde_params(&ServiceDist::exponential(3.0), 4).unwrap();
+    assert_eq!(p.len(), 1);
+    assert!((p[0][1] - 3.0).abs() < 1e-6);
+    // delayed exp: representable
+    assert!(mmde_params(&ServiceDist::delayed_exponential(2.0, 0.5), 4).is_some());
+    // straggler mixture: 2 modes, representable
+    assert_eq!(
+        mmde_params(&ServiceDist::straggler(8.0, 0.5, 0.1, 0.0), 4)
+            .unwrap()
+            .len(),
+        2
+    );
+    // pareto: not representable on the device path
+    assert!(mmde_params(&ServiceDist::delayed_pareto(3.0, 0.1), 4).is_none());
+}
