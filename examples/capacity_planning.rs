@@ -7,13 +7,11 @@
 //! ```
 
 use dcflow::flow::dag::FlowDag;
-use dcflow::flow::Workflow;
+use dcflow::prelude::*;
 use dcflow::sched::capacity::{
     max_throughput, max_throughput_under_sla, required_speedup, Sla,
 };
-use dcflow::sched::multijob::{cluster_objective, multijob_allocate};
-use dcflow::sched::server::Server;
-use dcflow::sched::{Objective, ResponseModel};
+use dcflow::sched::multijob::cluster_objective;
 
 fn main() {
     let model = ResponseModel::Mm1;
@@ -59,7 +57,11 @@ fn main() {
     let light = Workflow::tandem(3, 1.5);
     let jobs = [&heavy, &light];
     let cluster = Server::pool_exponential(&[14.0, 12.0, 10.0, 9.0, 8.0, 7.0, 6.0, 5.0, 4.0]);
-    let plans = multijob_allocate(&jobs, &cluster, model, Objective::Mean).expect("fits");
+    let plans = Planner::new(&heavy, &cluster)
+        .model(model)
+        .objective(Objective::Mean)
+        .plan_jobs(&jobs)
+        .expect("fits");
     println!("\nmulti-job partition over a 9-server cluster:");
     for p in &plans {
         println!(

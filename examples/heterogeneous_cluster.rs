@@ -3,22 +3,14 @@
 //! Sweeps (a) load and (b) service-law heterogeneity on the Fig. 6
 //! workflow and prints the mean/variance of all four policies, exposing
 //! the crossover structure the paper's Table 2 summarizes with three
-//! scenarios. Also demonstrates JSON workflow specs end to end.
+//! scenarios. Also demonstrates JSON workflow specs end to end — all of
+//! it through the `Planner` builder.
 //!
 //! ```bash
 //! cargo run --release --example heterogeneous_cluster
 //! ```
 
-use dcflow::compose::grid::GridSpec;
-use dcflow::compose::score::score_allocation_with;
-use dcflow::dist::{Mode, ServiceDist, TailKind};
-use dcflow::flow::parse::workflow_from_json;
-use dcflow::flow::{Dcc, Workflow};
-use dcflow::sched::server::Server;
-use dcflow::sched::{
-    baseline_allocate, baseline_allocate_split, optimal_allocate, proposed_allocate,
-    Allocation, Objective, ResponseModel, SchedError, SplitPolicy,
-};
+use dcflow::prelude::*;
 
 fn fig6_scaled(k: f64) -> Workflow {
     let root = Dcc::serial_with_rates(
@@ -32,51 +24,33 @@ fn fig6_scaled(k: f64) -> Workflow {
     Workflow::new(root, 8.0 * k).expect("valid")
 }
 
-fn score(
-    wf: &Workflow,
-    servers: &[Server],
-    grid: &GridSpec,
-    model: ResponseModel,
-    r: Result<Allocation, SchedError>,
-) -> (f64, f64) {
-    match r {
-        Ok(a) => {
-            let s = score_allocation_with(wf, &a, servers, grid, model);
-            (s.mean, s.var)
-        }
-        Err(_) => (f64::INFINITY, f64::INFINITY),
-    }
-}
-
 fn sweep(servers: &[Server], model: ResponseModel, label: &str) {
     println!("\n--- {label} ---");
     println!(
         "{:>5} | {:>9} {:>9} {:>9} {:>9} | {:>9} {:>9}",
         "load", "proposed", "baseline", "fair-base", "optimal", "var:prop", "var:base"
     );
+    let fair = BaselinePolicy {
+        split: SplitPolicy::Equilibrium,
+    };
     for k in [0.6, 0.9, 1.0, 1.1, 1.2, 1.35, 1.5] {
         let wf = fig6_scaled(k);
-        let ours = proposed_allocate(&wf, servers, model, Objective::Mean);
-        let grid = match &ours {
-            Ok((a, _)) => GridSpec::auto_response(a, servers, model),
-            Err(_) => GridSpec::auto_pool(&wf, servers),
+        // every policy on one common grid, straight off the builder
+        let results = Planner::new(&wf, servers).model(model).compare(&[
+            &ProposedPolicy::default(),
+            &BaselinePolicy::default(),
+            &fair,
+            &OptimalPolicy,
+        ]);
+        let mv = |r: &Result<Plan, SchedError>| -> (f64, f64) {
+            r.as_ref()
+                .map(|p| (p.score.mean, p.score.var))
+                .unwrap_or((f64::INFINITY, f64::INFINITY))
         };
-        let (pm, pv) = match ours {
-            Ok((a, _)) => score(&wf, servers, &grid, model, Ok(a)),
-            Err(e) => score(&wf, servers, &grid, model, Err(e)),
-        };
-        let (bm, bv) = score(&wf, servers, &grid, model, baseline_allocate(&wf, servers, model));
-        let (fm, _) = score(
-            &wf,
-            servers,
-            &grid,
-            model,
-            baseline_allocate_split(&wf, servers, model, SplitPolicy::Equilibrium),
-        );
-        let (om, _) = match optimal_allocate(&wf, servers, &grid, Objective::Mean, model) {
-            Ok((_, s)) => (s.mean, s.var),
-            Err(_) => (f64::INFINITY, f64::INFINITY),
-        };
+        let (pm, pv) = mv(&results[0]);
+        let (bm, bv) = mv(&results[1]);
+        let (fm, _) = mv(&results[2]);
+        let (om, _) = mv(&results[3]);
         println!(
             "{:>5.2} | {:>9.3} {:>9.3} {:>9.3} {:>9.3} | {:>9.3} {:>9.3}",
             k, pm, bm, fm, om, pv, bv
@@ -118,7 +92,7 @@ fn main() {
     ];
     sweep(&mixed, ResponseModel::Mg1, "scenario C: mixed Table-1 laws (M/G/1 model)");
 
-    // JSON spec round-trip demo
+    // JSON spec straight into the planner
     let spec = r#"{
         "arrival_rate": 4.0,
         "root": {"type": "serial", "children": [
@@ -127,15 +101,17 @@ fn main() {
             {"type": "queue", "rate": 2.0}
         ]}
     }"#;
-    let wf = workflow_from_json(spec).expect("valid spec");
+    let wf = Workflow::from_json(spec).expect("valid spec");
     let pool = Server::pool_exponential(&[10.0, 7.0, 5.0, 4.0]);
-    let (alloc, s) =
-        proposed_allocate(&wf, &pool, model, Objective::Mean).expect("feasible");
+    let plan = Planner::new(&wf, &pool)
+        .model(model)
+        .plan(&ProposedPolicy::default())
+        .expect("feasible");
     println!(
         "\nJSON workflow ({} slots): proposed mean={:.4} var={:.4}; slots -> servers {:?}",
         wf.slots(),
-        s.mean,
-        s.var,
-        alloc.slot_server
+        plan.score.mean,
+        plan.score.var,
+        plan.allocation.slot_server
     );
 }

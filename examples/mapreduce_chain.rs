@@ -15,9 +15,7 @@
 //! ```
 
 use dcflow::coordinator::{Coordinator, CoordinatorConfig, Policy, WorkerSpec};
-use dcflow::dist::ServiceDist;
-use dcflow::flow::{Dcc, Workflow};
-use dcflow::sched::server::Server;
+use dcflow::prelude::*;
 use dcflow::sim::trace::{ArrivalProcess, Trace};
 use dcflow::util::rng::Rng;
 

@@ -1,14 +1,11 @@
-//! Quickstart: allocate, score and simulate the paper's Fig. 6 workflow.
+//! Quickstart: plan, score and simulate the paper's Fig. 6 workflow
+//! through the unified `Planner` surface.
 //!
 //! ```bash
 //! cargo run --release --example quickstart
 //! ```
 
-use dcflow::compose::grid::GridSpec;
-use dcflow::compose::score::score_allocation_with;
 use dcflow::prelude::*;
-use dcflow::sched::{baseline_allocate_split, proposed_allocate, ResponseModel, SplitPolicy};
-use dcflow::sim::network::{simulate, SimConfig};
 
 fn main() {
     // Six heterogeneous servers: exponential service, rates 9..4
@@ -17,48 +14,55 @@ fn main() {
 
     // The paper's Fig. 6 workflow: PDCC ; SDCC ; PDCC with DAP rates 8/4/2.
     let wf = Workflow::fig6();
-    let model = ResponseModel::Mm1;
+
+    // One builder holds the whole request configuration.
+    let planner = Planner::new(&wf, &servers)
+        .model(ResponseModel::Mm1)
+        .objective(Objective::Mean);
 
     // --- the paper's scheme: Alg. 1/2 seed + §3 balancing ------------
-    let (ours, ours_score) =
-        proposed_allocate(&wf, &servers, model, Objective::Mean).expect("feasible");
-    let grid = GridSpec::auto_response(&ours, &servers, model);
+    let ours = planner
+        .plan(&ProposedPolicy::default())
+        .expect("fig6 is feasible");
 
     println!("proposed allocation (slot -> server rate):");
     for slot in 0..wf.slots() {
         println!(
             "  slot {slot}: server {} (mu = {:.1}, lambda = {:.3})",
-            ours.server_for(slot),
-            servers[ours.server_for(slot)].service_rate(),
-            ours.rate_for(slot),
+            ours.allocation.server_for(slot),
+            servers[ours.allocation.server_for(slot)].service_rate(),
+            ours.allocation.rate_for(slot),
         );
     }
     println!(
         "analytic score: mean={:.4} var={:.4} p99={:.4}",
-        ours_score.mean, ours_score.var, ours_score.p99
+        ours.score.mean, ours.score.var, ours.score.p99
     );
 
-    // --- comparators ---------------------------------------------------
-    println!("\n{:<16} {:>9} {:>9} {:>9}", "policy", "mean", "var", "p99");
-    let mut row = |name: &str, alloc: &Allocation| {
-        let s = score_allocation_with(&wf, alloc, &servers, &grid, model);
-        println!("{name:<16} {:>9.4} {:>9.4} {:>9.4}", s.mean, s.var, s.p99);
+    // --- comparators: every policy scored on one common grid ----------
+    let fair = BaselinePolicy {
+        split: SplitPolicy::Equilibrium,
     };
-    row("proposed", &ours);
-    if let Ok(b) = baseline_allocate(&wf, &servers, model) {
-        row("baseline", &b);
-    }
-    if let Ok(b) = baseline_allocate_split(&wf, &servers, model, SplitPolicy::Equilibrium) {
-        row("fair-baseline", &b);
-    }
-    if let Ok((o, _)) = optimal_allocate(&wf, &servers, &grid, Objective::Mean, model) {
-        row("optimal", &o);
+    println!("\n{:<16} {:>9} {:>9} {:>9}", "policy", "mean", "var", "p99");
+    for result in planner.compare(&[
+        &ProposedPolicy::default(),
+        &BaselinePolicy::default(),
+        &fair,
+        &OptimalPolicy,
+    ]) {
+        match result {
+            Ok(plan) => println!(
+                "{:<16} {:>9.4} {:>9.4} {:>9.4}",
+                plan.policy_name, plan.score.mean, plan.score.var, plan.score.p99
+            ),
+            Err(e) => println!("{e}"),
+        }
     }
 
     // --- Monte-Carlo cross-check ----------------------------------------
     let sim = simulate(
         &wf,
-        &ours,
+        &ours.allocation,
         &servers,
         &SimConfig {
             n_tasks: 200_000,
@@ -73,6 +77,6 @@ fn main() {
     );
     println!(
         "analytic vs sim mean gap: {:+.2}%",
-        100.0 * (ours_score.mean - sim.mean) / sim.mean
+        100.0 * (ours.score.mean - sim.mean) / sim.mean
     );
 }

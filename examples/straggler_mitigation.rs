@@ -7,13 +7,12 @@
 //! cargo run --release --example straggler_mitigation
 //! ```
 
-use dcflow::compose::grid::GridSpec;
 use dcflow::compose::maxcomp::{cloning_compose, parallel_compose};
 use dcflow::compose::moments::moments;
 use dcflow::dist::fit::{fit_multimodal_exp, select_family, Family};
-use dcflow::dist::ServiceDist;
 use dcflow::monitor::drift::detect_drift;
 use dcflow::monitor::ServerMonitor;
+use dcflow::prelude::*;
 use dcflow::util::rng::Rng;
 
 fn main() {
@@ -51,7 +50,7 @@ fn main() {
     for _ in 0..4_096 {
         monitor.observe(truth.sample(&mut rng));
     }
-    let (family, fitted, ks) = select_family(&monitor.window_samples()).into();
+    let (family, fitted, ks) = select_family(&monitor.window_samples());
     println!(
         "\nre-fit: family={:?} ks={:.4} fitted mean={:.4} (true {:.4})",
         family,

@@ -8,17 +8,10 @@
 //!
 //! Writes bench_out/ablations.csv.
 
-use dcflow::compose::grid::GridSpec;
-use dcflow::compose::score::score_allocation_with;
 use dcflow::dist::fit::fit_delayed_exponential;
-use dcflow::dist::ServiceDist;
-use dcflow::flow::Workflow;
 use dcflow::monitor::ServerMonitor;
-use dcflow::sched::server::Server;
-use dcflow::sched::{
-    baseline_allocate_split, proposed_allocate, refine, schedule_rates, Objective,
-    ResponseModel, SplitPolicy,
-};
+use dcflow::prelude::*;
+use dcflow::sched::{baseline_allocate_split, refine, schedule_rates};
 use dcflow::util::bench::{bench, fmt_time, Csv};
 use dcflow::util::rng::Rng;
 
@@ -26,11 +19,17 @@ fn main() {
     let wf = Workflow::fig6();
     let servers = Server::pool_exponential(&[9.0, 8.0, 7.0, 6.0, 5.0, 4.0]);
     let model = ResponseModel::Mm1;
+    let planner = Planner::new(&wf, &servers)
+        .model(model)
+        .objective(Objective::Mean);
     let mut csv = Csv::new("ablations", "ablation,setting,mean,var,extra");
 
     // ---- A1: equilibrium vs uniform rate split --------------------------
     println!("== A1: rate scheduling (same placement, fig6) ==");
-    let (alloc, _) = proposed_allocate(&wf, &servers, model, Objective::Mean).unwrap();
+    let alloc = planner
+        .plan(&ProposedPolicy::default())
+        .unwrap()
+        .allocation;
     let grid = GridSpec::auto_response(&alloc, &servers, model);
     let eq = score_allocation_with(&wf, &alloc, &servers, &grid, model);
     // same server placement, uniform splits
@@ -68,18 +67,17 @@ fn main() {
         worst_raw = worst_raw.max(raw.mean);
         worst_refined = worst_refined.max(ref_s.mean);
     }
-    let (seeded, seeded_s) = proposed_allocate(&wf, &servers, model, Objective::Mean).unwrap();
-    let _ = seeded;
+    let seeded = planner.plan(&ProposedPolicy::default()).unwrap();
     println!("worst random raw     mean: {worst_raw:.4}");
     println!("worst random refined mean: {worst_refined:.4}");
-    println!("Alg.1/2 + refine     mean: {:.4}", seeded_s.mean);
+    println!("Alg.1/2 + refine     mean: {:.4}", seeded.score.mean);
     assert!(
-        worst_refined <= seeded_s.mean * 1.10,
+        worst_refined <= seeded.score.mean * 1.10,
         "refinement should rescue random seeds to within 10%"
     );
     csv.row(&["A2".into(), "random_raw_worst".into(), format!("{worst_raw:.6}"), String::new(), String::new()]);
     csv.row(&["A2".into(), "random_refined_worst".into(), format!("{worst_refined:.6}"), String::new(), String::new()]);
-    csv.row(&["A2".into(), "alg12_refined".into(), format!("{:.6}", seeded_s.mean), String::new(), String::new()]);
+    csv.row(&["A2".into(), "alg12_refined".into(), format!("{:.6}", seeded.score.mean), String::new(), String::new()]);
 
     // ---- A3: grid resolution ---------------------------------------------
     println!("\n== A3: grid resolution (score error vs G, fig6) ==");

@@ -1,6 +1,7 @@
 //! FIG7 + TAB2 — the paper's evaluation: response-time distribution of
 //! baseline vs ours vs optimal on the Fig. 6 workflow (Fig. 7a/7b), and
-//! the three-scenario mean/variance table (Table 2).
+//! the three-scenario mean/variance table (Table 2), all driven through
+//! `Planner::compare` (one common grid per scenario).
 //!
 //! Paper parameters: λ_DAP = 8/4/2, six servers with service rates
 //! 9,8,7,6,5,4. Scenario laws (Table 2 leaves their parameters open; we
@@ -11,17 +12,8 @@
 //! Every scheme is scored analytically AND validated by DES on the same
 //! allocation. Writes bench_out/fig7_curves.csv and bench_out/table2.csv.
 
-use dcflow::compose::grid::GridSpec;
 use dcflow::compose::moments::cdf_from_pdf;
-use dcflow::compose::score::{score_allocation_with, Score};
-use dcflow::dist::{Mode, ServiceDist, TailKind};
-use dcflow::flow::{Dcc, Workflow};
-use dcflow::sched::server::Server;
-use dcflow::sched::{
-    baseline_allocate, optimal_allocate, proposed_allocate, Allocation, Objective,
-    ResponseModel,
-};
-use dcflow::sim::network::{simulate, SimConfig};
+use dcflow::prelude::*;
 use dcflow::util::bench::Csv;
 
 /// Delayed exponential with total mean 1/mu, delay = frac of the mean.
@@ -89,24 +81,16 @@ fn scenario(id: usize) -> (String, Vec<Server>, ResponseModel) {
 }
 
 struct Row {
-    scheme: &'static str,
+    scheme: String,
     analytic: Score,
     sim_mean: f64,
     sim_var: f64,
 }
 
-fn eval(
-    wf: &Workflow,
-    alloc: &Allocation,
-    servers: &[Server],
-    grid: &GridSpec,
-    model: ResponseModel,
-    scheme: &'static str,
-) -> Row {
-    let analytic = score_allocation_with(wf, alloc, servers, grid, model);
+fn eval(wf: &Workflow, servers: &[Server], plan: &Plan) -> Row {
     let sim = simulate(
         wf,
-        alloc,
+        &plan.allocation,
         servers,
         &SimConfig {
             n_tasks: 150_000,
@@ -116,8 +100,8 @@ fn eval(
         },
     );
     Row {
-        scheme,
-        analytic,
+        scheme: plan.policy_name.clone(),
+        analytic: plan.score.clone(),
         sim_mean: sim.mean,
         sim_var: sim.var,
     }
@@ -125,7 +109,7 @@ fn eval(
 
 /// Fig. 6 with all DAP rates scaled by k (the paper does not pin the
 /// utilization its Table-2 scenarios ran at; we report k = 1.0 — the
-/// literal reading — and k = 1.3, where the baseline's homogeneity
+/// literal reading — and k = 1.4, where the baseline's homogeneity
 /// assumption starts to really hurt; see EXPERIMENTS.md).
 fn fig6_scaled(k: f64) -> Workflow {
     let root = Dcc::serial_with_rates(
@@ -139,6 +123,17 @@ fn fig6_scaled(k: f64) -> Workflow {
     Workflow::new(root, 8.0 * k).expect("valid")
 }
 
+/// ours / optimal / baseline on one common grid via the planner.
+fn bakeoff(wf: &Workflow, servers: &[Server], model: ResponseModel) -> Vec<Plan> {
+    Planner::new(wf, servers)
+        .model(model)
+        .objective(Objective::Mean)
+        .compare(&[&ProposedPolicy::default(), &OptimalPolicy, &BaselinePolicy::default()])
+        .into_iter()
+        .collect::<Result<_, _>>()
+        .expect("fig6 scenarios are feasible")
+}
+
 fn main() {
     let mut table = Csv::new(
         "table2",
@@ -149,18 +144,8 @@ fn main() {
         let wf = fig6_scaled(load);
         let (name, servers, model) = scenario(sid);
         println!("\n== TAB2 {name} @ load x{load} ==");
-        let (ours_alloc, _) =
-            proposed_allocate(&wf, &servers, model, Objective::Mean).expect("feasible");
-        let grid = GridSpec::auto_response(&ours_alloc, &servers, model);
-        let base_alloc = baseline_allocate(&wf, &servers, model).expect("feasible");
-        let (opt_alloc, _) =
-            optimal_allocate(&wf, &servers, &grid, Objective::Mean, model).expect("feasible");
-
-        let rows = [
-            eval(&wf, &ours_alloc, &servers, &grid, model, "ours"),
-            eval(&wf, &opt_alloc, &servers, &grid, model, "optimal"),
-            eval(&wf, &base_alloc, &servers, &grid, model, "baseline"),
-        ];
+        let plans = bakeoff(&wf, &servers, model);
+        let rows: Vec<Row> = plans.iter().map(|p| eval(&wf, &servers, p)).collect();
 
         println!(
             "{:<10} {:>9} {:>9} {:>9} {:>10} {:>10}",
@@ -177,7 +162,7 @@ fn main() {
             table.row(&[
                 name.clone(),
                 format!("{load}"),
-                r.scheme.to_string(),
+                r.scheme.clone(),
                 format!("{:.6}", r.analytic.mean),
                 format!("{:.6}", r.analytic.var),
                 format!("{:.6}", r.analytic.p99),
@@ -206,16 +191,9 @@ fn main() {
     println!("\n== FIG7 curves (scenario S1) ==");
     let wf = Workflow::fig6();
     let (_, servers, model) = scenario(1);
-    let (ours_alloc, _) =
-        proposed_allocate(&wf, &servers, model, Objective::Mean).expect("feasible");
-    let grid = GridSpec::auto_response(&ours_alloc, &servers, model);
-    let base_alloc = baseline_allocate(&wf, &servers, model).expect("feasible");
-    let (opt_alloc, _) =
-        optimal_allocate(&wf, &servers, &grid, Objective::Mean, model).expect("feasible");
-
-    let ours = score_allocation_with(&wf, &ours_alloc, &servers, &grid, model);
-    let opt = score_allocation_with(&wf, &opt_alloc, &servers, &grid, model);
-    let base = score_allocation_with(&wf, &base_alloc, &servers, &grid, model);
+    let plans = bakeoff(&wf, &servers, model);
+    let grid = plans[0].diagnostics.grid;
+    let (ours, opt, base) = (&plans[0].score, &plans[1].score, &plans[2].score);
     let (oc, pc, bc) = (
         cdf_from_pdf(&ours.pdf, grid.dt),
         cdf_from_pdf(&opt.pdf, grid.dt),

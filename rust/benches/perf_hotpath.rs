@@ -174,26 +174,28 @@ fn main() {
         ]);
     }
 
-    // --- end-to-end optimizer sweep ---------------------------------------
-    use dcflow::sched::{optimal_allocate, proposed_allocate, Objective};
-    let t_prop = bench(1, 5, || {
-        proposed_allocate(&wf, &servers, model, Objective::Mean).unwrap()
-    });
+    // --- end-to-end optimizer sweep (planner surface) ---------------------
+    use dcflow::plan::{OptimalPolicy, Planner, ProposedPolicy};
+    use dcflow::sched::Objective;
+    let planner = Planner::new(&wf, &servers)
+        .model(model)
+        .objective(Objective::Mean);
+    let t_prop = bench(1, 5, || planner.plan(&ProposedPolicy::default()).unwrap());
     let t_opt = bench(1, 3, || {
-        optimal_allocate(&wf, &servers, &grid, Objective::Mean, model).unwrap()
+        planner.grid(grid).plan(&OptimalPolicy).unwrap()
     });
     println!(
-        "\nproposed_allocate (fig6)  : {}\noptimal_allocate  (720)   : {}",
+        "\nplan(proposed) (fig6)     : {}\nplan(optimal)  (720)      : {}",
         fmt_time(t_prop.mean_s),
         fmt_time(t_opt.mean_s)
     );
     csv.row(&[
-        "proposed_allocate_ms".into(),
+        "plan_proposed_ms".into(),
         format!("{:.3}", t_prop.ns() / 1e6),
         "ms".into(),
     ]);
     csv.row(&[
-        "optimal_allocate_ms".into(),
+        "plan_optimal_ms".into(),
         format!("{:.3}", t_opt.ns() / 1e6),
         "ms".into(),
     ]);

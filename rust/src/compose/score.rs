@@ -33,6 +33,20 @@ pub struct Score {
 }
 
 impl Score {
+    /// A bare score triple with no attached PDF (full captured mass).
+    /// Use this instead of building the struct by hand — tests and
+    /// adapters that only carry (mean, var, p99) should not care about
+    /// the grid bookkeeping fields.
+    pub fn point(mean: f64, var: f64, p99: f64) -> Score {
+        Score {
+            mean,
+            var,
+            p99,
+            mass: 1.0,
+            pdf: Vec::new(),
+        }
+    }
+
     /// Sentinel for unstable allocations (some queue diverges).
     pub fn unstable(grid: &GridSpec) -> Score {
         Score {
@@ -134,7 +148,7 @@ fn compose_node(
 mod tests {
     use super::*;
     use crate::compose::analytic;
-    use crate::sched::sdcc_allocate;
+    use crate::sched::allocate_with;
 
     fn fig6_setup() -> (Workflow, Vec<Server>) {
         (
@@ -146,7 +160,7 @@ mod tests {
     #[test]
     fn fig6_paper_scheme_scores_finite() {
         let (wf, servers) = fig6_setup();
-        let alloc = sdcc_allocate(&wf, &servers).unwrap();
+        let alloc = allocate_with(&wf, &servers, ResponseModel::Mm1).unwrap();
         let grid = GridSpec::auto(&alloc, &servers);
         let s = score_allocation(&wf, &alloc, &servers, &grid);
         assert!(s.is_stable());

@@ -19,15 +19,12 @@
 //! scheduler calls are CPU-bound and short; no async runtime exists in
 //! the vendored crate set, and none is needed at this request scale).
 
-use crate::compose::grid::GridSpec;
-use crate::compose::score::score_allocation_with;
 use crate::flow::parse::workflow_from_json;
 use crate::flow::Workflow;
+use crate::plan::{BaselinePolicy, Planner, ProposedPolicy};
 use crate::sched::capacity::{max_throughput, max_throughput_under_sla, Sla};
 use crate::sched::server::Server;
-use crate::sched::{
-    baseline_allocate, proposed_allocate, Objective, ResponseModel,
-};
+use crate::sched::ResponseModel;
 use crate::util::json::Json;
 use std::collections::BTreeMap;
 use std::io::{BufRead, BufReader, Write};
@@ -205,17 +202,27 @@ fn cmd_score(req: &Json) -> Result<Json, String> {
     let wf = parse_workflow(req)?;
     let servers = parse_pool(req)?;
     let model = parse_model(req)?;
-    let (ours, s_ours) = proposed_allocate(&wf, &servers, model, Objective::Mean)
+    let planner = Planner::new(&wf, &servers).model(model);
+    let mut results = planner
+        .compare(&[&ProposedPolicy::default(), &BaselinePolicy::default()])
+        .into_iter();
+    // the documented response shape requires "proposed"; it failing is
+    // a request-level error (as it was pre-Planner). "baseline" stays
+    // best-effort.
+    let proposed = results
+        .next()
+        .expect("two policies submitted")
         .map_err(|e| e.to_string())?;
-    let grid = GridSpec::auto_response(&ours, &servers, model);
     let mut policies = BTreeMap::new();
     policies.insert(
-        "proposed".into(),
-        score_obj(s_ours.mean, s_ours.var, s_ours.p99),
+        proposed.policy_name,
+        score_obj(proposed.score.mean, proposed.score.var, proposed.score.p99),
     );
-    if let Ok(b) = baseline_allocate(&wf, &servers, model) {
-        let s = score_allocation_with(&wf, &b, &servers, &grid, model);
-        policies.insert("baseline".into(), score_obj(s.mean, s.var, s.p99));
+    if let Some(Ok(plan)) = results.next() {
+        policies.insert(
+            plan.policy_name,
+            score_obj(plan.score.mean, plan.score.var, plan.score.p99),
+        );
     }
     let mut m = BTreeMap::new();
     m.insert("ok".into(), Json::Bool(true));
@@ -227,8 +234,11 @@ fn cmd_allocate(req: &Json) -> Result<Json, String> {
     let wf = parse_workflow(req)?;
     let servers = parse_pool(req)?;
     let model = parse_model(req)?;
-    let (alloc, score) = proposed_allocate(&wf, &servers, model, Objective::Mean)
+    let plan = Planner::new(&wf, &servers)
+        .model(model)
+        .plan(&ProposedPolicy::default())
         .map_err(|e| e.to_string())?;
+    let (alloc, score) = (plan.allocation, plan.score);
     let mut m = BTreeMap::new();
     m.insert("ok".into(), Json::Bool(true));
     m.insert(

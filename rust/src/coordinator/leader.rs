@@ -17,11 +17,11 @@ use crate::coordinator::config::{CoordinatorConfig, Policy};
 use crate::coordinator::job::{Completion, Job, Task};
 use crate::coordinator::metrics::Metrics;
 use crate::coordinator::worker::{WorkerHandle, WorkerSpec};
-use crate::compose::grid::GridSpec;
 use crate::flow::Dcc;
 use crate::monitor::MonitorRegistry;
-use crate::sched::{baseline_allocate, optimal_allocate, proposed_allocate, Allocation, SchedError};
+use crate::plan::{BaselinePolicy, OptimalPolicy, Planner, ProposedPolicy};
 use crate::sched::server::Server;
+use crate::sched::{Allocation, SchedError};
 use crate::sim::trace::Trace;
 
 /// Outcome of a coordinator run.
@@ -99,28 +99,20 @@ impl Coordinator {
     }
 
     fn allocate(&self, job: &Job) -> Result<Allocation, SchedError> {
+        // the dispatch loop only needs the assignment, so use the
+        // planner's unscored path. NOTE: the optimal policy now searches
+        // on the planner's default seed-derived *response* grid rather
+        // than the old service-law auto_pool grid — a longer horizon
+        // that captures queueing tails the old grid truncated, so its
+        // shortlist ranking (and occasionally its winner) can differ
+        // from the pre-Planner coordinator.
+        let planner = Planner::new(&job.workflow, &self.pool_view)
+            .model(self.cfg.model)
+            .objective(self.cfg.objective);
         match self.cfg.policy {
-            Policy::Proposed => proposed_allocate(
-                &job.workflow,
-                &self.pool_view,
-                self.cfg.model,
-                self.cfg.objective,
-            )
-            .map(|(a, _)| a),
-            Policy::Baseline => {
-                baseline_allocate(&job.workflow, &self.pool_view, self.cfg.model)
-            }
-            Policy::Optimal => {
-                let grid = GridSpec::auto_pool(&job.workflow, &self.pool_view);
-                optimal_allocate(
-                    &job.workflow,
-                    &self.pool_view,
-                    &grid,
-                    self.cfg.objective,
-                    self.cfg.model,
-                )
-                .map(|(a, _)| a)
-            }
+            Policy::Proposed => planner.allocate(&ProposedPolicy::default()),
+            Policy::Baseline => planner.allocate(&BaselinePolicy::default()),
+            Policy::Optimal => planner.allocate(&OptimalPolicy),
         }
     }
 
@@ -291,23 +283,24 @@ impl Coordinator {
     }
 
     /// Run several jobs concurrently over one shared cluster: the pool is
-    /// partitioned with [`crate::sched::multijob::multijob_allocate`],
-    /// then arrivals from all traces are interleaved in time order and
-    /// dispatched against each job's own allocation (server clocks are
-    /// shared — a slow cluster shows up in every job's tail).
+    /// partitioned with [`Planner::plan_jobs`], then arrivals from all
+    /// traces are interleaved in time order and dispatched against each
+    /// job's own allocation (server clocks are shared — a slow cluster
+    /// shows up in every job's tail).
     pub fn run_multi(
         &mut self,
         jobs: &[(Job, Trace)],
         objective: crate::sched::Objective,
     ) -> Result<Vec<RunReport>, SchedError> {
+        if jobs.is_empty() {
+            return Ok(Vec::new());
+        }
         let wfs: Vec<&crate::flow::Workflow> =
             jobs.iter().map(|(j, _)| &j.workflow).collect();
-        let plans = crate::sched::multijob::multijob_allocate(
-            &wfs,
-            &self.pool_view,
-            self.cfg.model,
-            objective,
-        )?;
+        let plans = Planner::new(wfs[0], &self.pool_view)
+            .model(self.cfg.model)
+            .objective(objective)
+            .plan_jobs(&wfs)?;
 
         // merge arrivals: (time, job index, seq)
         let mut events: Vec<(f64, usize, u64)> = Vec::new();

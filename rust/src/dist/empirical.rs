@@ -1,0 +1,102 @@
+//! Non-parametric (empirical) service-time estimates — the monitor's
+//! raw view of a server before a Table-1 family is fitted.
+
+/// Empirical distribution over a finite sample set (sorted internally).
+#[derive(Clone, Debug, PartialEq)]
+pub struct Empirical {
+    sorted: Vec<f64>,
+}
+
+impl Empirical {
+    /// Build from observed samples (any order; NaNs rejected).
+    pub fn from_samples(samples: &[f64]) -> Empirical {
+        assert!(!samples.is_empty(), "empirical law needs samples");
+        assert!(
+            samples.iter().all(|x| x.is_finite()),
+            "empirical law needs finite samples"
+        );
+        let mut sorted = samples.to_vec();
+        sorted.sort_by(|a, b| a.partial_cmp(b).expect("finite samples"));
+        Empirical { sorted }
+    }
+
+    /// Number of samples.
+    pub fn len(&self) -> usize {
+        self.sorted.len()
+    }
+
+    /// Always false (construction requires samples); included for
+    /// clippy's `len_without_is_empty` convention.
+    pub fn is_empty(&self) -> bool {
+        self.sorted.is_empty()
+    }
+
+    /// Sample mean.
+    pub fn mean(&self) -> f64 {
+        self.sorted.iter().sum::<f64>() / self.len() as f64
+    }
+
+    /// Biased (1/n) sample variance.
+    pub fn variance(&self) -> f64 {
+        let m = self.mean();
+        self.sorted.iter().map(|x| (x - m) * (x - m)).sum::<f64>() / self.len() as f64
+    }
+
+    /// Smallest observed sample.
+    pub fn min(&self) -> f64 {
+        self.sorted[0]
+    }
+
+    /// Largest observed sample.
+    pub fn max(&self) -> f64 {
+        *self.sorted.last().expect("non-empty")
+    }
+
+    /// Empirical CDF: fraction of samples `<= t`.
+    pub fn cdf(&self, t: f64) -> f64 {
+        // first index with sample > t
+        let idx = self.sorted.partition_point(|&x| x <= t);
+        idx as f64 / self.len() as f64
+    }
+
+    /// Order-statistic quantile (nearest-rank).
+    pub fn quantile(&self, p: f64) -> f64 {
+        let p = p.clamp(0.0, 1.0);
+        let idx = ((p * self.len() as f64).ceil() as usize)
+            .saturating_sub(1)
+            .min(self.len() - 1);
+        self.sorted[idx]
+    }
+
+    /// The sorted sample view (ascending).
+    pub fn sorted(&self) -> &[f64] {
+        &self.sorted
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn basic_statistics() {
+        let e = Empirical::from_samples(&[3.0, 1.0, 2.0, 4.0]);
+        assert_eq!(e.len(), 4);
+        assert!(!e.is_empty());
+        assert_eq!(e.min(), 1.0);
+        assert_eq!(e.max(), 4.0);
+        assert!((e.mean() - 2.5).abs() < 1e-12);
+        assert!((e.variance() - 1.25).abs() < 1e-12);
+    }
+
+    #[test]
+    fn cdf_and_quantile_are_consistent() {
+        let e = Empirical::from_samples(&[1.0, 2.0, 3.0, 4.0]);
+        assert_eq!(e.cdf(0.5), 0.0);
+        assert_eq!(e.cdf(2.0), 0.5);
+        assert_eq!(e.cdf(10.0), 1.0);
+        assert_eq!(e.quantile(0.5), 2.0);
+        assert_eq!(e.quantile(1.0), 4.0);
+        assert_eq!(e.quantile(0.0), 1.0);
+    }
+}

@@ -1,0 +1,222 @@
+//! Parametric re-fitting of Table-1 families from observed service
+//! times — the estimation half of the paper's Algorithm 3 ("the
+//! performance distribution of each server … is gradually updated over
+//! the time").
+//!
+//! * [`fit_delayed_exponential`] / [`fit_delayed_pareto`] — moment / MLE
+//!   fits of the single-mode families;
+//! * [`fit_multimodal_exp`] — 2-component EM for straggling servers
+//!   (returns the estimated straggler fraction);
+//! * [`select_family`] — fits every candidate family and picks by
+//!   one-sample Kolmogorov–Smirnov distance with a parsimony ladder
+//!   (simpler families win unless a richer one is clearly better).
+
+use crate::dist::ServiceDist;
+
+/// Table-1 family identifiers for fitted laws.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Family {
+    /// Single delayed-exponential mode.
+    DelayedExp,
+    /// Single delayed-pareto (power-tail) mode.
+    DelayedPareto,
+    /// Two-mode delayed-exponential mixture (straggling server).
+    MultiModalExp,
+}
+
+fn shift_origin(samples: &[f64]) -> f64 {
+    samples.iter().copied().fold(f64::INFINITY, f64::min).max(0.0)
+}
+
+/// Fit a delayed exponential: delay = smallest sample, tail rate from
+/// the mean excess (`lam = 1 / (mean - delay)` — the MLE for this
+/// family). Always reproduces the sample mean exactly.
+pub fn fit_delayed_exponential(samples: &[f64]) -> ServiceDist {
+    assert!(!samples.is_empty(), "fit needs samples");
+    let t0 = shift_origin(samples);
+    let mean = samples.iter().sum::<f64>() / samples.len() as f64;
+    let lam = 1.0 / (mean - t0).max(1e-9);
+    ServiceDist::delayed_exponential(lam, t0)
+}
+
+/// Fit a delayed pareto: delay = smallest sample, tail exponent by MLE
+/// on the log tail clock (`lam = n / Σ ln((1+x)/(1+T))`).
+pub fn fit_delayed_pareto(samples: &[f64]) -> ServiceDist {
+    assert!(!samples.is_empty(), "fit needs samples");
+    let t0 = shift_origin(samples);
+    let s: f64 = samples
+        .iter()
+        .map(|&x| ((1.0 + x.max(t0)) / (1.0 + t0)).ln())
+        .sum();
+    let lam = (samples.len() as f64 / s.max(1e-12)).clamp(1.0 + 1e-6, 1e9);
+    ServiceDist::delayed_pareto(lam, t0)
+}
+
+/// Fit a 2-component delayed-exponential mixture by EM (`iters`
+/// iterations). Returns the fitted law and the estimated *straggler
+/// fraction* — the weight of the slower mode.
+pub fn fit_multimodal_exp(samples: &[f64], iters: usize) -> (ServiceDist, f64) {
+    assert!(!samples.is_empty(), "fit needs samples");
+    let t0 = shift_origin(samples);
+    let shifted: Vec<f64> = samples.iter().map(|&x| (x - t0).max(0.0)).collect();
+    let n = shifted.len();
+
+    // init: body rate from the lower 90%, straggler rate from the top 5%
+    let mut sorted = shifted.clone();
+    sorted.sort_by(|a, b| a.partial_cmp(b).expect("finite samples"));
+    let lo_end = ((n as f64 * 0.9) as usize).clamp(1, n);
+    let hi_start = ((n as f64 * 0.95) as usize).min(n - 1);
+    let mean_of = |xs: &[f64]| xs.iter().sum::<f64>() / xs.len() as f64;
+    let mut lam_fast = 1.0 / mean_of(&sorted[..lo_end]).max(1e-9);
+    let mut lam_slow = 1.0 / mean_of(&sorted[hi_start..]).max(1e-9);
+    if lam_slow >= lam_fast {
+        lam_slow = lam_fast * 0.25; // degenerate init: force separation
+    }
+    let mut w_slow = 0.05f64;
+
+    for _ in 0..iters.max(1) {
+        let (mut r_slow, mut rx_slow, mut r_fast, mut rx_fast) = (0.0, 0.0, 0.0, 0.0);
+        for &x in &shifted {
+            let pf = (1.0 - w_slow) * lam_fast * (-lam_fast * x).exp();
+            let ps = w_slow * lam_slow * (-lam_slow * x).exp();
+            let denom = pf + ps;
+            let rs = if denom > 1e-300 {
+                ps / denom
+            } else if lam_slow < lam_fast {
+                1.0 // both densities underflow: the heavier tail owns it
+            } else {
+                0.0
+            };
+            r_slow += rs;
+            rx_slow += rs * x;
+            r_fast += 1.0 - rs;
+            rx_fast += (1.0 - rs) * x;
+        }
+        w_slow = (r_slow / n as f64).clamp(1e-6, 1.0 - 1e-6);
+        lam_fast = (r_fast / rx_fast.max(1e-300)).clamp(1e-9, 1e12);
+        lam_slow = (r_slow / rx_slow.max(1e-300)).clamp(1e-9, 1e12);
+    }
+    if lam_fast < lam_slow {
+        std::mem::swap(&mut lam_fast, &mut lam_slow);
+        w_slow = 1.0 - w_slow;
+    }
+
+    use crate::dist::{Mode, TailKind};
+    let dist = ServiceDist::multimodal(vec![
+        (
+            1.0 - w_slow,
+            Mode::continuous(lam_fast, t0, TailKind::Exponential),
+        ),
+        (
+            w_slow,
+            Mode::continuous(lam_slow, t0, TailKind::Exponential),
+        ),
+    ]);
+    (dist, w_slow)
+}
+
+/// One-sample Kolmogorov–Smirnov distance between *sorted* samples and
+/// a candidate law.
+pub fn ks_fit(sorted: &[f64], d: &ServiceDist) -> f64 {
+    let n = sorted.len() as f64;
+    sorted
+        .iter()
+        .enumerate()
+        .map(|(i, &x)| {
+            let f = d.cdf(x);
+            let hi = (i as f64 + 1.0) / n;
+            let lo = i as f64 / n;
+            (f - lo).abs().max((hi - f).abs())
+        })
+        .fold(0.0, f64::max)
+}
+
+/// Fit every candidate family and select by KS distance with a
+/// parsimony ladder: the delayed exponential wins unless a richer
+/// family is clearly (25% + 0.005 absolute) better; the delayed pareto
+/// wins over the mixture on the same rule. Returns `(family, fitted
+/// law, its KS distance)`.
+pub fn select_family(samples: &[f64]) -> (Family, ServiceDist, f64) {
+    assert!(!samples.is_empty(), "fit needs samples");
+    let mut sorted = samples.to_vec();
+    sorted.sort_by(|a, b| a.partial_cmp(b).expect("finite samples"));
+
+    let de = fit_delayed_exponential(samples);
+    let dp = fit_delayed_pareto(samples);
+    let (mm, _) = fit_multimodal_exp(samples, 60);
+    let k_de = ks_fit(&sorted, &de);
+    let k_dp = ks_fit(&sorted, &dp);
+    let k_mm = ks_fit(&sorted, &mm);
+    let best = k_de.min(k_dp).min(k_mm);
+
+    if k_de <= best * 1.25 + 0.005 {
+        (Family::DelayedExp, de, k_de)
+    } else if k_dp <= best * 1.10 + 0.002 {
+        (Family::DelayedPareto, dp, k_dp)
+    } else {
+        (Family::MultiModalExp, mm, k_mm)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn draw(d: &ServiceDist, n: usize, seed: u64) -> Vec<f64> {
+        let mut rng = Rng::new(seed);
+        (0..n).map(|_| d.sample(&mut rng)).collect()
+    }
+
+    #[test]
+    fn delayed_exponential_recovered() {
+        let truth = ServiceDist::delayed_exponential(5.0, 0.2);
+        let xs = draw(&truth, 4096, 1);
+        let fitted = fit_delayed_exponential(&xs);
+        assert!((fitted.mean() - truth.mean()).abs() < 0.02 * truth.mean());
+        assert!((fitted.min_time() - 0.2).abs() < 0.01);
+        let mut sorted = xs;
+        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        assert!(ks_fit(&sorted, &fitted) < 0.04);
+    }
+
+    #[test]
+    fn plain_exponential_selects_simple_family() {
+        let truth = ServiceDist::exponential(4.0);
+        let xs = draw(&truth, 4096, 2);
+        let (family, fitted, ks) = select_family(&xs);
+        assert_eq!(family, Family::DelayedExp, "ks={ks}");
+        assert!(ks < 0.05, "ks {ks}");
+        assert!((fitted.mean() - 0.25).abs() < 0.02);
+    }
+
+    #[test]
+    fn straggler_selects_multimodal_and_recovers_fraction() {
+        let truth = ServiceDist::straggler(10.0, 0.4, 0.08, 0.0);
+        let xs = draw(&truth, 6000, 3);
+        let (family, fitted, ks) = select_family(&xs);
+        assert_eq!(family, Family::MultiModalExp, "ks={ks}");
+        assert!(ks < 0.05, "ks {ks}");
+        assert!((fitted.mean() - truth.mean()).abs() < 0.05 * truth.mean());
+        let (_, frac) = fit_multimodal_exp(&xs, 100);
+        assert!((frac - 0.08).abs() < 0.04, "straggler fraction {frac}");
+    }
+
+    #[test]
+    fn heavy_tail_rejects_single_exponential() {
+        let truth = ServiceDist::delayed_pareto(2.5, 0.0);
+        let xs = draw(&truth, 5000, 4);
+        let (family, _, ks) = select_family(&xs);
+        assert_ne!(family, Family::DelayedExp, "ks={ks}");
+        assert!(ks < 0.06, "ks {ks}");
+    }
+
+    #[test]
+    fn em_handles_degenerate_single_mode_data() {
+        // all-identical samples must not NaN/panic
+        let xs = vec![0.5; 256];
+        let (d, frac) = fit_multimodal_exp(&xs, 20);
+        assert!(d.mean().is_finite());
+        assert!((0.0..=1.0).contains(&frac));
+    }
+}

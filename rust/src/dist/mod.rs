@@ -1,0 +1,572 @@
+//! Table-1 service-time distribution families.
+//!
+//! The paper models every server's service time with a *delayed-tail*
+//! law. All families share the survival shape
+//!
+//! ```text
+//! S(t) = min(1, alpha * exp(-lam * (m(t) - T)))   for t >= T,   S(t) = 1 below T
+//! ```
+//!
+//! with a monotone "tail clock" `m(t)` selecting the family:
+//!
+//! * delayed exponential — `m(t) = t`;
+//! * delayed pareto      — `m(t) = ln(1 + t)` (power-law tail);
+//! * delayed weibull     — `m(t) = t^k` (our generic-`m` instance).
+//!
+//! `alpha` controls the atom at the delay `T`: the mass `1 - S(T+)`
+//! sits exactly at `T`. [`Mode::continuous`] picks the atomless choice
+//! `alpha = exp(lam * (m(T) - T))` so `S(T+) = 1`. Multi-modal variants
+//! are convex mixtures of modes (the straggler laws of the paper's
+//! Table 1 and of [6, 7]).
+//!
+//! This is the production twin of
+//! `python/compile/distributions.py` — identical parameterization and
+//! grid conventions (central-difference PDFs of the analytic CDF), so
+//! the AOT oracles and the native engine line up in method.
+
+pub mod empirical;
+pub mod fit;
+
+use crate::util::rng::Rng;
+
+/// Tail-clock family of one mode (Table 1 row kind).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum TailKind {
+    /// `m(t) = t`: exponential tail.
+    Exponential,
+    /// `m(t) = ln(1 + t)`: pareto (power-law) tail.
+    Pareto,
+    /// `m(t) = t^k`: weibull tail with shape `k`.
+    Weibull {
+        /// Weibull shape parameter (k > 0).
+        k: f64,
+    },
+}
+
+/// One delayed-tail mode: `S(t) = min(1, alpha * exp(-lam * (m(t) - T)))`
+/// beyond the deterministic delay `T`.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Mode {
+    /// Tail rate `lam > 0`.
+    pub lam: f64,
+    /// Deterministic delay `T >= 0` (minimum service time).
+    pub delay: f64,
+    /// Atom control: `1 - alpha * exp(-lam*(m(T)-T))` is the probability
+    /// mass sitting exactly at `T`. [`Mode::continuous`] makes it 0.
+    pub alpha: f64,
+    /// Tail clock family.
+    pub kind: TailKind,
+}
+
+impl Mode {
+    /// Atomless mode: `alpha` chosen so `S(T+) = 1` (no mass at the
+    /// delay). This is the parameterization every Table-1 constructor
+    /// on [`ServiceDist`] uses; for [`TailKind::Exponential`] it yields
+    /// `alpha = 1` exactly.
+    pub fn continuous(lam: f64, delay: f64, kind: TailKind) -> Mode {
+        assert!(lam > 0.0, "mode needs a positive tail rate, got {lam}");
+        assert!(delay >= 0.0, "mode needs a non-negative delay, got {delay}");
+        let m_t = clock(kind, delay);
+        Mode {
+            lam,
+            delay,
+            alpha: (lam * (m_t - delay)).exp(),
+            kind,
+        }
+    }
+
+    /// Mode with an explicit `alpha` (an atom of mass `1 - S(T+)` at the
+    /// delay when `alpha` is below the continuous choice).
+    pub fn with_atom(lam: f64, delay: f64, kind: TailKind, alpha: f64) -> Mode {
+        assert!(lam > 0.0, "mode needs a positive tail rate, got {lam}");
+        assert!(delay >= 0.0, "mode needs a non-negative delay, got {delay}");
+        assert!(alpha >= 0.0, "alpha must be non-negative, got {alpha}");
+        Mode {
+            lam,
+            delay,
+            alpha,
+            kind,
+        }
+    }
+
+    /// Survival function `P(X > t)`.
+    pub fn sf(&self, t: f64) -> f64 {
+        if t < self.delay {
+            return 1.0;
+        }
+        let e = self.alpha * (-self.lam * (clock(self.kind, t) - self.delay)).exp();
+        e.clamp(0.0, 1.0)
+    }
+
+    /// CDF `P(X <= t)`.
+    pub fn cdf(&self, t: f64) -> f64 {
+        1.0 - self.sf(t)
+    }
+
+    /// Survival just past the delay (`1 -` the atom mass at `T`).
+    fn s0(&self) -> f64 {
+        let m_t = clock(self.kind, self.delay);
+        (self.alpha * (-self.lam * (m_t - self.delay)).exp()).clamp(0.0, 1.0)
+    }
+
+    /// Mean `E[X] = T + ∫_T^∞ S(t) dt` (infinite for pareto tails with
+    /// `lam <= 1`).
+    pub fn mean(&self) -> f64 {
+        let s0 = self.s0();
+        let tail = match self.kind {
+            TailKind::Exponential => s0 / self.lam,
+            TailKind::Pareto => {
+                if self.lam <= 1.0 {
+                    return f64::INFINITY;
+                }
+                s0 * (1.0 + self.delay) / (self.lam - 1.0)
+            }
+            TailKind::Weibull { .. } => self.integrate_tail(|_, s| s),
+        };
+        self.delay + tail
+    }
+
+    /// Second moment `E[X^2] = T^2 + 2 ∫_T^∞ t·S(t) dt`.
+    pub fn second_moment(&self) -> f64 {
+        let s0 = self.s0();
+        let t0 = self.delay;
+        let tail = match self.kind {
+            TailKind::Exponential => s0 * (t0 / self.lam + 1.0 / (self.lam * self.lam)),
+            TailKind::Pareto => {
+                if self.lam <= 2.0 {
+                    return f64::INFINITY;
+                }
+                let b = 1.0 + t0;
+                s0 * (b * b / (self.lam - 2.0) - b / (self.lam - 1.0))
+            }
+            TailKind::Weibull { .. } => self.integrate_tail(|t, s| t * s),
+        };
+        t0 * t0 + 2.0 * tail
+    }
+
+    /// Simpson integration of `f(t, S(t))` over the tail support (used
+    /// by the clock families without closed-form moments).
+    fn integrate_tail(&self, f: impl Fn(f64, f64) -> f64) -> f64 {
+        let hi = self.tail_horizon();
+        let lo = self.delay;
+        if hi <= lo {
+            return 0.0;
+        }
+        let n = 4096usize; // even
+        let h = (hi - lo) / n as f64;
+        let eval = |k: usize| {
+            let t = lo + k as f64 * h;
+            f(t, self.sf(t))
+        };
+        let mut acc = eval(0) + eval(n);
+        for k in 1..n {
+            acc += eval(k) * if k % 2 == 1 { 4.0 } else { 2.0 };
+        }
+        acc * h / 3.0
+    }
+
+    /// Time beyond which `S(t)` is negligible (`< ~1e-15`, tail-clock
+    /// inverted).
+    fn tail_horizon(&self) -> f64 {
+        let m_end = clock(self.kind, self.delay) + (self.alpha.ln().max(0.0) + 36.0) / self.lam;
+        clock_inv(self.kind, m_end)
+    }
+
+    /// Draw one service time.
+    pub fn sample(&self, rng: &mut Rng) -> f64 {
+        let s0 = self.s0();
+        if rng.f64() >= s0 {
+            return self.delay; // the atom at T
+        }
+        // conditional tail: S(t)/S(T+) = exp(-lam * (m(t) - m(T)))
+        let e = -rng.f64_open().ln();
+        let m_t = clock(self.kind, self.delay) + e / self.lam;
+        clock_inv(self.kind, m_t)
+    }
+}
+
+/// The tail clock `m(t)` of a family.
+fn clock(kind: TailKind, t: f64) -> f64 {
+    match kind {
+        TailKind::Exponential => t,
+        TailKind::Pareto => t.max(0.0).ln_1p(),
+        TailKind::Weibull { k } => t.max(0.0).powf(k),
+    }
+}
+
+/// Inverse tail clock `m^{-1}(x)`.
+fn clock_inv(kind: TailKind, x: f64) -> f64 {
+    match kind {
+        TailKind::Exponential => x,
+        TailKind::Pareto => x.exp() - 1.0,
+        TailKind::Weibull { k } => x.max(0.0).powf(1.0 / k),
+    }
+}
+
+/// A service-time law: a convex mixture of delayed-tail [`Mode`]s
+/// (single-mode for the plain Table-1 rows).
+#[derive(Clone, Debug, PartialEq)]
+pub struct ServiceDist {
+    modes: Vec<(f64, Mode)>,
+}
+
+impl ServiceDist {
+    /// Plain exponential with rate `mu` (delayed exponential, `T = 0`).
+    pub fn exponential(mu: f64) -> ServiceDist {
+        ServiceDist::delayed_exponential(mu, 0.0)
+    }
+
+    /// Delayed exponential: deterministic `delay` plus an `Exp(lam)`
+    /// tail. Mean `delay + 1/lam`.
+    pub fn delayed_exponential(lam: f64, delay: f64) -> ServiceDist {
+        ServiceDist {
+            modes: vec![(1.0, Mode::continuous(lam, delay, TailKind::Exponential))],
+        }
+    }
+
+    /// Delayed pareto: power-law tail `S(t) ∝ (1+t)^-lam` beyond the
+    /// delay. Mean `delay + (1+delay)/(lam-1)` for `lam > 1`; variance
+    /// finite only for `lam > 2`.
+    pub fn delayed_pareto(lam: f64, delay: f64) -> ServiceDist {
+        ServiceDist {
+            modes: vec![(1.0, Mode::continuous(lam, delay, TailKind::Pareto))],
+        }
+    }
+
+    /// Delayed weibull with shape `k`: `S(t) = exp(-lam (t^k - T^k))`
+    /// beyond the delay.
+    pub fn delayed_weibull(lam: f64, k: f64, delay: f64) -> ServiceDist {
+        assert!(k > 0.0, "weibull shape must be positive, got {k}");
+        ServiceDist {
+            modes: vec![(1.0, Mode::continuous(lam, delay, TailKind::Weibull { k }))],
+        }
+    }
+
+    /// Straggler mixture (the "100x degradation" shape of the straggler
+    /// literature the paper cites): with probability `1 - p_slow` an
+    /// `Exp(fast)` draw, with probability `p_slow` an `Exp(slow)` draw,
+    /// both delayed by `delay`.
+    pub fn straggler(fast: f64, slow: f64, p_slow: f64, delay: f64) -> ServiceDist {
+        assert!(
+            (0.0..=1.0).contains(&p_slow),
+            "straggler fraction must be in [0,1], got {p_slow}"
+        );
+        ServiceDist::multimodal(vec![
+            (
+                1.0 - p_slow,
+                Mode::continuous(fast, delay, TailKind::Exponential),
+            ),
+            (
+                p_slow,
+                Mode::continuous(slow, delay, TailKind::Exponential),
+            ),
+        ])
+    }
+
+    /// General convex mixture of modes. Weights must be non-negative and
+    /// sum to 1 (within 1e-6).
+    pub fn multimodal(modes: Vec<(f64, Mode)>) -> ServiceDist {
+        assert!(!modes.is_empty(), "mixture needs at least one mode");
+        let total: f64 = modes.iter().map(|(w, _)| *w).sum();
+        assert!(
+            (total - 1.0).abs() < 1e-6,
+            "mixture weights must sum to 1, got {total}"
+        );
+        assert!(
+            modes.iter().all(|(w, _)| *w >= 0.0),
+            "mixture weights must be non-negative"
+        );
+        ServiceDist { modes }
+    }
+
+    /// The weighted modes of the mixture.
+    pub fn modes(&self) -> &[(f64, Mode)] {
+        &self.modes
+    }
+
+    /// Mean service time.
+    pub fn mean(&self) -> f64 {
+        self.modes.iter().map(|(w, m)| w * m.mean()).sum()
+    }
+
+    /// Variance of the service time (infinite for pareto `lam <= 2`).
+    pub fn variance(&self) -> f64 {
+        let e2: f64 = self.modes.iter().map(|(w, m)| w * m.second_moment()).sum();
+        if !e2.is_finite() {
+            return f64::INFINITY;
+        }
+        let mean = self.mean();
+        (e2 - mean * mean).max(0.0)
+    }
+
+    /// Nominal service rate `1 / mean`.
+    pub fn rate(&self) -> f64 {
+        1.0 / self.mean()
+    }
+
+    /// Minimum possible service time (the smallest mode delay).
+    pub fn min_time(&self) -> f64 {
+        self.modes
+            .iter()
+            .filter(|(w, _)| *w > 0.0)
+            .map(|(_, m)| m.delay)
+            .fold(f64::INFINITY, f64::min)
+    }
+
+    /// CDF `P(X <= t)`.
+    pub fn cdf(&self, t: f64) -> f64 {
+        self.modes.iter().map(|(w, m)| w * m.cdf(t)).sum()
+    }
+
+    /// Smallest `t` with `cdf(t) >= p` (bisection; exact up to ~1e-12
+    /// relative).
+    pub fn quantile(&self, p: f64) -> f64 {
+        let p = p.clamp(0.0, 1.0 - 1e-12);
+        let mut lo = self.min_time();
+        if self.cdf(lo) >= p {
+            return lo;
+        }
+        let mut hi = if lo > 0.0 { 2.0 * lo } else { 1.0 };
+        let mut grow = 0;
+        while self.cdf(hi) < p && grow < 400 {
+            hi = hi * 2.0 + 1.0;
+            grow += 1;
+        }
+        for _ in 0..120 {
+            let mid = 0.5 * (lo + hi);
+            if self.cdf(mid) >= p {
+                hi = mid;
+            } else {
+                lo = mid;
+            }
+        }
+        hi
+    }
+
+    /// Draw one service time.
+    pub fn sample(&self, rng: &mut Rng) -> f64 {
+        let u = rng.f64();
+        let mut acc = 0.0;
+        for (w, m) in &self.modes {
+            acc += w;
+            if u < acc {
+                return m.sample(rng);
+            }
+        }
+        // weights sum to 1; guard against the last ulp
+        self.modes.last().expect("non-empty mixture").1.sample(rng)
+    }
+
+    /// CDF evaluated on the uniform grid `t_k = k * dt`, `k = 0..n`.
+    pub fn cdf_grid(&self, dt: f64, n: usize) -> Vec<f64> {
+        assert!(dt > 0.0 && n >= 2, "grid needs dt>0 and n>=2");
+        (0..n).map(|k| self.cdf(k as f64 * dt)).collect()
+    }
+
+    /// PDF on the uniform grid by central differences of the analytic
+    /// CDF — the exact convention of the AOT kernels and
+    /// `python/compile/distributions.py::pdf_grid`, so both engines see
+    /// the same discretization of delays and atoms.
+    pub fn pdf_grid(&self, dt: f64, n: usize) -> Vec<f64> {
+        central_diff(&self.cdf_grid(dt, n), dt)
+    }
+}
+
+/// Central-difference PDF of a CDF grid (forward/backward differences
+/// at the endpoints) — the shared convention of the native engine, the
+/// AOT kernels, and the python oracles.
+pub fn central_diff(cdf: &[f64], dt: f64) -> Vec<f64> {
+    assert!(cdf.len() >= 2, "central_diff needs at least 2 points");
+    assert!(dt > 0.0, "central_diff needs dt > 0");
+    let n = cdf.len();
+    let mut out = vec![0.0; n];
+    out[0] = (cdf[1] - cdf[0]) / dt;
+    for (k, w) in cdf.windows(3).enumerate() {
+        out[k + 1] = (w[2] - w[0]) / (2.0 * dt);
+    }
+    out[n - 1] = (cdf[n - 1] - cdf[n - 2]) / dt;
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn exponential_moments_exact() {
+        let d = ServiceDist::exponential(4.0);
+        assert!((d.mean() - 0.25).abs() < 1e-12);
+        assert!((d.variance() - 0.0625).abs() < 1e-12);
+        assert!((d.rate() - 4.0).abs() < 1e-9);
+        assert_eq!(d.min_time(), 0.0);
+    }
+
+    #[test]
+    fn delayed_exponential_moments() {
+        // mean = T + 1/lam, var = 1/lam^2
+        let d = ServiceDist::delayed_exponential(50.0, 0.18);
+        assert!((d.mean() - 0.2).abs() < 1e-12, "mean {}", d.mean());
+        assert!((d.variance() - 1.0 / 2500.0).abs() < 1e-12);
+        assert!((d.min_time() - 0.18).abs() < 1e-15);
+    }
+
+    #[test]
+    fn delayed_pareto_moments() {
+        // mean = T + (1+T)/(lam-1); E[X^2] = T^2 + 2[(1+T)^2/(lam-2) - (1+T)/(lam-1)]
+        let d = ServiceDist::delayed_pareto(4.0, 0.3);
+        let want_mean = 0.3 + 1.3 / 3.0;
+        assert!((d.mean() - want_mean).abs() < 1e-12, "mean {}", d.mean());
+        let e2 = 0.09 + 2.0 * (1.3 * 1.3 / 2.0 - 1.3 / 3.0);
+        let want_var = e2 - want_mean * want_mean;
+        assert!(
+            (d.variance() - want_var).abs() < 1e-12,
+            "var {} want {want_var}",
+            d.variance()
+        );
+    }
+
+    #[test]
+    fn pareto_heavy_tail_infinite_moments() {
+        assert!(ServiceDist::delayed_pareto(0.9, 0.0).mean().is_infinite());
+        let v = ServiceDist::delayed_pareto(1.5, 0.0).variance();
+        assert!(v.is_infinite());
+        // lam just above 2: finite but large
+        assert!(ServiceDist::delayed_pareto(2.1, 0.0).variance().is_finite());
+    }
+
+    #[test]
+    fn weibull_numeric_moments_match_closed_form() {
+        // k=1 weibull IS the exponential: numeric path must agree
+        let w = ServiceDist::delayed_weibull(3.0, 1.0, 0.0);
+        assert!((w.mean() - 1.0 / 3.0).abs() < 1e-6, "mean {}", w.mean());
+        assert!((w.variance() - 1.0 / 9.0).abs() < 1e-5, "var {}", w.variance());
+        // k=2, lam=1: Rayleigh-type, mean = Gamma(1.5) = sqrt(pi)/2
+        let r = ServiceDist::delayed_weibull(1.0, 2.0, 0.0);
+        let want = std::f64::consts::PI.sqrt() / 2.0;
+        assert!((r.mean() - want).abs() < 1e-6, "mean {}", r.mean());
+    }
+
+    #[test]
+    fn straggler_mixture_moments() {
+        let d = ServiceDist::straggler(10.0, 0.4, 0.08, 0.01);
+        let want = 0.01 + 0.92 / 10.0 + 0.08 / 0.4;
+        assert!((d.mean() - want).abs() < 1e-12, "mean {}", d.mean());
+        assert_eq!(d.modes().len(), 2);
+        // straggling inflates variance far beyond the fast mode's
+        assert!(d.variance() > ServiceDist::exponential(10.0).variance() * 5.0);
+    }
+
+    #[test]
+    fn cdf_matches_closed_forms() {
+        let e = ServiceDist::exponential(2.0);
+        for t in [0.0, 0.1, 0.5, 2.0] {
+            assert!((e.cdf(t) - (1.0 - (-2.0f64 * t).exp())).abs() < 1e-12);
+        }
+        let p = ServiceDist::delayed_pareto(3.0, 0.5);
+        assert_eq!(p.cdf(0.49), 0.0);
+        // S(t) = ((1+T)/(1+t))^lam beyond T
+        let want = 1.0 - (1.5f64 / 2.0).powi(3);
+        assert!((p.cdf(1.0) - want).abs() < 1e-12, "cdf {}", p.cdf(1.0));
+    }
+
+    #[test]
+    fn quantile_inverts_cdf() {
+        let d = ServiceDist::delayed_exponential(2.0, 0.3);
+        for p in [0.1, 0.5, 0.9, 0.99, 0.9999] {
+            let q = d.quantile(p);
+            assert!((d.cdf(q) - p).abs() < 1e-9, "p={p} q={q}");
+            // closed form: T - ln(1-p)/lam
+            let want = 0.3 - (1.0 - p).ln() / 2.0;
+            assert!((q - want).abs() < 1e-7, "p={p}: {q} vs {want}");
+        }
+        // below the delay nothing has happened yet
+        assert!((d.quantile(0.0) - 0.3).abs() < 1e-12);
+    }
+
+    #[test]
+    fn atom_mass_shows_in_cdf_and_sampling() {
+        // alpha = 0.6 => 40% of the mass sits exactly at T = 1
+        let m = Mode::with_atom(2.0, 1.0, TailKind::Exponential, 0.6);
+        let d = ServiceDist::multimodal(vec![(1.0, m)]);
+        assert!((d.cdf(1.0) - 0.4).abs() < 1e-12);
+        assert_eq!(d.cdf(0.999), 0.0);
+        let mut rng = Rng::new(5);
+        let n = 20_000;
+        let hits = (0..n)
+            .map(|_| d.sample(&mut rng))
+            .filter(|&x| x == 1.0)
+            .count();
+        let frac = hits as f64 / n as f64;
+        assert!((frac - 0.4).abs() < 0.02, "atom fraction {frac}");
+        // mean = T + alpha/lam
+        assert!((d.mean() - (1.0 + 0.3)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn sampling_matches_moments() {
+        let mut rng = Rng::new(11);
+        // (law, check_variance): the pareto draw has an infinite 4th
+        // moment, so its sample variance fluctuates too much to assert
+        let cases = [
+            (ServiceDist::exponential(3.0), true),
+            (ServiceDist::delayed_exponential(5.0, 0.2), true),
+            (ServiceDist::delayed_pareto(4.0, 0.1), false),
+            (ServiceDist::straggler(8.0, 0.5, 0.1, 0.0), true),
+        ];
+        for (d, check_var) in cases {
+            let n = 200_000;
+            let xs: Vec<f64> = (0..n).map(|_| d.sample(&mut rng)).collect();
+            let mean = xs.iter().sum::<f64>() / n as f64;
+            assert!(
+                (mean - d.mean()).abs() < 0.02 * d.mean().max(0.1),
+                "sample mean {mean} vs analytic {}",
+                d.mean()
+            );
+            if check_var {
+                let var =
+                    xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / n as f64;
+                assert!(
+                    (var - d.variance()).abs() < 0.12 * d.variance().max(0.1),
+                    "sample var {var} vs analytic {}",
+                    d.variance()
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn grids_follow_the_python_conventions() {
+        let d = ServiceDist::exponential(2.0);
+        let (dt, n) = (0.01, 1024);
+        let cdf = d.cdf_grid(dt, n);
+        assert_eq!(cdf.len(), n);
+        assert_eq!(cdf[0], 0.0);
+        let pdf = d.pdf_grid(dt, n);
+        assert_eq!(pdf.len(), n);
+        // central difference of the interior: (F(t+dt)-F(t-dt))/(2dt)
+        let k = 100;
+        let want = (d.cdf((k + 1) as f64 * dt) - d.cdf((k - 1) as f64 * dt)) / (2.0 * dt);
+        assert!((pdf[k] - want).abs() < 1e-12);
+        // mass on the grid integrates to ~1
+        let mass: f64 = pdf.iter().sum::<f64>() * dt;
+        assert!((mass - 1.0).abs() < 0.01, "mass {mass}");
+    }
+
+    #[test]
+    fn central_diff_endpoints() {
+        let c = [0.0, 0.1, 0.4, 0.8, 1.0];
+        let p = central_diff(&c, 0.5);
+        assert!((p[0] - 0.2).abs() < 1e-12);
+        assert!((p[1] - 0.4).abs() < 1e-12);
+        assert!((p[4] - 0.4).abs() < 1e-12);
+    }
+
+    #[test]
+    #[should_panic(expected = "weights must sum to 1")]
+    fn bad_mixture_weights_rejected() {
+        ServiceDist::multimodal(vec![(
+            0.5,
+            Mode::continuous(1.0, 0.0, TailKind::Exponential),
+        )]);
+    }
+}

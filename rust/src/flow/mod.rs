@@ -55,6 +55,13 @@ impl Workflow {
         })
     }
 
+    /// Parse a workflow from its JSON spec (the [`parse`] module's
+    /// format) — the convenience entry for planning straight from a
+    /// spec: `Planner::new(&Workflow::from_json(spec)?, &servers)`.
+    pub fn from_json(text: &str) -> Result<Workflow, FlowError> {
+        parse::workflow_from_json(text)
+    }
+
     /// The paper's Fig. 6 evaluation workflow:
     /// `PDCC(2) ; SDCC(2) ; PDCC(2)` with DAP rates 8 → 4 → 2.
     pub fn fig6() -> Workflow {
@@ -172,6 +179,15 @@ mod tests {
         let wf = Workflow::chain(3, 4, 2.0);
         assert_eq!(wf.slots(), 12);
         assert_eq!(wf.serial_depth(), 3);
+    }
+
+    #[test]
+    fn from_json_convenience() {
+        let wf =
+            Workflow::from_json(r#"{"arrival_rate": 2.0, "root": {"type": "queue"}}"#).unwrap();
+        assert_eq!(wf.slots(), 1);
+        assert_eq!(wf.arrival_rate, 2.0);
+        assert!(Workflow::from_json("{nope").is_err());
     }
 
     #[test]

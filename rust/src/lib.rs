@@ -15,9 +15,13 @@
 //!   product (Eq. 3–4), grid moments/quantiles, and exponential-family
 //!   closed forms used for validation;
 //! * [`flow`] — the series–parallel workflow graph and its JSON spec;
-//! * [`sched`] — the paper's contribution: `SDCC_allocate` (Alg. 1),
-//!   `PDCC_allocate` (Alg. 2) with the rate-equilibrium solver, the
-//!   heuristic baseline and the exhaustive optimal reference;
+//! * [`plan`] — **the planning surface**: [`plan::Planner`] evaluates any
+//!   [`plan::AllocationPolicy`] (the paper's Alg. 1–3, the §3 baseline,
+//!   the exhaustive optimum, or your own) and returns scored
+//!   [`plan::Plan`]s;
+//! * [`sched`] — the engine underneath: sort-matching allocation, the
+//!   rate-equilibrium solver, §3 balancing refinement, the exhaustive
+//!   reference, capacity planning and multi-job partitioning;
 //! * [`sim`] — a discrete-event fork–join queueing simulator used to
 //!   validate the analytic engine and regenerate the paper's figures;
 //! * [`monitor`] — online per-server service-time estimation (the input
@@ -34,20 +38,34 @@
 //! use dcflow::prelude::*;
 //!
 //! // Six heterogeneous servers (exponential service, rates 9..4).
-//! let servers: Vec<Server> = [9.0, 8.0, 7.0, 6.0, 5.0, 4.0]
-//!     .iter().enumerate()
-//!     .map(|(i, &mu)| Server::new(i, ServiceDist::exponential(mu)))
-//!     .collect();
+//! let servers = Server::pool_exponential(&[9.0, 8.0, 7.0, 6.0, 5.0, 4.0]);
 //!
 //! // The paper's Fig. 6 workflow: PDCC ; SDCC ; PDCC with DAP rates 8/4/2.
 //! let wf = Workflow::fig6();
 //!
-//! // Allocate + rate-schedule with the paper's algorithms, score analytically.
-//! let plan = sdcc_allocate(&wf, &servers).expect("allocation");
-//! let grid = GridSpec::auto(&plan, &servers);
-//! let score = score_allocation(&wf, &plan, &servers, &grid);
-//! println!("mean={:.3} var={:.3} p99={:.3}", score.mean, score.var, score.p99);
+//! // One builder configures the request; any policy plugs in.
+//! let planner = Planner::new(&wf, &servers)
+//!     .model(ResponseModel::Mm1)
+//!     .objective(Objective::Mean);
+//!
+//! let plan = planner.plan(&ProposedPolicy::default()).expect("feasible");
+//! println!(
+//!     "{}: mean={:.3} var={:.3} p99={:.3}",
+//!     plan.policy_name, plan.score.mean, plan.score.var, plan.score.p99
+//! );
+//!
+//! // The paper's Table-2 bake-off, all policies on one common grid:
+//! for plan in planner
+//!     .compare(&[&ProposedPolicy::default(), &BaselinePolicy::default(), &OptimalPolicy])
+//!     .into_iter()
+//!     .flatten()
+//! {
+//!     println!("{:<10} mean={:.4}", plan.policy_name, plan.score.mean);
+//! }
 //! ```
+//!
+//! Custom strategies implement [`plan::AllocationPolicy`] and run
+//! through the same builder — see the [`plan`] module docs.
 #![deny(missing_docs)]
 #![warn(clippy::all)]
 
@@ -56,20 +74,32 @@ pub mod coordinator;
 pub mod dist;
 pub mod flow;
 pub mod monitor;
+pub mod plan;
 pub mod runtime;
 pub mod sched;
 pub mod sim;
 pub mod util;
 
-/// Convenience re-exports covering the common API surface.
+/// Convenience re-exports covering the common API surface: enough for
+/// `use dcflow::prelude::*;` to drive the planner end to end.
 pub mod prelude {
     pub use crate::compose::grid::GridSpec;
-    pub use crate::compose::score::{score_allocation, Score};
-    pub use crate::dist::{ServiceDist, TailKind};
+    pub use crate::compose::score::{score_allocation, score_allocation_with, Score};
+    pub use crate::dist::{Mode, ServiceDist, TailKind};
     pub use crate::flow::{Dcc, Workflow};
-    pub use crate::sched::{
-        baseline_allocate, optimal_allocate, sdcc_allocate, Allocation, Objective,
+    pub use crate::plan::{
+        AllocationPolicy, BaselinePolicy, Diagnostics, OptimalPolicy, Plan, PlanContext,
+        Planner, ProposedPolicy, SdccPolicy,
     };
+    pub use crate::sched::multijob::JobPlan;
     pub use crate::sched::server::Server;
-    pub use crate::sim::network::{SimConfig, SimResult};
+    pub use crate::sched::{Allocation, Objective, ResponseModel, SchedError, SplitPolicy};
+    pub use crate::sim::network::{simulate, SimConfig, SimResult};
+
+    // deprecated legacy free functions, re-exported so old callers keep
+    // compiling (each use still warns and names its replacement)
+    #[allow(deprecated)]
+    pub use crate::sched::{
+        baseline_allocate, optimal_allocate, proposed_allocate, sdcc_allocate,
+    };
 }

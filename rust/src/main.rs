@@ -12,17 +12,15 @@
 //!   dcflow run --workflow my_flow.json --servers 5,5,4,4
 //!   dcflow fig7
 
-use dcflow::compose::grid::GridSpec;
-use dcflow::compose::score::score_allocation_with;
 use dcflow::coordinator::{Coordinator, CoordinatorConfig, Policy};
 use dcflow::flow::parse::workflow_from_json;
 use dcflow::flow::Workflow;
-use dcflow::runtime::{ArtifactRegistry, BatchScorer, ScorerBackend};
-use dcflow::sched::{
-    baseline_allocate, baseline_allocate_split, optimal_allocate, proposed_allocate,
-    sdcc_allocate, Objective, ResponseModel, SplitPolicy,
+use dcflow::plan::{
+    AllocationPolicy, BaselinePolicy, OptimalPolicy, Planner, ProposedPolicy, SdccPolicy,
 };
+use dcflow::runtime::{ArtifactRegistry, BatchScorer, ScorerBackend};
 use dcflow::sched::server::Server;
+use dcflow::sched::{ResponseModel, SplitPolicy};
 use dcflow::sim::trace::{ArrivalProcess, Trace};
 use dcflow::util::cli::Cli;
 use dcflow::util::rng::Rng;
@@ -163,22 +161,29 @@ fn cmd_score(argv: &[String]) -> i32 {
         "mg1" => ResponseModel::Mg1,
         m => die(&format!("unknown model '{m}'")),
     };
-    let (ours, _) = proposed_allocate(&wf, &servers, model, Objective::Mean)
-        .unwrap_or_else(|e| die(&e.to_string()));
-    let grid = GridSpec::auto_response(&ours, &servers, model);
-    println!("{:<10} {:>10} {:>10} {:>10}", "policy", "mean", "var", "p99");
-    let s = score_allocation_with(&wf, &ours, &servers, &grid, model);
-    println!("{:<10} {:>10.4} {:>10.4} {:>10.4}", "proposed", s.mean, s.var, s.p99);
-    if let Ok(seed) = sdcc_allocate(&wf, &servers) {
-        let s = score_allocation_with(&wf, &seed, &servers, &grid, model);
-        println!("{:<10} {:>10.4} {:>10.4} {:>10.4}", "alg1-seed", s.mean, s.var, s.p99);
+    let planner = Planner::new(&wf, &servers).model(model);
+    println!("{:<12} {:>10} {:>10} {:>10}", "policy", "mean", "var", "p99");
+    let results = planner.compare(&[
+        &ProposedPolicy::default(),
+        &SdccPolicy,
+        &BaselinePolicy::default(),
+        &OptimalPolicy,
+    ]);
+    let mut any = false;
+    for r in results {
+        match r {
+            Ok(plan) => {
+                any = true;
+                println!(
+                    "{:<12} {:>10.4} {:>10.4} {:>10.4}",
+                    plan.policy_name, plan.score.mean, plan.score.var, plan.score.p99
+                );
+            }
+            Err(e) => eprintln!("dcflow: {e}"),
+        }
     }
-    if let Ok(b) = baseline_allocate(&wf, &servers, model) {
-        let s = score_allocation_with(&wf, &b, &servers, &grid, model);
-        println!("{:<10} {:>10.4} {:>10.4} {:>10.4}", "baseline", s.mean, s.var, s.p99);
-    }
-    if let Ok((_, s)) = optimal_allocate(&wf, &servers, &grid, Objective::Mean, model) {
-        println!("{:<10} {:>10.4} {:>10.4} {:>10.4}", "optimal", s.mean, s.var, s.p99);
+    if !any {
+        die("no policy produced a feasible allocation");
     }
     0
 }
@@ -186,30 +191,37 @@ fn cmd_score(argv: &[String]) -> i32 {
 fn cmd_fig7(_argv: &[String]) -> i32 {
     let wf = Workflow::fig6();
     let servers = Server::pool_exponential(&[9.0, 8.0, 7.0, 6.0, 5.0, 4.0]);
-    let model = ResponseModel::Mm1;
 
-    let (ours, _) = proposed_allocate(&wf, &servers, model, Objective::Mean)
+    // the Table-2 bake-off on one common grid, straight off the planner
+    let fair = BaselinePolicy {
+        split: SplitPolicy::Equilibrium,
+    };
+    let policies: [&dyn AllocationPolicy; 4] = [
+        &ProposedPolicy::default(),
+        &OptimalPolicy,
+        &BaselinePolicy::default(),
+        &fair,
+    ];
+    let plans: Vec<_> = Planner::new(&wf, &servers)
+        .model(ResponseModel::Mm1)
+        .compare(&policies)
+        .into_iter()
+        .collect::<Result<_, _>>()
         .expect("fig6 feasible");
-    let grid = GridSpec::auto_response(&ours, &servers, model);
-    let base = baseline_allocate(&wf, &servers, model).expect("fig6 feasible");
-    let base_eq = baseline_allocate_split(&wf, &servers, model, SplitPolicy::Equilibrium)
-        .expect("fig6 feasible");
-    let (_, opt) = optimal_allocate(&wf, &servers, &grid, Objective::Mean, model)
-        .expect("fig6 feasible");
-    let s_ours = score_allocation_with(&wf, &ours, &servers, &grid, model);
-    let s_base = score_allocation_with(&wf, &base, &servers, &grid, model);
-    let s_base_eq = score_allocation_with(&wf, &base_eq, &servers, &grid, model);
 
     println!("Fig.7 / Table 2 (analytic, M/M/1 model, λ_DAP = 8/4/2, μ = 9..4):");
     println!("{:<14} {:>10} {:>10}", "scheme", "mean", "variance");
-    println!("{:<14} {:>10.4} {:>10.4}", "ours", s_ours.mean, s_ours.var);
-    println!("{:<14} {:>10.4} {:>10.4}", "optimal", opt.mean, opt.var);
-    println!("{:<14} {:>10.4} {:>10.4}", "baseline", s_base.mean, s_base.var);
-    println!("{:<14} {:>10.4} {:>10.4}", "fair-baseline", s_base_eq.mean, s_base_eq.var);
+    for plan in &plans {
+        println!(
+            "{:<14} {:>10.4} {:>10.4}",
+            plan.policy_name, plan.score.mean, plan.score.var
+        );
+    }
+    let (ours, base) = (&plans[0].score, &plans[2].score);
     println!(
         "improvement over baseline: mean {:.1}%  variance {:.1}%",
-        100.0 * (s_base.mean - s_ours.mean) / s_base.mean,
-        100.0 * (s_base.var - s_ours.var) / s_base.var
+        100.0 * (base.mean - ours.mean) / base.mean,
+        100.0 * (base.var - ours.var) / base.var
     );
     0
 }

@@ -1,0 +1,369 @@
+//! The unified planning surface: one builder, pluggable policies.
+//!
+//! The paper contributes a *family* of allocation/rate-scheduling
+//! algorithms (Alg. 1–3) evaluated against a heuristic baseline and an
+//! exhaustive optimum. [`Planner`] is the single entry point for all of
+//! them: configure the request once (workflow, pool, queueing model,
+//! objective, optional grid), then evaluate any [`AllocationPolicy`] —
+//! the paper's schemes or your own.
+//!
+//! ```no_run
+//! use dcflow::prelude::*;
+//!
+//! let servers = Server::pool_exponential(&[9.0, 8.0, 7.0, 6.0, 5.0, 4.0]);
+//! let wf = Workflow::fig6();
+//!
+//! let planner = Planner::new(&wf, &servers)
+//!     .model(ResponseModel::Mm1)
+//!     .objective(Objective::Mean);
+//!
+//! // One policy:
+//! let plan = planner.plan(&ProposedPolicy::default()).expect("feasible");
+//! println!("{}: mean={:.4} p99={:.4}", plan.policy_name, plan.score.mean, plan.score.p99);
+//!
+//! // The Table-2 bake-off, every candidate scored on one common grid:
+//! for plan in planner
+//!     .compare(&[&ProposedPolicy::default(), &BaselinePolicy::default(), &OptimalPolicy])
+//!     .into_iter()
+//!     .flatten()
+//! {
+//!     println!("{:<12} mean={:.4}", plan.policy_name, plan.score.mean);
+//! }
+//! ```
+//!
+//! The legacy free functions (`sdcc_allocate`, `baseline_allocate`,
+//! `proposed_allocate`, `optimal_allocate`) survive as deprecated shims
+//! over this module — see [`crate::sched::compat`].
+
+pub mod policy;
+
+pub use policy::{
+    AllocationPolicy, BaselinePolicy, OptimalPolicy, PlanContext, ProposedPolicy, SdccPolicy,
+};
+
+use crate::compose::grid::GridSpec;
+use crate::compose::score::{score_allocation_with, Score};
+use crate::flow::Workflow;
+use crate::sched::algorithms::allocate_with;
+use crate::sched::multijob::{multijob_allocate, JobPlan};
+use crate::sched::response::ResponseModel;
+use crate::sched::server::Server;
+use crate::sched::{Allocation, Objective, SchedError};
+
+/// Where a [`Plan`]'s numbers came from: the evaluation configuration
+/// the planner actually used (useful for reproducing a score and for
+/// scoring other allocations on the same grid).
+#[derive(Clone, Copy, Debug)]
+pub struct Diagnostics {
+    /// Queueing model used for response laws.
+    pub model: ResponseModel,
+    /// Objective the policy optimized.
+    pub objective: Objective,
+    /// Grid the score was computed on.
+    pub grid: GridSpec,
+    /// True when every queue in the allocation was stable.
+    pub stable: bool,
+}
+
+/// The outcome of planning one workflow under one policy.
+#[derive(Clone, Debug)]
+pub struct Plan {
+    /// The rate-scheduled server assignment.
+    pub allocation: Allocation,
+    /// Exact analytic score of the allocation.
+    pub score: Score,
+    /// Which policy produced it (from [`AllocationPolicy::name`]).
+    pub policy_name: String,
+    /// Evaluation configuration used.
+    pub diagnostics: Diagnostics,
+}
+
+impl Plan {
+    /// The score component the configured objective minimizes (smaller
+    /// is better).
+    pub fn objective_key(&self) -> f64 {
+        self.diagnostics.objective.key(&self.score)
+    }
+}
+
+/// Builder-style planner over one workflow and one server pool.
+///
+/// Defaults: [`ResponseModel::Mm1`], [`Objective::Mean`], and one
+/// auto-sized *evaluation grid* per invocation — response-aware,
+/// derived from the Alg. 1/2 seed allocation (falling back to the
+/// pool-wide service-law grid when no seed exists). Policies search
+/// and plans are scored on that same grid, so a policy that optimizes
+/// on the grid is judged on the grid it optimized. See the
+/// [module docs](self) for a walkthrough.
+#[derive(Clone, Copy, Debug)]
+pub struct Planner<'a> {
+    wf: &'a Workflow,
+    servers: &'a [Server],
+    model: ResponseModel,
+    objective: Objective,
+    grid: Option<GridSpec>,
+}
+
+impl<'a> Planner<'a> {
+    /// Plan `wf` over `servers` with default model/objective/grid.
+    pub fn new(wf: &'a Workflow, servers: &'a [Server]) -> Planner<'a> {
+        Planner {
+            wf,
+            servers,
+            model: ResponseModel::Mm1,
+            objective: Objective::Mean,
+            grid: None,
+        }
+    }
+
+    /// Select the queueing model (default [`ResponseModel::Mm1`]).
+    #[must_use]
+    pub fn model(mut self, model: ResponseModel) -> Planner<'a> {
+        self.model = model;
+        self
+    }
+
+    /// Select the objective (default [`Objective::Mean`]).
+    #[must_use]
+    pub fn objective(mut self, objective: Objective) -> Planner<'a> {
+        self.objective = objective;
+        self
+    }
+
+    /// Pin the evaluation grid (default: auto-sized, see
+    /// [`Planner`] docs).
+    #[must_use]
+    pub fn grid(mut self, grid: GridSpec) -> Planner<'a> {
+        self.grid = Some(grid);
+        self
+    }
+
+    /// The single evaluation grid for this invocation: the pinned one,
+    /// else a response-aware grid sized from the Alg. 1/2 seed
+    /// allocation (the legacy call sites sized their optimal-search
+    /// grids from an allocation's response laws the same way), else
+    /// the pool-wide service-law grid when no seed is feasible.
+    fn eval_grid(&self) -> GridSpec {
+        if let Some(grid) = self.grid {
+            return grid;
+        }
+        match allocate_with(self.wf, self.servers, self.model) {
+            Ok(seed) => GridSpec::auto_response(&seed, self.servers, self.model),
+            Err(_) => GridSpec::auto_pool(self.wf, self.servers),
+        }
+    }
+
+    /// The context handed to policies at allocation time.
+    fn ctx(&self) -> PlanContext<'a> {
+        PlanContext {
+            wf: self.wf,
+            servers: self.servers,
+            model: self.model,
+            objective: self.objective,
+            grid: self.eval_grid(),
+        }
+    }
+
+    /// Run a policy and return the raw allocation without the final
+    /// exact scoring — the cheap path for callers (like the
+    /// coordinator's dispatch loop) that only need the assignment.
+    /// (The context still carries the evaluation grid, so this path
+    /// pays one Alg. 1/2 seed pass and grid sizing — microseconds —
+    /// but skips all grid scoring for policies that don't score.)
+    pub fn allocate(&self, policy: &dyn AllocationPolicy) -> Result<Allocation, SchedError> {
+        policy.allocate(&self.ctx())
+    }
+
+    /// Run a policy and score its allocation exactly, on this
+    /// invocation's evaluation grid (the same grid the policy saw in
+    /// its [`PlanContext`]).
+    pub fn plan(&self, policy: &dyn AllocationPolicy) -> Result<Plan, SchedError> {
+        let ctx = self.ctx();
+        let allocation = policy.allocate(&ctx)?;
+        Ok(self.finish(policy.name(), allocation, ctx.grid))
+    }
+
+    /// Evaluate several policies on one *common* grid (the Fig. 7 /
+    /// Table 2 bake-off) — the same evaluation grid each policy
+    /// searched on. Results align with the input order; a policy that
+    /// cannot allocate yields its error instead of poisoning the whole
+    /// comparison.
+    pub fn compare(
+        &self,
+        policies: &[&dyn AllocationPolicy],
+    ) -> Vec<Result<Plan, SchedError>> {
+        let ctx = self.ctx();
+        policies
+            .iter()
+            .map(|p| {
+                p.allocate(&ctx)
+                    .map(|alloc| self.finish(p.name(), alloc, ctx.grid))
+            })
+            .collect()
+    }
+
+    /// Partition the pool across several concurrent workflows and plan
+    /// each (wraps [`multijob_allocate`] with this planner's model and
+    /// objective). Only the pool, model and objective carry over: the
+    /// builder's own workflow is not implicitly part of the job set,
+    /// and a pinned [`Planner::grid`] is not used — each job is scored
+    /// on its own response-aware grid inside the partitioner.
+    pub fn plan_jobs(&self, jobs: &[&Workflow]) -> Result<Vec<JobPlan>, SchedError> {
+        multijob_allocate(jobs, self.servers, self.model, self.objective)
+    }
+
+    fn finish(&self, policy_name: String, allocation: Allocation, grid: GridSpec) -> Plan {
+        let score = score_allocation_with(self.wf, &allocation, self.servers, &grid, self.model);
+        let stable = score.is_stable();
+        Plan {
+            allocation,
+            score,
+            policy_name,
+            diagnostics: Diagnostics {
+                model: self.model,
+                objective: self.objective,
+                grid,
+                stable,
+            },
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sched::response::{mean_response, ResponseModel};
+    use crate::sched::schedule_rates;
+
+    fn fig6() -> (Workflow, Vec<Server>) {
+        (
+            Workflow::fig6(),
+            Server::pool_exponential(&[9.0, 8.0, 7.0, 6.0, 5.0, 4.0]),
+        )
+    }
+
+    #[test]
+    fn plan_scores_each_builtin_policy() {
+        let (wf, servers) = fig6();
+        let planner = Planner::new(&wf, &servers);
+        for policy in [
+            &SdccPolicy as &dyn AllocationPolicy,
+            &BaselinePolicy::default(),
+            &ProposedPolicy::default(),
+            &OptimalPolicy,
+        ] {
+            let plan = planner.plan(policy).expect("fig6 is feasible");
+            assert!(plan.diagnostics.stable, "{} unstable", plan.policy_name);
+            assert!(plan.score.mean > 0.0 && plan.score.p99 > plan.score.mean);
+            plan.allocation.validate(&wf, servers.len()).unwrap();
+        }
+    }
+
+    #[test]
+    fn compare_reproduces_table2_ordering() {
+        // the paper's Fig. 7 / Table 2 claim: optimal <= proposed <= baseline
+        let (wf, servers) = fig6();
+        let plans: Vec<Plan> = Planner::new(&wf, &servers)
+            .objective(Objective::Mean)
+            .compare(&[&ProposedPolicy::default(), &BaselinePolicy::default(), &OptimalPolicy])
+            .into_iter()
+            .collect::<Result<_, _>>()
+            .expect("all feasible on fig6");
+        let (ours, base, opt) = (&plans[0], &plans[1], &plans[2]);
+        assert_eq!(ours.policy_name, "proposed");
+        assert_eq!(base.policy_name, "baseline");
+        assert_eq!(opt.policy_name, "optimal");
+        // common grid across the whole comparison
+        assert_eq!(ours.diagnostics.grid, base.diagnostics.grid);
+        assert_eq!(ours.diagnostics.grid, opt.diagnostics.grid);
+        assert!(opt.score.mean <= ours.score.mean + 1e-6);
+        assert!(ours.score.mean <= base.score.mean + 1e-9);
+    }
+
+    #[test]
+    fn pinned_grid_is_respected() {
+        let (wf, servers) = fig6();
+        let grid = GridSpec::new(0.02, 2048);
+        let plan = Planner::new(&wf, &servers)
+            .grid(grid)
+            .plan(&SdccPolicy)
+            .unwrap();
+        assert_eq!(plan.diagnostics.grid, grid);
+    }
+
+    #[test]
+    fn objective_flows_through() {
+        let (wf, servers) = fig6();
+        let by_mean = Planner::new(&wf, &servers)
+            .objective(Objective::Mean)
+            .plan(&ProposedPolicy::default())
+            .unwrap();
+        let by_var = Planner::new(&wf, &servers)
+            .objective(Objective::Variance)
+            .plan(&ProposedPolicy::default())
+            .unwrap();
+        assert!(by_var.score.var <= by_mean.score.var + 1e-9);
+        assert!(by_mean.objective_key() == by_mean.score.mean);
+        assert!(by_var.objective_key() == by_var.score.var);
+    }
+
+    #[test]
+    fn infeasible_policies_do_not_poison_compare() {
+        // 2-slot tandem at a load only good placements survive: the
+        // whole comparison still returns per-policy results
+        let wf = Workflow::tandem(2, 20.0);
+        let servers = Server::pool_exponential(&[3.0, 4.0]);
+        let results = Planner::new(&wf, &servers)
+            .compare(&[&ProposedPolicy::default(), &BaselinePolicy::default()]);
+        assert_eq!(results.len(), 2);
+        for r in results {
+            assert!(r.is_err(), "overload must be infeasible");
+        }
+    }
+
+    #[test]
+    fn plan_jobs_partitions_the_pool() {
+        let heavy = Workflow::fig6();
+        let light = Workflow::tandem(3, 1.0);
+        let pool =
+            Server::pool_exponential(&[14.0, 12.0, 10.0, 9.0, 8.0, 7.0, 6.0, 5.0, 4.0]);
+        let plans = Planner::new(&heavy, &pool)
+            .plan_jobs(&[&heavy, &light])
+            .unwrap();
+        assert_eq!(plans.len(), 2);
+        let mut used: Vec<usize> = plans
+            .iter()
+            .flat_map(|p| p.alloc.slot_server.clone())
+            .collect();
+        used.sort_unstable();
+        let before = used.len();
+        used.dedup();
+        assert_eq!(before, used.len(), "jobs must not share servers");
+    }
+
+    #[test]
+    fn user_policies_plug_in() {
+        // a custom policy: identity placement + equilibrium rates
+        struct IdentityPolicy;
+        impl AllocationPolicy for IdentityPolicy {
+            fn name(&self) -> String {
+                "identity".into()
+            }
+            fn allocate(&self, ctx: &PlanContext<'_>) -> Result<Allocation, SchedError> {
+                schedule_rates(
+                    ctx.wf,
+                    (0..ctx.wf.slots()).collect(),
+                    ctx.servers,
+                    ctx.model,
+                )
+            }
+        }
+        let (wf, servers) = fig6();
+        let plan = Planner::new(&wf, &servers).plan(&IdentityPolicy).unwrap();
+        assert_eq!(plan.policy_name, "identity");
+        assert_eq!(plan.allocation.slot_server, vec![0, 1, 2, 3, 4, 5]);
+        assert!(plan.diagnostics.stable);
+        // and the context exposes a usable model for custom logic
+        assert!(mean_response(ResponseModel::Mm1, &servers[0].dist, 1.0).is_some());
+    }
+}

@@ -1,0 +1,149 @@
+//! Allocation policies — the pluggable strategy behind a
+//! [`Planner`](crate::plan::Planner).
+//!
+//! Each paper algorithm is one [`AllocationPolicy`] implementation;
+//! user code can add its own by implementing the trait (the
+//! [`PlanContext`] hands a policy everything the built-ins use).
+
+use crate::compose::grid::GridSpec;
+use crate::flow::Workflow;
+use crate::sched::algorithms::{allocate_with, baseline_allocate_split, SplitPolicy};
+use crate::sched::optimal::exhaustive;
+use crate::sched::refine::refine;
+use crate::sched::response::ResponseModel;
+use crate::sched::server::Server;
+use crate::sched::{Allocation, Objective, SchedError};
+
+/// Everything a policy may consult when producing an allocation: the
+/// workflow, the believed server pool, the queueing model, the
+/// administrator's objective, and the evaluation grid (sized by the
+/// [`Planner`](crate::plan::Planner) when the caller did not pin one).
+#[derive(Clone, Copy, Debug)]
+pub struct PlanContext<'a> {
+    /// Workflow being planned.
+    pub wf: &'a Workflow,
+    /// Server pool (believed laws).
+    pub servers: &'a [Server],
+    /// Queueing model turning service laws into response laws.
+    pub model: ResponseModel,
+    /// What the administrator optimizes.
+    pub objective: Objective,
+    /// Evaluation grid for policies that score candidates exactly.
+    pub grid: GridSpec,
+}
+
+/// A resource-allocation strategy: maps a [`PlanContext`] to a
+/// rate-scheduled [`Allocation`]. Implement this to plug a custom
+/// scheme into [`Planner`](crate::plan::Planner) next to the paper's
+/// algorithms.
+pub trait AllocationPolicy {
+    /// Short human-readable policy name (appears in [`Plan`] rows).
+    ///
+    /// [`Plan`]: crate::plan::Plan
+    fn name(&self) -> String;
+
+    /// Produce an allocation for the context, or report why none
+    /// exists.
+    fn allocate(&self, ctx: &PlanContext<'_>) -> Result<Allocation, SchedError>;
+}
+
+/// Algorithm 1 + 2 exactly as the paper states them: sort-matching
+/// placement plus equilibrium rate scheduling, no refinement.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct SdccPolicy;
+
+impl AllocationPolicy for SdccPolicy {
+    fn name(&self) -> String {
+        "sdcc".into()
+    }
+
+    fn allocate(&self, ctx: &PlanContext<'_>) -> Result<Allocation, SchedError> {
+        allocate_with(ctx.wf, ctx.servers, ctx.model)
+    }
+}
+
+/// The §3 heuristic baseline: fastest servers to serial slots first,
+/// fork rates split per `split` (the paper's comparator uses
+/// [`SplitPolicy::Uniform`], the "homogeneous assumption"; the
+/// equilibrium split is the `fair-baseline` ablation).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct BaselinePolicy {
+    /// How fork rates are split when the spec leaves them open.
+    pub split: SplitPolicy,
+}
+
+impl Default for BaselinePolicy {
+    fn default() -> Self {
+        BaselinePolicy {
+            split: SplitPolicy::Uniform,
+        }
+    }
+}
+
+impl AllocationPolicy for BaselinePolicy {
+    fn name(&self) -> String {
+        match self.split {
+            SplitPolicy::Uniform => "baseline".into(),
+            SplitPolicy::Equilibrium => "fair-baseline".into(),
+        }
+    }
+
+    fn allocate(&self, ctx: &PlanContext<'_>) -> Result<Allocation, SchedError> {
+        baseline_allocate_split(ctx.wf, ctx.servers, ctx.model, self.split)
+    }
+}
+
+/// The paper's full proposed scheme: Alg. 1/2 seed plus the §3
+/// min-max balancing refinement (`rounds` hill-climb rounds, scored
+/// on the context's evaluation grid). With the planner's default grid
+/// — response-aware, sized from the same Alg. 1/2 seed — and
+/// `rounds == 8` this is the exact legacy `proposed_allocate`
+/// pipeline, bit for bit.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ProposedPolicy {
+    /// Maximum pairwise-swap refinement rounds.
+    pub rounds: usize,
+}
+
+impl Default for ProposedPolicy {
+    fn default() -> Self {
+        ProposedPolicy { rounds: 8 }
+    }
+}
+
+impl AllocationPolicy for ProposedPolicy {
+    fn name(&self) -> String {
+        "proposed".into()
+    }
+
+    fn allocate(&self, ctx: &PlanContext<'_>) -> Result<Allocation, SchedError> {
+        let seed = allocate_with(ctx.wf, ctx.servers, ctx.model)?;
+        let (alloc, _) = refine(
+            ctx.wf,
+            seed,
+            ctx.servers,
+            &ctx.grid,
+            ctx.model,
+            ctx.objective,
+            self.rounds,
+        )?;
+        Ok(alloc)
+    }
+}
+
+/// The exhaustive-search reference ("optimal" in the paper's Fig. 7 /
+/// Table 2): every injective assignment ranked by the cheap mean-RT
+/// estimator, shortlist scored exactly on the context grid.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct OptimalPolicy;
+
+impl AllocationPolicy for OptimalPolicy {
+    fn name(&self) -> String {
+        "optimal".into()
+    }
+
+    fn allocate(&self, ctx: &PlanContext<'_>) -> Result<Allocation, SchedError> {
+        exhaustive(ctx.wf, ctx.servers, &ctx.grid, ctx.objective, ctx.model)
+            .map(|(alloc, _)| alloc)
+    }
+}

@@ -1,5 +1,13 @@
 //! Artifact loading and execution over the PJRT C API (`xla` crate).
+//!
+//! This checkout links [`crate::runtime::xla_stub`] instead of the
+//! real crate (see `runtime::xla_backend`): [`ArtifactRegistry::open`]
+//! then fails cleanly and every caller falls back to the native
+//! engine. On the build image with the vendored `xla` crate, re-point
+//! the `xla_backend` re-export and this module runs the real PJRT
+//! path unchanged.
 
+use crate::runtime::xla_backend as xla;
 use crate::util::json::Json;
 use std::collections::HashMap;
 use std::path::{Path, PathBuf};

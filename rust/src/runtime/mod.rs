@@ -13,6 +13,22 @@
 
 pub mod executable;
 pub mod scorer;
+pub mod xla_stub;
+
+/// The linked XLA backend — currently always the inert [`xla_stub`].
+/// Wiring the real vendored `xla` crate in means adding the dependency
+/// to rust/Cargo.toml (build image only) and pointing this re-export at
+/// it; the `pjrt` feature below guards against doing one without the
+/// other.
+pub use self::xla_stub as xla_backend;
+
+#[cfg(feature = "pjrt")]
+compile_error!(
+    "the `pjrt` feature requires the vendored `xla` crate chain, which this \
+     checkout does not declare: add the `xla` dependency to rust/Cargo.toml \
+     on the build image and re-point `runtime::xla_backend` at `::xla` \
+     instead of `xla_stub`"
+);
 
 pub use executable::{ArtifactRegistry, RuntimeError};
 pub use scorer::{BatchScorer, ScorerBackend};

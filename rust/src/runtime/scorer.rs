@@ -365,7 +365,7 @@ pub fn is_fig6_shape(wf: &Workflow) -> bool {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::sched::{baseline_allocate, sdcc_allocate};
+    use crate::sched::{allocate_with, baseline_allocate_split, SplitPolicy};
 
     fn fig6() -> (Workflow, Vec<Server>) {
         (
@@ -384,8 +384,9 @@ mod tests {
     #[test]
     fn native_scorer_matches_direct_scoring() {
         let (wf, servers) = fig6();
-        let a1 = sdcc_allocate(&wf, &servers).unwrap();
-        let a2 = baseline_allocate(&wf, &servers, ResponseModel::Mm1).unwrap();
+        let a1 = allocate_with(&wf, &servers, ResponseModel::Mm1).unwrap();
+        let a2 = baseline_allocate_split(&wf, &servers, ResponseModel::Mm1, SplitPolicy::Uniform)
+            .unwrap();
         let grid = GridSpec::auto(&a1, &servers);
         let mut scorer = BatchScorer::native();
         let triples = scorer.score_batch(
@@ -408,8 +409,9 @@ mod tests {
             return;
         }
         let (wf, servers) = fig6();
-        let a1 = sdcc_allocate(&wf, &servers).unwrap();
-        let a2 = baseline_allocate(&wf, &servers, ResponseModel::Mm1).unwrap();
+        let a1 = allocate_with(&wf, &servers, ResponseModel::Mm1).unwrap();
+        let a2 = baseline_allocate_split(&wf, &servers, ResponseModel::Mm1, SplitPolicy::Uniform)
+            .unwrap();
         let grid = GridSpec::auto(&a1, &servers);
         let reg = ArtifactRegistry::open(&dir).unwrap();
         let mut xla_scorer = BatchScorer::xla(reg).unwrap();

@@ -1,0 +1,115 @@
+//! Inert stand-in for the vendored `xla` crate (PJRT C-API bindings).
+//!
+//! The build image that carries the real `xla` crate chain is not
+//! available everywhere (CI, plain dev boxes), so the default build
+//! links this stub instead: it exposes the exact slice of the `xla`
+//! API that [`crate::runtime::executable`] compiles against, and every
+//! entry point fails with a descriptive error. [`ArtifactRegistry::open`]
+//! therefore errors out cleanly and [`crate::runtime::BatchScorer`]
+//! falls back to the native engine — same behavior as a machine without
+//! artifacts. To link the real backend, add the vendored `xla`
+//! dependency on the build image and re-point
+//! `runtime::xla_backend` at it (the `pjrt` feature is a tripwire that
+//! keeps those two steps together).
+//!
+//! [`ArtifactRegistry::open`]: crate::runtime::executable::ArtifactRegistry::open
+
+use std::path::Path;
+
+/// Error type mirroring `xla::Error`.
+#[derive(Debug, Clone)]
+pub struct Error(pub String);
+
+impl std::fmt::Display for Error {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}", self.0)
+    }
+}
+
+impl std::error::Error for Error {}
+
+fn disabled<T>() -> Result<T, Error> {
+    Err(Error(
+        "compiled without the `pjrt` feature: no PJRT/XLA backend linked".into(),
+    ))
+}
+
+/// Stand-in for `xla::PjRtClient`. Construction always fails.
+pub struct PjRtClient;
+
+impl PjRtClient {
+    /// Mirrors `xla::PjRtClient::cpu()`; always errors in the stub.
+    pub fn cpu() -> Result<PjRtClient, Error> {
+        disabled()
+    }
+
+    /// Mirrors `PjRtClient::compile`; unreachable (no client exists).
+    pub fn compile(&self, _comp: &XlaComputation) -> Result<PjRtLoadedExecutable, Error> {
+        disabled()
+    }
+}
+
+/// Stand-in for `xla::HloModuleProto`.
+pub struct HloModuleProto;
+
+impl HloModuleProto {
+    /// Mirrors `HloModuleProto::from_text_file`; always errors.
+    pub fn from_text_file(_path: impl AsRef<Path>) -> Result<HloModuleProto, Error> {
+        disabled()
+    }
+}
+
+/// Stand-in for `xla::XlaComputation`.
+pub struct XlaComputation;
+
+impl XlaComputation {
+    /// Mirrors `XlaComputation::from_proto`.
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation
+    }
+}
+
+/// Stand-in for `xla::Literal` (host tensor).
+pub struct Literal;
+
+impl Literal {
+    /// Mirrors `Literal::vec1`.
+    pub fn vec1(_data: &[f32]) -> Literal {
+        Literal
+    }
+
+    /// Mirrors `Literal::reshape`; unreachable in the stub.
+    pub fn reshape(&self, _dims: &[i64]) -> Result<Literal, Error> {
+        disabled()
+    }
+
+    /// Mirrors `Literal::to_tuple`; unreachable in the stub.
+    pub fn to_tuple(&self) -> Result<Vec<Literal>, Error> {
+        disabled()
+    }
+
+    /// Mirrors `Literal::to_vec`; unreachable in the stub.
+    pub fn to_vec<T>(&self) -> Result<Vec<T>, Error> {
+        disabled()
+    }
+}
+
+/// Stand-in for `xla::PjRtBuffer` (device tensor).
+pub struct PjRtBuffer;
+
+impl PjRtBuffer {
+    /// Mirrors `PjRtBuffer::to_literal_sync`; unreachable in the stub.
+    pub fn to_literal_sync(&self) -> Result<Literal, Error> {
+        disabled()
+    }
+}
+
+/// Stand-in for `xla::PjRtLoadedExecutable`.
+pub struct PjRtLoadedExecutable;
+
+impl PjRtLoadedExecutable {
+    /// Mirrors `PjRtLoadedExecutable::execute`; unreachable in the stub.
+    pub fn execute<T>(&self, _args: &[T]) -> Result<Vec<Vec<PjRtBuffer>>, Error> {
+        disabled()
+    }
+}

@@ -1,13 +1,14 @@
-//! The paper's allocation algorithms.
+//! The paper's allocation algorithms (engine layer — the public
+//! surface is [`crate::plan::Planner`] with its policy objects).
 //!
-//! * [`sdcc_allocate`] — Algorithm 1 + Algorithm 2, applied recursively
+//! * [`allocate_with`] — Algorithm 1 + Algorithm 2, applied recursively
 //!   from the workflow root (Algorithm 3's core step): slower servers go
 //!   to lower-arrival-rate DCCs, then fork rates are set by the
-//!   equilibrium of Algorithm 2.
-//! * [`baseline_allocate`] — the §3 heuristic baseline: fastest servers
-//!   to SDCCs first ("intuitively bottleneck servers"), PDCCs get the
-//!   rest; rate scheduling is the same equilibrium ("to be fair" — the
-//!   paper grants the baseline optimal task scheduling too).
+//!   equilibrium of Algorithm 2. Behind [`crate::plan::SdccPolicy`].
+//! * [`baseline_allocate_split`] — the §3 heuristic baseline: fastest
+//!   servers to SDCCs first ("intuitively bottleneck servers"), PDCCs
+//!   get the rest; fork splits per [`SplitPolicy`]. Behind
+//!   [`crate::plan::BaselinePolicy`].
 //! * [`schedule_rates`] — phase 2 alone, for external assignments (the
 //!   optimal search and the coordinator's re-planning reuse it).
 //!
@@ -31,13 +32,8 @@ use crate::sched::equilibrium::{equilibrium, uniform_split, BranchRt, FnBranch};
 use crate::sched::response::{mean_response, ResponseModel};
 use crate::sched::server::Server;
 
-/// Paper's scheme (Alg. 1 + 2 + equilibrium) with the default M/M/1
-/// response model.
-pub fn sdcc_allocate(wf: &Workflow, servers: &[Server]) -> Result<Allocation, SchedError> {
-    allocate_with(wf, servers, ResponseModel::Mm1)
-}
-
-/// Paper's scheme with an explicit response model.
+/// Paper's scheme (Alg. 1 + 2 + equilibrium) with an explicit response
+/// model.
 pub fn allocate_with(
     wf: &Workflow,
     servers: &[Server],
@@ -61,18 +57,9 @@ pub enum SplitPolicy {
     Uniform,
 }
 
-/// §3 heuristic baseline: fastest servers to serial slots first, uniform
-/// (homogeneous-assumption) fork splits. See [`SplitPolicy::Uniform`].
-pub fn baseline_allocate(
-    wf: &Workflow,
-    servers: &[Server],
-    model: ResponseModel,
-) -> Result<Allocation, SchedError> {
-    baseline_allocate_split(wf, servers, model, SplitPolicy::Uniform)
-}
-
-/// Baseline with an explicit split policy (`Equilibrium` = the paper's
-/// "to be fair, optimal task scheduling" variant).
+/// Baseline with an explicit split policy (`Uniform` = the paper's
+/// Table-2 comparator, `Equilibrium` = the "to be fair, optimal task
+/// scheduling" variant).
 pub fn baseline_allocate_split(
     wf: &Workflow,
     servers: &[Server],

@@ -12,7 +12,7 @@
 use crate::compose::grid::GridSpec;
 use crate::compose::score::score_allocation_with;
 use crate::flow::{Dcc, Workflow};
-use crate::sched::refine::proposed_allocate;
+use crate::sched::refine::propose;
 use crate::sched::response::ResponseModel;
 use crate::sched::server::Server;
 use crate::sched::{Objective, SchedError};
@@ -38,7 +38,7 @@ pub fn scale_rates(wf: &Workflow, k: f64) -> Workflow {
 /// Feasibility of the workflow at load scale `k` for this pool.
 fn feasible(wf: &Workflow, servers: &[Server], model: ResponseModel, k: f64) -> bool {
     let scaled = scale_rates(wf, k);
-    proposed_allocate(&scaled, servers, model, Objective::Mean)
+    propose(&scaled, servers, model, Objective::Mean)
         .map(|(_, s)| s.is_stable())
         .unwrap_or(false)
 }
@@ -102,7 +102,7 @@ pub fn max_throughput_under_sla(
 ) -> Result<f64, SchedError> {
     let meets = |k: f64| -> bool {
         let scaled = scale_rates(wf, k);
-        let Ok((alloc, _)) = proposed_allocate(&scaled, servers, model, Objective::Mean)
+        let Ok((alloc, _)) = propose(&scaled, servers, model, Objective::Mean)
         else {
             return false;
         };

@@ -1,0 +1,159 @@
+//! Deprecated free-function shims over the [`crate::plan`] surface.
+//!
+//! These are the crate's original five mutually-inconsistent entry
+//! points. They survive for source compatibility only: each is a thin
+//! wrapper over [`Planner`] with the matching policy object, returns
+//! exactly the allocation the new path produces, and carries a
+//! `#[deprecated]` pointer at its replacement. New code (and everything
+//! inside this crate outside this module and its equivalence tests)
+//! uses [`Planner`] directly.
+
+use crate::compose::grid::GridSpec;
+use crate::compose::score::Score;
+use crate::flow::Workflow;
+use crate::plan::{BaselinePolicy, OptimalPolicy, Planner, ProposedPolicy, SdccPolicy};
+use crate::sched::allocation::{Allocation, SchedError};
+use crate::sched::response::ResponseModel;
+use crate::sched::server::Server;
+use crate::sched::Objective;
+
+/// Paper's scheme (Alg. 1 + 2 + equilibrium) with the default M/M/1
+/// response model.
+#[deprecated(
+    since = "0.2.0",
+    note = "use `Planner::new(wf, servers).allocate(&SdccPolicy)`"
+)]
+pub fn sdcc_allocate(wf: &Workflow, servers: &[Server]) -> Result<Allocation, SchedError> {
+    Planner::new(wf, servers).allocate(&SdccPolicy)
+}
+
+/// §3 heuristic baseline with uniform (homogeneous-assumption) fork
+/// splits.
+#[deprecated(
+    since = "0.2.0",
+    note = "use `Planner::new(wf, servers).model(model).allocate(&BaselinePolicy::default())`"
+)]
+pub fn baseline_allocate(
+    wf: &Workflow,
+    servers: &[Server],
+    model: ResponseModel,
+) -> Result<Allocation, SchedError> {
+    Planner::new(wf, servers)
+        .model(model)
+        .allocate(&BaselinePolicy::default())
+}
+
+/// The paper's full proposed scheme (Alg. 1/2 seed + §3 balancing).
+/// Returns the same `(Allocation, Score)` the legacy pipeline did: the
+/// planner's evaluation grid is the seed-derived response grid the
+/// legacy function scored on.
+#[deprecated(
+    since = "0.2.0",
+    note = "use `Planner::new(wf, servers).model(model).objective(objective).plan(&ProposedPolicy::default())`"
+)]
+pub fn proposed_allocate(
+    wf: &Workflow,
+    servers: &[Server],
+    model: ResponseModel,
+    objective: Objective,
+) -> Result<(Allocation, Score), SchedError> {
+    let plan = Planner::new(wf, servers)
+        .model(model)
+        .objective(objective)
+        .plan(&ProposedPolicy::default())?;
+    Ok((plan.allocation, plan.score))
+}
+
+/// Exhaustive-search optimal reference on an explicit grid.
+#[deprecated(
+    since = "0.2.0",
+    note = "use `Planner::new(wf, servers).model(model).objective(objective).grid(grid).plan(&OptimalPolicy)`"
+)]
+pub fn optimal_allocate(
+    wf: &Workflow,
+    servers: &[Server],
+    grid: &GridSpec,
+    objective: Objective,
+    model: ResponseModel,
+) -> Result<(Allocation, Score), SchedError> {
+    let plan = Planner::new(wf, servers)
+        .model(model)
+        .objective(objective)
+        .grid(*grid)
+        .plan(&OptimalPolicy)?;
+    Ok((plan.allocation, plan.score))
+}
+
+#[cfg(test)]
+#[allow(deprecated)]
+mod tests {
+    use super::*;
+    use crate::plan::AllocationPolicy;
+    use crate::sched::algorithms::{allocate_with, baseline_allocate_split, SplitPolicy};
+    use crate::sched::optimal::exhaustive;
+    use crate::sched::refine::propose;
+
+    fn fig6() -> (Workflow, Vec<Server>) {
+        (
+            Workflow::fig6(),
+            Server::pool_exponential(&[9.0, 8.0, 7.0, 6.0, 5.0, 4.0]),
+        )
+    }
+
+    #[test]
+    fn shims_match_engine_bit_for_bit() {
+        let (wf, servers) = fig6();
+        let model = ResponseModel::Mm1;
+        assert_eq!(
+            sdcc_allocate(&wf, &servers).unwrap(),
+            allocate_with(&wf, &servers, model).unwrap()
+        );
+        assert_eq!(
+            baseline_allocate(&wf, &servers, model).unwrap(),
+            baseline_allocate_split(&wf, &servers, model, SplitPolicy::Uniform).unwrap()
+        );
+        let (a_shim, s_shim) = proposed_allocate(&wf, &servers, model, Objective::Mean).unwrap();
+        let (a_engine, s_engine) = propose(&wf, &servers, model, Objective::Mean).unwrap();
+        assert_eq!(a_shim, a_engine);
+        // same seed-derived evaluation grid => bit-identical scores too
+        assert_eq!(s_shim.mean, s_engine.mean);
+        assert_eq!(s_shim.var, s_engine.var);
+        assert_eq!(s_shim.p99, s_engine.p99);
+        let grid = GridSpec::auto_pool(&wf, &servers);
+        let (o_shim, s_shim) =
+            optimal_allocate(&wf, &servers, &grid, Objective::Mean, model).unwrap();
+        let (o_engine, s_engine) =
+            exhaustive(&wf, &servers, &grid, Objective::Mean, model).unwrap();
+        assert_eq!(o_shim, o_engine);
+        assert_eq!(s_shim.mean, s_engine.mean);
+    }
+
+    #[test]
+    fn shim_errors_match_planner_errors() {
+        let wf = Workflow::fig6();
+        let servers = Server::pool_exponential(&[5.0, 5.5]);
+        let via_shim = sdcc_allocate(&wf, &servers);
+        let via_planner = Planner::new(&wf, &servers).allocate(&SdccPolicy);
+        assert_eq!(via_shim, via_planner);
+        assert!(matches!(
+            via_shim,
+            Err(SchedError::NotEnoughServers { need: 6, have: 2 })
+        ));
+    }
+
+    #[test]
+    fn policy_names_are_stable() {
+        // the names appear in CSVs and reports; keep them pinned
+        assert_eq!(SdccPolicy.name(), "sdcc");
+        assert_eq!(BaselinePolicy::default().name(), "baseline");
+        assert_eq!(
+            BaselinePolicy {
+                split: SplitPolicy::Equilibrium
+            }
+            .name(),
+            "fair-baseline"
+        );
+        assert_eq!(ProposedPolicy::default().name(), "proposed");
+        assert_eq!(OptimalPolicy.name(), "optimal");
+    }
+}

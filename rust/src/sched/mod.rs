@@ -1,29 +1,38 @@
 //! Resource allocation and task (rate) scheduling — the paper's
 //! contribution (Algorithms 1–3).
 //!
-//! * [`sdcc_allocate`] / [`allocate_with`] — the proposed scheme;
-//! * [`baseline_allocate`] — the §3 heuristic comparator;
-//! * [`optimal_allocate`] — exhaustive-search reference;
+//! The public planning surface is [`crate::plan::Planner`] with its
+//! policy objects; this module hosts the engine underneath:
+//!
+//! * [`allocate_with`] — Alg. 1/2 sort-matching + equilibrium rates
+//!   (behind [`crate::plan::SdccPolicy`]);
+//! * [`baseline_allocate_split`] — the §3 heuristic comparator (behind
+//!   [`crate::plan::BaselinePolicy`]);
+//! * [`refine::propose`] / [`refine::refine`] — the §3 min-max
+//!   balancing (behind [`crate::plan::ProposedPolicy`]);
+//! * [`optimal::exhaustive`] — exhaustive-search reference (behind
+//!   [`crate::plan::OptimalPolicy`]);
 //! * [`equilibrium`] — Algorithm 2's rate scheduling;
-//! * [`response`] — service-law → response-law queueing models.
+//! * [`response`] — service-law → response-law queueing models;
+//! * [`multijob`] — pool partitioning across concurrent workflows;
+//! * [`compat`] — the deprecated legacy free functions.
 
 pub mod algorithms;
 pub mod allocation;
 pub mod capacity;
-pub mod multijob;
+pub mod compat;
 pub mod equilibrium;
+pub mod multijob;
 pub mod optimal;
 pub mod refine;
 pub mod response;
 pub mod server;
 
-pub use algorithms::{
-    allocate_with, baseline_allocate, baseline_allocate_split, schedule_rates, sdcc_allocate,
-    SplitPolicy,
-};
+pub use algorithms::{allocate_with, baseline_allocate_split, schedule_rates, SplitPolicy};
 pub use allocation::{Allocation, SchedError};
-pub use optimal::optimal_allocate;
-pub use refine::{proposed_allocate, refine};
+#[allow(deprecated)]
+pub use compat::{baseline_allocate, optimal_allocate, proposed_allocate, sdcc_allocate};
+pub use refine::{propose, refine};
 pub use response::ResponseModel;
 
 use crate::compose::score::Score;
@@ -54,9 +63,8 @@ impl Objective {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::compose::grid::GridSpec;
-    use crate::compose::score::score_allocation_with;
     use crate::flow::{Dcc, Workflow};
+    use crate::plan::{BaselinePolicy, Planner, ProposedPolicy};
     use crate::sched::server::Server;
     use crate::util::prop;
 
@@ -72,18 +80,18 @@ mod tests {
         // the paper's headline claim (Table 2): ours <= baseline in mean,
         // with the full proposed scheme (Alg. 1/2 + §3 balancing)
         let (wf, servers) = fig6();
-        let model = ResponseModel::Mm1;
-        let (ours_alloc, s_ours) =
-            proposed_allocate(&wf, &servers, model, Objective::Mean).unwrap();
-        let grid = GridSpec::auto_response(&ours_alloc, &servers, model);
-        let base = baseline_allocate(&wf, &servers, model).unwrap();
-        let s_base = score_allocation_with(&wf, &base, &servers, &grid, model);
-        assert!(s_ours.is_stable() && s_base.is_stable());
+        let plans: Vec<_> = Planner::new(&wf, &servers)
+            .compare(&[&ProposedPolicy::default(), &BaselinePolicy::default()])
+            .into_iter()
+            .collect::<Result<_, _>>()
+            .unwrap();
+        let (ours, base) = (&plans[0], &plans[1]);
+        assert!(ours.diagnostics.stable && base.diagnostics.stable);
         assert!(
-            s_ours.mean < s_base.mean + 1e-9,
+            ours.score.mean < base.score.mean + 1e-9,
             "ours {} vs baseline {}",
-            s_ours.mean,
-            s_base.mean
+            ours.score.mean,
+            base.score.mean
         );
     }
 
@@ -92,7 +100,7 @@ mod tests {
         // paper §3: "faster servers are placed into the DCC with higher
         // data arrival rates". Fig6 slots 0,1 belong to the λ=8 PDCC.
         let (wf, servers) = fig6();
-        let alloc = sdcc_allocate(&wf, &servers).unwrap();
+        let alloc = allocate_with(&wf, &servers, ResponseModel::Mm1).unwrap();
         let rate_of = |slot: usize| servers[alloc.server_for(slot)].service_rate();
         // λ=8 PDCC (slots 0,1) should hold the two fastest servers
         let mut top: Vec<f64> = (0..6).map(rate_of).collect();
@@ -124,8 +132,13 @@ mod tests {
             let rates: Vec<f64> = (0..wf.slots() + extra).map(|_| g.f64_in(2.0, 20.0)).collect();
             let servers = Server::pool_exponential(&rates);
             for res in [
-                sdcc_allocate(&wf, &servers),
-                baseline_allocate(&wf, &servers, ResponseModel::Mm1),
+                allocate_with(&wf, &servers, ResponseModel::Mm1),
+                baseline_allocate_split(
+                    &wf,
+                    &servers,
+                    ResponseModel::Mm1,
+                    SplitPolicy::Uniform,
+                ),
             ] {
                 match res {
                     Ok(a) => a.validate(&wf, servers.len()).unwrap(),
@@ -140,7 +153,7 @@ mod tests {
     fn equilibrium_rates_flow_to_slots() {
         // fig6 DCC0 (λ=8) slots must have rates summing to 8
         let (wf, servers) = fig6();
-        let alloc = sdcc_allocate(&wf, &servers).unwrap();
+        let alloc = allocate_with(&wf, &servers, ResponseModel::Mm1).unwrap();
         let sum01 = alloc.rate_for(0) + alloc.rate_for(1);
         assert!((sum01 - 8.0).abs() < 1e-6, "PDCC0 split {sum01}");
         // SDCC slots see the full DAP1 rate
@@ -156,20 +169,14 @@ mod tests {
         let wf = Workflow::fig6();
         let servers = Server::pool_exponential(&[5.0, 5.5]);
         assert!(matches!(
-            sdcc_allocate(&wf, &servers),
+            allocate_with(&wf, &servers, ResponseModel::Mm1),
             Err(SchedError::NotEnoughServers { need: 6, have: 2 })
         ));
     }
 
     #[test]
     fn objective_keys() {
-        let s = Score {
-            mean: 1.0,
-            var: 2.0,
-            p99: 3.0,
-            mass: 1.0,
-            pdf: vec![],
-        };
+        let s = Score::point(1.0, 2.0, 3.0);
         assert_eq!(Objective::Mean.key(&s), 1.0);
         assert_eq!(Objective::Variance.key(&s), 2.0);
         assert_eq!(Objective::P99.key(&s), 3.0);

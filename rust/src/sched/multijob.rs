@@ -6,7 +6,7 @@
 //! Algorithm (greedy + cross-job swap refinement):
 //! 1. order jobs by offered load (entry rate × serial depth, the
 //!    capacity pressure of the job);
-//! 2. allocate each job in order with [`proposed_allocate`] against the
+//! 2. allocate each job in order with [`propose`] against the
 //!    *remaining* pool (the allocator keeps the fastest `slots` servers
 //!    and the refinement places them);
 //! 3. refine across jobs: try swapping any pair of servers between two
@@ -19,11 +19,11 @@
 use crate::compose::grid::GridSpec;
 use crate::compose::score::Score;
 use crate::flow::Workflow;
-use crate::sched::refine::refine;
+use crate::sched::refine::{propose, refine};
 use crate::sched::response::ResponseModel;
 use crate::sched::schedule_rates;
 use crate::sched::server::Server;
-use crate::sched::{proposed_allocate, Allocation, Objective, SchedError};
+use crate::sched::{Allocation, Objective, SchedError};
 
 /// One job's placement in a multi-job plan.
 #[derive(Clone, Debug)]
@@ -67,7 +67,7 @@ pub fn multijob_allocate(
     let mut plans: Vec<JobPlan> = Vec::with_capacity(jobs.len());
     for &j in &order {
         let wf = jobs[j];
-        let (local_alloc, score) = proposed_allocate(wf, &remaining, model, objective)?;
+        let (local_alloc, score) = propose(wf, &remaining, model, objective)?;
         // translate local pool indices to global server ids, and drop the
         // used servers from the pool
         let used_local: Vec<usize> = local_alloc.slot_server.clone();
@@ -237,8 +237,7 @@ mod tests {
         let jobs = [&j];
         let plans =
             multijob_allocate(&jobs, &servers, ResponseModel::Mm1, Objective::Mean).unwrap();
-        let (_, direct) =
-            proposed_allocate(&j, &servers, ResponseModel::Mm1, Objective::Mean).unwrap();
+        let (_, direct) = propose(&j, &servers, ResponseModel::Mm1, Objective::Mean).unwrap();
         assert!((plans[0].score.mean - direct.mean).abs() < 0.05 * direct.mean);
     }
 

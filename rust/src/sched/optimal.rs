@@ -26,10 +26,11 @@ const SHORTLIST: usize = 32;
 /// Refuse to enumerate more candidate assignments than this.
 const MAX_CANDIDATES: usize = 2_000_000;
 
-/// Exhaustive optimal allocation under `objective`.
+/// Exhaustive optimal allocation under `objective` (engine layer —
+/// surfaced publicly as [`crate::plan::OptimalPolicy`]).
 ///
 /// Returns the winning allocation and its exact score.
-pub fn optimal_allocate(
+pub fn exhaustive(
     wf: &Workflow,
     servers: &[Server],
     grid: &GridSpec,
@@ -127,7 +128,7 @@ fn count_injections(pool: usize, slots: usize) -> usize {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::sched::algorithms::{baseline_allocate, sdcc_allocate};
+    use crate::sched::algorithms::{allocate_with, baseline_allocate_split, SplitPolicy};
 
     fn fig6() -> (Workflow, Vec<Server>, GridSpec) {
         let wf = Workflow::fig6();
@@ -140,11 +141,11 @@ mod tests {
     fn optimal_beats_or_ties_everyone() {
         let (wf, servers, grid) = fig6();
         let model = ResponseModel::Mm1;
-        let (_, opt) =
-            optimal_allocate(&wf, &servers, &grid, Objective::Mean, model).unwrap();
-        let ours = sdcc_allocate(&wf, &servers).unwrap();
+        let (_, opt) = exhaustive(&wf, &servers, &grid, Objective::Mean, model).unwrap();
+        let ours = allocate_with(&wf, &servers, model).unwrap();
         let ours_s = score_allocation_with(&wf, &ours, &servers, &grid, model);
-        let base = baseline_allocate(&wf, &servers, model).unwrap();
+        let base =
+            baseline_allocate_split(&wf, &servers, model, SplitPolicy::Uniform).unwrap();
         let base_s = score_allocation_with(&wf, &base, &servers, &grid, model);
         assert!(opt.mean <= ours_s.mean + 1e-6, "opt {} ours {}", opt.mean, ours_s.mean);
         assert!(opt.mean <= base_s.mean + 1e-6, "opt {} base {}", opt.mean, base_s.mean);
@@ -163,7 +164,7 @@ mod tests {
         let servers = Server::pool_exponential(&[9.0, 8.0]);
         let grid = GridSpec::new(0.01, 1024);
         assert!(matches!(
-            optimal_allocate(&wf, &servers, &grid, Objective::Mean, ResponseModel::Mm1),
+            exhaustive(&wf, &servers, &grid, Objective::Mean, ResponseModel::Mm1),
             Err(SchedError::NotEnoughServers { .. })
         ));
     }
@@ -174,7 +175,7 @@ mod tests {
         let wf = Workflow::tandem(2, 10.0);
         let servers = Server::pool_exponential(&[2.0, 3.0]);
         let grid = GridSpec::new(0.01, 1024);
-        assert!(optimal_allocate(&wf, &servers, &grid, Objective::Mean, ResponseModel::Mm1)
+        assert!(exhaustive(&wf, &servers, &grid, Objective::Mean, ResponseModel::Mm1)
             .is_err());
     }
 
@@ -185,7 +186,7 @@ mod tests {
         let servers = Server::pool_exponential(&[9.0, 8.0, 7.0, 6.0, 5.0, 4.0, 3.5]);
         let grid = GridSpec::auto_pool(&wf, &servers);
         let (alloc, score) =
-            optimal_allocate(&wf, &servers, &grid, Objective::Mean, ResponseModel::Mm1)
+            exhaustive(&wf, &servers, &grid, Objective::Mean, ResponseModel::Mm1)
                 .unwrap();
         assert!(score.is_stable());
         alloc.validate(&wf, servers.len()).unwrap();

@@ -13,11 +13,12 @@
 //!    that most improves the objective (exact grid scoring);
 //! 3. repeat until no swap improves (or `max_rounds`).
 //!
-//! `proposed_allocate` = Alg. 1/2 seed + this refinement: the "our
-//! approach" line of the paper's Fig. 7 / Table 2. Cost: O(S²) exact
-//! scores per round, S = slots — trivially affordable next to the
-//! exhaustive optimal's O(S!) and far below it in latency, preserving
-//! the paper's "little gap from the optimal choice" framing.
+//! [`propose`] = Alg. 1/2 seed + this refinement: the "our approach"
+//! line of the paper's Fig. 7 / Table 2, surfaced publicly as
+//! [`crate::plan::ProposedPolicy`]. Cost: O(S²) exact scores per
+//! round, S = slots — trivially affordable next to the exhaustive
+//! optimal's O(S!) and far below it in latency, preserving the paper's
+//! "little gap from the optimal choice" framing.
 
 use crate::compose::grid::GridSpec;
 use crate::compose::score::{score_allocation_with, Score};
@@ -29,7 +30,9 @@ use crate::sched::server::Server;
 use crate::sched::Objective;
 
 /// The paper's full proposed scheme: Alg. 1/2 seed + §3 balancing.
-pub fn proposed_allocate(
+/// Engine-layer function; prefer [`crate::plan::ProposedPolicy`] via
+/// the planner.
+pub fn propose(
     wf: &Workflow,
     servers: &[Server],
     model: ResponseModel,
@@ -95,9 +98,9 @@ pub fn refine(
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::sched::algorithms::baseline_allocate;
-    use crate::sched::optimal::optimal_allocate;
-    use crate::sched::sdcc_allocate;
+    use crate::sched::algorithms::baseline_allocate_split;
+    use crate::sched::algorithms::SplitPolicy;
+    use crate::sched::optimal::exhaustive;
 
     fn fig6() -> (Workflow, Vec<Server>) {
         (
@@ -110,7 +113,7 @@ mod tests {
     fn refinement_never_hurts() {
         let (wf, servers) = fig6();
         let model = ResponseModel::Mm1;
-        let seed = sdcc_allocate(&wf, &servers).unwrap();
+        let seed = allocate_with(&wf, &servers, model).unwrap();
         let grid = GridSpec::auto_response(&seed, &servers, model);
         let seed_score = score_allocation_with(&wf, &seed, &servers, &grid, model);
         let (_, refined) =
@@ -123,13 +126,12 @@ mod tests {
         // the paper's Table-2 ordering: optimal <= ours < baseline
         let (wf, servers) = fig6();
         let model = ResponseModel::Mm1;
-        let (ours_alloc, ours) =
-            proposed_allocate(&wf, &servers, model, Objective::Mean).unwrap();
+        let (ours_alloc, ours) = propose(&wf, &servers, model, Objective::Mean).unwrap();
         ours_alloc.validate(&wf, servers.len()).unwrap();
         let grid = GridSpec::auto_response(&ours_alloc, &servers, model);
-        let (_, opt) =
-            optimal_allocate(&wf, &servers, &grid, Objective::Mean, model).unwrap();
-        let base = baseline_allocate(&wf, &servers, model).unwrap();
+        let (_, opt) = exhaustive(&wf, &servers, &grid, Objective::Mean, model).unwrap();
+        let base =
+            baseline_allocate_split(&wf, &servers, model, SplitPolicy::Uniform).unwrap();
         let base_s = score_allocation_with(&wf, &base, &servers, &grid, model);
         assert!(opt.mean <= ours.mean + 1e-6, "opt {} ours {}", opt.mean, ours.mean);
         assert!(
@@ -151,9 +153,8 @@ mod tests {
     fn variance_objective_reduces_variance() {
         let (wf, servers) = fig6();
         let model = ResponseModel::Mm1;
-        let (_, by_mean) = proposed_allocate(&wf, &servers, model, Objective::Mean).unwrap();
-        let (_, by_var) =
-            proposed_allocate(&wf, &servers, model, Objective::Variance).unwrap();
+        let (_, by_mean) = propose(&wf, &servers, model, Objective::Mean).unwrap();
+        let (_, by_var) = propose(&wf, &servers, model, Objective::Variance).unwrap();
         assert!(by_var.var <= by_mean.var + 1e-9);
     }
 }

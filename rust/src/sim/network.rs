@@ -226,11 +226,11 @@ mod tests {
     fn fig6_sim_close_to_analytic_score() {
         use crate::compose::grid::GridSpec;
         use crate::compose::score::score_allocation;
-        use crate::sched::sdcc_allocate;
+        use crate::sched::{allocate_with, ResponseModel};
 
         let wf = Workflow::fig6();
         let servers = Server::pool_exponential(&[9.0, 8.0, 7.0, 6.0, 5.0, 4.0]);
-        let alloc = sdcc_allocate(&wf, &servers).unwrap();
+        let alloc = allocate_with(&wf, &servers, ResponseModel::Mm1).unwrap();
         let grid = GridSpec::auto(&alloc, &servers);
         let analytic_score = score_allocation(&wf, &alloc, &servers, &grid);
         let sim = simulate(&wf, &alloc, &servers, &cfg(300_000));

@@ -1,17 +1,10 @@
-//! Cross-module integration: distributions → composition → scheduling →
-//! simulation must tell one consistent story.
+//! Cross-module integration: distributions → composition → planning →
+//! simulation must tell one consistent story (all scheduling through
+//! the `Planner` surface).
 
-use dcflow::compose::grid::GridSpec;
-use dcflow::compose::score::score_allocation_with;
-use dcflow::dist::ServiceDist;
 use dcflow::flow::parse::{workflow_from_json, workflow_to_json};
-use dcflow::flow::{Dcc, Workflow};
-use dcflow::sched::server::Server;
-use dcflow::sched::{
-    baseline_allocate, optimal_allocate, proposed_allocate, schedule_rates, Allocation,
-    Objective, ResponseModel,
-};
-use dcflow::sim::network::{simulate, SimConfig};
+use dcflow::prelude::*;
+use dcflow::sched::schedule_rates;
 use dcflow::util::prop;
 use dcflow::util::rng::Rng;
 
@@ -30,23 +23,26 @@ fn analytic_equals_sim_for_exponential_cluster() {
     // DES must agree on the full fig6 pipeline for every policy
     let wf = Workflow::fig6();
     let servers = Server::pool_exponential(&[9.0, 8.0, 7.0, 6.0, 5.0, 4.0]);
-    let model = ResponseModel::Mm1;
-    let (ours, _) = proposed_allocate(&wf, &servers, model, Objective::Mean).unwrap();
-    let base = baseline_allocate(&wf, &servers, model).unwrap();
-    let grid = GridSpec::auto_response(&ours, &servers, model);
-    for (name, alloc) in [("ours", &ours), ("baseline", &base)] {
-        let s = score_allocation_with(&wf, alloc, &servers, &grid, model);
-        let sim = simulate(&wf, alloc, &servers, &sim_cfg(31));
+    let planner = Planner::new(&wf, &servers).model(ResponseModel::Mm1);
+    let plans: Vec<Plan> = planner
+        .compare(&[&ProposedPolicy::default(), &BaselinePolicy::default()])
+        .into_iter()
+        .collect::<Result<_, _>>()
+        .unwrap();
+    for plan in &plans {
+        let sim = simulate(&wf, &plan.allocation, &servers, &sim_cfg(31));
         assert!(
-            (s.mean - sim.mean).abs() < 0.05 * sim.mean,
-            "{name}: analytic {} vs sim {}",
-            s.mean,
+            (plan.score.mean - sim.mean).abs() < 0.05 * sim.mean,
+            "{}: analytic {} vs sim {}",
+            plan.policy_name,
+            plan.score.mean,
             sim.mean
         );
         assert!(
-            (s.var - sim.var).abs() < 0.20 * sim.var,
-            "{name}: analytic var {} vs sim var {}",
-            s.var,
+            (plan.score.var - sim.var).abs() < 0.20 * sim.var,
+            "{}: analytic var {} vs sim var {}",
+            plan.policy_name,
+            plan.score.var,
             sim.var
         );
     }
@@ -57,15 +53,16 @@ fn policy_ordering_holds_in_simulation() {
     // Table-2 ordering must hold not just analytically but in the DES
     let wf = Workflow::fig6();
     let servers = Server::pool_exponential(&[9.0, 8.0, 7.0, 6.0, 5.0, 4.0]);
-    let model = ResponseModel::Mm1;
-    let (ours, _) = proposed_allocate(&wf, &servers, model, Objective::Mean).unwrap();
-    let base = baseline_allocate(&wf, &servers, model).unwrap();
-    let grid = GridSpec::auto_response(&ours, &servers, model);
-    let (opt, _) = optimal_allocate(&wf, &servers, &grid, Objective::Mean, model).unwrap();
+    let plans: Vec<Plan> = Planner::new(&wf, &servers)
+        .model(ResponseModel::Mm1)
+        .compare(&[&ProposedPolicy::default(), &BaselinePolicy::default(), &OptimalPolicy])
+        .into_iter()
+        .collect::<Result<_, _>>()
+        .unwrap();
 
-    let s_ours = simulate(&wf, &ours, &servers, &sim_cfg(77)).mean;
-    let s_base = simulate(&wf, &base, &servers, &sim_cfg(77)).mean;
-    let s_opt = simulate(&wf, &opt, &servers, &sim_cfg(77)).mean;
+    let s_ours = simulate(&wf, &plans[0].allocation, &servers, &sim_cfg(77)).mean;
+    let s_base = simulate(&wf, &plans[1].allocation, &servers, &sim_cfg(77)).mean;
+    let s_opt = simulate(&wf, &plans[2].allocation, &servers, &sim_cfg(77)).mean;
     assert!(s_opt <= s_ours * 1.02, "opt {s_opt} ours {s_ours}");
     assert!(s_ours <= s_base * 1.02, "ours {s_ours} base {s_base}");
 }
@@ -95,7 +92,7 @@ fn mg1_approximation_tracks_heavy_tail_sim() {
 
 #[test]
 fn json_spec_to_simulation_end_to_end() {
-    // JSON spec → parse → allocate → simulate, all layers composing
+    // JSON spec → parse → plan → simulate, all layers composing
     let spec = r#"{
         "arrival_rate": 3.0,
         "root": {"type": "serial", "children": [
@@ -104,12 +101,13 @@ fn json_spec_to_simulation_end_to_end() {
             {"type": "queue", "rate": 1.5}
         ]}
     }"#;
-    let wf = workflow_from_json(spec).unwrap();
+    let wf = Workflow::from_json(spec).unwrap();
     let servers = Server::pool_exponential(&[8.0, 6.0, 5.0]);
-    let (alloc, score) =
-        proposed_allocate(&wf, &servers, ResponseModel::Mm1, Objective::Mean).unwrap();
-    let sim = simulate(&wf, &alloc, &servers, &sim_cfg(5));
-    assert!((score.mean - sim.mean).abs() < 0.08 * sim.mean);
+    let plan = Planner::new(&wf, &servers)
+        .plan(&ProposedPolicy::default())
+        .unwrap();
+    let sim = simulate(&wf, &plan.allocation, &servers, &sim_cfg(5));
+    assert!((plan.score.mean - sim.mean).abs() < 0.08 * sim.mean);
     // round-trip the spec too
     let wf2 = workflow_from_json(&workflow_to_json(&wf)).unwrap();
     assert_eq!(wf.root(), wf2.root());
@@ -131,9 +129,7 @@ fn random_workflows_analytic_vs_sim_property() {
         .unwrap();
         let rates: Vec<f64> = (0..wf.slots()).map(|_| g.f64_in(4.0, 12.0)).collect();
         let servers = Server::pool_exponential(&rates);
-        let model = ResponseModel::Mm1;
-        let Ok((alloc, score)) = proposed_allocate(&wf, &servers, model, Objective::Mean)
-        else {
+        let Ok(plan) = Planner::new(&wf, &servers).plan(&ProposedPolicy::default()) else {
             return; // infeasible draw: fine
         };
         let cfg = SimConfig {
@@ -142,11 +138,11 @@ fn random_workflows_analytic_vs_sim_property() {
             seed: g.seed,
             queueing: true,
         };
-        let sim = simulate(&wf, &alloc, &servers, &cfg);
+        let sim = simulate(&wf, &plan.allocation, &servers, &cfg);
         assert!(
-            (score.mean - sim.mean).abs() < 0.08 * sim.mean + 0.01,
+            (plan.score.mean - sim.mean).abs() < 0.08 * sim.mean + 0.01,
             "analytic {} vs sim {} (wf {wf:?})",
-            score.mean,
+            plan.score.mean,
             sim.mean
         );
     });
@@ -168,19 +164,25 @@ fn monitored_refit_recovers_scoring_accuracy() {
     assert_eq!(reg.refresh_pool(&mut believed), 6);
 
     let wf = Workflow::fig6();
-    let model = ResponseModel::Mm1;
-    let (alloc_believed, _) =
-        proposed_allocate(&wf, &believed, model, Objective::Mean).unwrap();
-    let (alloc_truth, s_truth) =
-        proposed_allocate(&wf, &truth, model, Objective::Mean).unwrap();
-    // score the believed allocation against the TRUE laws
-    let grid = GridSpec::auto_response(&alloc_truth, &truth, model);
-    let s_believed = score_allocation_with(&wf, &alloc_believed, &truth, &grid, model);
+    let alloc_believed = Planner::new(&wf, &believed)
+        .allocate(&ProposedPolicy::default())
+        .unwrap();
+    let truth_plan = Planner::new(&wf, &truth)
+        .plan(&ProposedPolicy::default())
+        .unwrap();
+    // score the believed allocation against the TRUE laws, on the same grid
+    let s_believed = score_allocation_with(
+        &wf,
+        &alloc_believed,
+        &truth,
+        &truth_plan.diagnostics.grid,
+        ResponseModel::Mm1,
+    );
     assert!(
-        s_believed.mean <= s_truth.mean * 1.05,
+        s_believed.mean <= truth_plan.score.mean * 1.05,
         "fitted-pool allocation {} vs truth-pool {}",
         s_believed.mean,
-        s_truth.mean
+        truth_plan.score.mean
     );
 }
 
@@ -188,11 +190,12 @@ fn monitored_refit_recovers_scoring_accuracy() {
 fn surplus_servers_and_validation() {
     let wf = Workflow::fig6();
     let servers = Server::pool_exponential(&[9.0, 8.0, 7.0, 6.0, 5.0, 4.0, 3.0, 2.0]);
-    let (alloc, _) =
-        proposed_allocate(&wf, &servers, ResponseModel::Mm1, Objective::Mean).unwrap();
-    alloc.validate(&wf, servers.len()).unwrap();
+    let plan = Planner::new(&wf, &servers)
+        .plan(&ProposedPolicy::default())
+        .unwrap();
+    plan.allocation.validate(&wf, servers.len()).unwrap();
     // the two slowest surplus servers must be unused
-    let used: Vec<usize> = alloc.assigned_servers().collect();
+    let used: Vec<usize> = plan.allocation.assigned_servers().collect();
     assert!(!used.contains(&6) && !used.contains(&7), "slowest surplus used: {used:?}");
 }
 
@@ -200,16 +203,16 @@ fn surplus_servers_and_validation() {
 fn infeasible_load_is_rejected_everywhere() {
     let wf = Workflow::tandem(2, 20.0);
     let servers = Server::pool_exponential(&[3.0, 4.0]);
-    let model = ResponseModel::Mm1;
-    assert!(proposed_allocate(&wf, &servers, model, Objective::Mean).is_err());
-    assert!(baseline_allocate(&wf, &servers, model).is_err());
+    let planner = Planner::new(&wf, &servers);
+    assert!(planner.plan(&ProposedPolicy::default()).is_err());
+    assert!(planner.allocate(&BaselinePolicy::default()).is_err());
     let grid = GridSpec::new(0.01, 512);
-    assert!(optimal_allocate(&wf, &servers, &grid, Objective::Mean, model).is_err());
+    assert!(planner.grid(grid).plan(&OptimalPolicy).is_err());
     // manual unstable allocation scores infinite rather than panicking
     let alloc = Allocation {
         slot_server: vec![0, 1],
         slot_rate: vec![20.0, 20.0],
     };
-    let s = score_allocation_with(&wf, &alloc, &servers, &grid, model);
+    let s = score_allocation_with(&wf, &alloc, &servers, &grid, ResponseModel::Mm1);
     assert!(!s.is_stable());
 }

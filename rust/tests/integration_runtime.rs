@@ -4,17 +4,11 @@
 //! executables, python nowhere in sight). They self-skip when
 //! `artifacts/` has not been built (`make artifacts`).
 
-use dcflow::compose::grid::GridSpec;
-use dcflow::compose::score::score_allocation_with;
-use dcflow::flow::Workflow;
+use dcflow::prelude::*;
 use dcflow::runtime::executable::ArtifactRegistry;
 use dcflow::runtime::scorer::{is_fig6_shape, BatchScorer};
 use dcflow::runtime::ScorerBackend;
-use dcflow::sched::server::Server;
-use dcflow::sched::{
-    baseline_allocate, proposed_allocate, schedule_rates, Allocation, Objective,
-    ResponseModel,
-};
+use dcflow::sched::schedule_rates;
 use dcflow::util::rng::Rng;
 use std::path::PathBuf;
 
@@ -152,7 +146,10 @@ fn xla_scorer_handles_unstable_candidates() {
     let wf = Workflow::fig6();
     let servers = Server::pool_exponential(&[9.0, 8.0, 7.0, 6.0, 5.0, 4.0]);
     let model = ResponseModel::Mm1;
-    let (good, _) = proposed_allocate(&wf, &servers, model, Objective::Mean).unwrap();
+    let good = Planner::new(&wf, &servers)
+        .model(model)
+        .allocate(&ProposedPolicy::default())
+        .unwrap();
     // force an unstable candidate: slot 2 (SDCC, λ=4) gets the μ=4 server
     // at rate 4 -> rho = 1
     let bad = Allocation {
@@ -178,14 +175,19 @@ fn native_fallback_on_non_fig6_topologies() {
     let wf = Workflow::tandem(3, 1.0);
     let servers = Server::pool_exponential(&[6.0, 5.0, 4.0]);
     let model = ResponseModel::Mm1;
-    let (alloc, _) = proposed_allocate(&wf, &servers, model, Objective::Mean).unwrap();
+    let alloc = Planner::new(&wf, &servers)
+        .model(model)
+        .allocate(&ProposedPolicy::default())
+        .unwrap();
     let grid = GridSpec::auto_response(&alloc, &servers, model);
     let mut scorer = BatchScorer::open_auto(); // xla if available
     let t = scorer.score_batch(&wf, &[alloc.clone()], &servers, &grid, model);
     let direct = score_allocation_with(&wf, &alloc, &servers, &grid, model);
     assert!((t[0].mean - direct.mean).abs() < 1e-9, "non-fig6 must use native path");
     // baseline comparators flow through too
-    let _ = baseline_allocate(&wf, &servers, model);
+    let _ = Planner::new(&wf, &servers)
+        .model(model)
+        .allocate(&BaselinePolicy::default());
 }
 
 #[test]

@@ -1,0 +1,128 @@
+//! Old-vs-new equivalence: the `Planner` surface must return
+//! bit-identical allocations to the legacy engine pipelines and to the
+//! deprecated free-function shims, on random tandem / fork-join /
+//! mixed workflows. This is the migration's safety net — if a policy
+//! ever drifts from the algorithm it wraps, these properties fail.
+#![allow(deprecated)]
+
+use dcflow::prelude::*;
+use dcflow::sched::optimal::exhaustive;
+use dcflow::sched::refine::propose;
+use dcflow::sched::{allocate_with, baseline_allocate_split};
+use dcflow::util::prop;
+
+/// A random small workflow: tandem, fork-join, or fork-join-then-queue.
+fn random_workflow(g: &mut prop::Gen) -> Workflow {
+    let n_slots = g.usize_in(2, 5);
+    match g.usize_in(0, 2) {
+        0 => Workflow::tandem(n_slots, g.f64_in(0.3, 1.2)),
+        1 => Workflow::forkjoin(n_slots, g.f64_in(0.3, 1.2)),
+        _ => Workflow::new(
+            Dcc::serial(vec![
+                Dcc::parallel((0..n_slots).map(|_| Dcc::queue()).collect()),
+                Dcc::queue(),
+            ]),
+            g.f64_in(0.3, 1.2),
+        )
+        .unwrap(),
+    }
+}
+
+fn random_pool(g: &mut prop::Gen, slots: usize) -> Vec<Server> {
+    let extra = g.usize_in(0, 2);
+    let rates: Vec<f64> = (0..slots + extra).map(|_| g.f64_in(2.0, 20.0)).collect();
+    Server::pool_exponential(&rates)
+}
+
+#[test]
+fn sdcc_policy_matches_legacy_bit_for_bit() {
+    prop::run("Planner(SdccPolicy) == allocate_with == sdcc_allocate", 40, |g| {
+        let wf = random_workflow(g);
+        let servers = random_pool(g, wf.slots());
+        let planner = Planner::new(&wf, &servers);
+        let via_planner = planner.allocate(&SdccPolicy);
+        let via_engine = allocate_with(&wf, &servers, ResponseModel::Mm1);
+        let via_shim = sdcc_allocate(&wf, &servers);
+        assert_eq!(via_planner, via_engine);
+        assert_eq!(via_planner, via_shim);
+    });
+}
+
+#[test]
+fn baseline_policy_matches_legacy_bit_for_bit() {
+    prop::run("Planner(BaselinePolicy) == baseline pipelines", 40, |g| {
+        let wf = random_workflow(g);
+        let servers = random_pool(g, wf.slots());
+        let model = ResponseModel::Mm1;
+        let planner = Planner::new(&wf, &servers).model(model);
+        for split in [SplitPolicy::Uniform, SplitPolicy::Equilibrium] {
+            let via_planner = planner.allocate(&BaselinePolicy { split });
+            let via_engine = baseline_allocate_split(&wf, &servers, model, split);
+            assert_eq!(via_planner, via_engine);
+        }
+        assert_eq!(
+            planner.allocate(&BaselinePolicy::default()),
+            baseline_allocate(&wf, &servers, model)
+        );
+    });
+}
+
+#[test]
+fn proposed_policy_matches_legacy_bit_for_bit() {
+    prop::run("Planner(ProposedPolicy) == propose == proposed_allocate", 25, |g| {
+        let wf = random_workflow(g);
+        let servers = random_pool(g, wf.slots());
+        let model = ResponseModel::Mm1;
+        let planner = Planner::new(&wf, &servers).model(model);
+        let via_planner = planner.allocate(&ProposedPolicy::default());
+        let via_engine = propose(&wf, &servers, model, Objective::Mean).map(|(a, _)| a);
+        let via_shim =
+            proposed_allocate(&wf, &servers, model, Objective::Mean).map(|(a, _)| a);
+        assert_eq!(via_planner, via_engine);
+        assert_eq!(via_planner, via_shim);
+    });
+}
+
+#[test]
+fn optimal_policy_matches_legacy_bit_for_bit() {
+    prop::run("Planner(OptimalPolicy) == exhaustive == optimal_allocate", 15, |g| {
+        let wf = random_workflow(g);
+        let servers = random_pool(g, wf.slots());
+        let model = ResponseModel::Mm1;
+        let grid = GridSpec::auto_pool(&wf, &servers);
+        let planner = Planner::new(&wf, &servers).model(model).grid(grid);
+        let via_planner = planner.allocate(&OptimalPolicy);
+        let via_engine =
+            exhaustive(&wf, &servers, &grid, Objective::Mean, model).map(|(a, _)| a);
+        let via_shim =
+            optimal_allocate(&wf, &servers, &grid, Objective::Mean, model).map(|(a, _)| a);
+        assert_eq!(via_planner, via_engine);
+        assert_eq!(via_planner, via_shim);
+        // and the shim's score is the planner's score (same grid)
+        if let (Ok(plan), Ok((_, s))) = (
+            planner.plan(&OptimalPolicy),
+            optimal_allocate(&wf, &servers, &grid, Objective::Mean, model),
+        ) {
+            assert_eq!(plan.score.mean, s.mean);
+            assert_eq!(plan.score.p99, s.p99);
+        }
+    });
+}
+
+#[test]
+fn objective_equivalence_for_proposed() {
+    // the objective knob flows identically through both surfaces
+    prop::run("objective passthrough", 10, |g| {
+        let wf = random_workflow(g);
+        let servers = random_pool(g, wf.slots());
+        let model = ResponseModel::Mm1;
+        for objective in [Objective::Mean, Objective::Variance, Objective::P99] {
+            let via_planner = Planner::new(&wf, &servers)
+                .model(model)
+                .objective(objective)
+                .allocate(&ProposedPolicy::default());
+            let via_engine = propose(&wf, &servers, model, objective).map(|(a, _)| a);
+            assert_eq!(via_planner, via_engine);
+        }
+    });
+}
