@@ -8,10 +8,6 @@
 
 use dcflow::flow::dag::FlowDag;
 use dcflow::prelude::*;
-use dcflow::sched::capacity::{
-    max_throughput, max_throughput_under_sla, required_speedup, Sla,
-};
-use dcflow::sched::multijob::cluster_objective;
 
 fn main() {
     let model = ResponseModel::Mm1;

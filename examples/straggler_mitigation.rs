@@ -9,9 +9,6 @@
 
 use dcflow::compose::maxcomp::{cloning_compose, parallel_compose};
 use dcflow::compose::moments::moments;
-use dcflow::dist::fit::{fit_multimodal_exp, select_family, Family};
-use dcflow::monitor::drift::detect_drift;
-use dcflow::monitor::ServerMonitor;
 use dcflow::prelude::*;
 use dcflow::util::rng::Rng;
 
@@ -87,4 +84,35 @@ fn main() {
         100.0 * (join_mean - cloned_mean) / join_mean
     );
     assert!(cloned_mean < join_mean);
+
+    // --- 4. re-score through the empirical backend ----------------------
+    // the planner scores against the *measured* law directly: server 0 is
+    // believed healthy Exp(10) but the monitor window says it straggles.
+    // No grid pinning needed — the planner sizes its evaluation grid
+    // against the backend's scoring laws, so the measured tail fits.
+    let believed = Server::pool_exponential(&[10.0, 9.0, 8.0]);
+    let wf = Workflow::tandem(3, 2.0);
+    let backend = EmpiricalBackend::new().with_samples(0, &monitor.window_samples());
+    let optimistic = Planner::new(&wf, &believed)
+        .plan(&SdccPolicy)
+        .expect("feasible");
+    let measured = Planner::new(&wf, &believed)
+        .backend(&backend)
+        .plan(&SdccPolicy)
+        .expect("feasible");
+    println!(
+        "\nre-scoring a 3-stage chain ({} measured server):",
+        backend.measured_servers()
+    );
+    println!("  believed laws          : mean={:.4}", optimistic.score.mean);
+    println!("  measured (empirical)   : mean={:.4}", measured.score.mean);
+    assert!(
+        measured.score.mean > optimistic.score.mean,
+        "the straggler must surface in the measured score"
+    );
+    assert!(
+        measured.score.mass > 0.95,
+        "auto grid must cover the measured tail (mass {})",
+        measured.score.mass
+    );
 }

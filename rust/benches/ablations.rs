@@ -8,8 +8,6 @@
 //!
 //! Writes bench_out/ablations.csv.
 
-use dcflow::dist::fit::fit_delayed_exponential;
-use dcflow::monitor::ServerMonitor;
 use dcflow::prelude::*;
 use dcflow::sched::{baseline_allocate_split, refine, schedule_rates};
 use dcflow::util::bench::{bench, fmt_time, Csv};
@@ -31,7 +29,10 @@ fn main() {
         .unwrap()
         .allocation;
     let grid = GridSpec::auto_response(&alloc, &servers, model);
-    let eq = score_allocation_with(&wf, &alloc, &servers, &grid, model);
+    // all exact scoring below goes through the builder surface on a
+    // pinned grid (the analytic backend)
+    let scored = planner.grid(grid);
+    let eq = scored.score(&alloc);
     // same server placement, uniform splits
     let uni_alloc = baseline_allocate_split(&wf, &servers, model, SplitPolicy::Uniform)
         .map(|mut u| {
@@ -42,7 +43,7 @@ fn main() {
             u
         })
         .unwrap();
-    let uni = score_allocation_with(&wf, &uni_alloc, &servers, &grid, model);
+    let uni = scored.score(&uni_alloc);
     println!("equilibrium: mean={:.4} var={:.4}", eq.mean, eq.var);
     println!("uniform    : mean={:.4} var={:.4}", uni.mean, uni.var);
     println!(
@@ -62,7 +63,7 @@ fn main() {
         let mut assign: Vec<usize> = (0..6).collect();
         rng.shuffle(&mut assign);
         let Ok(a) = schedule_rates(&wf, assign, &servers, model) else { continue };
-        let raw = score_allocation_with(&wf, &a, &servers, &grid, model);
+        let raw = scored.score(&a);
         let (_, ref_s) = refine(&wf, a, &servers, &grid, model, Objective::Mean, 8).unwrap();
         worst_raw = worst_raw.max(raw.mean);
         worst_refined = worst_refined.max(ref_s.mean);
@@ -82,12 +83,13 @@ fn main() {
     // ---- A3: grid resolution ---------------------------------------------
     println!("\n== A3: grid resolution (score error vs G, fig6) ==");
     let fine = GridSpec { dt: grid.dt * (grid.n as f64) / 8192.0, n: 8192 };
-    let truth = score_allocation_with(&wf, &alloc, &servers, &fine, model);
+    let truth = planner.grid(fine).score(&alloc);
     println!("reference (G=8192): mean={:.6}", truth.mean);
     for g in [128usize, 256, 512, 1024, 2048] {
         let gs = GridSpec { dt: fine.dt * 8192.0 / g as f64, n: g };
-        let t = bench(1, 5, || score_allocation_with(&wf, &alloc, &servers, &gs, model));
-        let s = score_allocation_with(&wf, &alloc, &servers, &gs, model);
+        let gp = planner.grid(gs);
+        let t = bench(1, 5, || gp.score(&alloc));
+        let s = gp.score(&alloc);
         let err = 100.0 * (s.mean - truth.mean).abs() / truth.mean;
         println!(
             "G={g:>5}: mean={:.6} err={err:.3}% time={}",

@@ -6,11 +6,11 @@
 
 use dcflow::compose::conv::{conv_direct, conv_fft};
 use dcflow::compose::grid::GridSpec;
-use dcflow::compose::score::score_allocation_with;
 use dcflow::dist::ServiceDist;
 use dcflow::flow::Workflow;
+use dcflow::plan::Planner;
 use dcflow::runtime::scorer::BatchScorer;
-use dcflow::runtime::ScorerBackend;
+use dcflow::runtime::ScorerEngine;
 use dcflow::sched::server::Server;
 use dcflow::sched::{schedule_rates, Allocation, ResponseModel};
 use dcflow::util::bench::{bench, fmt_time, Csv};
@@ -42,11 +42,10 @@ fn main() {
         .collect();
     println!("candidates in wave: {}", waves.len());
     let grid = GridSpec::auto_response(&waves[0], &servers, model);
+    let scorer_planner = Planner::new(&wf, &servers).model(model).grid(grid);
 
-    // --- native single scoring -----------------------------------------
-    let t_native_one = bench(3, 20, || {
-        score_allocation_with(&wf, &waves[0], &servers, &grid, model)
-    });
+    // --- native single scoring (builder surface, analytic backend) ------
+    let t_native_one = bench(3, 20, || scorer_planner.score(&waves[0]));
     println!(
         "native single score       : {} ({:.0}/s)",
         fmt_time(t_native_one.mean_s),
@@ -92,7 +91,7 @@ fn main() {
             BatchScorer::xla_with(reg, &name).ok()
         });
     if let Some(mut xla) = fast {
-        assert_eq!(xla.backend(), ScorerBackend::Xla);
+        assert_eq!(xla.backend(), ScorerEngine::Xla);
         let xgrid = GridSpec { dt: grid.dt, n: xla.grid_n };
         let t_compile = bench(0, 1, || {
             xla.score_batch(&wf, &waves, &servers, &xgrid, model)
@@ -175,7 +174,7 @@ fn main() {
     }
 
     // --- end-to-end optimizer sweep (planner surface) ---------------------
-    use dcflow::plan::{OptimalPolicy, Planner, ProposedPolicy};
+    use dcflow::plan::{OptimalPolicy, ProposedPolicy};
     use dcflow::sched::Objective;
     let planner = Planner::new(&wf, &servers)
         .model(model)

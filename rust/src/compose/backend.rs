@@ -1,0 +1,410 @@
+//! The pluggable scoring seam: one trait every predictor sits behind.
+//!
+//! The paper's allocation algorithms repeatedly query a response-time
+//! *predictor* (mean/variance/p99 of the end-to-end law under a
+//! candidate allocation). [`ScoreBackend`] abstracts that predictor so
+//! the [`Planner`](crate::plan::Planner), the refinement and exhaustive
+//! search engines, and the multi-job partitioner all evaluate against
+//! an injected backend instead of a hard-wired free function:
+//!
+//! * [`AnalyticBackend`] — the native composition engine
+//!   ([`score_allocation_with`]), exact and allocation-shaped; the
+//!   default everywhere;
+//! * [`RuntimeBackend`](crate::runtime::scorer::RuntimeBackend) — the
+//!   batched PJRT/AOT scorer folded in as just another implementation
+//!   (lives in [`crate::runtime::scorer`]);
+//! * [`EmpiricalBackend`] — scores against *measured* laws fitted from
+//!   [`crate::dist::empirical`] samples instead of the believed pool,
+//!   the "swap the analytic model for data" move of the runtime-variation
+//!   literature.
+//!
+//! Custom predictors (sharded scorers, learned models, remote services)
+//! implement the same trait and plug into
+//! [`Planner::backend`](crate::plan::Planner::backend).
+//!
+//! ```
+//! use dcflow::prelude::*;
+//!
+//! let wf = Workflow::fig6();
+//! let servers = Server::pool_exponential(&[9.0, 8.0, 7.0, 6.0, 5.0, 4.0]);
+//!
+//! // The default planner scores through AnalyticBackend; injecting it
+//! // explicitly is identical, bit for bit.
+//! let backend = AnalyticBackend;
+//! let plan = Planner::new(&wf, &servers)
+//!     .backend(&backend)
+//!     .plan(&SdccPolicy)
+//!     .expect("fig6 is feasible");
+//! assert!(plan.score.mean > 0.0);
+//! ```
+
+use std::borrow::Cow;
+
+use crate::compose::grid::GridSpec;
+use crate::compose::score::{score_allocation_with, Score};
+use crate::dist::empirical::Empirical;
+use crate::dist::fit::select_family;
+use crate::dist::ServiceDist;
+use crate::flow::Workflow;
+use crate::sched::response::ResponseModel;
+use crate::sched::server::Server;
+use crate::sched::Allocation;
+
+/// A response-time predictor: maps (workflow, allocation, pool, grid,
+/// queueing model) to a [`Score`]. Implementations must return
+/// [`Score::unstable`]-style infinite scores (not panic) when a queue
+/// in the allocation diverges, so search loops can skip the candidate.
+///
+/// Methods take `&self`; implementations that mutate internal state
+/// (artifact caches, device handles) use interior mutability — see
+/// [`RuntimeBackend`](crate::runtime::scorer::RuntimeBackend).
+pub trait ScoreBackend {
+    /// Short stable name for diagnostics and CSV rows.
+    fn name(&self) -> &str;
+
+    /// Score one allocation on `grid` under `model`.
+    fn score(
+        &self,
+        wf: &Workflow,
+        alloc: &Allocation,
+        servers: &[Server],
+        grid: &GridSpec,
+        model: ResponseModel,
+    ) -> Score;
+
+    /// Score a wave of candidate allocations (the optimizer's inner
+    /// loop). The default maps [`ScoreBackend::score`] over the slice;
+    /// batched implementations override this with one fused evaluation.
+    fn score_batch(
+        &self,
+        wf: &Workflow,
+        allocs: &[Allocation],
+        servers: &[Server],
+        grid: &GridSpec,
+        model: ResponseModel,
+    ) -> Vec<Score> {
+        allocs
+            .iter()
+            .map(|a| self.score(wf, a, servers, grid, model))
+            .collect()
+    }
+
+    /// The pool this backend effectively scores against, when it
+    /// differs from the believed one — `None` (the default) means the
+    /// believed laws are the scoring laws. Grid auto-sizing consults
+    /// this so that a backend substituting *longer-tailed* measured
+    /// laws (see [`EmpiricalBackend`]) gets an evaluation grid that
+    /// covers those tails instead of silently truncating them.
+    fn scoring_pool(&self, servers: &[Server]) -> Option<Vec<Server>> {
+        let _ = servers;
+        None
+    }
+
+    /// [`ScoreBackend::scoring_pool`] resolved against the believed
+    /// pool: the substituted pool when the backend has one, the
+    /// believed slice otherwise. This is the form grid-sizing call
+    /// sites consume.
+    fn resolve_scoring_pool<'s>(&self, servers: &'s [Server]) -> Cow<'s, [Server]> {
+        match self.scoring_pool(servers) {
+            Some(pool) => Cow::Owned(pool),
+            None => Cow::Borrowed(servers),
+        }
+    }
+}
+
+/// The native analytic predictor: serial composition by PDF
+/// convolution, parallel composition by CDF product, moments and
+/// quantiles read off the grid — a thin [`ScoreBackend`] wrapper over
+/// [`score_allocation_with`]. This is the default backend of every
+/// [`Planner`](crate::plan::Planner) and the cross-check oracle for all
+/// other backends.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct AnalyticBackend;
+
+impl ScoreBackend for AnalyticBackend {
+    fn name(&self) -> &str {
+        "analytic"
+    }
+
+    fn score(
+        &self,
+        wf: &Workflow,
+        alloc: &Allocation,
+        servers: &[Server],
+        grid: &GridSpec,
+        model: ResponseModel,
+    ) -> Score {
+        score_allocation_with(wf, alloc, servers, grid, model)
+    }
+}
+
+/// Scores against *measured* service laws instead of the believed pool.
+///
+/// Each server with an attached sample set (raw observations or a
+/// [`Empirical`] window) has its law re-fitted to the best Table-1
+/// family ([`select_family`]) at construction; scoring substitutes the
+/// fitted law for the believed one and runs the analytic engine.
+/// Servers without samples keep their believed laws, so an empty
+/// backend is bit-identical to [`AnalyticBackend`].
+///
+/// ```
+/// use dcflow::prelude::*;
+///
+/// let wf = Workflow::tandem(2, 1.0);
+/// let believed = Server::pool_exponential(&[3.0, 4.0]);
+/// // server 0 actually serves at rate ~6: feed measurements in
+/// let samples: Vec<f64> = (1..400).map(|i| (i as f64 / 400.0_f64).ln() / -6.0).collect();
+/// let backend = EmpiricalBackend::new().with_samples(0, &samples);
+/// let plan = Planner::new(&wf, &believed)
+///     .backend(&backend)
+///     .plan(&SdccPolicy)
+///     .expect("feasible");
+/// // measured server 0 is faster than believed => better mean than the
+/// // purely-believed score
+/// let believed_plan = Planner::new(&wf, &believed).plan(&SdccPolicy).unwrap();
+/// assert!(plan.score.mean < believed_plan.score.mean);
+/// ```
+#[derive(Clone, Debug, Default)]
+pub struct EmpiricalBackend {
+    /// Fitted law per server id; `None` = keep the believed law.
+    fitted: Vec<Option<ServiceDist>>,
+}
+
+impl EmpiricalBackend {
+    /// Backend with no measurements (behaves like [`AnalyticBackend`]).
+    pub fn new() -> EmpiricalBackend {
+        EmpiricalBackend { fitted: Vec::new() }
+    }
+
+    /// Attach raw observed service times for `server_id` (fits the best
+    /// Table-1 family immediately). Builder-style; panics on an empty
+    /// sample slice.
+    #[must_use]
+    pub fn with_samples(mut self, server_id: usize, samples: &[f64]) -> EmpiricalBackend {
+        assert!(!samples.is_empty(), "empirical backend needs samples");
+        if self.fitted.len() <= server_id {
+            self.fitted.resize(server_id + 1, None);
+        }
+        let (_, law, _) = select_family(samples);
+        self.fitted[server_id] = Some(law);
+        self
+    }
+
+    /// Attach an [`Empirical`] window (e.g. a monitor's sliding window)
+    /// for `server_id`.
+    #[must_use]
+    pub fn with_empirical(self, server_id: usize, emp: &Empirical) -> EmpiricalBackend {
+        self.with_samples(server_id, emp.sorted())
+    }
+
+    /// The fitted law for a server, if measurements were attached.
+    pub fn law_for(&self, server_id: usize) -> Option<&ServiceDist> {
+        self.fitted.get(server_id).and_then(|l| l.as_ref())
+    }
+
+    /// Number of servers with measured (fitted) laws.
+    pub fn measured_servers(&self) -> usize {
+        self.fitted.iter().filter(|l| l.is_some()).count()
+    }
+
+    /// The believed pool with measured laws substituted in.
+    fn effective_pool(&self, servers: &[Server]) -> Vec<Server> {
+        servers
+            .iter()
+            .map(|s| match self.law_for(s.id) {
+                Some(law) => Server::new(s.id, law.clone()),
+                None => s.clone(),
+            })
+            .collect()
+    }
+}
+
+impl ScoreBackend for EmpiricalBackend {
+    fn name(&self) -> &str {
+        "empirical"
+    }
+
+    fn score(
+        &self,
+        wf: &Workflow,
+        alloc: &Allocation,
+        servers: &[Server],
+        grid: &GridSpec,
+        model: ResponseModel,
+    ) -> Score {
+        match self.scoring_pool(servers) {
+            None => score_allocation_with(wf, alloc, servers, grid, model),
+            Some(pool) => score_allocation_with(wf, alloc, &pool, grid, model),
+        }
+    }
+
+    /// One substituted pool per wave (not per candidate — the pool does
+    /// not depend on the allocation).
+    fn score_batch(
+        &self,
+        wf: &Workflow,
+        allocs: &[Allocation],
+        servers: &[Server],
+        grid: &GridSpec,
+        model: ResponseModel,
+    ) -> Vec<Score> {
+        let scoring = self.resolve_scoring_pool(servers);
+        allocs
+            .iter()
+            .map(|a| score_allocation_with(wf, a, &scoring, grid, model))
+            .collect()
+    }
+
+    fn scoring_pool(&self, servers: &[Server]) -> Option<Vec<Server>> {
+        if self.fitted.iter().all(|l| l.is_none()) {
+            return None;
+        }
+        Some(self.effective_pool(servers))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::plan::{Planner, SdccPolicy};
+    use crate::sched::allocate_with;
+    use crate::util::prop;
+    use crate::util::rng::Rng;
+
+    fn fig6() -> (Workflow, Vec<Server>) {
+        (
+            Workflow::fig6(),
+            Server::pool_exponential(&[9.0, 8.0, 7.0, 6.0, 5.0, 4.0]),
+        )
+    }
+
+    #[test]
+    fn analytic_backend_is_the_free_function_bit_for_bit() {
+        // the satellite property: AnalyticBackend through Planner must be
+        // bit-identical to a direct score_allocation_with call
+        prop::run("AnalyticBackend == score_allocation_with", 25, |g| {
+            let n = g.usize_in(2, 5);
+            let wf = if g.bool(0.5) {
+                Workflow::tandem(n, g.f64_in(0.3, 1.2))
+            } else {
+                Workflow::forkjoin(n, g.f64_in(0.3, 1.2))
+            };
+            let rates: Vec<f64> = (0..wf.slots()).map(|_| g.f64_in(3.0, 20.0)).collect();
+            let servers = Server::pool_exponential(&rates);
+            let Ok(alloc) = allocate_with(&wf, &servers, ResponseModel::Mm1) else {
+                return; // infeasible draw
+            };
+            let grid = GridSpec::auto_response(&alloc, &servers, ResponseModel::Mm1);
+            let direct = score_allocation_with(&wf, &alloc, &servers, &grid, ResponseModel::Mm1);
+
+            // via the trait object
+            let backend: &dyn ScoreBackend = &AnalyticBackend;
+            let via_trait = backend.score(&wf, &alloc, &servers, &grid, ResponseModel::Mm1);
+            assert_eq!(direct.mean, via_trait.mean);
+            assert_eq!(direct.var, via_trait.var);
+            assert_eq!(direct.p99, via_trait.p99);
+            assert_eq!(direct.pdf, via_trait.pdf);
+
+            // via the full Planner surface (injected backend + pinned grid)
+            let via_planner = Planner::new(&wf, &servers)
+                .backend(&AnalyticBackend)
+                .grid(grid)
+                .score(&alloc);
+            assert_eq!(direct.mean, via_planner.mean);
+            assert_eq!(direct.var, via_planner.var);
+            assert_eq!(direct.p99, via_planner.p99);
+
+            // and score_batch defaults to the same per-item scores
+            let batch = backend.score_batch(
+                &wf,
+                std::slice::from_ref(&alloc),
+                &servers,
+                &grid,
+                ResponseModel::Mm1,
+            );
+            assert_eq!(batch.len(), 1);
+            assert_eq!(batch[0].mean, direct.mean);
+        });
+    }
+
+    #[test]
+    fn empty_empirical_backend_matches_analytic() {
+        let (wf, servers) = fig6();
+        let alloc = allocate_with(&wf, &servers, ResponseModel::Mm1).unwrap();
+        let grid = GridSpec::auto_response(&alloc, &servers, ResponseModel::Mm1);
+        let a = AnalyticBackend.score(&wf, &alloc, &servers, &grid, ResponseModel::Mm1);
+        let e = EmpiricalBackend::new().score(&wf, &alloc, &servers, &grid, ResponseModel::Mm1);
+        assert_eq!(a.mean, e.mean);
+        assert_eq!(a.p99, e.p99);
+    }
+
+    #[test]
+    fn empirical_backend_tracks_measured_laws() {
+        // believed pool says all servers are Exp(2); measurements reveal
+        // Exp(9..4). Scoring through the empirical backend must land close
+        // to the truth-pool analytic score.
+        let (wf, truth) = fig6();
+        let believed = Server::pool_exponential(&[2.0; 6]);
+        let mut rng = Rng::new(11);
+        let mut backend = EmpiricalBackend::new();
+        for (sid, s) in truth.iter().enumerate() {
+            let samples: Vec<f64> = (0..4000).map(|_| s.dist.sample(&mut rng)).collect();
+            backend = backend.with_samples(sid, &samples);
+        }
+        assert_eq!(backend.measured_servers(), 6);
+        let alloc = allocate_with(&wf, &truth, ResponseModel::Mm1).unwrap();
+        let grid = GridSpec::auto_response(&alloc, &truth, ResponseModel::Mm1);
+        let want = AnalyticBackend.score(&wf, &alloc, &truth, &grid, ResponseModel::Mm1);
+        let got = backend.score(&wf, &alloc, &believed, &grid, ResponseModel::Mm1);
+        assert!(got.is_stable());
+        assert!(
+            (got.mean - want.mean).abs() < 0.10 * want.mean,
+            "empirical {} vs truth {}",
+            got.mean,
+            want.mean
+        );
+    }
+
+    #[test]
+    fn auto_grid_covers_measured_tails() {
+        // believed laws are short-tailed Exp(10); the measured law of
+        // server 0 straggles with a ~25x longer tail. The planner's auto
+        // grid must be sized against the scoring (measured) laws, so the
+        // empirical score keeps its probability mass on the grid.
+        let wf = Workflow::tandem(2, 1.0);
+        let believed = Server::pool_exponential(&[10.0, 9.0]);
+        let straggler = ServiceDist::straggler(10.0, 0.4, 0.08, 0.01);
+        let mut rng = Rng::new(7);
+        let samples: Vec<f64> = (0..6000).map(|_| straggler.sample(&mut rng)).collect();
+        let backend = EmpiricalBackend::new().with_samples(0, &samples);
+        assert!(backend.scoring_pool(&believed).is_some());
+        let plan = Planner::new(&wf, &believed)
+            .backend(&backend)
+            .plan(&SdccPolicy)
+            .expect("feasible");
+        assert!(plan.score.is_stable());
+        assert!(
+            plan.score.mass > 0.95,
+            "measured tail truncated: mass {}",
+            plan.score.mass
+        );
+        // and the believed-law-only grid really would have truncated it
+        let believed_grid = Planner::new(&wf, &believed)
+            .plan(&SdccPolicy)
+            .unwrap()
+            .diagnostics
+            .grid;
+        assert!(
+            plan.diagnostics.grid.t_max() > 2.0 * believed_grid.t_max(),
+            "scoring-pool grid {:?} should be much wider than believed grid {:?}",
+            plan.diagnostics.grid,
+            believed_grid
+        );
+    }
+
+    #[test]
+    fn backend_names_are_stable() {
+        assert_eq!(AnalyticBackend.name(), "analytic");
+        assert_eq!(EmpiricalBackend::new().name(), "empirical");
+    }
+}

@@ -7,7 +7,11 @@
 //!   (plus min-composition for cloning ablations);
 //! * grid bookkeeping — [`grid`]; moments/quantiles — [`moments`];
 //! * exponential-family closed forms for validation — [`analytic`];
-//! * allocation scoring over a workflow tree — [`score`].
+//! * allocation scoring over a workflow tree — [`score`];
+//! * the pluggable scoring seam every predictor sits behind —
+//!   [`backend`] ([`backend::ScoreBackend`] with the analytic and
+//!   empirical implementations; the PJRT one lives in
+//!   [`crate::runtime::scorer`]).
 //!
 //! The numeric conventions (trapezoid cumulative integral, trapezoid
 //! endpoint correction in the convolution, central-difference PDF of a
@@ -15,6 +19,7 @@
 //! native path and the AOT/PJRT path agree to float tolerance.
 
 pub mod analytic;
+pub mod backend;
 pub mod conv;
 pub mod fft;
 pub mod grid;

@@ -12,13 +12,14 @@
 //!   evaluation, sampling and moments;
 //! * [`compose`] — the analytic engine: serial composition by PDF
 //!   convolution (Eq. 1–2, direct + FFT), parallel composition by CDF
-//!   product (Eq. 3–4), grid moments/quantiles, and exponential-family
-//!   closed forms used for validation;
+//!   product (Eq. 3–4), grid moments/quantiles, exponential-family
+//!   closed forms used for validation, and the pluggable
+//!   [`compose::backend::ScoreBackend`] scoring seam;
 //! * [`flow`] — the series–parallel workflow graph and its JSON spec;
 //! * [`plan`] — **the planning surface**: [`plan::Planner`] evaluates any
 //!   [`plan::AllocationPolicy`] (the paper's Alg. 1–3, the §3 baseline,
-//!   the exhaustive optimum, or your own) and returns scored
-//!   [`plan::Plan`]s;
+//!   the exhaustive optimum, or your own) against any
+//!   [`plan::ScoreBackend`] and returns scored [`plan::Plan`]s;
 //! * [`sched`] — the engine underneath: sort-matching allocation, the
 //!   rate-equilibrium solver, §3 balancing refinement, the exhaustive
 //!   reference, capacity planning and multi-job partitioning;
@@ -28,13 +29,19 @@
 //!   to Alg. 3's periodic re-optimization) with drift detection;
 //! * [`runtime`] — the PJRT hot path: loads the AOT-compiled XLA
 //!   artifacts (pallas/jax, lowered to HLO text at build time) and scores
-//!   candidate allocations in batches; falls back to the native engine;
+//!   candidate allocations in batches; surfaced to the planner as the
+//!   [`runtime::scorer::RuntimeBackend`] scoring backend with a native
+//!   fallback;
 //! * [`coordinator`] — the L3 system: leader/worker runtime implementing
 //!   Alg. 3 (monitor → re-optimize → dispatch) over simulated clusters.
 //!
+//! A module-by-module map with the Planner/Policy/ScoreBackend seams and
+//! a paper cross-reference lives in `docs/ARCHITECTURE.md`; migration
+//! recipes off the deprecated free functions live in `docs/MIGRATION.md`.
+//!
 //! ## Quickstart
 //!
-//! ```no_run
+//! ```
 //! use dcflow::prelude::*;
 //!
 //! // Six heterogeneous servers (exponential service, rates 9..4).
@@ -64,9 +71,11 @@
 //! }
 //! ```
 //!
-//! Custom strategies implement [`plan::AllocationPolicy`] and run
-//! through the same builder — see the [`plan`] module docs.
+//! Custom strategies implement [`plan::AllocationPolicy`], custom
+//! predictors implement [`plan::ScoreBackend`], and both run through the
+//! same builder — see the [`plan`] and [`compose::backend`] module docs.
 #![deny(missing_docs)]
+#![deny(rustdoc::broken_intra_doc_links)]
 #![warn(clippy::all)]
 
 pub mod compose;
@@ -81,23 +90,35 @@ pub mod sim;
 pub mod util;
 
 /// Convenience re-exports covering the common API surface: enough for
-/// `use dcflow::prelude::*;` to drive the planner end to end.
+/// `use dcflow::prelude::*;` to drive the planner, the scoring
+/// backends, capacity planning and the monitoring loop end to end.
 pub mod prelude {
+    pub use crate::compose::backend::{AnalyticBackend, EmpiricalBackend, ScoreBackend};
     pub use crate::compose::grid::GridSpec;
-    pub use crate::compose::score::{score_allocation, score_allocation_with, Score};
+    pub use crate::compose::score::Score;
+    pub use crate::dist::fit::{
+        fit_delayed_exponential, fit_delayed_pareto, fit_multimodal_exp, select_family, Family,
+    };
     pub use crate::dist::{Mode, ServiceDist, TailKind};
     pub use crate::flow::{Dcc, Workflow};
+    pub use crate::monitor::drift::detect_drift;
+    pub use crate::monitor::{MonitorRegistry, ServerMonitor};
     pub use crate::plan::{
         AllocationPolicy, BaselinePolicy, Diagnostics, OptimalPolicy, Plan, PlanContext,
         Planner, ProposedPolicy, SdccPolicy,
     };
-    pub use crate::sched::multijob::JobPlan;
+    pub use crate::runtime::scorer::RuntimeBackend;
+    pub use crate::sched::capacity::{
+        max_load_scale, max_throughput, max_throughput_under_sla, required_speedup, Sla,
+    };
+    pub use crate::sched::multijob::{cluster_objective, JobPlan};
     pub use crate::sched::server::Server;
     pub use crate::sched::{Allocation, Objective, ResponseModel, SchedError, SplitPolicy};
     pub use crate::sim::network::{simulate, SimConfig, SimResult};
 
     // deprecated legacy free functions, re-exported so old callers keep
-    // compiling (each use still warns and names its replacement)
+    // compiling (each use still warns and names its replacement; see
+    // docs/MIGRATION.md)
     #[allow(deprecated)]
     pub use crate::sched::{
         baseline_allocate, optimal_allocate, proposed_allocate, sdcc_allocate,

@@ -18,7 +18,7 @@ use dcflow::flow::Workflow;
 use dcflow::plan::{
     AllocationPolicy, BaselinePolicy, OptimalPolicy, Planner, ProposedPolicy, SdccPolicy,
 };
-use dcflow::runtime::{ArtifactRegistry, BatchScorer, ScorerBackend};
+use dcflow::runtime::{ArtifactRegistry, BatchScorer, ScorerEngine};
 use dcflow::sched::server::Server;
 use dcflow::sched::{ResponseModel, SplitPolicy};
 use dcflow::sim::trace::{ArrivalProcess, Trace};
@@ -324,8 +324,8 @@ fn cmd_info() -> i32 {
     println!(
         "scorer backend: {}",
         match scorer.backend() {
-            ScorerBackend::Xla => "xla/pjrt",
-            ScorerBackend::Native => "native",
+            ScorerEngine::Xla => "xla/pjrt",
+            ScorerEngine::Native => "native",
         }
     );
     0

@@ -1,13 +1,14 @@
-//! The unified planning surface: one builder, pluggable policies.
+//! The unified planning surface: one builder, pluggable policies,
+//! pluggable scoring backends.
 //!
 //! The paper contributes a *family* of allocation/rate-scheduling
 //! algorithms (Alg. 1–3) evaluated against a heuristic baseline and an
 //! exhaustive optimum. [`Planner`] is the single entry point for all of
 //! them: configure the request once (workflow, pool, queueing model,
-//! objective, optional grid), then evaluate any [`AllocationPolicy`] —
-//! the paper's schemes or your own.
+//! objective, optional grid, optional [`ScoreBackend`]), then evaluate
+//! any [`AllocationPolicy`] — the paper's schemes or your own.
 //!
-//! ```no_run
+//! ```
 //! use dcflow::prelude::*;
 //!
 //! let servers = Server::pool_exponential(&[9.0, 8.0, 7.0, 6.0, 5.0, 4.0]);
@@ -31,29 +32,44 @@
 //! }
 //! ```
 //!
+//! Scoring flows through one seam: every policy search, [`Planner::plan`],
+//! [`Planner::compare`], [`Planner::score`] and [`Planner::plan_jobs`]
+//! evaluate against the planner's [`ScoreBackend`] —
+//! [`AnalyticBackend`](crate::compose::backend::AnalyticBackend) by
+//! default, the PJRT [`RuntimeBackend`](crate::runtime::scorer::RuntimeBackend)
+//! or a measurement-driven
+//! [`EmpiricalBackend`](crate::compose::backend::EmpiricalBackend) by
+//! injection ([`Planner::backend`]), or any custom implementation.
+//!
 //! The legacy free functions (`sdcc_allocate`, `baseline_allocate`,
 //! `proposed_allocate`, `optimal_allocate`) survive as deprecated shims
-//! over this module — see [`crate::sched::compat`].
+//! over this module — see [`crate::sched::compat`] and
+//! `docs/MIGRATION.md`.
 
 pub mod policy;
 
+pub use crate::compose::backend::{AnalyticBackend, EmpiricalBackend, ScoreBackend};
+pub use crate::runtime::scorer::RuntimeBackend;
 pub use policy::{
     AllocationPolicy, BaselinePolicy, OptimalPolicy, PlanContext, ProposedPolicy, SdccPolicy,
 };
 
 use crate::compose::grid::GridSpec;
-use crate::compose::score::{score_allocation_with, Score};
+use crate::compose::score::Score;
 use crate::flow::Workflow;
-use crate::sched::algorithms::allocate_with;
-use crate::sched::multijob::{multijob_allocate, JobPlan};
+use crate::sched::multijob::{multijob_allocate_with, JobPlan};
 use crate::sched::response::ResponseModel;
 use crate::sched::server::Server;
 use crate::sched::{Allocation, Objective, SchedError};
+use std::fmt;
+
+/// The default backend a planner scores through when none is injected.
+static DEFAULT_BACKEND: AnalyticBackend = AnalyticBackend;
 
 /// Where a [`Plan`]'s numbers came from: the evaluation configuration
 /// the planner actually used (useful for reproducing a score and for
 /// scoring other allocations on the same grid).
-#[derive(Clone, Copy, Debug)]
+#[derive(Clone, Debug)]
 pub struct Diagnostics {
     /// Queueing model used for response laws.
     pub model: ResponseModel,
@@ -61,6 +77,8 @@ pub struct Diagnostics {
     pub objective: Objective,
     /// Grid the score was computed on.
     pub grid: GridSpec,
+    /// Name of the [`ScoreBackend`] that produced the score.
+    pub backend: String,
     /// True when every queue in the allocation was stable.
     pub stable: bool,
 }
@@ -70,7 +88,7 @@ pub struct Diagnostics {
 pub struct Plan {
     /// The rate-scheduled server assignment.
     pub allocation: Allocation,
-    /// Exact analytic score of the allocation.
+    /// Score of the allocation under the planner's backend.
     pub score: Score,
     /// Which policy produced it (from [`AllocationPolicy::name`]).
     pub policy_name: String,
@@ -88,20 +106,39 @@ impl Plan {
 
 /// Builder-style planner over one workflow and one server pool.
 ///
-/// Defaults: [`ResponseModel::Mm1`], [`Objective::Mean`], and one
-/// auto-sized *evaluation grid* per invocation — response-aware,
-/// derived from the Alg. 1/2 seed allocation (falling back to the
-/// pool-wide service-law grid when no seed exists). Policies search
-/// and plans are scored on that same grid, so a policy that optimizes
-/// on the grid is judged on the grid it optimized. See the
-/// [module docs](self) for a walkthrough.
-#[derive(Clone, Copy, Debug)]
+/// Defaults: [`ResponseModel::Mm1`], [`Objective::Mean`], the
+/// [`AnalyticBackend`] scorer, and one auto-sized *evaluation grid* per
+/// invocation — response-aware, derived from the Alg. 1/2 seed
+/// allocation (falling back to the pool-wide service-law grid when no
+/// seed exists). The seed and the grid are computed **lazily**, at most
+/// once per invocation: a non-scoring policy on the
+/// [`Planner::allocate`] path never pays the seed pass, and the seed a
+/// refining policy starts from is the same one the grid was sized from.
+/// Policies search and plans are scored on that same grid through the
+/// same backend, so a policy that optimizes on the grid is judged on
+/// the grid it optimized. See the [module docs](self) for a
+/// walkthrough.
+#[derive(Clone, Copy)]
 pub struct Planner<'a> {
     wf: &'a Workflow,
     servers: &'a [Server],
     model: ResponseModel,
     objective: Objective,
     grid: Option<GridSpec>,
+    backend: Option<&'a dyn ScoreBackend>,
+}
+
+impl fmt::Debug for Planner<'_> {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.debug_struct("Planner")
+            .field("wf", &self.wf)
+            .field("servers", &self.servers.len())
+            .field("model", &self.model)
+            .field("objective", &self.objective)
+            .field("grid", &self.grid)
+            .field("backend", &self.backend_ref().name())
+            .finish()
+    }
 }
 
 impl<'a> Planner<'a> {
@@ -113,6 +150,7 @@ impl<'a> Planner<'a> {
             model: ResponseModel::Mm1,
             objective: Objective::Mean,
             grid: None,
+            backend: None,
         }
     }
 
@@ -138,49 +176,65 @@ impl<'a> Planner<'a> {
         self
     }
 
-    /// The single evaluation grid for this invocation: the pinned one,
-    /// else a response-aware grid sized from the Alg. 1/2 seed
-    /// allocation (the legacy call sites sized their optimal-search
-    /// grids from an allocation's response laws the same way), else
-    /// the pool-wide service-law grid when no seed is feasible.
-    fn eval_grid(&self) -> GridSpec {
-        if let Some(grid) = self.grid {
-            return grid;
-        }
-        match allocate_with(self.wf, self.servers, self.model) {
-            Ok(seed) => GridSpec::auto_response(&seed, self.servers, self.model),
-            Err(_) => GridSpec::auto_pool(self.wf, self.servers),
-        }
+    /// Inject the scoring backend every evaluation flows through
+    /// (default [`AnalyticBackend`]). The planner borrows the backend,
+    /// so one backend instance — and whatever device state it caches —
+    /// can serve many planners.
+    ///
+    /// ```
+    /// use dcflow::prelude::*;
+    ///
+    /// let wf = Workflow::fig6();
+    /// let servers = Server::pool_exponential(&[9.0, 8.0, 7.0, 6.0, 5.0, 4.0]);
+    /// let backend = RuntimeBackend::native();
+    /// let plan = Planner::new(&wf, &servers)
+    ///     .backend(&backend)
+    ///     .plan(&SdccPolicy)
+    ///     .expect("feasible");
+    /// assert_eq!(plan.diagnostics.backend, "runtime-native");
+    /// ```
+    #[must_use]
+    pub fn backend(mut self, backend: &'a dyn ScoreBackend) -> Planner<'a> {
+        self.backend = Some(backend);
+        self
     }
 
-    /// The context handed to policies at allocation time.
+    fn backend_ref(&self) -> &'a dyn ScoreBackend {
+        self.backend.unwrap_or(&DEFAULT_BACKEND)
+    }
+
+    /// The context handed to policies at allocation time. Seed and grid
+    /// materialize lazily inside it (see [`PlanContext`]).
     fn ctx(&self) -> PlanContext<'a> {
-        PlanContext {
-            wf: self.wf,
-            servers: self.servers,
-            model: self.model,
-            objective: self.objective,
-            grid: self.eval_grid(),
-        }
+        PlanContext::new(
+            self.wf,
+            self.servers,
+            self.model,
+            self.objective,
+            self.backend_ref(),
+            self.grid,
+        )
     }
 
     /// Run a policy and return the raw allocation without the final
-    /// exact scoring — the cheap path for callers (like the
-    /// coordinator's dispatch loop) that only need the assignment.
-    /// (The context still carries the evaluation grid, so this path
-    /// pays one Alg. 1/2 seed pass and grid sizing — microseconds —
-    /// but skips all grid scoring for policies that don't score.)
+    /// scoring — the cheap path for callers (like the coordinator's
+    /// dispatch loop) that only need the assignment. Non-scoring
+    /// policies skip grid sizing entirely on this path:
+    /// [`BaselinePolicy`] pays no Alg. 1/2 seed pass at all, and for
+    /// [`SdccPolicy`] the only seed pass is the allocation itself
+    /// (cached in the context, never recomputed). Scoring policies
+    /// materialize the grid lazily when they first consult it.
     pub fn allocate(&self, policy: &dyn AllocationPolicy) -> Result<Allocation, SchedError> {
         policy.allocate(&self.ctx())
     }
 
-    /// Run a policy and score its allocation exactly, on this
-    /// invocation's evaluation grid (the same grid the policy saw in
-    /// its [`PlanContext`]).
+    /// Run a policy and score its allocation through the planner's
+    /// backend, on this invocation's evaluation grid (the same grid the
+    /// policy saw in its [`PlanContext`]).
     pub fn plan(&self, policy: &dyn AllocationPolicy) -> Result<Plan, SchedError> {
         let ctx = self.ctx();
         let allocation = policy.allocate(&ctx)?;
-        Ok(self.finish(policy.name(), allocation, ctx.grid))
+        Ok(self.finish(policy.name(), allocation, &ctx))
     }
 
     /// Evaluate several policies on one *common* grid (the Fig. 7 /
@@ -197,23 +251,62 @@ impl<'a> Planner<'a> {
             .iter()
             .map(|p| {
                 p.allocate(&ctx)
-                    .map(|alloc| self.finish(p.name(), alloc, ctx.grid))
+                    .map(|alloc| self.finish(p.name(), alloc, &ctx))
             })
             .collect()
     }
 
-    /// Partition the pool across several concurrent workflows and plan
-    /// each (wraps [`multijob_allocate`] with this planner's model and
-    /// objective). Only the pool, model and objective carry over: the
-    /// builder's own workflow is not implicitly part of the job set,
-    /// and a pinned [`Planner::grid`] is not used — each job is scored
-    /// on its own response-aware grid inside the partitioner.
-    pub fn plan_jobs(&self, jobs: &[&Workflow]) -> Result<Vec<JobPlan>, SchedError> {
-        multijob_allocate(jobs, self.servers, self.model, self.objective)
+    /// Score an arbitrary allocation through the planner's backend —
+    /// the builder-surface replacement for deep-importing the raw
+    /// scoring free function. On a pinned [`Planner::grid`] it scores
+    /// on that grid; with no pinned grid the evaluation grid is sized
+    /// from the *scored allocation's own* response laws (the pairing
+    /// the legacy `auto_response` + raw-score call sites used), so an
+    /// allocation with much longer tails than the Alg. 1/2 seed is not
+    /// silently truncated.
+    ///
+    /// ```
+    /// use dcflow::prelude::*;
+    ///
+    /// let wf = Workflow::fig6();
+    /// let servers = Server::pool_exponential(&[9.0, 8.0, 7.0, 6.0, 5.0, 4.0]);
+    /// let planner = Planner::new(&wf, &servers);
+    /// let plan = planner.plan(&SdccPolicy).expect("feasible");
+    /// // re-scoring the planned allocation on the plan's grid is exact
+    /// let s = planner.grid(plan.diagnostics.grid).score(&plan.allocation);
+    /// assert_eq!(s.mean, plan.score.mean);
+    /// ```
+    pub fn score(&self, alloc: &Allocation) -> Score {
+        if self.grid.is_some() {
+            return self.ctx().score(alloc);
+        }
+        let backend = self.backend_ref();
+        let pool = backend.resolve_scoring_pool(self.servers);
+        let grid = GridSpec::auto_response(alloc, &pool, self.model);
+        backend.score(self.wf, alloc, self.servers, &grid, self.model)
     }
 
-    fn finish(&self, policy_name: String, allocation: Allocation, grid: GridSpec) -> Plan {
-        let score = score_allocation_with(self.wf, &allocation, self.servers, &grid, self.model);
+    /// Partition the pool across several concurrent workflows and plan
+    /// each (wraps [`multijob_allocate_with`] with this planner's
+    /// model, objective and backend). All jobs are evaluated on **one
+    /// shared grid**: the pinned [`Planner::grid`] when set, else a
+    /// grid auto-sized once to cover every job's seed-response horizon.
+    /// Only the pool, model, objective, grid and backend carry over:
+    /// the builder's own workflow is not implicitly part of the job
+    /// set.
+    pub fn plan_jobs(&self, jobs: &[&Workflow]) -> Result<Vec<JobPlan>, SchedError> {
+        multijob_allocate_with(
+            jobs,
+            self.servers,
+            self.model,
+            self.objective,
+            self.backend_ref(),
+            self.grid,
+        )
+    }
+
+    fn finish(&self, policy_name: String, allocation: Allocation, ctx: &PlanContext<'a>) -> Plan {
+        let score = ctx.score(&allocation);
         let stable = score.is_stable();
         Plan {
             allocation,
@@ -222,7 +315,8 @@ impl<'a> Planner<'a> {
             diagnostics: Diagnostics {
                 model: self.model,
                 objective: self.objective,
-                grid,
+                grid: ctx.grid(),
+                backend: ctx.backend().name().to_string(),
                 stable,
             },
         }
@@ -232,6 +326,7 @@ impl<'a> Planner<'a> {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::compose::score::score_allocation_with;
     use crate::sched::response::{mean_response, ResponseModel};
     use crate::sched::schedule_rates;
 
@@ -254,6 +349,7 @@ mod tests {
         ] {
             let plan = planner.plan(policy).expect("fig6 is feasible");
             assert!(plan.diagnostics.stable, "{} unstable", plan.policy_name);
+            assert_eq!(plan.diagnostics.backend, "analytic");
             assert!(plan.score.mean > 0.0 && plan.score.p99 > plan.score.mean);
             plan.allocation.validate(&wf, servers.len()).unwrap();
         }
@@ -289,6 +385,46 @@ mod tests {
             .plan(&SdccPolicy)
             .unwrap();
         assert_eq!(plan.diagnostics.grid, grid);
+    }
+
+    #[test]
+    fn score_matches_plan_bit_for_bit() {
+        let (wf, servers) = fig6();
+        let planner = Planner::new(&wf, &servers);
+        let plan = planner.plan(&ProposedPolicy::default()).unwrap();
+        let rescored = planner.grid(plan.diagnostics.grid).score(&plan.allocation);
+        assert_eq!(rescored.mean, plan.score.mean);
+        assert_eq!(rescored.var, plan.score.var);
+        assert_eq!(rescored.p99, plan.score.p99);
+        // and Planner::score is score_allocation_with on the same inputs
+        let direct = score_allocation_with(
+            &wf,
+            &plan.allocation,
+            &servers,
+            &plan.diagnostics.grid,
+            ResponseModel::Mm1,
+        );
+        assert_eq!(rescored.mean, direct.mean);
+        assert_eq!(rescored.var, direct.var);
+        assert_eq!(rescored.p99, direct.p99);
+    }
+
+    #[test]
+    fn injected_backend_flows_through() {
+        let (wf, servers) = fig6();
+        let backend = RuntimeBackend::native();
+        let plan = Planner::new(&wf, &servers)
+            .backend(&backend)
+            .plan(&ProposedPolicy::default())
+            .unwrap();
+        assert_eq!(plan.diagnostics.backend, "runtime-native");
+        // the native runtime backend runs the same composition math
+        let reference = Planner::new(&wf, &servers)
+            .plan(&ProposedPolicy::default())
+            .unwrap();
+        assert_eq!(plan.allocation, reference.allocation);
+        assert_eq!(plan.score.mean, reference.score.mean);
+        assert_eq!(plan.score.p99, reference.score.p99);
     }
 
     #[test]
@@ -331,6 +467,8 @@ mod tests {
             .plan_jobs(&[&heavy, &light])
             .unwrap();
         assert_eq!(plans.len(), 2);
+        // every job evaluated on the one shared grid
+        assert_eq!(plans[0].grid, plans[1].grid);
         let mut used: Vec<usize> = plans
             .iter()
             .flat_map(|p| p.alloc.slot_server.clone())
@@ -339,6 +477,22 @@ mod tests {
         let before = used.len();
         used.dedup();
         assert_eq!(before, used.len(), "jobs must not share servers");
+    }
+
+    #[test]
+    fn plan_jobs_respects_pinned_grid() {
+        let heavy = Workflow::fig6();
+        let light = Workflow::tandem(3, 1.0);
+        let pool =
+            Server::pool_exponential(&[14.0, 12.0, 10.0, 9.0, 8.0, 7.0, 6.0, 5.0, 4.0]);
+        let pinned = GridSpec::new(0.015, 2048);
+        let plans = Planner::new(&heavy, &pool)
+            .grid(pinned)
+            .plan_jobs(&[&heavy, &light])
+            .unwrap();
+        for p in &plans {
+            assert_eq!(p.grid, pinned);
+        }
     }
 
     #[test]

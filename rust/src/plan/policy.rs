@@ -3,22 +3,39 @@
 //!
 //! Each paper algorithm is one [`AllocationPolicy`] implementation;
 //! user code can add its own by implementing the trait (the
-//! [`PlanContext`] hands a policy everything the built-ins use).
+//! [`PlanContext`] hands a policy everything the built-ins use: the
+//! request, a lazily-computed Alg. 1/2 seed, a lazily-sized evaluation
+//! grid, and the injected [`ScoreBackend`]).
 
+use std::cell::OnceCell;
+use std::fmt;
+
+use crate::compose::backend::ScoreBackend;
 use crate::compose::grid::GridSpec;
+use crate::compose::score::Score;
 use crate::flow::Workflow;
 use crate::sched::algorithms::{allocate_with, baseline_allocate_split, SplitPolicy};
-use crate::sched::optimal::exhaustive;
-use crate::sched::refine::refine;
+use crate::sched::optimal::exhaustive_with;
+use crate::sched::refine::refine_with;
 use crate::sched::response::ResponseModel;
 use crate::sched::server::Server;
 use crate::sched::{Allocation, Objective, SchedError};
 
 /// Everything a policy may consult when producing an allocation: the
 /// workflow, the believed server pool, the queueing model, the
-/// administrator's objective, and the evaluation grid (sized by the
-/// [`Planner`](crate::plan::Planner) when the caller did not pin one).
-#[derive(Clone, Copy, Debug)]
+/// administrator's objective, plus three lazily-materialized resources
+/// shared across every policy the same planner invocation runs:
+///
+/// * [`PlanContext::seed`] — the Alg. 1/2 sort-matching allocation,
+///   computed at most once (policies that refine from the seed and the
+///   grid sizing below share it);
+/// * [`PlanContext::grid`] — the evaluation grid (the pinned one, else
+///   response-aware from the seed), sized at most once and only when
+///   some policy actually scores — the pure
+///   [`Planner::allocate`](crate::plan::Planner::allocate) path of a
+///   non-scoring policy never pays the seed pass;
+/// * [`PlanContext::backend`] — the injected [`ScoreBackend`] all
+///   scoring flows through.
 pub struct PlanContext<'a> {
     /// Workflow being planned.
     pub wf: &'a Workflow,
@@ -28,8 +45,88 @@ pub struct PlanContext<'a> {
     pub model: ResponseModel,
     /// What the administrator optimizes.
     pub objective: Objective,
-    /// Evaluation grid for policies that score candidates exactly.
-    pub grid: GridSpec,
+    backend: &'a dyn ScoreBackend,
+    pinned: Option<GridSpec>,
+    seed: OnceCell<Result<Allocation, SchedError>>,
+    grid: OnceCell<GridSpec>,
+}
+
+impl<'a> PlanContext<'a> {
+    /// Build a context. `grid` pins the evaluation grid; `None` defers
+    /// to the seed-derived auto grid. (Normally the
+    /// [`Planner`](crate::plan::Planner) builds this for you.)
+    pub fn new(
+        wf: &'a Workflow,
+        servers: &'a [Server],
+        model: ResponseModel,
+        objective: Objective,
+        backend: &'a dyn ScoreBackend,
+        grid: Option<GridSpec>,
+    ) -> PlanContext<'a> {
+        PlanContext {
+            wf,
+            servers,
+            model,
+            objective,
+            backend,
+            pinned: grid,
+            seed: OnceCell::new(),
+            grid: OnceCell::new(),
+        }
+    }
+
+    /// The scoring backend this invocation evaluates against.
+    pub fn backend(&self) -> &dyn ScoreBackend {
+        self.backend
+    }
+
+    /// The Alg. 1/2 sort-matching seed allocation, computed on first
+    /// use and shared by every later caller in this invocation.
+    pub fn seed(&self) -> Result<Allocation, SchedError> {
+        self.seed
+            .get_or_init(|| allocate_with(self.wf, self.servers, self.model))
+            .clone()
+    }
+
+    /// The single evaluation grid for this invocation: the pinned one,
+    /// else a response-aware grid sized from the [`PlanContext::seed`]
+    /// allocation (falling back to the pool-wide service-law grid when
+    /// no seed is feasible). Sized lazily, at most once, against the
+    /// laws the backend actually scores
+    /// ([`ScoreBackend::scoring_pool`]), so measured tails longer than
+    /// the believed ones still fit the grid.
+    pub fn grid(&self) -> GridSpec {
+        if let Some(g) = self.pinned {
+            return g;
+        }
+        *self.grid.get_or_init(|| {
+            let pool = self.backend.resolve_scoring_pool(self.servers);
+            match self.seed() {
+                Ok(seed) => GridSpec::auto_response(&seed, &pool, self.model),
+                Err(_) => GridSpec::auto_pool(self.wf, &pool),
+            }
+        })
+    }
+
+    /// Score an allocation through the injected backend on this
+    /// invocation's evaluation grid.
+    pub fn score(&self, alloc: &Allocation) -> Score {
+        self.backend
+            .score(self.wf, alloc, self.servers, &self.grid(), self.model)
+    }
+}
+
+impl fmt::Debug for PlanContext<'_> {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.debug_struct("PlanContext")
+            .field("wf", &self.wf)
+            .field("servers", &self.servers.len())
+            .field("model", &self.model)
+            .field("objective", &self.objective)
+            .field("backend", &self.backend.name())
+            .field("pinned_grid", &self.pinned)
+            .finish()
+    }
 }
 
 /// A resource-allocation strategy: maps a [`PlanContext`] to a
@@ -49,6 +146,16 @@ pub trait AllocationPolicy {
 
 /// Algorithm 1 + 2 exactly as the paper states them: sort-matching
 /// placement plus equilibrium rate scheduling, no refinement.
+///
+/// ```
+/// use dcflow::prelude::*;
+///
+/// let wf = Workflow::fig6();
+/// let servers = Server::pool_exponential(&[9.0, 8.0, 7.0, 6.0, 5.0, 4.0]);
+/// let plan = Planner::new(&wf, &servers).plan(&SdccPolicy).expect("feasible");
+/// assert_eq!(plan.policy_name, "sdcc");
+/// assert!(plan.score.mean > 0.0);
+/// ```
 #[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
 pub struct SdccPolicy;
 
@@ -58,7 +165,7 @@ impl AllocationPolicy for SdccPolicy {
     }
 
     fn allocate(&self, ctx: &PlanContext<'_>) -> Result<Allocation, SchedError> {
-        allocate_with(ctx.wf, ctx.servers, ctx.model)
+        ctx.seed()
     }
 }
 
@@ -66,6 +173,17 @@ impl AllocationPolicy for SdccPolicy {
 /// fork rates split per `split` (the paper's comparator uses
 /// [`SplitPolicy::Uniform`], the "homogeneous assumption"; the
 /// equilibrium split is the `fair-baseline` ablation).
+///
+/// ```
+/// use dcflow::prelude::*;
+///
+/// let wf = Workflow::fig6();
+/// let servers = Server::pool_exponential(&[9.0, 8.0, 7.0, 6.0, 5.0, 4.0]);
+/// let base = Planner::new(&wf, &servers)
+///     .plan(&BaselinePolicy::default())
+///     .expect("feasible");
+/// assert_eq!(base.policy_name, "baseline");
+/// ```
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub struct BaselinePolicy {
     /// How fork rates are split when the spec leaves them open.
@@ -95,10 +213,21 @@ impl AllocationPolicy for BaselinePolicy {
 
 /// The paper's full proposed scheme: Alg. 1/2 seed plus the §3
 /// min-max balancing refinement (`rounds` hill-climb rounds, scored
-/// on the context's evaluation grid). With the planner's default grid
-/// — response-aware, sized from the same Alg. 1/2 seed — and
-/// `rounds == 8` this is the exact legacy `proposed_allocate`
-/// pipeline, bit for bit.
+/// through the context's backend on its evaluation grid). With the
+/// planner's default grid — response-aware, sized from the same
+/// Alg. 1/2 seed — and `rounds == 8` this is the exact legacy
+/// `proposed_allocate` pipeline, bit for bit.
+///
+/// ```
+/// use dcflow::prelude::*;
+///
+/// let wf = Workflow::fig6();
+/// let servers = Server::pool_exponential(&[9.0, 8.0, 7.0, 6.0, 5.0, 4.0]);
+/// let planner = Planner::new(&wf, &servers);
+/// let ours = planner.plan(&ProposedPolicy::default()).expect("feasible");
+/// let base = planner.plan(&BaselinePolicy::default()).expect("feasible");
+/// assert!(ours.score.mean <= base.score.mean + 1e-9);
+/// ```
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub struct ProposedPolicy {
     /// Maximum pairwise-swap refinement rounds.
@@ -117,15 +246,16 @@ impl AllocationPolicy for ProposedPolicy {
     }
 
     fn allocate(&self, ctx: &PlanContext<'_>) -> Result<Allocation, SchedError> {
-        let seed = allocate_with(ctx.wf, ctx.servers, ctx.model)?;
-        let (alloc, _) = refine(
+        let seed = ctx.seed()?;
+        let (alloc, _) = refine_with(
             ctx.wf,
             seed,
             ctx.servers,
-            &ctx.grid,
+            &ctx.grid(),
             ctx.model,
             ctx.objective,
             self.rounds,
+            ctx.backend(),
         )?;
         Ok(alloc)
     }
@@ -133,7 +263,19 @@ impl AllocationPolicy for ProposedPolicy {
 
 /// The exhaustive-search reference ("optimal" in the paper's Fig. 7 /
 /// Table 2): every injective assignment ranked by the cheap mean-RT
-/// estimator, shortlist scored exactly on the context grid.
+/// estimator, shortlist scored through the context's backend on its
+/// evaluation grid.
+///
+/// ```
+/// use dcflow::prelude::*;
+///
+/// let wf = Workflow::fig6();
+/// let servers = Server::pool_exponential(&[9.0, 8.0, 7.0, 6.0, 5.0, 4.0]);
+/// let planner = Planner::new(&wf, &servers);
+/// let opt = planner.plan(&OptimalPolicy).expect("feasible");
+/// let ours = planner.plan(&ProposedPolicy::default()).expect("feasible");
+/// assert!(opt.score.mean <= ours.score.mean + 1e-6);
+/// ```
 #[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
 pub struct OptimalPolicy;
 
@@ -143,7 +285,14 @@ impl AllocationPolicy for OptimalPolicy {
     }
 
     fn allocate(&self, ctx: &PlanContext<'_>) -> Result<Allocation, SchedError> {
-        exhaustive(ctx.wf, ctx.servers, &ctx.grid, ctx.objective, ctx.model)
-            .map(|(alloc, _)| alloc)
+        exhaustive_with(
+            ctx.wf,
+            ctx.servers,
+            &ctx.grid(),
+            ctx.objective,
+            ctx.model,
+            ctx.backend(),
+        )
+        .map(|(alloc, _)| alloc)
     }
 }

@@ -9,7 +9,9 @@
 //! * [`executable`] — client + compiled-executable cache keyed by
 //!   artifact name, with f32-literal marshalling helpers;
 //! * [`scorer`] — the batched fig6 allocation scorer (the optimizer's
-//!   inner loop) with a bit-compatible native fallback.
+//!   inner loop) with a bit-compatible native fallback, exposed to the
+//!   planner as the [`scorer::RuntimeBackend`] implementation of
+//!   [`crate::compose::backend::ScoreBackend`].
 
 pub mod executable;
 pub mod scorer;
@@ -31,4 +33,6 @@ compile_error!(
 );
 
 pub use executable::{ArtifactRegistry, RuntimeError};
-pub use scorer::{BatchScorer, ScorerBackend};
+#[allow(deprecated)]
+pub use scorer::ScorerBackend;
+pub use scorer::{BatchScorer, RuntimeBackend, ScorerEngine};

@@ -47,12 +47,17 @@ impl Triple {
 
 /// Which engine scored the batch.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
-pub enum ScorerBackend {
+pub enum ScorerEngine {
     /// AOT artifact via PJRT.
     Xla,
     /// Pure-rust composition engine.
     Native,
 }
+
+/// Former name of [`ScorerEngine`] (renamed to avoid confusion with the
+/// [`ScoreBackend`](crate::compose::backend::ScoreBackend) trait).
+#[deprecated(since = "0.3.0", note = "renamed to `ScorerEngine`; see docs/MIGRATION.md")]
+pub type ScorerBackend = ScorerEngine;
 
 /// Batched scorer with automatic fallback.
 pub struct BatchScorer {
@@ -130,12 +135,12 @@ impl BatchScorer {
         Self::xla(reg).unwrap_or_else(|_| Self::native())
     }
 
-    /// Active backend.
-    pub fn backend(&self) -> ScorerBackend {
+    /// Active engine.
+    pub fn backend(&self) -> ScorerEngine {
         if self.registry.is_some() {
-            ScorerBackend::Xla
+            ScorerEngine::Xla
         } else {
-            ScorerBackend::Native
+            ScorerEngine::Native
         }
     }
 
@@ -342,6 +347,124 @@ pub fn mmde_params(d: &crate::dist::ServiceDist, max_modes: usize) -> Option<Vec
     Some(out)
 }
 
+/// The PJRT/AOT scorer folded in as a [`ScoreBackend`]: the same
+/// batched engine [`BatchScorer`] runs on the hot path, usable anywhere
+/// a [`Planner`](crate::plan::Planner) or search engine takes an
+/// injected backend. Falls back to the native composition engine when
+/// artifacts are absent (identical math, cross-checked in tests).
+///
+/// On the XLA engine, scores carry the (mean, var, p99) triple only —
+/// no attached PDF, and `mass` is reported as NaN because the fused
+/// triple path does not track captured grid mass. On the native
+/// fallback engine the full analytic [`Score`] (PDF + mass) is
+/// returned, so diagnostics behave exactly like
+/// [`AnalyticBackend`](crate::compose::backend::AnalyticBackend).
+///
+/// ```
+/// use dcflow::prelude::*;
+///
+/// let wf = Workflow::fig6();
+/// let servers = Server::pool_exponential(&[9.0, 8.0, 7.0, 6.0, 5.0, 4.0]);
+/// let backend = RuntimeBackend::native(); // or RuntimeBackend::open_auto()
+/// let plan = Planner::new(&wf, &servers)
+///     .backend(&backend)
+///     .plan(&ProposedPolicy::default())
+///     .expect("feasible");
+/// assert!(plan.score.is_stable());
+/// ```
+pub struct RuntimeBackend {
+    inner: std::cell::RefCell<BatchScorer>,
+}
+
+impl RuntimeBackend {
+    /// Backend over an auto-opened scorer: PJRT artifacts when present,
+    /// native engine otherwise (see [`BatchScorer::open_auto`]).
+    pub fn open_auto() -> RuntimeBackend {
+        Self::from_scorer(BatchScorer::open_auto())
+    }
+
+    /// Backend pinned to the native engine.
+    pub fn native() -> RuntimeBackend {
+        Self::from_scorer(BatchScorer::native())
+    }
+
+    /// Backend over an explicitly-configured [`BatchScorer`].
+    pub fn from_scorer(scorer: BatchScorer) -> RuntimeBackend {
+        RuntimeBackend {
+            inner: std::cell::RefCell::new(scorer),
+        }
+    }
+
+    /// Which engine the wrapped scorer is using right now.
+    pub fn engine(&self) -> ScorerEngine {
+        self.inner.borrow().backend()
+    }
+
+    /// Triple → Score with no PDF; `mass` is NaN (not tracked on the
+    /// fused path) rather than a fake "all mass captured" 1.0.
+    fn to_score(t: &Triple) -> Score {
+        Score {
+            mean: t.mean,
+            var: t.var,
+            p99: t.p99,
+            mass: f64::NAN,
+            pdf: Vec::new(),
+        }
+    }
+}
+
+impl crate::compose::backend::ScoreBackend for RuntimeBackend {
+    fn name(&self) -> &str {
+        match self.engine() {
+            ScorerEngine::Xla => "runtime-xla",
+            ScorerEngine::Native => "runtime-native",
+        }
+    }
+
+    fn score(
+        &self,
+        wf: &Workflow,
+        alloc: &Allocation,
+        servers: &[Server],
+        grid: &GridSpec,
+        model: ResponseModel,
+    ) -> Score {
+        if self.engine() == ScorerEngine::Native {
+            return score_allocation_with(wf, alloc, servers, grid, model);
+        }
+        let t = self.inner.borrow_mut().score_batch(
+            wf,
+            std::slice::from_ref(alloc),
+            servers,
+            grid,
+            model,
+        );
+        Self::to_score(&t[0])
+    }
+
+    fn score_batch(
+        &self,
+        wf: &Workflow,
+        allocs: &[Allocation],
+        servers: &[Server],
+        grid: &GridSpec,
+        model: ResponseModel,
+    ) -> Vec<Score> {
+        if self.engine() == ScorerEngine::Native {
+            return allocs
+                .iter()
+                .map(|a| score_allocation_with(wf, a, servers, grid, model))
+                .collect();
+        }
+        self.inner
+            .borrow_mut()
+            .score_batch(wf, allocs, servers, grid, model)
+            .into_iter()
+            .map(|t| Self::to_score(&t))
+            .collect()
+    }
+}
+
 /// True when the workflow is the Fig. 6 template the fused artifact was
 /// lowered for: Serial[Parallel(2), Queue, Queue, Parallel(2)] over 6
 /// slots (the canonicalized fig6 shape).
@@ -372,6 +495,26 @@ mod tests {
             Workflow::fig6(),
             Server::pool_exponential(&[9.0, 8.0, 7.0, 6.0, 5.0, 4.0]),
         )
+    }
+
+    #[test]
+    fn runtime_backend_is_a_score_backend() {
+        use crate::compose::backend::{AnalyticBackend, ScoreBackend};
+        let (wf, servers) = fig6();
+        let a = allocate_with(&wf, &servers, ResponseModel::Mm1).unwrap();
+        let grid = GridSpec::auto(&a, &servers);
+        let rb = RuntimeBackend::native();
+        assert_eq!(rb.engine(), ScorerEngine::Native);
+        assert_eq!(rb.name(), "runtime-native");
+        let got = rb.score(&wf, &a, &servers, &grid, ResponseModel::Mm1);
+        let want = AnalyticBackend.score(&wf, &a, &servers, &grid, ResponseModel::Mm1);
+        // native engine routes through the same composition math
+        assert_eq!(got.mean, want.mean);
+        assert_eq!(got.var, want.var);
+        assert_eq!(got.p99, want.p99);
+        let batch = rb.score_batch(&wf, &[a.clone(), a], &servers, &grid, ResponseModel::Mm1);
+        assert_eq!(batch.len(), 2);
+        assert_eq!(batch[0].mean, want.mean);
     }
 
     #[test]
@@ -415,7 +558,7 @@ mod tests {
         let grid = GridSpec::auto(&a1, &servers);
         let reg = ArtifactRegistry::open(&dir).unwrap();
         let mut xla_scorer = BatchScorer::xla(reg).unwrap();
-        assert_eq!(xla_scorer.backend(), ScorerBackend::Xla);
+        assert_eq!(xla_scorer.backend(), ScorerEngine::Xla);
         let grid = GridSpec {
             dt: grid.dt,
             n: xla_scorer.grid_n,

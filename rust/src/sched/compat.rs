@@ -6,7 +6,8 @@
 //! exactly the allocation the new path produces, and carries a
 //! `#[deprecated]` pointer at its replacement. New code (and everything
 //! inside this crate outside this module and its equivalence tests)
-//! uses [`Planner`] directly.
+//! uses [`Planner`] directly. Before/after migration snippets for every
+//! shim live in `docs/MIGRATION.md` at the repository root.
 
 use crate::compose::grid::GridSpec;
 use crate::compose::score::Score;
@@ -21,7 +22,7 @@ use crate::sched::Objective;
 /// response model.
 #[deprecated(
     since = "0.2.0",
-    note = "use `Planner::new(wf, servers).allocate(&SdccPolicy)`"
+    note = "use `Planner::new(wf, servers).allocate(&SdccPolicy)`; see docs/MIGRATION.md"
 )]
 pub fn sdcc_allocate(wf: &Workflow, servers: &[Server]) -> Result<Allocation, SchedError> {
     Planner::new(wf, servers).allocate(&SdccPolicy)
@@ -31,7 +32,7 @@ pub fn sdcc_allocate(wf: &Workflow, servers: &[Server]) -> Result<Allocation, Sc
 /// splits.
 #[deprecated(
     since = "0.2.0",
-    note = "use `Planner::new(wf, servers).model(model).allocate(&BaselinePolicy::default())`"
+    note = "use `Planner::new(wf, servers).model(model).allocate(&BaselinePolicy::default())`; see docs/MIGRATION.md"
 )]
 pub fn baseline_allocate(
     wf: &Workflow,
@@ -49,7 +50,7 @@ pub fn baseline_allocate(
 /// legacy function scored on.
 #[deprecated(
     since = "0.2.0",
-    note = "use `Planner::new(wf, servers).model(model).objective(objective).plan(&ProposedPolicy::default())`"
+    note = "use `Planner::new(wf, servers).model(model).objective(objective).plan(&ProposedPolicy::default())`; see docs/MIGRATION.md"
 )]
 pub fn proposed_allocate(
     wf: &Workflow,
@@ -67,7 +68,7 @@ pub fn proposed_allocate(
 /// Exhaustive-search optimal reference on an explicit grid.
 #[deprecated(
     since = "0.2.0",
-    note = "use `Planner::new(wf, servers).model(model).objective(objective).grid(grid).plan(&OptimalPolicy)`"
+    note = "use `Planner::new(wf, servers).model(model).objective(objective).grid(grid).plan(&OptimalPolicy)`; see docs/MIGRATION.md"
 )]
 pub fn optimal_allocate(
     wf: &Workflow,

@@ -8,9 +8,10 @@
 //!   (behind [`crate::plan::SdccPolicy`]);
 //! * [`baseline_allocate_split`] — the §3 heuristic comparator (behind
 //!   [`crate::plan::BaselinePolicy`]);
-//! * [`refine::propose`] / [`refine::refine`] — the §3 min-max
-//!   balancing (behind [`crate::plan::ProposedPolicy`]);
-//! * [`optimal::exhaustive`] — exhaustive-search reference (behind
+//! * [`refine::propose`] / [`refine::refine_with`] — the §3 min-max
+//!   balancing (behind [`crate::plan::ProposedPolicy`]), scoring
+//!   through an injected [`crate::compose::backend::ScoreBackend`];
+//! * [`optimal::exhaustive_with`] — exhaustive-search reference (behind
 //!   [`crate::plan::OptimalPolicy`]);
 //! * [`equilibrium`] — Algorithm 2's rate scheduling;
 //! * [`response`] — service-law → response-law queueing models;
@@ -32,7 +33,7 @@ pub use algorithms::{allocate_with, baseline_allocate_split, schedule_rates, Spl
 pub use allocation::{Allocation, SchedError};
 #[allow(deprecated)]
 pub use compat::{baseline_allocate, optimal_allocate, proposed_allocate, sdcc_allocate};
-pub use refine::{propose, refine};
+pub use refine::{propose, refine, refine_with};
 pub use response::ResponseModel;
 
 use crate::compose::score::Score;

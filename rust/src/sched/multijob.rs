@@ -6,20 +6,29 @@
 //! Algorithm (greedy + cross-job swap refinement):
 //! 1. order jobs by offered load (entry rate × serial depth, the
 //!    capacity pressure of the job);
-//! 2. allocate each job in order with [`propose`] against the
-//!    *remaining* pool (the allocator keeps the fastest `slots` servers
-//!    and the refinement places them);
-//! 3. refine across jobs: try swapping any pair of servers between two
-//!    jobs, keep the swap if the load-weighted objective sum improves.
+//! 2. seed each job in order with Alg. 1/2 against the *remaining*
+//!    pool (one pass; each job's pool view is kept);
+//! 3. size **one shared evaluation grid** for the whole job set — the
+//!    widest per-job seed-response grid, so every job's law fits —
+//!    unless the caller pinned one;
+//! 4. refine each seed (§3 balancing) on the shared grid;
+//! 5. refine across jobs: try swapping any pair of servers between two
+//!    jobs, keep the swap if the load-weighted objective sum improves —
+//!    every candidate scored on the same shared grid, so swap decisions
+//!    compare like with like.
 //!
 //! Scores are load-weighted so a job processing 8 tasks/s counts 4× a
 //! 2 tasks/s job in the cluster objective (minimizing total expected
-//! in-flight work).
+//! in-flight work). All scoring flows through an injected
+//! [`ScoreBackend`] ([`multijob_allocate_with`]); [`multijob_allocate`]
+//! is the analytic-backend convenience.
 
+use crate::compose::backend::{AnalyticBackend, ScoreBackend};
 use crate::compose::grid::GridSpec;
 use crate::compose::score::Score;
 use crate::flow::Workflow;
-use crate::sched::refine::{propose, refine};
+use crate::sched::algorithms::allocate_with;
+use crate::sched::refine::refine_with;
 use crate::sched::response::ResponseModel;
 use crate::sched::schedule_rates;
 use crate::sched::server::Server;
@@ -32,17 +41,44 @@ pub struct JobPlan {
     pub job: usize,
     /// Allocation in *global* server ids.
     pub alloc: Allocation,
-    /// Exact score under the job's own grid.
+    /// Exact score on the shared cluster grid.
     pub score: Score,
+    /// The shared evaluation grid every job in the plan set was scored
+    /// on (identical across the returned plans).
+    pub grid: GridSpec,
 }
 
-/// Partition `servers` across `jobs` and allocate each.
+/// Partition `servers` across `jobs` and allocate each, scoring with
+/// the default [`AnalyticBackend`] on an auto-sized shared grid.
 pub fn multijob_allocate(
     jobs: &[&Workflow],
     servers: &[Server],
     model: ResponseModel,
     objective: Objective,
 ) -> Result<Vec<JobPlan>, SchedError> {
+    multijob_allocate_with(jobs, servers, model, objective, &AnalyticBackend, None)
+}
+
+/// Partition `servers` across `jobs` with an injected scoring backend
+/// and an optional pinned evaluation grid.
+///
+/// All jobs are evaluated on **one shared grid**: `grid` when pinned,
+/// else the widest of the per-job Alg. 1/2 seed-response grids (sized
+/// once, up front — jobs are not re-derived a grid each). This is what
+/// lets a comparison of swap candidates across jobs, and downstream
+/// consumers of [`JobPlan::score`], compare numbers computed on the
+/// same support.
+pub fn multijob_allocate_with(
+    jobs: &[&Workflow],
+    servers: &[Server],
+    model: ResponseModel,
+    objective: Objective,
+    backend: &dyn ScoreBackend,
+    grid: Option<GridSpec>,
+) -> Result<Vec<JobPlan>, SchedError> {
+    if jobs.is_empty() {
+        return Ok(Vec::new());
+    }
     let need: usize = jobs.iter().map(|w| w.slots()).sum();
     if servers.len() < need {
         return Err(SchedError::NotEnoughServers {
@@ -62,22 +98,49 @@ pub fn multijob_allocate(
             .then(a.cmp(&b))
     });
 
-    // 2. greedy allocation against the remaining pool
+    // 2. one greedy Alg. 1/2 seed pass: each job seeded against the
+    // remaining pool; the pool view each job saw is kept so refinement
+    // can reuse it (refinement only permutes a seed's server set, so
+    // the removal order is identical either way)
     let mut remaining: Vec<Server> = servers.to_vec();
-    let mut plans: Vec<JobPlan> = Vec::with_capacity(jobs.len());
+    let mut staged: Vec<(usize, Allocation, Vec<Server>)> = Vec::with_capacity(jobs.len());
     for &j in &order {
-        let wf = jobs[j];
-        let (local_alloc, score) = propose(wf, &remaining, model, objective)?;
-        // translate local pool indices to global server ids, and drop the
-        // used servers from the pool
-        let used_local: Vec<usize> = local_alloc.slot_server.clone();
-        let global: Vec<usize> = used_local.iter().map(|&i| remaining[i].id).collect();
-        let mut used_sorted = used_local.clone();
-        used_sorted.sort_unstable_by(|a, b| b.cmp(a));
-        for i in used_sorted {
+        let seed = allocate_with(jobs[j], &remaining, model)?;
+        let pool_view = remaining.clone();
+        let mut used = seed.slot_server.clone();
+        used.sort_unstable_by(|a, b| b.cmp(a));
+        for i in used {
             remaining.remove(i);
         }
-        // re-index the remaining pool (ids stay global; positions shift)
+        staged.push((j, seed, pool_view));
+    }
+
+    // 3. one shared evaluation grid for the whole job set: the widest
+    // (largest dt, i.e. longest horizon) of the per-job seed-response
+    // grids, sized against the laws the backend actually scores
+    let shared = grid.unwrap_or_else(|| {
+        staged
+            .iter()
+            .map(|(_, seed, pool)| {
+                let pool = backend.resolve_scoring_pool(pool);
+                GridSpec::auto_response(seed, &pool, model)
+            })
+            .max_by(|a, b| a.dt.partial_cmp(&b.dt).unwrap())
+            .expect("staged is non-empty: jobs.is_empty() returned early")
+    });
+
+    // 4. refine each job on the shared grid against its pool view
+    let mut plans: Vec<JobPlan> = Vec::with_capacity(jobs.len());
+    for (j, seed, pool_view) in staged {
+        let (local_alloc, score) =
+            refine_with(jobs[j], seed, &pool_view, &shared, model, objective, 8, backend)?;
+        // translate local pool indices to global server ids (ids stay
+        // global; positions shifted as earlier jobs consumed servers)
+        let global: Vec<usize> = local_alloc
+            .slot_server
+            .iter()
+            .map(|&i| pool_view[i].id)
+            .collect();
         plans.push(JobPlan {
             job: j,
             alloc: Allocation {
@@ -85,10 +148,12 @@ pub fn multijob_allocate(
                 slot_rate: local_alloc.slot_rate,
             },
             score,
+            grid: shared,
         });
     }
 
-    // 3. cross-job pairwise swap refinement on the weighted objective
+    // 5. cross-job pairwise swap refinement on the weighted objective,
+    // every candidate rescored on the same shared grid
     let weight = |j: usize| jobs[j].arrival_rate;
     let rescore = |j: usize, global_assign: &[usize]| -> Option<(Allocation, Score)> {
         // build a local pool view for this job's servers only
@@ -98,9 +163,15 @@ pub fn multijob_allocate(
             .collect();
         let local: Vec<usize> = (0..pool.len()).collect();
         let alloc = schedule_rates(jobs[j], local, &pool, model).ok()?;
-        let grid = GridSpec::auto_response(&alloc, &pool, model);
         let (refined, score) =
-            refine(jobs[j], alloc, &pool, &grid, model, objective, 4).ok()?;
+            refine_with(jobs[j], alloc, &pool, &shared, model, objective, 4, backend).ok()?;
+        // a candidate whose response tail escapes the shared grid scores
+        // deceptively low (moments are mass-normalized) — it must not be
+        // allowed to win a swap on a truncated number. (Backends that do
+        // not track mass report NaN, which passes.)
+        if score.mass < 0.95 {
+            return None;
+        }
         Some((
             Allocation {
                 slot_server: refined
@@ -169,6 +240,8 @@ pub fn cluster_objective(plans: &[JobPlan], jobs: &[&Workflow], objective: Objec
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::compose::score::score_allocation_with;
+    use crate::sched::refine::propose;
 
     fn pool() -> Vec<Server> {
         Server::pool_exponential(&[14.0, 12.0, 10.0, 9.0, 8.0, 7.0, 6.0, 5.0, 4.0])
@@ -193,6 +266,82 @@ mod tests {
         assert_eq!(before, 9);
         for p in &plans {
             assert!(p.score.is_stable(), "job {} unstable", p.job);
+        }
+    }
+
+    #[test]
+    fn all_jobs_share_one_grid() {
+        let j1 = Workflow::fig6();
+        let j2 = Workflow::tandem(3, 1.0);
+        let jobs = [&j1, &j2];
+        let plans = multijob_allocate(&jobs, &pool(), ResponseModel::Mm1, Objective::Mean)
+            .unwrap();
+        assert_eq!(plans[0].grid, plans[1].grid, "jobs must share the grid");
+    }
+
+    #[test]
+    fn pinned_grid_flows_through() {
+        let j1 = Workflow::fig6();
+        let j2 = Workflow::tandem(3, 1.0);
+        let jobs = [&j1, &j2];
+        let pinned = GridSpec::new(0.02, 2048);
+        let plans = multijob_allocate_with(
+            &jobs,
+            &pool(),
+            ResponseModel::Mm1,
+            Objective::Mean,
+            &AnalyticBackend,
+            Some(pinned),
+        )
+        .unwrap();
+        for p in &plans {
+            assert_eq!(p.grid, pinned);
+        }
+    }
+
+    #[test]
+    fn shared_grid_matches_per_job_grids_on_three_jobs() {
+        // the shared-grid scores must agree with rescoring each job on
+        // its own response-aware grid (grids differ only in resolution)
+        let j1 = Workflow::fig6();
+        let j2 = Workflow::tandem(3, 1.0);
+        let j3 = Workflow::forkjoin(2, 2.0);
+        let jobs = [&j1, &j2, &j3];
+        let servers = Server::pool_exponential(&[
+            16.0, 14.0, 12.0, 10.0, 9.0, 8.0, 7.0, 6.5, 6.0, 5.0, 4.0,
+        ]);
+        let plans =
+            multijob_allocate(&jobs, &servers, ResponseModel::Mm1, Objective::Mean).unwrap();
+        assert_eq!(plans.len(), 3);
+        assert!(plans.iter().all(|p| p.grid == plans[0].grid));
+        for p in &plans {
+            // local view of this job's servers
+            let local_pool: Vec<Server> = p
+                .alloc
+                .slot_server
+                .iter()
+                .enumerate()
+                .map(|(k, &sid)| Server::new(k, servers[sid].dist.clone()))
+                .collect();
+            let local = Allocation {
+                slot_server: (0..local_pool.len()).collect(),
+                slot_rate: p.alloc.slot_rate.clone(),
+            };
+            let own_grid = GridSpec::auto_response(&local, &local_pool, ResponseModel::Mm1);
+            let own = score_allocation_with(
+                jobs[p.job],
+                &local,
+                &local_pool,
+                &own_grid,
+                ResponseModel::Mm1,
+            );
+            assert!(
+                (own.mean - p.score.mean).abs() < 0.02 * own.mean,
+                "job {}: shared-grid {} vs per-job-grid {}",
+                p.job,
+                p.score.mean,
+                own.mean
+            );
         }
     }
 
@@ -253,5 +402,12 @@ mod tests {
             multijob_allocate(&jobs, &pool(), ResponseModel::Mm1, Objective::Mean).unwrap();
         let total = cluster_objective(&plans, &jobs, Objective::Mean);
         assert!(total.is_finite() && total > 0.0);
+    }
+
+    #[test]
+    fn empty_job_set_is_empty_plan() {
+        let plans =
+            multijob_allocate(&[], &pool(), ResponseModel::Mm1, Objective::Mean).unwrap();
+        assert!(plans.is_empty());
     }
 }

@@ -12,8 +12,9 @@
 //! evaluations + 32 exact scores. A hard cap guards against accidental
 //! factorial blowups on big pools.
 
+use crate::compose::backend::{AnalyticBackend, ScoreBackend};
 use crate::compose::grid::GridSpec;
-use crate::compose::score::{score_allocation_with, Score};
+use crate::compose::score::Score;
 use crate::flow::Workflow;
 use crate::sched::algorithms::{branch_mean_rt, schedule_rates};
 use crate::sched::allocation::{Allocation, SchedError};
@@ -26,8 +27,9 @@ const SHORTLIST: usize = 32;
 /// Refuse to enumerate more candidate assignments than this.
 const MAX_CANDIDATES: usize = 2_000_000;
 
-/// Exhaustive optimal allocation under `objective` (engine layer —
-/// surfaced publicly as [`crate::plan::OptimalPolicy`]).
+/// Exhaustive optimal allocation under `objective` with the default
+/// [`AnalyticBackend`] (engine layer — surfaced publicly as
+/// [`crate::plan::OptimalPolicy`]).
 ///
 /// Returns the winning allocation and its exact score.
 pub fn exhaustive(
@@ -36,6 +38,21 @@ pub fn exhaustive(
     grid: &GridSpec,
     objective: Objective,
     model: ResponseModel,
+) -> Result<(Allocation, Score), SchedError> {
+    exhaustive_with(wf, servers, grid, objective, model, &AnalyticBackend)
+}
+
+/// Exhaustive optimal allocation, exact-scoring the shortlist through
+/// `backend` (one [`ScoreBackend::score_batch`] wave, so the PJRT
+/// scorer evaluates the whole shortlist fused). With
+/// [`AnalyticBackend`] this is bit-identical to [`exhaustive`].
+pub fn exhaustive_with(
+    wf: &Workflow,
+    servers: &[Server],
+    grid: &GridSpec,
+    objective: Objective,
+    model: ResponseModel,
+    backend: &dyn ScoreBackend,
 ) -> Result<(Allocation, Score), SchedError> {
     let slots = wf.slots();
     if servers.len() < slots {
@@ -71,14 +88,15 @@ pub fn exhaustive(
     }
     ranked.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
 
-    // stage 2: exact scoring of the shortlist
-    let mut best: Option<(Allocation, Score)> = None;
-    for (_, assign) in ranked.into_iter().take(SHORTLIST) {
-        let alloc = match schedule_rates(wf, assign, servers, model) {
-            Ok(a) => a,
-            Err(_) => continue,
-        };
-        let score = score_allocation_with(wf, &alloc, servers, grid, model);
+    // stage 2: exact scoring of the shortlist, one backend wave
+    let mut shortlist: Vec<Allocation> = ranked
+        .into_iter()
+        .take(SHORTLIST)
+        .filter_map(|(_, assign)| schedule_rates(wf, assign, servers, model).ok())
+        .collect();
+    let scores = backend.score_batch(wf, &shortlist, servers, grid, model);
+    let mut best: Option<(usize, Score)> = None;
+    for (idx, score) in scores.into_iter().enumerate() {
         if !score.is_stable() {
             continue;
         }
@@ -87,10 +105,11 @@ pub fn exhaustive(
             Some((_, b)) => objective.key(&score) < objective.key(b),
         };
         if better {
-            best = Some((alloc, score));
+            best = Some((idx, score));
         }
     }
-    best.ok_or_else(|| SchedError::Infeasible("no stable shortlist candidate".into()))
+    best.map(|(idx, score)| (shortlist.swap_remove(idx), score))
+        .ok_or_else(|| SchedError::Infeasible("no stable shortlist candidate".into()))
 }
 
 fn enumerate(
@@ -128,6 +147,7 @@ fn count_injections(pool: usize, slots: usize) -> usize {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::compose::score::score_allocation_with;
     use crate::sched::algorithms::{allocate_with, baseline_allocate_split, SplitPolicy};
 
     fn fig6() -> (Workflow, Vec<Server>, GridSpec) {

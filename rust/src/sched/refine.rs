@@ -20,8 +20,9 @@
 //! optimal's O(S!) and far below it in latency, preserving the paper's
 //! "little gap from the optimal choice" framing.
 
+use crate::compose::backend::{AnalyticBackend, ScoreBackend};
 use crate::compose::grid::GridSpec;
-use crate::compose::score::{score_allocation_with, Score};
+use crate::compose::score::Score;
 use crate::flow::Workflow;
 use crate::sched::algorithms::{allocate_with, schedule_rates};
 use crate::sched::allocation::{Allocation, SchedError};
@@ -43,8 +44,9 @@ pub fn propose(
     refine(wf, seed, servers, &grid, model, objective, 8)
 }
 
-/// Hill-climb from an existing allocation. Returns the refined
-/// allocation and its exact score on `grid`.
+/// Hill-climb from an existing allocation with the default
+/// [`AnalyticBackend`]. Returns the refined allocation and its exact
+/// score on `grid`. See [`refine_with`] for an injected backend.
 pub fn refine(
     wf: &Workflow,
     start: Allocation,
@@ -54,36 +56,72 @@ pub fn refine(
     objective: Objective,
     max_rounds: usize,
 ) -> Result<(Allocation, Score), SchedError> {
+    refine_with(
+        wf,
+        start,
+        servers,
+        grid,
+        model,
+        objective,
+        max_rounds,
+        &AnalyticBackend,
+    )
+}
+
+/// Hill-climb from an existing allocation, scoring every candidate
+/// through `backend`. Each round's swap candidates are scored as one
+/// wave ([`ScoreBackend::score_batch`]), so batched backends (the PJRT
+/// scorer) evaluate a whole round in one fused call. With
+/// [`AnalyticBackend`] this is bit-identical to the historical
+/// one-at-a-time loop.
+#[allow(clippy::too_many_arguments)]
+pub fn refine_with(
+    wf: &Workflow,
+    start: Allocation,
+    servers: &[Server],
+    grid: &GridSpec,
+    model: ResponseModel,
+    objective: Objective,
+    max_rounds: usize,
+    backend: &dyn ScoreBackend,
+) -> Result<(Allocation, Score), SchedError> {
     let slots = wf.slots();
     let mut best = start;
-    let mut best_score = score_allocation_with(wf, &best, servers, grid, model);
+    let mut best_score = backend.score(wf, &best, servers, grid, model);
 
     for _round in 0..max_rounds {
-        let mut improved = false;
-        let mut round_best: Option<(Allocation, Score)> = None;
+        // enumerate this round's feasible swap candidates
+        let mut candidates: Vec<Allocation> = Vec::new();
         for i in 0..slots {
             for j in (i + 1)..slots {
                 let mut assign = best.slot_server.clone();
                 assign.swap(i, j);
-                let Ok(cand) = schedule_rates(wf, assign, servers, model) else {
-                    continue;
-                };
-                let score = score_allocation_with(wf, &cand, servers, grid, model);
-                if !score.is_stable() {
-                    continue;
-                }
-                let current_key = round_best
-                    .as_ref()
-                    .map(|(_, s)| objective.key(s))
-                    .unwrap_or_else(|| objective.key(&best_score));
-                if objective.key(&score) < current_key - 1e-12 {
-                    round_best = Some((cand, score));
+                if let Ok(cand) = schedule_rates(wf, assign, servers, model) {
+                    candidates.push(cand);
                 }
             }
         }
-        if let Some((cand, score)) = round_best {
+        // score the wave, then scan exactly like the legacy loop did:
+        // keep the first candidate strictly better (1e-12 margin) than
+        // the current champion
+        let scores = backend.score_batch(wf, &candidates, servers, grid, model);
+        let mut round_best: Option<(usize, Score)> = None;
+        for (idx, score) in scores.into_iter().enumerate() {
+            if !score.is_stable() {
+                continue;
+            }
+            let current_key = round_best
+                .as_ref()
+                .map(|(_, s)| objective.key(s))
+                .unwrap_or_else(|| objective.key(&best_score));
+            if objective.key(&score) < current_key - 1e-12 {
+                round_best = Some((idx, score));
+            }
+        }
+        let mut improved = false;
+        if let Some((idx, score)) = round_best {
             if objective.key(&score) < objective.key(&best_score) - 1e-12 {
-                best = cand;
+                best = candidates.swap_remove(idx);
                 best_score = score;
                 improved = true;
             }
@@ -98,6 +136,7 @@ pub fn refine(
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::compose::score::score_allocation_with;
     use crate::sched::algorithms::baseline_allocate_split;
     use crate::sched::algorithms::SplitPolicy;
     use crate::sched::optimal::exhaustive;

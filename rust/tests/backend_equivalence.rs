@@ -1,0 +1,180 @@
+//! ScoreBackend equivalence: every backend injected through `Planner`
+//! must agree with the default analytic path (exactly where the math is
+//! shared, approximately where laws are re-fitted), and `plan_jobs`
+//! must evaluate every job on one shared grid. Only the public builder
+//! surface is used — no deep imports of the raw scoring free function.
+
+use dcflow::prelude::*;
+use dcflow::util::prop;
+use dcflow::util::rng::Rng;
+
+/// A random small workflow: tandem, fork-join, or fork-join-then-queue.
+fn random_workflow(g: &mut prop::Gen) -> Workflow {
+    let n_slots = g.usize_in(2, 5);
+    match g.usize_in(0, 2) {
+        0 => Workflow::tandem(n_slots, g.f64_in(0.3, 1.2)),
+        1 => Workflow::forkjoin(n_slots, g.f64_in(0.3, 1.2)),
+        _ => Workflow::new(
+            Dcc::serial(vec![
+                Dcc::parallel((0..n_slots).map(|_| Dcc::queue()).collect()),
+                Dcc::queue(),
+            ]),
+            g.f64_in(0.3, 1.2),
+        )
+        .unwrap(),
+    }
+}
+
+fn random_pool(g: &mut prop::Gen, slots: usize) -> Vec<Server> {
+    let extra = g.usize_in(0, 2);
+    let rates: Vec<f64> = (0..slots + extra).map(|_| g.f64_in(2.0, 20.0)).collect();
+    Server::pool_exponential(&rates)
+}
+
+#[test]
+fn explicit_analytic_backend_is_the_default_bit_for_bit() {
+    // injecting AnalyticBackend must be indistinguishable from not
+    // injecting anything, for every built-in policy
+    prop::run("Planner.backend(Analytic) == Planner default", 20, |g| {
+        let wf = random_workflow(g);
+        let servers = random_pool(g, wf.slots());
+        let default_planner = Planner::new(&wf, &servers);
+        let injected = Planner::new(&wf, &servers).backend(&AnalyticBackend);
+        for policy in [
+            &SdccPolicy as &dyn AllocationPolicy,
+            &BaselinePolicy::default(),
+            &ProposedPolicy::default(),
+        ] {
+            match (default_planner.plan(policy), injected.plan(policy)) {
+                (Ok(a), Ok(b)) => {
+                    assert_eq!(a.allocation, b.allocation);
+                    assert_eq!(a.score.mean, b.score.mean);
+                    assert_eq!(a.score.var, b.score.var);
+                    assert_eq!(a.score.p99, b.score.p99);
+                    assert_eq!(a.diagnostics.grid, b.diagnostics.grid);
+                }
+                (Err(a), Err(b)) => assert_eq!(a, b),
+                (a, b) => panic!("feasibility mismatch: {a:?} vs {b:?}"),
+            }
+        }
+    });
+}
+
+#[test]
+fn planner_score_is_plan_score_on_the_same_grid() {
+    // Planner::score (the builder replacement for the raw free
+    // function) re-produces a Plan's score bit for bit
+    prop::run("Planner::score == Plan.score", 20, |g| {
+        let wf = random_workflow(g);
+        let servers = random_pool(g, wf.slots());
+        let planner = Planner::new(&wf, &servers);
+        let Ok(plan) = planner.plan(&ProposedPolicy::default()) else {
+            return; // infeasible draw: fine
+        };
+        let rescored = planner.grid(plan.diagnostics.grid).score(&plan.allocation);
+        assert_eq!(rescored.mean, plan.score.mean);
+        assert_eq!(rescored.var, plan.score.var);
+        assert_eq!(rescored.p99, plan.score.p99);
+    });
+}
+
+#[test]
+fn runtime_backend_native_matches_analytic_through_planner() {
+    // runtime::scorer as a ScoreBackend: the native fallback engine
+    // routes through the same composition math and returns the full
+    // analytic Score, so planning through it is exact
+    let wf = Workflow::fig6();
+    let servers = Server::pool_exponential(&[9.0, 8.0, 7.0, 6.0, 5.0, 4.0]);
+    let backend = RuntimeBackend::native();
+    let via_runtime = Planner::new(&wf, &servers)
+        .backend(&backend)
+        .plan(&ProposedPolicy::default())
+        .unwrap();
+    let via_analytic = Planner::new(&wf, &servers)
+        .plan(&ProposedPolicy::default())
+        .unwrap();
+    assert_eq!(via_runtime.diagnostics.backend, "runtime-native");
+    assert_eq!(via_analytic.diagnostics.backend, "analytic");
+    assert_eq!(via_runtime.allocation, via_analytic.allocation);
+    assert_eq!(via_runtime.score.mean, via_analytic.score.mean);
+    assert_eq!(via_runtime.score.var, via_analytic.score.var);
+    assert_eq!(via_runtime.score.p99, via_analytic.score.p99);
+}
+
+#[test]
+fn empirical_backend_recovers_the_true_pool() {
+    // believed pool is wrong; measurements of the true laws flow in
+    // through EmpiricalBackend; scores must land near the truth-pool
+    // analytic scores
+    let wf = Workflow::fig6();
+    let truth = Server::pool_exponential(&[9.0, 8.0, 7.0, 6.0, 5.0, 4.0]);
+    let believed = Server::pool_exponential(&[6.0; 6]);
+    let mut rng = Rng::new(2024);
+    let mut backend = EmpiricalBackend::new();
+    for (sid, s) in truth.iter().enumerate() {
+        let samples: Vec<f64> = (0..5000).map(|_| s.dist.sample(&mut rng)).collect();
+        backend = backend.with_samples(sid, &samples);
+    }
+    let truth_plan = Planner::new(&wf, &truth).plan(&SdccPolicy).unwrap();
+    // same grid + same allocation, scored through the measured laws
+    let measured = Planner::new(&wf, &believed)
+        .grid(truth_plan.diagnostics.grid)
+        .backend(&backend)
+        .score(&truth_plan.allocation);
+    assert!(measured.is_stable());
+    assert!(
+        (measured.mean - truth_plan.score.mean).abs() < 0.10 * truth_plan.score.mean,
+        "measured {} vs truth {}",
+        measured.mean,
+        truth_plan.score.mean
+    );
+}
+
+#[test]
+fn plan_jobs_shares_one_grid_across_jobs() {
+    let j1 = Workflow::fig6();
+    let j2 = Workflow::tandem(3, 1.0);
+    let j3 = Workflow::forkjoin(2, 2.0);
+    let jobs = [&j1, &j2, &j3];
+    let pool = Server::pool_exponential(&[
+        16.0, 14.0, 12.0, 10.0, 9.0, 8.0, 7.0, 6.5, 6.0, 5.0, 4.0,
+    ]);
+    let plans = Planner::new(&j1, &pool).plan_jobs(&jobs).unwrap();
+    assert_eq!(plans.len(), 3);
+    for p in &plans {
+        assert_eq!(p.grid, plans[0].grid, "job {} has a different grid", p.job);
+        assert!(p.score.is_stable(), "job {} unstable", p.job);
+    }
+    // pinned grids flow through to every job
+    let pinned = GridSpec::new(0.02, 2048);
+    let pinned_plans = Planner::new(&j1, &pool)
+        .grid(pinned)
+        .plan_jobs(&jobs)
+        .unwrap();
+    for p in &pinned_plans {
+        assert_eq!(p.grid, pinned);
+    }
+}
+
+#[test]
+fn backends_flow_through_plan_jobs() {
+    // the injected backend scores multi-job plans too (native runtime
+    // backend == analytic math)
+    let j1 = Workflow::fig6();
+    let j2 = Workflow::tandem(3, 1.0);
+    let jobs = [&j1, &j2];
+    let pool =
+        Server::pool_exponential(&[14.0, 12.0, 10.0, 9.0, 8.0, 7.0, 6.0, 5.0, 4.0]);
+    let backend = RuntimeBackend::native();
+    let via_runtime = Planner::new(&j1, &pool)
+        .backend(&backend)
+        .plan_jobs(&jobs)
+        .unwrap();
+    let via_analytic = Planner::new(&j1, &pool).plan_jobs(&jobs).unwrap();
+    assert_eq!(via_runtime.len(), via_analytic.len());
+    for (r, a) in via_runtime.iter().zip(via_analytic.iter()) {
+        assert_eq!(r.alloc, a.alloc);
+        assert_eq!(r.score.mean, a.score.mean);
+        assert_eq!(r.grid, a.grid);
+    }
+}

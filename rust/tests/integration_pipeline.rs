@@ -80,7 +80,7 @@ fn mg1_approximation_tracks_heavy_tail_sim() {
     let assign = vec![0usize, 1];
     let alloc = schedule_rates(&wf, assign, &servers, model).unwrap();
     let grid = GridSpec::auto_response(&alloc, &servers, model);
-    let s = score_allocation_with(&wf, &alloc, &servers, &grid, model);
+    let s = Planner::new(&wf, &servers).model(model).grid(grid).score(&alloc);
     let sim = simulate(&wf, &alloc, &servers, &sim_cfg(13));
     assert!(
         (s.mean - sim.mean).abs() < 0.10 * sim.mean,
@@ -171,13 +171,9 @@ fn monitored_refit_recovers_scoring_accuracy() {
         .plan(&ProposedPolicy::default())
         .unwrap();
     // score the believed allocation against the TRUE laws, on the same grid
-    let s_believed = score_allocation_with(
-        &wf,
-        &alloc_believed,
-        &truth,
-        &truth_plan.diagnostics.grid,
-        ResponseModel::Mm1,
-    );
+    let s_believed = Planner::new(&wf, &truth)
+        .grid(truth_plan.diagnostics.grid)
+        .score(&alloc_believed);
     assert!(
         s_believed.mean <= truth_plan.score.mean * 1.05,
         "fitted-pool allocation {} vs truth-pool {}",
@@ -213,6 +209,6 @@ fn infeasible_load_is_rejected_everywhere() {
         slot_server: vec![0, 1],
         slot_rate: vec![20.0, 20.0],
     };
-    let s = score_allocation_with(&wf, &alloc, &servers, &grid, ResponseModel::Mm1);
+    let s = planner.grid(grid).score(&alloc);
     assert!(!s.is_stable());
 }

@@ -7,7 +7,7 @@
 use dcflow::prelude::*;
 use dcflow::runtime::executable::ArtifactRegistry;
 use dcflow::runtime::scorer::{is_fig6_shape, BatchScorer};
-use dcflow::runtime::ScorerBackend;
+use dcflow::runtime::ScorerEngine;
 use dcflow::sched::schedule_rates;
 use dcflow::util::rng::Rng;
 use std::path::PathBuf;
@@ -95,7 +95,7 @@ fn batched_scorer_agrees_with_native_on_permutation_wave() {
     let grid_probe = GridSpec::auto_response(&waves[0], &servers, model);
 
     let mut xla = BatchScorer::open_auto();
-    if xla.backend() != ScorerBackend::Xla {
+    if xla.backend() != ScorerEngine::Xla {
         eprintln!("SKIP: xla backend unavailable");
         return;
     }
@@ -157,7 +157,7 @@ fn xla_scorer_handles_unstable_candidates() {
         slot_rate: vec![4.0, 4.0, 4.0, 4.0, 1.0, 1.0],
     };
     let mut xla = BatchScorer::open_auto();
-    if xla.backend() != ScorerBackend::Xla {
+    if xla.backend() != ScorerEngine::Xla {
         eprintln!("SKIP: xla backend unavailable");
         return;
     }
@@ -182,7 +182,7 @@ fn native_fallback_on_non_fig6_topologies() {
     let grid = GridSpec::auto_response(&alloc, &servers, model);
     let mut scorer = BatchScorer::open_auto(); // xla if available
     let t = scorer.score_batch(&wf, &[alloc.clone()], &servers, &grid, model);
-    let direct = score_allocation_with(&wf, &alloc, &servers, &grid, model);
+    let direct = Planner::new(&wf, &servers).model(model).grid(grid).score(&alloc);
     assert!((t[0].mean - direct.mean).abs() < 1e-9, "non-fig6 must use native path");
     // baseline comparators flow through too
     let _ = Planner::new(&wf, &servers)
@@ -213,7 +213,7 @@ fn parametric_mmde_path_matches_native() {
     }
     let probe = GridSpec::auto_response(&waves[0], &servers, model);
     let mut xla = BatchScorer::open_auto();
-    if xla.backend() != ScorerBackend::Xla {
+    if xla.backend() != ScorerEngine::Xla {
         eprintln!("SKIP: xla backend unavailable");
         return;
     }
