@@ -1,0 +1,135 @@
+//! PERF — sharded wave scoring: `ShardedBackend` vs the serial inner
+//! backend on wide candidate waves over a many-server pool, plus the
+//! end-to-end multi-job planner. The paper's response-time tails grow
+//! with the number of series/parallel servers, so realistic plans need
+//! wide searches exactly where single-threaded `score_batch` bottlenecks.
+//!
+//! Reported in EXPERIMENTS.md §Perf. Writes bench_out/sharded_scoring.csv.
+
+use dcflow::prelude::*;
+use dcflow::sched::schedule_rates;
+use dcflow::util::bench::{bench, fmt_time, Csv};
+use dcflow::util::rng::Rng;
+
+/// Random injective assignments of the workflow's slots onto a larger
+/// pool, rate-scheduled into candidate allocations.
+fn candidate_wave(
+    wf: &Workflow,
+    servers: &[Server],
+    n: usize,
+    seed: u64,
+) -> Vec<Allocation> {
+    let mut rng = Rng::new(seed);
+    let mut wave = Vec::with_capacity(n);
+    let mut ids: Vec<usize> = (0..servers.len()).collect();
+    while wave.len() < n {
+        rng.shuffle(&mut ids);
+        let assign: Vec<usize> = ids[..wf.slots()].to_vec();
+        if let Ok(a) = schedule_rates(wf, assign, servers, ResponseModel::Mm1) {
+            wave.push(a);
+        }
+    }
+    wave
+}
+
+fn main() {
+    println!("== PERF: sharded vs serial wave scoring ==");
+    let cpus = std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(1);
+    println!("available parallelism: {cpus}");
+    let mut csv = Csv::new("sharded_scoring", "metric,value,unit");
+    csv.row(&["cpus".into(), format!("{cpus}"), "threads".into()]);
+
+    // --- wave scoring on a 12-server pool -------------------------------
+    let wf = Workflow::fig6();
+    let servers = Server::pool_exponential(&[
+        16.0, 14.0, 12.0, 11.0, 10.0, 9.0, 8.0, 7.5, 7.0, 6.0, 5.0, 4.0,
+    ]);
+    let wave = candidate_wave(&wf, &servers, 256, 7);
+    let grid = GridSpec::auto_response(&wave[0], &servers, ResponseModel::Mm1);
+    println!("wave: {} candidates, {} servers, {}-point grid", wave.len(), servers.len(), grid.n);
+
+    let serial = AnalyticBackend;
+    let t_serial = bench(1, 5, || {
+        serial.score_batch(&wf, &wave, &servers, &grid, ResponseModel::Mm1)
+    });
+    println!(
+        "serial score_batch (256)  : {} ({:.0} candidates/s)",
+        fmt_time(t_serial.mean_s),
+        wave.len() as f64 / t_serial.mean_s
+    );
+    csv.row(&[
+        "serial_wave_s".into(),
+        format!("{:.6}", t_serial.mean_s),
+        "s".into(),
+    ]);
+
+    // correctness smoke: sharded output must equal serial bit for bit
+    let reference = serial.score_batch(&wf, &wave, &servers, &grid, ResponseModel::Mm1);
+    let mut best_speedup = 0.0f64;
+    for shards in [2usize, 4, cpus.max(2)] {
+        let backend = ShardedBackend::new(&serial, shards);
+        let got = backend.score_batch(&wf, &wave, &servers, &grid, ResponseModel::Mm1);
+        assert_eq!(got.len(), reference.len());
+        for (g, r) in got.iter().zip(reference.iter()) {
+            assert_eq!(g.mean, r.mean, "sharded wave diverged from serial");
+            assert_eq!(g.p99, r.p99);
+        }
+        let t = bench(1, 5, || {
+            backend.score_batch(&wf, &wave, &servers, &grid, ResponseModel::Mm1)
+        });
+        let speedup = t_serial.mean_s / t.mean_s;
+        best_speedup = best_speedup.max(speedup);
+        println!(
+            "sharded x{shards:<2} (256)        : {} (speedup {speedup:.2}x)",
+            fmt_time(t.mean_s)
+        );
+        csv.row(&[
+            format!("sharded_x{shards}_wave_s"),
+            format!("{:.6}", t.mean_s),
+            "s".into(),
+        ]);
+        csv.row(&[
+            format!("sharded_x{shards}_speedup"),
+            format!("{speedup:.3}"),
+            "x".into(),
+        ]);
+    }
+
+    // --- end-to-end multi-job planning ----------------------------------
+    let j1 = Workflow::fig6();
+    let j2 = Workflow::tandem(3, 1.0);
+    let j3 = Workflow::forkjoin(2, 2.0);
+    let jobs = [&j1, &j2, &j3];
+    let planner = Planner::new(&j1, &servers).objective(Objective::Mean);
+    let t_jobs_serial = bench(1, 3, || planner.plan_jobs(&jobs).unwrap());
+    let sharded = ShardedBackend::per_cpu(&AnalyticBackend);
+    let sharded_planner = Planner::new(&j1, &servers)
+        .objective(Objective::Mean)
+        .backend(&sharded);
+    let t_jobs_sharded = bench(1, 3, || sharded_planner.plan_jobs(&jobs).unwrap());
+    println!(
+        "plan_jobs serial (3 jobs) : {}\nplan_jobs sharded x{}     : {} (speedup {:.2}x)",
+        fmt_time(t_jobs_serial.mean_s),
+        sharded.shards(),
+        fmt_time(t_jobs_sharded.mean_s),
+        t_jobs_serial.mean_s / t_jobs_sharded.mean_s
+    );
+    csv.row(&[
+        "plan_jobs_serial_s".into(),
+        format!("{:.6}", t_jobs_serial.mean_s),
+        "s".into(),
+    ]);
+    csv.row(&[
+        "plan_jobs_sharded_s".into(),
+        format!("{:.6}", t_jobs_sharded.mean_s),
+        "s".into(),
+    ]);
+    csv.flush();
+
+    if cpus > 1 && best_speedup <= 1.0 {
+        println!("WARNING: no sharded speedup on a {cpus}-way machine");
+    }
+    println!("PERF OK (best wave speedup {best_speedup:.2}x)");
+}

@@ -16,10 +16,14 @@
 //! * [`EmpiricalBackend`] — scores against *measured* laws fitted from
 //!   [`crate::dist::empirical`] samples instead of the believed pool,
 //!   the "swap the analytic model for data" move of the runtime-variation
-//!   literature.
+//!   literature;
+//! * [`ShardedBackend`] — a combinator, not a predictor: wraps any of
+//!   the above (or a custom backend) and fans each `score_batch` wave
+//!   across a pool of worker threads, preserving input order and
+//!   returning bit-identical scores to the inner backend run serially.
 //!
-//! Custom predictors (sharded scorers, learned models, remote services)
-//! implement the same trait and plug into
+//! Custom predictors (learned models, remote services) implement the
+//! same trait and plug into
 //! [`Planner::backend`](crate::plan::Planner::backend).
 //!
 //! ```
@@ -39,6 +43,9 @@
 //! ```
 
 use std::borrow::Cow;
+use std::fmt;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
 
 use crate::compose::grid::GridSpec;
 use crate::compose::score::{score_allocation_with, Score};
@@ -263,6 +270,209 @@ impl ScoreBackend for EmpiricalBackend {
     }
 }
 
+/// How a [`ShardedBackend`] splits a `score_batch` wave into per-worker
+/// chunks. Chunking only affects scheduling granularity, never results:
+/// every policy yields the same scores in the same order.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ChunkPolicy {
+    /// One contiguous chunk per shard (`ceil(wave / shards)` candidates
+    /// each) — minimal coordination, the default.
+    Even,
+    /// Fixed candidates per chunk (values `< 1` are treated as 1).
+    /// Smaller chunks load-balance waves whose candidates have very
+    /// uneven cost (e.g. mixed stable/unstable allocations) at the
+    /// price of more queue traffic — and of repeating any per-wave
+    /// setup the inner backend does per chunk (e.g.
+    /// [`EmpiricalBackend`] re-derives its substituted scoring pool
+    /// once per `score_batch` call). Prefer [`ChunkPolicy::Even`],
+    /// which bounds that overhead at the shard count, unless a profile
+    /// says otherwise.
+    Fixed(usize),
+}
+
+/// A [`ScoreBackend`] combinator that fans each [`score_batch`] wave
+/// across a per-wave pool of scoped worker threads — the first scaling
+/// layer for wide candidate searches over many-server pools, where the
+/// paper's response-time tails make single-threaded wave scoring the
+/// planner's bottleneck.
+///
+/// [`score_batch`]: ScoreBackend::score_batch
+///
+/// The wave is split into chunks ([`ChunkPolicy`]), workers pull chunks
+/// off a shared queue and score them through the inner backend, and the
+/// results are reassembled **in input order**. Because [`ScoreBackend`]
+/// scores candidates independently, the output is bit-identical to
+/// running the inner backend serially — property-tested in
+/// `tests/backend_equivalence.rs` across shard counts. Waves narrower
+/// than [`ShardedBackend::MIN_PARALLEL_WAVE`] (and single-candidate
+/// [`ScoreBackend::score`] calls) are scored inline, so thread spawn
+/// cost is never paid where it cannot be amortized.
+///
+/// The inner backend must be [`Sync`]: [`AnalyticBackend`],
+/// [`EmpiricalBackend`] and
+/// [`RuntimeBackend`](crate::runtime::scorer::RuntimeBackend) all are.
+/// `RuntimeBackend` takes its scorer mutex once, briefly, per chunk to
+/// read the active engine — native-engine chunks then score outside the
+/// lock and overlap fully; XLA chunks score under it, so sharding
+/// composes (correct scores) but waves serialize on the device.
+///
+/// Single-candidate scoring ([`ScoreBackend::score`]), diagnostics and
+/// [`ScoreBackend::scoring_pool`] delegate straight to the inner
+/// backend, so grid auto-sizing against a substituted scoring pool
+/// behaves exactly as if the inner backend were injected directly.
+///
+/// ```
+/// use dcflow::prelude::*;
+///
+/// let wf = Workflow::fig6();
+/// let servers = Server::pool_exponential(&[9.0, 8.0, 7.0, 6.0, 5.0, 4.0]);
+/// let sharded = ShardedBackend::new(&AnalyticBackend, 4);
+/// let plan = Planner::new(&wf, &servers)
+///     .backend(&sharded)
+///     .plan(&ProposedPolicy::default())
+///     .expect("feasible");
+/// // bit-identical to the serial analytic path
+/// let serial = Planner::new(&wf, &servers)
+///     .plan(&ProposedPolicy::default())
+///     .expect("feasible");
+/// assert_eq!(plan.allocation, serial.allocation);
+/// assert_eq!(plan.score.mean, serial.score.mean);
+/// ```
+pub struct ShardedBackend<'a> {
+    inner: &'a (dyn ScoreBackend + Sync),
+    shards: usize,
+    chunking: ChunkPolicy,
+    name: String,
+}
+
+impl<'a> ShardedBackend<'a> {
+    /// Shard `inner` across `shards` worker threads (values `< 1` are
+    /// treated as 1, i.e. serial). Builder-style: chain
+    /// [`ShardedBackend::chunking`] to tune wave splitting.
+    pub fn new(inner: &'a (dyn ScoreBackend + Sync), shards: usize) -> ShardedBackend<'a> {
+        let shards = shards.max(1);
+        ShardedBackend {
+            inner,
+            shards,
+            chunking: ChunkPolicy::Even,
+            name: format!("sharded({})x{}", inner.name(), shards),
+        }
+    }
+
+    /// Shard across one worker per available CPU
+    /// ([`std::thread::available_parallelism`], 1 when unknown).
+    pub fn per_cpu(inner: &'a (dyn ScoreBackend + Sync)) -> ShardedBackend<'a> {
+        let shards = std::thread::available_parallelism()
+            .map(|n| n.get())
+            .unwrap_or(1);
+        Self::new(inner, shards)
+    }
+
+    /// Select the wave-splitting policy (default [`ChunkPolicy::Even`]).
+    #[must_use]
+    pub fn chunking(mut self, chunking: ChunkPolicy) -> ShardedBackend<'a> {
+        self.chunking = chunking;
+        self
+    }
+
+    /// Worker threads per wave.
+    pub fn shards(&self) -> usize {
+        self.shards
+    }
+
+    /// Active wave-splitting policy.
+    pub fn chunk_policy(&self) -> ChunkPolicy {
+        self.chunking
+    }
+
+    /// Waves narrower than this are scored inline: spawning scoped
+    /// worker threads costs tens of microseconds each, which cheap
+    /// analytic scores on a small wave cannot amortize (the multi-job
+    /// swap loop emits many 2–6 candidate rescore waves). Inline and
+    /// sharded paths are bit-identical, so the threshold is purely a
+    /// scheduling decision.
+    pub const MIN_PARALLEL_WAVE: usize = 8;
+
+    /// Candidates per chunk for a wave of `wave_len`.
+    fn chunk_len(&self, wave_len: usize) -> usize {
+        match self.chunking {
+            ChunkPolicy::Even => wave_len.div_ceil(self.shards).max(1),
+            ChunkPolicy::Fixed(n) => n.max(1),
+        }
+    }
+}
+
+impl fmt::Debug for ShardedBackend<'_> {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.debug_struct("ShardedBackend")
+            .field("inner", &self.inner.name())
+            .field("shards", &self.shards)
+            .field("chunking", &self.chunking)
+            .finish()
+    }
+}
+
+impl ScoreBackend for ShardedBackend<'_> {
+    fn name(&self) -> &str {
+        &self.name
+    }
+
+    fn score(
+        &self,
+        wf: &Workflow,
+        alloc: &Allocation,
+        servers: &[Server],
+        grid: &GridSpec,
+        model: ResponseModel,
+    ) -> Score {
+        // one candidate cannot be split; no thread overhead
+        self.inner.score(wf, alloc, servers, grid, model)
+    }
+
+    fn score_batch(
+        &self,
+        wf: &Workflow,
+        allocs: &[Allocation],
+        servers: &[Server],
+        grid: &GridSpec,
+        model: ResponseModel,
+    ) -> Vec<Score> {
+        let chunk_len = self.chunk_len(allocs.len());
+        if self.shards == 1
+            || allocs.len() <= chunk_len
+            || allocs.len() < Self::MIN_PARALLEL_WAVE
+        {
+            return self.inner.score_batch(wf, allocs, servers, grid, model);
+        }
+        let chunks: Vec<&[Allocation]> = allocs.chunks(chunk_len).collect();
+        let slots: Vec<Mutex<Vec<Score>>> =
+            chunks.iter().map(|_| Mutex::new(Vec::new())).collect();
+        let next = AtomicUsize::new(0);
+        let workers = self.shards.min(chunks.len());
+        std::thread::scope(|scope| {
+            for _ in 0..workers {
+                scope.spawn(|| loop {
+                    let i = next.fetch_add(1, Ordering::Relaxed);
+                    let Some(&chunk) = chunks.get(i) else { break };
+                    let scored = self.inner.score_batch(wf, chunk, servers, grid, model);
+                    *slots[i].lock().expect("shard result lock") = scored;
+                });
+            }
+        });
+        // reassemble in input order: slot i holds chunk i's scores
+        slots
+            .into_iter()
+            .flat_map(|m| m.into_inner().expect("shard result lock"))
+            .collect()
+    }
+
+    fn scoring_pool(&self, servers: &[Server]) -> Option<Vec<Server>> {
+        // report the inner backend's effective pool so shared-grid
+        // auto-sizing is unchanged by the sharding wrapper
+        self.inner.scoring_pool(servers)
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -406,5 +616,94 @@ mod tests {
     fn backend_names_are_stable() {
         assert_eq!(AnalyticBackend.name(), "analytic");
         assert_eq!(EmpiricalBackend::new().name(), "empirical");
+        assert_eq!(ShardedBackend::new(&AnalyticBackend, 4).name(), "sharded(analytic)x4");
+    }
+
+    #[test]
+    fn sharded_batch_preserves_order_and_bits() {
+        // a wave of distinct candidates: the sharded scores must be the
+        // serial scores in the same positions, bit for bit, whatever the
+        // shard count or chunking
+        let (wf, servers) = fig6();
+        let model = ResponseModel::Mm1;
+        let mut waves: Vec<Allocation> = Vec::new();
+        let mut assign: Vec<usize> = (0..6).collect();
+        for _ in 0..6 {
+            assign.rotate_left(1);
+            if let Ok(a) = crate::sched::schedule_rates(&wf, assign.clone(), &servers, model) {
+                waves.push(a);
+            }
+            for i in 0..5 {
+                let mut swapped = assign.clone();
+                swapped.swap(i, i + 1);
+                if let Ok(a) = crate::sched::schedule_rates(&wf, swapped, &servers, model) {
+                    waves.push(a);
+                }
+            }
+        }
+        // wide enough that every shard count below really spawns workers
+        assert!(waves.len() >= ShardedBackend::MIN_PARALLEL_WAVE);
+        let grid = GridSpec::auto_response(&waves[0], &servers, model);
+        let serial = AnalyticBackend.score_batch(&wf, &waves, &servers, &grid, model);
+        for shards in [1usize, 2, 3, 8, 17] {
+            for chunking in [ChunkPolicy::Even, ChunkPolicy::Fixed(1), ChunkPolicy::Fixed(4)] {
+                let sharded = ShardedBackend::new(&AnalyticBackend, shards).chunking(chunking);
+                let got = sharded.score_batch(&wf, &waves, &servers, &grid, model);
+                assert_eq!(got.len(), serial.len());
+                for (g, s) in got.iter().zip(serial.iter()) {
+                    assert_eq!(g.mean, s.mean, "{shards} shards / {chunking:?}");
+                    assert_eq!(g.var, s.var);
+                    assert_eq!(g.p99, s.p99);
+                    assert_eq!(g.mass, s.mass);
+                    assert_eq!(g.pdf, s.pdf);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn sharded_delegates_scoring_pool() {
+        // grid auto-sizing must see the inner backend's substituted pool
+        let (_, servers) = fig6();
+        let straggler = ServiceDist::straggler(10.0, 0.4, 0.08, 0.01);
+        let mut rng = crate::util::rng::Rng::new(3);
+        let samples: Vec<f64> = (0..4000).map(|_| straggler.sample(&mut rng)).collect();
+        let inner = EmpiricalBackend::new().with_samples(0, &samples);
+        let sharded = ShardedBackend::new(&inner, 4);
+        let via_inner = inner.scoring_pool(&servers).expect("measured pool");
+        let via_sharded = sharded.scoring_pool(&servers).expect("delegated pool");
+        assert_eq!(via_inner.len(), via_sharded.len());
+        for (a, b) in via_inner.iter().zip(via_sharded.iter()) {
+            assert_eq!(a.id, b.id);
+            assert_eq!(a.dist.mean(), b.dist.mean());
+        }
+        // and a shard count below 1 degrades to serial, not a panic
+        assert_eq!(ShardedBackend::new(&AnalyticBackend, 0).shards(), 1);
+    }
+
+    #[test]
+    fn sharded_handles_unstable_candidates() {
+        // unstable rows keep their position and their infinite sentinel,
+        // on a wave wide enough to actually shard
+        let wf = Workflow::tandem(1, 5.0);
+        let servers = Server::pool_exponential(&[20.0, 2.0]); // server 1 overloads at λ=5
+        let grid = GridSpec::new(0.01, 1024);
+        let ok_alloc = Allocation::new(vec![0], vec![5.0], &wf, 2).unwrap();
+        let bad = Allocation::new(vec![1], vec![5.0], &wf, 2).unwrap();
+        let wave: Vec<Allocation> = (0..12)
+            .map(|i| if i % 3 == 0 { ok_alloc.clone() } else { bad.clone() })
+            .collect();
+        let sharded = ShardedBackend::new(&AnalyticBackend, 3);
+        let got = sharded.score_batch(&wf, &wave, &servers, &grid, ResponseModel::Mm1);
+        assert_eq!(got.len(), 12);
+        for (i, s) in got.iter().enumerate() {
+            if i % 3 == 0 {
+                assert!(s.is_stable(), "row {i}");
+            } else {
+                assert!(!s.is_stable(), "row {i}");
+                assert_eq!(s.mean, f64::INFINITY);
+                assert_eq!(s.mass, 0.0);
+            }
+        }
     }
 }

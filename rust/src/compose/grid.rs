@@ -24,16 +24,45 @@ impl GridSpec {
     /// The canonical AOT grid (matches `python/compile/aot.py: G`).
     pub const AOT_N: usize = 1024;
 
+    /// Hard cap on auto-sized horizons. A degenerate or heavy-tail
+    /// fitted law can report a `quantile(0.9999)` that is infinite, NaN
+    /// or astronomically large; summing those into a grid horizon used
+    /// to yield `dt = inf` (every moment/quantile read off such a grid
+    /// is garbage, and downstream grid merges panicked on it). Auto
+    /// sizing now clamps the horizon to this cap and prints a
+    /// diagnostic; scores on a clamped grid report low captured
+    /// [`mass`](crate::compose::score::Score::mass), which is the
+    /// signal callers already treat as "suspect grid".
+    pub const MAX_HORIZON: f64 = 1e9;
+
+    /// Clamp a raw auto-sizing horizon to `(0, MAX_HORIZON]`, surfacing
+    /// a diagnostic when the raw value was unusable (non-finite, NaN or
+    /// beyond the cap).
+    fn finite_horizon(raw: f64, what: &str) -> f64 {
+        if raw.is_finite() && raw <= Self::MAX_HORIZON {
+            return raw.max(1e-6);
+        }
+        eprintln!(
+            "dcflow: {what} grid horizon {raw} is not usable \
+             (degenerate or heavy-tail law?); clamping to {:e}",
+            Self::MAX_HORIZON
+        );
+        Self::MAX_HORIZON
+    }
+
     /// Auto-size a grid for a workflow + allocation: the end-to-end
     /// support is at most the sum over serial depth of per-branch
     /// high quantiles; pad by 2x for convolution truncation safety.
+    /// Non-finite horizons are clamped ([`GridSpec::MAX_HORIZON`]).
     pub fn auto(alloc: &Allocation, servers: &[Server]) -> GridSpec {
-        let horizon: f64 = alloc
-            .assigned_servers()
-            .map(|sid| servers[sid].dist.quantile(0.9999))
-            .sum::<f64>()
-            .max(1e-6)
-            * 2.0;
+        let horizon = Self::finite_horizon(
+            alloc
+                .assigned_servers()
+                .map(|sid| servers[sid].dist.quantile(0.9999))
+                .sum::<f64>()
+                * 2.0,
+            "allocation",
+        );
         GridSpec {
             dt: horizon / Self::AOT_N as f64,
             n: Self::AOT_N,
@@ -41,14 +70,13 @@ impl GridSpec {
     }
 
     /// Auto-size from an explicit set of laws (workflow-independent upper
-    /// bound: every law could appear in series).
+    /// bound: every law could appear in series). Non-finite horizons are
+    /// clamped ([`GridSpec::MAX_HORIZON`]).
     pub fn auto_for(dists: &[&ServiceDist]) -> GridSpec {
-        let horizon: f64 = dists
-            .iter()
-            .map(|d| d.quantile(0.9999))
-            .sum::<f64>()
-            .max(1e-6)
-            * 2.0;
+        let horizon = Self::finite_horizon(
+            dists.iter().map(|d| d.quantile(0.9999)).sum::<f64>() * 2.0,
+            "service-law",
+        );
         GridSpec {
             dt: horizon / Self::AOT_N as f64,
             n: Self::AOT_N,
@@ -65,7 +93,8 @@ impl GridSpec {
     /// Auto-size from the *response* laws of an allocation under a
     /// queueing model — response tails under load are much longer than
     /// service tails, so p99-style scores need this sizing. Falls back
-    /// to [`GridSpec::auto`] if any queue is unstable.
+    /// to [`GridSpec::auto`] if any queue is unstable. Non-finite
+    /// horizons are clamped ([`GridSpec::MAX_HORIZON`]).
     pub fn auto_response(
         alloc: &crate::sched::Allocation,
         servers: &[Server],
@@ -80,14 +109,16 @@ impl GridSpec {
                 Response::Unstable => return Self::auto(alloc, servers),
             }
         }
+        let horizon = Self::finite_horizon(horizon * 1.25, "response-law");
         GridSpec {
-            dt: (horizon * 1.25).max(1e-6) / Self::AOT_N as f64,
+            dt: horizon / Self::AOT_N as f64,
             n: Self::AOT_N,
         }
     }
 
     /// The largest response-aware grid over several allocations — lets a
     /// comparison score every candidate on a *common* grid.
+    /// (`total_cmp`: a degenerate `dt` must not panic the merge.)
     pub fn auto_response_common(
         allocs: &[&crate::sched::Allocation],
         servers: &[Server],
@@ -96,7 +127,7 @@ impl GridSpec {
         allocs
             .iter()
             .map(|a| Self::auto_response(a, servers, model))
-            .max_by(|a, b| a.dt.partial_cmp(&b.dt).unwrap())
+            .max_by(|a, b| a.dt.total_cmp(&b.dt))
             .unwrap_or(GridSpec {
                 dt: 0.01,
                 n: Self::AOT_N,
@@ -142,5 +173,37 @@ mod tests {
     #[should_panic(expected = "grid needs")]
     fn rejects_degenerate() {
         GridSpec::new(0.0, 100);
+    }
+
+    #[test]
+    fn heavy_tail_horizon_is_clamped_finite() {
+        // a pareto law with lam << 1 has a finite but astronomical
+        // 99.99% quantile; the auto grid used to inherit it as a
+        // garbage dt. It must clamp to MAX_HORIZON instead.
+        let heavy = ServiceDist::delayed_pareto(0.05, 0.0);
+        assert!(heavy.quantile(0.9999) > GridSpec::MAX_HORIZON);
+        let g = GridSpec::auto_for(&[&heavy]);
+        assert!(g.dt.is_finite() && g.dt > 0.0);
+        assert!(g.t_max() <= GridSpec::MAX_HORIZON);
+        // a sane companion law still gets a sane grid
+        let tame = ServiceDist::exponential(2.0);
+        let g2 = GridSpec::auto_for(&[&tame]);
+        assert!(g2.t_max() < 100.0);
+    }
+
+    #[test]
+    fn infinite_horizon_is_clamped_finite() {
+        // non-finite inputs (an inf quantile from a degenerate fit) must
+        // never produce dt = inf
+        assert_eq!(
+            GridSpec::MAX_HORIZON,
+            super::GridSpec::finite_horizon(f64::INFINITY, "test")
+        );
+        assert_eq!(
+            GridSpec::MAX_HORIZON,
+            super::GridSpec::finite_horizon(f64::NAN, "test")
+        );
+        // tiny-but-positive raw horizons keep the 1e-6 floor
+        assert_eq!(1e-6, super::GridSpec::finite_horizon(0.0, "test"));
     }
 }

@@ -47,18 +47,43 @@ impl Score {
         }
     }
 
-    /// Sentinel for unstable allocations (some queue diverges).
+    /// Sentinel for unstable allocations (some queue diverges), carrying
+    /// a zero PDF on `grid` so downstream plotting code sees a law of
+    /// the expected length.
+    ///
+    /// **Sentinel contract** (every [`ScoreBackend`] must honor it, and
+    /// combinators like `ShardedBackend` propagate it untouched):
+    /// an infeasible candidate scores `mean = var = p99 = +∞` and
+    /// `mass = 0.0` — never NaN in any of the three objective
+    /// components, so [`Objective::key`](crate::sched::Objective::key)
+    /// ordering stays total and search loops can skip the candidate via
+    /// [`Score::is_stable`] without a NaN ever reaching a comparison.
+    ///
+    /// [`ScoreBackend`]: crate::compose::backend::ScoreBackend
     pub fn unstable(grid: &GridSpec) -> Score {
+        Score {
+            pdf: vec![0.0; grid.n],
+            ..Score::unstable_point()
+        }
+    }
+
+    /// The PDF-less form of the [`Score::unstable`] sentinel, for
+    /// backends that carry no grid law (e.g. the fused PJRT triple
+    /// path). Identical infinity/mass sentinels, empty `pdf`.
+    pub fn unstable_point() -> Score {
         Score {
             mean: f64::INFINITY,
             var: f64::INFINITY,
             p99: f64::INFINITY,
             mass: 0.0,
-            pdf: vec![0.0; grid.n],
+            pdf: Vec::new(),
         }
     }
 
-    /// True when every queue in the allocation was stable.
+    /// True when every queue in the allocation was stable. A NaN mean
+    /// (a degenerate fitted law leaking through a backend) counts as
+    /// unstable, so search loops discard the candidate instead of
+    /// comparing NaN keys.
     pub fn is_stable(&self) -> bool {
         self.mean.is_finite()
     }
@@ -208,6 +233,28 @@ mod tests {
         let s = score_allocation(&wf, &alloc, &servers, &grid);
         assert!(!s.is_stable());
         assert_eq!(s.mean, f64::INFINITY);
+    }
+
+    #[test]
+    fn unstable_sentinels_are_never_nan() {
+        // the sentinel contract: +inf triple, zero mass, both forms
+        let grid = GridSpec::new(0.01, 256);
+        for s in [Score::unstable(&grid), Score::unstable_point()] {
+            assert_eq!(s.mean, f64::INFINITY);
+            assert_eq!(s.var, f64::INFINITY);
+            assert_eq!(s.p99, f64::INFINITY);
+            assert_eq!(s.mass, 0.0);
+            assert!(!s.is_stable());
+        }
+        assert_eq!(Score::unstable(&grid).pdf, vec![0.0; 256]);
+        assert!(Score::unstable_point().pdf.is_empty());
+    }
+
+    #[test]
+    fn nan_scores_count_as_unstable() {
+        // a degenerate fitted law must be discarded, not compared
+        let s = Score::point(f64::NAN, 1.0, 2.0);
+        assert!(!s.is_stable());
     }
 
     #[test]

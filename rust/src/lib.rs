@@ -37,7 +37,8 @@
 //!
 //! A module-by-module map with the Planner/Policy/ScoreBackend seams and
 //! a paper cross-reference lives in `docs/ARCHITECTURE.md`; migration
-//! recipes off the deprecated free functions live in `docs/MIGRATION.md`.
+//! recipes off the legacy free functions (removed in 0.4.0) live in
+//! `docs/MIGRATION.md`.
 //!
 //! ## Quickstart
 //!
@@ -93,7 +94,9 @@ pub mod util;
 /// `use dcflow::prelude::*;` to drive the planner, the scoring
 /// backends, capacity planning and the monitoring loop end to end.
 pub mod prelude {
-    pub use crate::compose::backend::{AnalyticBackend, EmpiricalBackend, ScoreBackend};
+    pub use crate::compose::backend::{
+        AnalyticBackend, ChunkPolicy, EmpiricalBackend, ScoreBackend, ShardedBackend,
+    };
     pub use crate::compose::grid::GridSpec;
     pub use crate::compose::score::Score;
     pub use crate::dist::fit::{
@@ -115,12 +118,4 @@ pub mod prelude {
     pub use crate::sched::server::Server;
     pub use crate::sched::{Allocation, Objective, ResponseModel, SchedError, SplitPolicy};
     pub use crate::sim::network::{simulate, SimConfig, SimResult};
-
-    // deprecated legacy free functions, re-exported so old callers keep
-    // compiling (each use still warns and names its replacement; see
-    // docs/MIGRATION.md)
-    #[allow(deprecated)]
-    pub use crate::sched::{
-        baseline_allocate, optimal_allocate, proposed_allocate, sdcc_allocate,
-    };
 }

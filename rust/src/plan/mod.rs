@@ -39,16 +39,34 @@
 //! default, the PJRT [`RuntimeBackend`](crate::runtime::scorer::RuntimeBackend)
 //! or a measurement-driven
 //! [`EmpiricalBackend`](crate::compose::backend::EmpiricalBackend) by
-//! injection ([`Planner::backend`]), or any custom implementation.
+//! injection ([`Planner::backend`]), or any custom implementation. Wrap
+//! any of them in a
+//! [`ShardedBackend`](crate::compose::backend::ShardedBackend) to fan
+//! candidate waves across worker threads with bit-identical results:
 //!
-//! The legacy free functions (`sdcc_allocate`, `baseline_allocate`,
-//! `proposed_allocate`, `optimal_allocate`) survive as deprecated shims
-//! over this module — see [`crate::sched::compat`] and
-//! `docs/MIGRATION.md`.
+//! ```
+//! use dcflow::prelude::*;
+//!
+//! let wf = Workflow::fig6();
+//! let servers = Server::pool_exponential(&[9.0, 8.0, 7.0, 6.0, 5.0, 4.0]);
+//! let sharded = ShardedBackend::new(&AnalyticBackend, 4);
+//! let plan = Planner::new(&wf, &servers)
+//!     .backend(&sharded)
+//!     .plan(&ProposedPolicy::default())
+//!     .expect("feasible");
+//! assert!(plan.score.is_stable());
+//! ```
+//!
+//! The original legacy free functions (`sdcc_allocate`,
+//! `baseline_allocate`, `proposed_allocate`, `optimal_allocate`) were
+//! removed in 0.4.0 after two releases as deprecated shims —
+//! `docs/MIGRATION.md` maps each onto its replacement above.
 
 pub mod policy;
 
-pub use crate::compose::backend::{AnalyticBackend, EmpiricalBackend, ScoreBackend};
+pub use crate::compose::backend::{
+    AnalyticBackend, ChunkPolicy, EmpiricalBackend, ScoreBackend, ShardedBackend,
+};
 pub use crate::runtime::scorer::RuntimeBackend;
 pub use policy::{
     AllocationPolicy, BaselinePolicy, OptimalPolicy, PlanContext, ProposedPolicy, SdccPolicy,
@@ -407,6 +425,41 @@ mod tests {
         assert_eq!(rescored.mean, direct.mean);
         assert_eq!(rescored.var, direct.var);
         assert_eq!(rescored.p99, direct.p99);
+    }
+
+    #[test]
+    fn sharded_backend_flows_through_every_planner_path() {
+        // plan / compare / score / plan_jobs through a sharded analytic
+        // backend are bit-identical to the serial default
+        let (wf, servers) = fig6();
+        let sharded = ShardedBackend::new(&AnalyticBackend, 4);
+        let serial_planner = Planner::new(&wf, &servers);
+        let sharded_planner = Planner::new(&wf, &servers).backend(&sharded);
+
+        let a = serial_planner.plan(&ProposedPolicy::default()).unwrap();
+        let b = sharded_planner.plan(&ProposedPolicy::default()).unwrap();
+        assert_eq!(b.diagnostics.backend, "sharded(analytic)x4");
+        assert_eq!(a.allocation, b.allocation);
+        assert_eq!(a.score.mean, b.score.mean);
+        assert_eq!(a.score.p99, b.score.p99);
+        assert_eq!(a.diagnostics.grid, b.diagnostics.grid);
+
+        let rescored = sharded_planner.grid(a.diagnostics.grid).score(&a.allocation);
+        assert_eq!(rescored.mean, a.score.mean);
+
+        let light = Workflow::tandem(3, 1.0);
+        let pool =
+            Server::pool_exponential(&[14.0, 12.0, 10.0, 9.0, 8.0, 7.0, 6.0, 5.0, 4.0]);
+        let serial_jobs = Planner::new(&wf, &pool).plan_jobs(&[&wf, &light]).unwrap();
+        let sharded_jobs = Planner::new(&wf, &pool)
+            .backend(&sharded)
+            .plan_jobs(&[&wf, &light])
+            .unwrap();
+        for (s, p) in serial_jobs.iter().zip(sharded_jobs.iter()) {
+            assert_eq!(s.alloc, p.alloc);
+            assert_eq!(s.score.mean, p.score.mean);
+            assert_eq!(s.grid, p.grid);
+        }
     }
 
     #[test]

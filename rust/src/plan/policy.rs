@@ -216,7 +216,7 @@ impl AllocationPolicy for BaselinePolicy {
 /// through the context's backend on its evaluation grid). With the
 /// planner's default grid — response-aware, sized from the same
 /// Alg. 1/2 seed — and `rounds == 8` this is the exact legacy
-/// `proposed_allocate` pipeline, bit for bit.
+/// `proposed_allocate` pipeline (removed in 0.4.0), bit for bit.
 ///
 /// ```
 /// use dcflow::prelude::*;
@@ -294,5 +294,26 @@ impl AllocationPolicy for OptimalPolicy {
             ctx.backend(),
         )
         .map(|(alloc, _)| alloc)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn policy_names_are_stable() {
+        // the names appear in CSVs and reports; keep them pinned
+        assert_eq!(SdccPolicy.name(), "sdcc");
+        assert_eq!(BaselinePolicy::default().name(), "baseline");
+        assert_eq!(
+            BaselinePolicy {
+                split: SplitPolicy::Equilibrium
+            }
+            .name(),
+            "fair-baseline"
+        );
+        assert_eq!(ProposedPolicy::default().name(), "proposed");
+        assert_eq!(OptimalPolicy.name(), "optimal");
     }
 }

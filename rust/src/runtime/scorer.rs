@@ -353,12 +353,24 @@ pub fn mmde_params(d: &crate::dist::ServiceDist, max_modes: usize) -> Option<Vec
 /// injected backend. Falls back to the native composition engine when
 /// artifacts are absent (identical math, cross-checked in tests).
 ///
-/// On the XLA engine, scores carry the (mean, var, p99) triple only —
-/// no attached PDF, and `mass` is reported as NaN because the fused
-/// triple path does not track captured grid mass. On the native
-/// fallback engine the full analytic [`Score`] (PDF + mass) is
-/// returned, so diagnostics behave exactly like
+/// On the XLA engine, *stable* scores carry the (mean, var, p99)
+/// triple only — no attached PDF, and `mass` is reported as NaN because
+/// the fused triple path does not track captured grid mass. Unstable
+/// candidates return the exact [`Score::unstable_point`] sentinel
+/// (infinite triple, `mass = 0.0`), identical to what the analytic
+/// backend reports, so infeasibility propagates the same way whichever
+/// backend scored the wave. On the native fallback engine the full
+/// analytic [`Score`] (PDF + mass) is returned, so diagnostics behave
+/// exactly like
 /// [`AnalyticBackend`](crate::compose::backend::AnalyticBackend).
+///
+/// The scorer state sits behind a [`Mutex`](std::sync::Mutex), so a
+/// `RuntimeBackend` is `Sync` and can be wrapped in a
+/// [`ShardedBackend`](crate::compose::backend::ShardedBackend): each
+/// scoring call takes the lock exactly once, briefly, to read the
+/// active engine — on the native engine the lock is released before
+/// any scoring work, so shards overlap fully; on the XLA engine the
+/// wave is scored under the guard, serializing on the device handle.
 ///
 /// ```
 /// use dcflow::prelude::*;
@@ -373,7 +385,7 @@ pub fn mmde_params(d: &crate::dist::ServiceDist, max_modes: usize) -> Option<Vec
 /// assert!(plan.score.is_stable());
 /// ```
 pub struct RuntimeBackend {
-    inner: std::cell::RefCell<BatchScorer>,
+    inner: std::sync::Mutex<BatchScorer>,
 }
 
 impl RuntimeBackend {
@@ -391,18 +403,30 @@ impl RuntimeBackend {
     /// Backend over an explicitly-configured [`BatchScorer`].
     pub fn from_scorer(scorer: BatchScorer) -> RuntimeBackend {
         RuntimeBackend {
-            inner: std::cell::RefCell::new(scorer),
+            inner: std::sync::Mutex::new(scorer),
         }
     }
 
     /// Which engine the wrapped scorer is using right now.
     pub fn engine(&self) -> ScorerEngine {
-        self.inner.borrow().backend()
+        self.lock().backend()
     }
 
-    /// Triple → Score with no PDF; `mass` is NaN (not tracked on the
-    /// fused path) rather than a fake "all mass captured" 1.0.
+    fn lock(&self) -> std::sync::MutexGuard<'_, BatchScorer> {
+        // a panic mid-score poisons the lock but not the scorer state
+        // (waves are written whole); keep scoring
+        self.inner.lock().unwrap_or_else(|e| e.into_inner())
+    }
+
+    /// Triple → Score. Stable triples carry no PDF and a NaN `mass`
+    /// (not tracked on the fused path — not a fake "all mass captured"
+    /// 1.0). Unstable triples map to the shared
+    /// [`Score::unstable_point`] sentinel so every backend reports
+    /// infeasibility identically (infinite triple, `mass = 0.0`).
     fn to_score(t: &Triple) -> Score {
+        if !t.mean.is_finite() {
+            return Score::unstable_point();
+        }
         Score {
             mean: t.mean,
             var: t.var,
@@ -429,16 +453,15 @@ impl crate::compose::backend::ScoreBackend for RuntimeBackend {
         grid: &GridSpec,
         model: ResponseModel,
     ) -> Score {
-        if self.engine() == ScorerEngine::Native {
+        // one lock acquisition: read the engine and, on XLA, score
+        // under the same guard. The native branch releases immediately
+        // and scores outside the lock, so shards overlap fully.
+        let mut guard = self.lock();
+        if guard.backend() == ScorerEngine::Native {
+            drop(guard);
             return score_allocation_with(wf, alloc, servers, grid, model);
         }
-        let t = self.inner.borrow_mut().score_batch(
-            wf,
-            std::slice::from_ref(alloc),
-            servers,
-            grid,
-            model,
-        );
+        let t = guard.score_batch(wf, std::slice::from_ref(alloc), servers, grid, model);
         Self::to_score(&t[0])
     }
 
@@ -450,14 +473,15 @@ impl crate::compose::backend::ScoreBackend for RuntimeBackend {
         grid: &GridSpec,
         model: ResponseModel,
     ) -> Vec<Score> {
-        if self.engine() == ScorerEngine::Native {
+        let mut guard = self.lock();
+        if guard.backend() == ScorerEngine::Native {
+            drop(guard);
             return allocs
                 .iter()
                 .map(|a| score_allocation_with(wf, a, servers, grid, model))
                 .collect();
         }
-        self.inner
-            .borrow_mut()
+        guard
             .score_batch(wf, allocs, servers, grid, model)
             .into_iter()
             .map(|t| Self::to_score(&t))
@@ -515,6 +539,44 @@ mod tests {
         let batch = rb.score_batch(&wf, &[a.clone(), a], &servers, &grid, ResponseModel::Mm1);
         assert_eq!(batch.len(), 2);
         assert_eq!(batch[0].mean, want.mean);
+    }
+
+    #[test]
+    fn unstable_triples_map_to_the_shared_sentinel() {
+        // the XLA triple path must report infeasibility exactly like the
+        // analytic backend: +inf triple, mass 0.0 — never NaN keys
+        let s = RuntimeBackend::to_score(&Triple::UNSTABLE);
+        assert_eq!(s.mean, f64::INFINITY);
+        assert_eq!(s.var, f64::INFINITY);
+        assert_eq!(s.p99, f64::INFINITY);
+        assert_eq!(s.mass, 0.0);
+        assert!(s.pdf.is_empty());
+        assert!(!s.is_stable());
+    }
+
+    #[test]
+    fn runtime_backend_composes_with_sharding() {
+        use crate::compose::backend::{AnalyticBackend, ScoreBackend, ShardedBackend};
+        fn assert_sync<T: Sync>() {}
+        assert_sync::<RuntimeBackend>();
+
+        let (wf, servers) = fig6();
+        let a1 = allocate_with(&wf, &servers, ResponseModel::Mm1).unwrap();
+        let a2 = baseline_allocate_split(&wf, &servers, ResponseModel::Mm1, SplitPolicy::Uniform)
+            .unwrap();
+        let grid = GridSpec::auto(&a1, &servers);
+        let wave = vec![a1, a2];
+        let rb = RuntimeBackend::native();
+        let sharded = ShardedBackend::new(&rb, 2);
+        let got = sharded.score_batch(&wf, &wave, &servers, &grid, ResponseModel::Mm1);
+        let want = AnalyticBackend.score_batch(&wf, &wave, &servers, &grid, ResponseModel::Mm1);
+        for (g, w) in got.iter().zip(want.iter()) {
+            // the native fallback engine scores outside the lock and is
+            // the analytic math bit for bit
+            assert_eq!(g.mean, w.mean);
+            assert_eq!(g.var, w.var);
+            assert_eq!(g.p99, w.p99);
+        }
     }
 
     #[test]

@@ -15,13 +15,16 @@
 //!   [`crate::plan::OptimalPolicy`]);
 //! * [`equilibrium`] — Algorithm 2's rate scheduling;
 //! * [`response`] — service-law → response-law queueing models;
-//! * [`multijob`] — pool partitioning across concurrent workflows;
-//! * [`compat`] — the deprecated legacy free functions.
+//! * [`multijob`] — pool partitioning across concurrent workflows.
+//!
+//! The deprecated legacy free functions (`sdcc_allocate`,
+//! `baseline_allocate`, `proposed_allocate`, `optimal_allocate`) were
+//! removed in 0.4.0 — `docs/MIGRATION.md` maps each onto the
+//! [`Planner`](crate::plan::Planner) call that replaced it.
 
 pub mod algorithms;
 pub mod allocation;
 pub mod capacity;
-pub mod compat;
 pub mod equilibrium;
 pub mod multijob;
 pub mod optimal;
@@ -31,8 +34,6 @@ pub mod server;
 
 pub use algorithms::{allocate_with, baseline_allocate_split, schedule_rates, SplitPolicy};
 pub use allocation::{Allocation, SchedError};
-#[allow(deprecated)]
-pub use compat::{baseline_allocate, optimal_allocate, proposed_allocate, sdcc_allocate};
 pub use refine::{propose, refine, refine_with};
 pub use response::ResponseModel;
 
@@ -51,12 +52,23 @@ pub enum Objective {
 }
 
 impl Objective {
-    /// Sort key: smaller is better.
+    /// Sort key: smaller is better. Infeasible candidates carry the
+    /// [`Score::unstable`] infinity sentinel, so their key is `+∞` and
+    /// they lose every comparison; a NaN component (a degenerate fitted
+    /// law leaking through a backend that skipped the sentinel
+    /// contract) also maps to `+∞`, so a poisoned candidate can never
+    /// win an ordering — keys are always comparable with plain `<` or
+    /// [`f64::total_cmp`].
     pub fn key(&self, s: &Score) -> f64 {
-        match self {
+        let k = match self {
             Objective::Mean => s.mean,
             Objective::Variance => s.var,
             Objective::P99 => s.p99,
+        };
+        if k.is_nan() {
+            f64::INFINITY
+        } else {
+            k
         }
     }
 }
@@ -181,5 +193,16 @@ mod tests {
         assert_eq!(Objective::Mean.key(&s), 1.0);
         assert_eq!(Objective::Variance.key(&s), 2.0);
         assert_eq!(Objective::P99.key(&s), 3.0);
+    }
+
+    #[test]
+    fn objective_keys_are_never_nan() {
+        // degenerate scores must lose comparisons, not poison them
+        let nan = Score::point(f64::NAN, f64::NAN, f64::NAN);
+        for o in [Objective::Mean, Objective::Variance, Objective::P99] {
+            assert_eq!(o.key(&nan), f64::INFINITY);
+        }
+        let finite = Score::point(1.0, 1.0, 1.0);
+        assert!(Objective::Mean.key(&finite) < Objective::Mean.key(&nan));
     }
 }

@@ -87,14 +87,28 @@ pub fn multijob_allocate_with(
         });
     }
 
-    // 1. order by capacity pressure
-    let mut order: Vec<usize> = (0..jobs.len()).collect();
+    // 1. order by capacity pressure. A degenerate job (NaN/infinite
+    // arrival rate, e.g. from a poisoned fit upstream) is rejected with
+    // a diagnosis instead of panicking the sort or silently corrupting
+    // the greedy order; the sort itself uses the NaN-total `total_cmp`
+    // as defense in depth.
     let pressure =
         |w: &Workflow| -> f64 { w.arrival_rate * w.serial_depth() as f64 };
+    for (j, w) in jobs.iter().enumerate() {
+        let p = pressure(w);
+        if !p.is_finite() {
+            return Err(SchedError::Infeasible(format!(
+                "job {j} has non-finite capacity pressure {p} \
+                 (arrival_rate {}, serial depth {})",
+                w.arrival_rate,
+                w.serial_depth()
+            )));
+        }
+    }
+    let mut order: Vec<usize> = (0..jobs.len()).collect();
     order.sort_by(|&a, &b| {
         pressure(jobs[b])
-            .partial_cmp(&pressure(jobs[a]))
-            .unwrap()
+            .total_cmp(&pressure(jobs[a]))
             .then(a.cmp(&b))
     });
 
@@ -125,7 +139,10 @@ pub fn multijob_allocate_with(
                 let pool = backend.resolve_scoring_pool(pool);
                 GridSpec::auto_response(seed, &pool, model)
             })
-            .max_by(|a, b| a.dt.partial_cmp(&b.dt).unwrap())
+            // total_cmp: a degenerate per-job dt must widen the merge
+            // deterministically, never panic it (auto grids clamp
+            // non-finite horizons, so dt is finite here by construction)
+            .max_by(|a, b| a.dt.total_cmp(&b.dt))
             .expect("staged is non-empty: jobs.is_empty() returned early")
     });
 
@@ -409,5 +426,61 @@ mod tests {
         let plans =
             multijob_allocate(&[], &pool(), ResponseModel::Mm1, Objective::Mean).unwrap();
         assert!(plans.is_empty());
+    }
+
+    #[test]
+    fn nan_pressure_is_rejected_not_a_panic() {
+        // regression: a degenerate job (NaN arrival rate leaking in
+        // through the public field) used to panic the pressure sort's
+        // partial_cmp().unwrap(); it must now surface as Infeasible
+        let mut poisoned = Workflow::tandem(2, 1.0);
+        poisoned.arrival_rate = f64::NAN;
+        let healthy = Workflow::tandem(3, 1.0);
+        let jobs = [&healthy, &poisoned];
+        match multijob_allocate(&jobs, &pool(), ResponseModel::Mm1, Objective::Mean) {
+            Err(SchedError::Infeasible(why)) => {
+                assert!(why.contains("job 1"), "diagnosis names the job: {why}");
+                assert!(why.contains("non-finite"), "diagnosis says why: {why}");
+            }
+            other => panic!("expected Infeasible, got {other:?}"),
+        }
+        // infinite arrival rate is equally degenerate
+        let mut inf_job = Workflow::tandem(2, 1.0);
+        inf_job.arrival_rate = f64::INFINITY;
+        assert!(matches!(
+            multijob_allocate(&[&inf_job], &pool(), ResponseModel::Mm1, Objective::Mean),
+            Err(SchedError::Infeasible(_))
+        ));
+    }
+
+    #[test]
+    fn sharded_backend_plans_jobs_bit_identically() {
+        // the multijob engine through ShardedBackend(Analytic) must
+        // produce the same partition, scores and shared grid as serial
+        use crate::compose::backend::ShardedBackend;
+        let j1 = Workflow::fig6();
+        let j2 = Workflow::tandem(3, 1.0);
+        let jobs = [&j1, &j2];
+        let serial =
+            multijob_allocate(&jobs, &pool(), ResponseModel::Mm1, Objective::Mean).unwrap();
+        let backend = ShardedBackend::new(&AnalyticBackend, 4);
+        let sharded = multijob_allocate_with(
+            &jobs,
+            &pool(),
+            ResponseModel::Mm1,
+            Objective::Mean,
+            &backend,
+            None,
+        )
+        .unwrap();
+        assert_eq!(serial.len(), sharded.len());
+        for (a, b) in serial.iter().zip(sharded.iter()) {
+            assert_eq!(a.job, b.job);
+            assert_eq!(a.alloc, b.alloc);
+            assert_eq!(a.grid, b.grid);
+            assert_eq!(a.score.mean, b.score.mean);
+            assert_eq!(a.score.var, b.score.var);
+            assert_eq!(a.score.p99, b.score.p99);
+        }
     }
 }

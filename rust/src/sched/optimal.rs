@@ -44,8 +44,10 @@ pub fn exhaustive(
 
 /// Exhaustive optimal allocation, exact-scoring the shortlist through
 /// `backend` (one [`ScoreBackend::score_batch`] wave, so the PJRT
-/// scorer evaluates the whole shortlist fused). With
-/// [`AnalyticBackend`] this is bit-identical to [`exhaustive`].
+/// scorer evaluates the whole shortlist fused and a
+/// [`ShardedBackend`](crate::compose::backend::ShardedBackend) scores
+/// shortlist chunks on parallel workers). With [`AnalyticBackend`] —
+/// sharded or not — this is bit-identical to [`exhaustive`].
 pub fn exhaustive_with(
     wf: &Workflow,
     servers: &[Server],
@@ -86,7 +88,9 @@ pub fn exhaustive_with(
             "no stable assignment exists for the offered load".into(),
         ));
     }
-    ranked.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+    // total_cmp: a NaN estimate from a degenerate law ranks last
+    // instead of panicking the sort
+    ranked.sort_by(|a, b| a.0.total_cmp(&b.0));
 
     // stage 2: exact scoring of the shortlist, one backend wave
     let mut shortlist: Vec<Allocation> = ranked
@@ -169,6 +173,24 @@ mod tests {
         let base_s = score_allocation_with(&wf, &base, &servers, &grid, model);
         assert!(opt.mean <= ours_s.mean + 1e-6, "opt {} ours {}", opt.mean, ours_s.mean);
         assert!(opt.mean <= base_s.mean + 1e-6, "opt {} base {}", opt.mean, base_s.mean);
+    }
+
+    #[test]
+    fn sharded_exhaustive_is_bit_identical() {
+        use crate::compose::backend::{AnalyticBackend, ShardedBackend};
+        let (wf, servers, grid) = fig6();
+        let model = ResponseModel::Mm1;
+        let (serial_alloc, serial_score) =
+            exhaustive(&wf, &servers, &grid, Objective::Mean, model).unwrap();
+        for shards in [2usize, 8] {
+            let backend = ShardedBackend::new(&AnalyticBackend, shards);
+            let (alloc, score) =
+                exhaustive_with(&wf, &servers, &grid, Objective::Mean, model, &backend)
+                    .unwrap();
+            assert_eq!(alloc, serial_alloc, "{shards} shards changed the winner");
+            assert_eq!(score.mean, serial_score.mean);
+            assert_eq!(score.p99, serial_score.p99);
+        }
     }
 
     #[test]

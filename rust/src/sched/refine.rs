@@ -71,8 +71,10 @@ pub fn refine(
 /// Hill-climb from an existing allocation, scoring every candidate
 /// through `backend`. Each round's swap candidates are scored as one
 /// wave ([`ScoreBackend::score_batch`]), so batched backends (the PJRT
-/// scorer) evaluate a whole round in one fused call. With
-/// [`AnalyticBackend`] this is bit-identical to the historical
+/// scorer) evaluate a whole round in one fused call and a
+/// [`ShardedBackend`](crate::compose::backend::ShardedBackend) spreads
+/// the round across its worker threads. With [`AnalyticBackend`] —
+/// sharded or not — this is bit-identical to the historical
 /// one-at-a-time loop.
 #[allow(clippy::too_many_arguments)]
 pub fn refine_with(
@@ -186,6 +188,45 @@ mod tests {
             ours.mean,
             opt.mean
         );
+    }
+
+    #[test]
+    fn sharded_refinement_is_bit_identical() {
+        // the refinement engine's swap decisions depend on score order
+        // within a wave; sharding must not perturb either
+        use crate::compose::backend::ShardedBackend;
+        let (wf, servers) = fig6();
+        let model = ResponseModel::Mm1;
+        let seed = allocate_with(&wf, &servers, model).unwrap();
+        let grid = GridSpec::auto_response(&seed, &servers, model);
+        let (serial_alloc, serial_score) = refine(
+            &wf,
+            seed.clone(),
+            &servers,
+            &grid,
+            model,
+            Objective::Mean,
+            8,
+        )
+        .unwrap();
+        for shards in [2usize, 8] {
+            let backend = ShardedBackend::new(&AnalyticBackend, shards);
+            let (alloc, score) = refine_with(
+                &wf,
+                seed.clone(),
+                &servers,
+                &grid,
+                model,
+                Objective::Mean,
+                8,
+                &backend,
+            )
+            .unwrap();
+            assert_eq!(alloc, serial_alloc, "{shards} shards changed the allocation");
+            assert_eq!(score.mean, serial_score.mean);
+            assert_eq!(score.var, serial_score.var);
+            assert_eq!(score.p99, serial_score.p99);
+        }
     }
 
     #[test]

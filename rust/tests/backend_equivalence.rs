@@ -157,6 +157,144 @@ fn plan_jobs_shares_one_grid_across_jobs() {
 }
 
 #[test]
+fn sharded_backend_is_bit_identical_across_shard_counts() {
+    // ShardedBackend(Analytic) through the full Planner surface must be
+    // indistinguishable from serial AnalyticBackend for every built-in
+    // scoring policy, across shard counts and random workflows
+    prop::run("ShardedBackend(Analytic) == AnalyticBackend", 15, |g| {
+        let wf = random_workflow(g);
+        let servers = random_pool(g, wf.slots());
+        let serial = Planner::new(&wf, &servers).backend(&AnalyticBackend);
+        for shards in [1usize, 2, 8] {
+            let backend = ShardedBackend::new(&AnalyticBackend, shards);
+            let sharded = Planner::new(&wf, &servers).backend(&backend);
+            for policy in [
+                &ProposedPolicy::default() as &dyn AllocationPolicy,
+                &OptimalPolicy,
+            ] {
+                match (serial.plan(policy), sharded.plan(policy)) {
+                    (Ok(a), Ok(b)) => {
+                        assert_eq!(a.allocation, b.allocation, "{shards} shards");
+                        assert_eq!(a.score.mean, b.score.mean);
+                        assert_eq!(a.score.var, b.score.var);
+                        assert_eq!(a.score.p99, b.score.p99);
+                        assert_eq!(a.score.mass, b.score.mass);
+                        assert_eq!(a.diagnostics.grid, b.diagnostics.grid);
+                    }
+                    (Err(a), Err(b)) => assert_eq!(a, b),
+                    (a, b) => panic!("feasibility mismatch at {shards} shards: {a:?} vs {b:?}"),
+                }
+            }
+        }
+    });
+}
+
+#[test]
+fn sharded_backend_plan_jobs_matches_serial() {
+    // the multi-job engine (greedy seed + shared grid + cross-job swap
+    // refinement) scores many waves; sharding must not change any plan
+    let j1 = Workflow::fig6();
+    let j2 = Workflow::tandem(3, 1.0);
+    let j3 = Workflow::forkjoin(2, 2.0);
+    let jobs = [&j1, &j2, &j3];
+    let pool = Server::pool_exponential(&[
+        16.0, 14.0, 12.0, 10.0, 9.0, 8.0, 7.0, 6.5, 6.0, 5.0, 4.0,
+    ]);
+    let serial = Planner::new(&j1, &pool).plan_jobs(&jobs).unwrap();
+    for shards in [1usize, 2, 8] {
+        let backend = ShardedBackend::new(&AnalyticBackend, shards);
+        let sharded = Planner::new(&j1, &pool)
+            .backend(&backend)
+            .plan_jobs(&jobs)
+            .unwrap();
+        assert_eq!(serial.len(), sharded.len());
+        for (s, p) in serial.iter().zip(sharded.iter()) {
+            assert_eq!(s.job, p.job, "{shards} shards");
+            assert_eq!(s.alloc, p.alloc);
+            assert_eq!(s.grid, p.grid);
+            assert_eq!(s.score.mean, p.score.mean);
+            assert_eq!(s.score.var, p.score.var);
+            assert_eq!(s.score.p99, p.score.p99);
+        }
+    }
+}
+
+#[test]
+fn sharded_chunking_policies_do_not_change_results() {
+    let wf = Workflow::fig6();
+    let servers = Server::pool_exponential(&[9.0, 8.0, 7.0, 6.0, 5.0, 4.0]);
+    let serial = Planner::new(&wf, &servers)
+        .plan(&OptimalPolicy)
+        .unwrap();
+    for chunking in [ChunkPolicy::Even, ChunkPolicy::Fixed(1), ChunkPolicy::Fixed(5)] {
+        let backend = ShardedBackend::new(&AnalyticBackend, 4).chunking(chunking);
+        let plan = Planner::new(&wf, &servers)
+            .backend(&backend)
+            .plan(&OptimalPolicy)
+            .unwrap();
+        assert_eq!(plan.allocation, serial.allocation, "{chunking:?}");
+        assert_eq!(plan.score.mean, serial.score.mean);
+    }
+}
+
+#[test]
+fn sharding_composes_with_empirical_backend() {
+    // a sharded empirical backend must substitute the same measured
+    // pool (scoring_pool delegation) and produce the same scores
+    let wf = Workflow::fig6();
+    let truth = Server::pool_exponential(&[9.0, 8.0, 7.0, 6.0, 5.0, 4.0]);
+    let believed = Server::pool_exponential(&[6.0; 6]);
+    let mut rng = Rng::new(99);
+    let mut inner = EmpiricalBackend::new();
+    for (sid, s) in truth.iter().enumerate() {
+        let samples: Vec<f64> = (0..3000).map(|_| s.dist.sample(&mut rng)).collect();
+        inner = inner.with_samples(sid, &samples);
+    }
+    let serial = Planner::new(&wf, &believed)
+        .backend(&inner)
+        .plan(&ProposedPolicy::default())
+        .unwrap();
+    let sharded_backend = ShardedBackend::new(&inner, 4);
+    let sharded = Planner::new(&wf, &believed)
+        .backend(&sharded_backend)
+        .plan(&ProposedPolicy::default())
+        .unwrap();
+    assert_eq!(serial.allocation, sharded.allocation);
+    assert_eq!(serial.score.mean, sharded.score.mean);
+    // the sharded wrapper reports the inner backend's measured grid
+    assert_eq!(serial.diagnostics.grid, sharded.diagnostics.grid);
+}
+
+#[test]
+fn nan_pressure_job_is_rejected_not_a_panic() {
+    // regression for the multijob partial_cmp().unwrap() panic: a
+    // degenerate job must surface as SchedError::Infeasible
+    let mut poisoned = Workflow::tandem(2, 1.0);
+    poisoned.arrival_rate = f64::NAN;
+    let healthy = Workflow::fig6();
+    let pool =
+        Server::pool_exponential(&[14.0, 12.0, 10.0, 9.0, 8.0, 7.0, 6.0, 5.0, 4.0]);
+    let result = Planner::new(&healthy, &pool).plan_jobs(&[&healthy, &poisoned]);
+    assert!(
+        matches!(result, Err(SchedError::Infeasible(_))),
+        "expected Infeasible, got {result:?}"
+    );
+}
+
+#[test]
+fn heavy_tail_horizon_yields_finite_grids_end_to_end() {
+    // regression for the infinite-horizon grids: a pool containing a
+    // near-degenerate pareto law (astronomical 99.99% quantile) must
+    // still produce a finite evaluation grid rather than dt = inf
+    let heavy = ServiceDist::delayed_pareto(0.05, 0.0);
+    assert!(heavy.quantile(0.9999) > GridSpec::MAX_HORIZON);
+    let tame = ServiceDist::exponential(5.0);
+    let grid = GridSpec::auto_for(&[&heavy, &tame]);
+    assert!(grid.dt.is_finite() && grid.dt > 0.0);
+    assert!(grid.t_max() <= GridSpec::MAX_HORIZON);
+}
+
+#[test]
 fn backends_flow_through_plan_jobs() {
     // the injected backend scores multi-job plans too (native runtime
     // backend == analytic math)

@@ -1,9 +1,10 @@
 //! Old-vs-new equivalence: the `Planner` surface must return
-//! bit-identical allocations to the legacy engine pipelines and to the
-//! deprecated free-function shims, on random tandem / fork-join /
-//! mixed workflows. This is the migration's safety net — if a policy
-//! ever drifts from the algorithm it wraps, these properties fail.
-#![allow(deprecated)]
+//! bit-identical allocations to the engine pipelines it wraps, on
+//! random tandem / fork-join / mixed workflows. This is the
+//! migration's safety net — if a policy ever drifts from the algorithm
+//! it wraps, these properties fail. (The deprecated free-function
+//! shims this suite also used to pin were removed in 0.4.0; see
+//! docs/MIGRATION.md.)
 
 use dcflow::prelude::*;
 use dcflow::sched::optimal::exhaustive;
@@ -35,21 +36,19 @@ fn random_pool(g: &mut prop::Gen, slots: usize) -> Vec<Server> {
 }
 
 #[test]
-fn sdcc_policy_matches_legacy_bit_for_bit() {
-    prop::run("Planner(SdccPolicy) == allocate_with == sdcc_allocate", 40, |g| {
+fn sdcc_policy_matches_engine_bit_for_bit() {
+    prop::run("Planner(SdccPolicy) == allocate_with", 40, |g| {
         let wf = random_workflow(g);
         let servers = random_pool(g, wf.slots());
         let planner = Planner::new(&wf, &servers);
         let via_planner = planner.allocate(&SdccPolicy);
         let via_engine = allocate_with(&wf, &servers, ResponseModel::Mm1);
-        let via_shim = sdcc_allocate(&wf, &servers);
         assert_eq!(via_planner, via_engine);
-        assert_eq!(via_planner, via_shim);
     });
 }
 
 #[test]
-fn baseline_policy_matches_legacy_bit_for_bit() {
+fn baseline_policy_matches_engine_bit_for_bit() {
     prop::run("Planner(BaselinePolicy) == baseline pipelines", 40, |g| {
         let wf = random_workflow(g);
         let servers = random_pool(g, wf.slots());
@@ -60,32 +59,25 @@ fn baseline_policy_matches_legacy_bit_for_bit() {
             let via_engine = baseline_allocate_split(&wf, &servers, model, split);
             assert_eq!(via_planner, via_engine);
         }
-        assert_eq!(
-            planner.allocate(&BaselinePolicy::default()),
-            baseline_allocate(&wf, &servers, model)
-        );
     });
 }
 
 #[test]
-fn proposed_policy_matches_legacy_bit_for_bit() {
-    prop::run("Planner(ProposedPolicy) == propose == proposed_allocate", 25, |g| {
+fn proposed_policy_matches_engine_bit_for_bit() {
+    prop::run("Planner(ProposedPolicy) == propose", 25, |g| {
         let wf = random_workflow(g);
         let servers = random_pool(g, wf.slots());
         let model = ResponseModel::Mm1;
         let planner = Planner::new(&wf, &servers).model(model);
         let via_planner = planner.allocate(&ProposedPolicy::default());
         let via_engine = propose(&wf, &servers, model, Objective::Mean).map(|(a, _)| a);
-        let via_shim =
-            proposed_allocate(&wf, &servers, model, Objective::Mean).map(|(a, _)| a);
         assert_eq!(via_planner, via_engine);
-        assert_eq!(via_planner, via_shim);
     });
 }
 
 #[test]
-fn optimal_policy_matches_legacy_bit_for_bit() {
-    prop::run("Planner(OptimalPolicy) == exhaustive == optimal_allocate", 15, |g| {
+fn optimal_policy_matches_engine_bit_for_bit() {
+    prop::run("Planner(OptimalPolicy) == exhaustive", 15, |g| {
         let wf = random_workflow(g);
         let servers = random_pool(g, wf.slots());
         let model = ResponseModel::Mm1;
@@ -94,19 +86,31 @@ fn optimal_policy_matches_legacy_bit_for_bit() {
         let via_planner = planner.allocate(&OptimalPolicy);
         let via_engine =
             exhaustive(&wf, &servers, &grid, Objective::Mean, model).map(|(a, _)| a);
-        let via_shim =
-            optimal_allocate(&wf, &servers, &grid, Objective::Mean, model).map(|(a, _)| a);
         assert_eq!(via_planner, via_engine);
-        assert_eq!(via_planner, via_shim);
-        // and the shim's score is the planner's score (same grid)
+        // and the engine's score is the planner's score (same grid)
         if let (Ok(plan), Ok((_, s))) = (
             planner.plan(&OptimalPolicy),
-            optimal_allocate(&wf, &servers, &grid, Objective::Mean, model),
+            exhaustive(&wf, &servers, &grid, Objective::Mean, model),
         ) {
             assert_eq!(plan.score.mean, s.mean);
             assert_eq!(plan.score.p99, s.p99);
         }
     });
+}
+
+#[test]
+fn planner_errors_match_engine_errors() {
+    // shim removal must not change error behavior: the planner reports
+    // exactly what the engine reports
+    let wf = Workflow::fig6();
+    let servers = Server::pool_exponential(&[5.0, 5.5]);
+    let via_planner = Planner::new(&wf, &servers).allocate(&SdccPolicy);
+    let via_engine = allocate_with(&wf, &servers, ResponseModel::Mm1);
+    assert_eq!(via_planner, via_engine);
+    assert!(matches!(
+        via_planner,
+        Err(SchedError::NotEnoughServers { need: 6, have: 2 })
+    ));
 }
 
 #[test]
