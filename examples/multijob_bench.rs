@@ -1,0 +1,188 @@
+//! Reproducible multi-job swap benchmark harness.
+//!
+//! Runs the cross-job swap refinement serial reference pass and the
+//! wave engine across shard counts {1, 2, 8} on a fixed job set,
+//! verifies every configuration produces bit-identical plans, and
+//! emits a machine-readable `BENCH_multijob.json` (schema documented
+//! in `docs/BENCHMARKS.md`) so the perf trajectory of the multi-job
+//! engine is recorded, not anecdotal.
+//!
+//! ```text
+//! cargo run --release --example multijob_bench            # full grid
+//! cargo run --release --example multijob_bench -- --smoke # CI smoke
+//! cargo run --release --example multijob_bench -- --out target/BENCH_multijob.json
+//! ```
+
+use std::collections::BTreeMap;
+
+use dcflow::prelude::*;
+use dcflow::util::bench::bench;
+use dcflow::util::cli::Cli;
+use dcflow::util::json::Json;
+
+fn obj(entries: Vec<(&str, Json)>) -> Json {
+    let mut m = BTreeMap::new();
+    for (k, v) in entries {
+        m.insert(k.to_string(), v);
+    }
+    Json::Obj(m)
+}
+
+fn main() {
+    let cli = Cli::new(
+        "multijob_bench",
+        "serial vs wave-batched multi-job swap refinement, JSON output",
+    )
+    .opt("out", "BENCH_multijob.json", "output path for the JSON report")
+    .opt("iters", "3", "measured iterations per configuration")
+    .opt("warmup", "1", "unmeasured warmup iterations")
+    .flag("smoke", "tiny job set + pinned coarse grid (CI smoke run)");
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let args = match cli.parse(&argv) {
+        Ok(a) => a,
+        Err(msg) => {
+            eprintln!("{msg}");
+            std::process::exit(2);
+        }
+    };
+    let out_path = args.get("out").to_string();
+    let smoke = args.has("smoke");
+    // --smoke only lowers the *defaults*; explicitly passed --iters or
+    // --warmup always win
+    let passed = |name: &str| {
+        argv.iter()
+            .any(|a| a == &format!("--{name}") || a.starts_with(&format!("--{name}=")))
+    };
+    let iters: usize = if smoke && !passed("iters") {
+        1
+    } else {
+        args.get_as("iters").expect("--iters")
+    };
+    let warmup: usize = if smoke && !passed("warmup") {
+        0
+    } else {
+        args.get_as("warmup").expect("--warmup")
+    };
+
+    // fixed, versioned workload: the paper's Fig. 6 job plus light
+    // tandem/fork-join companions over a heterogeneous pool
+    let j1 = Workflow::fig6();
+    let j2 = Workflow::tandem(3, 1.0);
+    let j3 = Workflow::forkjoin(2, 2.0);
+    let j4 = Workflow::tandem(2, 3.0);
+    let full_jobs = [&j1, &j2, &j3, &j4];
+    let smoke_jobs = [&j1, &j2];
+    let jobs: &[&Workflow] = if smoke { &smoke_jobs } else { &full_jobs };
+    let servers = if smoke {
+        Server::pool_exponential(&[14.0, 12.0, 10.0, 9.0, 8.0, 7.0, 6.0, 5.0, 4.0])
+    } else {
+        Server::pool_exponential(&[
+            18.0, 16.0, 14.0, 12.0, 11.0, 10.0, 9.0, 8.0, 7.5, 7.0, 6.0, 5.0, 4.5, 4.0,
+        ])
+    };
+    // the smoke run pins a coarse grid so CI measures the engine, not
+    // the FFTs; the full run keeps the auto-sized shared grid
+    let pinned = if smoke { Some(GridSpec::new(0.05, 256)) } else { None };
+    let cpus = std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(1);
+
+    println!(
+        "multijob_bench: {} jobs, {} servers, {cpus} cpus, iters {iters}, warmup {warmup}{}",
+        jobs.len(),
+        servers.len(),
+        if smoke { " (smoke)" } else { "" }
+    );
+
+    // serial reference pass
+    let mut serial_planner = Planner::new(&j1, &servers)
+        .objective(Objective::Mean)
+        .swap_engine(SwapEngine::Serial);
+    if let Some(g) = pinned {
+        serial_planner = serial_planner.grid(g);
+    }
+    let reference = serial_planner.plan_jobs(jobs).expect("job set is feasible");
+    let t_serial = bench(warmup, iters, || serial_planner.plan_jobs(jobs).unwrap());
+    let ref_objective = cluster_objective(&reference, jobs, Objective::Mean);
+    println!(
+        "  serial      : {:>10.6} s  (objective {:.4})",
+        t_serial.mean_s, ref_objective
+    );
+
+    let mut results: Vec<Json> = vec![obj(vec![
+        ("engine", Json::Str("serial".into())),
+        ("shards", Json::Num(1.0)),
+        ("mean_s", Json::Num(t_serial.mean_s)),
+        ("std_s", Json::Num(t_serial.std_s)),
+        ("speedup_vs_serial", Json::Num(1.0)),
+        ("cluster_objective", Json::Num(ref_objective)),
+    ])];
+
+    // wave engine × shard counts, each checked bit-identical first
+    let mut identical = true;
+    for shards in [1usize, 2, 8] {
+        let backend = ShardedBackend::new(&AnalyticBackend, shards);
+        let mut planner = Planner::new(&j1, &servers)
+            .objective(Objective::Mean)
+            .backend(&backend);
+        if let Some(g) = pinned {
+            planner = planner.grid(g);
+        }
+        let got = planner.plan_jobs(jobs).expect("job set is feasible");
+        let same = got.len() == reference.len()
+            && got.iter().zip(reference.iter()).all(|(g, r)| {
+                g.alloc == r.alloc
+                    && g.score.mean == r.score.mean
+                    && g.score.p99 == r.score.p99
+                    && g.grid == r.grid
+            });
+        identical &= same;
+        let t = bench(warmup, iters, || planner.plan_jobs(jobs).unwrap());
+        let objective = cluster_objective(&got, jobs, Objective::Mean);
+        println!(
+            "  wave x{shards:<2}    : {:>10.6} s  (speedup {:.2}x, identical: {same})",
+            t.mean_s,
+            t_serial.mean_s / t.mean_s
+        );
+        results.push(obj(vec![
+            ("engine", Json::Str("wave".into())),
+            ("shards", Json::Num(shards as f64)),
+            ("mean_s", Json::Num(t.mean_s)),
+            ("std_s", Json::Num(t.std_s)),
+            ("speedup_vs_serial", Json::Num(t_serial.mean_s / t.mean_s)),
+            ("cluster_objective", Json::Num(objective)),
+        ]));
+    }
+
+    let grid_json = match pinned {
+        Some(g) => obj(vec![("dt", Json::Num(g.dt)), ("n", Json::Num(g.n as f64))]),
+        None => Json::Str("auto".into()),
+    };
+    let report = obj(vec![
+        ("bench", Json::Str("multijob_swap".into())),
+        ("crate_version", Json::Str(env!("CARGO_PKG_VERSION").into())),
+        (
+            "config",
+            obj(vec![
+                ("jobs", Json::Num(jobs.len() as f64)),
+                ("servers", Json::Num(servers.len() as f64)),
+                ("cpus", Json::Num(cpus as f64)),
+                ("swap_rounds", Json::Num(MultiJobConfig::default().swap_rounds as f64)),
+                ("max_wave", Json::Num(MultiJobConfig::default().max_wave as f64)),
+                ("iters", Json::Num(iters as f64)),
+                ("warmup", Json::Num(warmup as f64)),
+                ("grid", grid_json),
+                ("smoke", Json::Bool(smoke)),
+            ]),
+        ),
+        ("results", Json::Arr(results)),
+        ("identical", Json::Bool(identical)),
+    ]);
+
+    std::fs::write(&out_path, report.to_string() + "\n").expect("write BENCH json");
+    println!("wrote {out_path} (identical: {identical})");
+    if !identical {
+        eprintln!("multijob_bench: wave plans diverged from the serial reference");
+        std::process::exit(1);
+    }
+}

@@ -1,0 +1,93 @@
+//! PERF — wave-batched cross-job swap refinement: the multi-job
+//! engine's serial reference pass vs the wave engine, across shard
+//! counts {1, 2, 8}. The cross-job swap phase scores every
+//! (job-pair × server-pair) exchange per round; the wave engine turns
+//! that into wide `score_batch` calls a `ShardedBackend` fans across
+//! worker threads — the last hot loop PR 3's sharding could not reach.
+//!
+//! Documented in docs/BENCHMARKS.md. Writes bench_out/multijob_swap.csv;
+//! the reproducible JSON twin is `examples/multijob_bench.rs`
+//! (BENCH_multijob.json).
+
+use dcflow::prelude::*;
+use dcflow::util::bench::{bench, fmt_time, Csv};
+
+fn main() {
+    println!("== PERF: multi-job cross-job swap — serial loop vs wave engine ==");
+    let cpus = std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(1);
+    println!("available parallelism: {cpus}");
+    let mut csv = Csv::new("multijob_swap", "metric,value,unit");
+    csv.row(&["cpus".into(), format!("{cpus}"), "threads".into()]);
+
+    // four concurrent jobs over a 14-server heterogeneous pool
+    // (6 + 3 + 2 + 2 = 13 slots, one spare)
+    let j1 = Workflow::fig6();
+    let j2 = Workflow::tandem(3, 1.0);
+    let j3 = Workflow::forkjoin(2, 2.0);
+    let j4 = Workflow::tandem(2, 3.0);
+    let jobs = [&j1, &j2, &j3, &j4];
+    let servers = Server::pool_exponential(&[
+        18.0, 16.0, 14.0, 12.0, 11.0, 10.0, 9.0, 8.0, 7.5, 7.0, 6.0, 5.0, 4.5, 4.0,
+    ]);
+    println!("jobs: {}, servers: {}", jobs.len(), servers.len());
+
+    // serial reference pass (per-candidate ScoreBackend::score calls)
+    let serial_planner = Planner::new(&j1, &servers)
+        .objective(Objective::Mean)
+        .swap_engine(SwapEngine::Serial);
+    let reference = serial_planner.plan_jobs(&jobs).expect("feasible");
+    let t_serial = bench(1, 3, || serial_planner.plan_jobs(&jobs).unwrap());
+    println!(
+        "serial swap loop          : {} (cluster objective {:.4})",
+        fmt_time(t_serial.mean_s),
+        cluster_objective(&reference, &jobs, Objective::Mean)
+    );
+    csv.row(&[
+        "serial_plan_jobs_s".into(),
+        format!("{:.6}", t_serial.mean_s),
+        "s".into(),
+    ]);
+
+    // wave engine × shard counts; every configuration must reproduce
+    // the reference plans bit for bit before its timing counts
+    let mut best_speedup = 0.0f64;
+    for shards in [1usize, 2, 8] {
+        let backend = ShardedBackend::new(&AnalyticBackend, shards);
+        let planner = Planner::new(&j1, &servers)
+            .objective(Objective::Mean)
+            .backend(&backend);
+        let got = planner.plan_jobs(&jobs).expect("feasible");
+        assert_eq!(got.len(), reference.len());
+        for (g, r) in got.iter().zip(reference.iter()) {
+            assert_eq!(g.alloc, r.alloc, "wave x{shards} diverged from serial");
+            assert_eq!(g.score.mean, r.score.mean);
+            assert_eq!(g.score.p99, r.score.p99);
+            assert_eq!(g.grid, r.grid);
+        }
+        let t = bench(1, 3, || planner.plan_jobs(&jobs).unwrap());
+        let speedup = t_serial.mean_s / t.mean_s;
+        best_speedup = best_speedup.max(speedup);
+        println!(
+            "wave engine, {shards} shard(s)   : {} (speedup {speedup:.2}x)",
+            fmt_time(t.mean_s)
+        );
+        csv.row(&[
+            format!("wave_x{shards}_plan_jobs_s"),
+            format!("{:.6}", t.mean_s),
+            "s".into(),
+        ]);
+        csv.row(&[
+            format!("wave_x{shards}_speedup"),
+            format!("{speedup:.3}"),
+            "x".into(),
+        ]);
+    }
+    csv.flush();
+
+    if cpus > 1 && best_speedup <= 1.0 {
+        println!("WARNING: no wave speedup on a {cpus}-way machine");
+    }
+    println!("PERF OK (best speedup {best_speedup:.2}x, plans bit-identical)");
+}

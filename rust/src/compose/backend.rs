@@ -387,10 +387,11 @@ impl<'a> ShardedBackend<'a> {
 
     /// Waves narrower than this are scored inline: spawning scoped
     /// worker threads costs tens of microseconds each, which cheap
-    /// analytic scores on a small wave cannot amortize (the multi-job
-    /// swap loop emits many 2–6 candidate rescore waves). Inline and
-    /// sharded paths are bit-identical, so the threshold is purely a
-    /// scheduling decision.
+    /// analytic scores on a small wave cannot amortize (single-job
+    /// refinement on small pools emits narrow O(slots²) rounds; the
+    /// multi-job wave engine's cross-job candidate waves are wide and
+    /// shard fully). Inline and sharded paths are bit-identical, so the
+    /// threshold is purely a scheduling decision.
     pub const MIN_PARALLEL_WAVE: usize = 8;
 
     /// Candidates per chunk for a wave of `wave_len`.

@@ -37,16 +37,18 @@ impl GridSpec {
 
     /// Clamp a raw auto-sizing horizon to `(0, MAX_HORIZON]`, surfacing
     /// a diagnostic when the raw value was unusable (non-finite, NaN or
-    /// beyond the cap).
+    /// beyond the cap). The diagnostic goes through
+    /// [`crate::util::warn::warn`], so library users can silence it
+    /// ([`crate::util::warn::set_quiet`] or `DCFLOW_QUIET=1`).
     fn finite_horizon(raw: f64, what: &str) -> f64 {
         if raw.is_finite() && raw <= Self::MAX_HORIZON {
             return raw.max(1e-6);
         }
-        eprintln!(
-            "dcflow: {what} grid horizon {raw} is not usable \
+        crate::util::warn::warn(&format!(
+            "{what} grid horizon {raw} is not usable \
              (degenerate or heavy-tail law?); clamping to {:e}",
             Self::MAX_HORIZON
-        );
+        ));
         Self::MAX_HORIZON
     }
 

@@ -38,7 +38,11 @@
 //! A module-by-module map with the Planner/Policy/ScoreBackend seams and
 //! a paper cross-reference lives in `docs/ARCHITECTURE.md`; migration
 //! recipes off the legacy free functions (removed in 0.4.0) live in
-//! `docs/MIGRATION.md`.
+//! `docs/MIGRATION.md`; every bench target, what it measures and the
+//! `BENCH_*.json` schema the reproducible harness emits are documented
+//! in `docs/BENCHMARKS.md`. Library diagnostics (grid clamps, scorer
+//! fallbacks) flow through [`util::warn`] and can be silenced with
+//! [`util::warn::set_quiet`] or `DCFLOW_QUIET=1`.
 //!
 //! ## Quickstart
 //!
@@ -114,7 +118,7 @@ pub mod prelude {
     pub use crate::sched::capacity::{
         max_load_scale, max_throughput, max_throughput_under_sla, required_speedup, Sla,
     };
-    pub use crate::sched::multijob::{cluster_objective, JobPlan};
+    pub use crate::sched::multijob::{cluster_objective, JobPlan, MultiJobConfig, SwapEngine};
     pub use crate::sched::server::Server;
     pub use crate::sched::{Allocation, Objective, ResponseModel, SchedError, SplitPolicy};
     pub use crate::sim::network::{simulate, SimConfig, SimResult};

@@ -57,6 +57,11 @@
 //! assert!(plan.score.is_stable());
 //! ```
 //!
+//! Multi-job planning ([`Planner::plan_jobs`]) adds the wave-batched
+//! cross-job swap refinement of [`crate::sched::multijob`]; its knobs
+//! ([`Planner::swap_rounds`], [`Planner::max_wave`],
+//! [`Planner::swap_engine`]) ride the same builder.
+//!
 //! The original legacy free functions (`sdcc_allocate`,
 //! `baseline_allocate`, `proposed_allocate`, `optimal_allocate`) were
 //! removed in 0.4.0 after two releases as deprecated shims —
@@ -68,6 +73,7 @@ pub use crate::compose::backend::{
     AnalyticBackend, ChunkPolicy, EmpiricalBackend, ScoreBackend, ShardedBackend,
 };
 pub use crate::runtime::scorer::RuntimeBackend;
+pub use crate::sched::multijob::{MultiJobConfig, SwapEngine};
 pub use policy::{
     AllocationPolicy, BaselinePolicy, OptimalPolicy, PlanContext, ProposedPolicy, SdccPolicy,
 };
@@ -75,7 +81,7 @@ pub use policy::{
 use crate::compose::grid::GridSpec;
 use crate::compose::score::Score;
 use crate::flow::Workflow;
-use crate::sched::multijob::{multijob_allocate_with, JobPlan};
+use crate::sched::multijob::{multijob_allocate_cfg, JobPlan};
 use crate::sched::response::ResponseModel;
 use crate::sched::server::Server;
 use crate::sched::{Allocation, Objective, SchedError};
@@ -144,6 +150,7 @@ pub struct Planner<'a> {
     objective: Objective,
     grid: Option<GridSpec>,
     backend: Option<&'a dyn ScoreBackend>,
+    multijob: MultiJobConfig,
 }
 
 impl fmt::Debug for Planner<'_> {
@@ -155,6 +162,7 @@ impl fmt::Debug for Planner<'_> {
             .field("objective", &self.objective)
             .field("grid", &self.grid)
             .field("backend", &self.backend_ref().name())
+            .field("multijob", &self.multijob)
             .finish()
     }
 }
@@ -169,6 +177,7 @@ impl<'a> Planner<'a> {
             objective: Objective::Mean,
             grid: None,
             backend: None,
+            multijob: MultiJobConfig::default(),
         }
     }
 
@@ -214,6 +223,36 @@ impl<'a> Planner<'a> {
     #[must_use]
     pub fn backend(mut self, backend: &'a dyn ScoreBackend) -> Planner<'a> {
         self.backend = Some(backend);
+        self
+    }
+
+    /// Maximum cross-job swap-refinement rounds [`Planner::plan_jobs`]
+    /// runs (default 4; refinement stops earlier once a round applies
+    /// no improving swap). Single-workflow planning is unaffected —
+    /// [`ProposedPolicy`] carries its own per-job `rounds` knob.
+    #[must_use]
+    pub fn swap_rounds(mut self, rounds: usize) -> Planner<'a> {
+        self.multijob.swap_rounds = rounds;
+        self
+    }
+
+    /// Cap on the number of swap candidates [`Planner::plan_jobs`]
+    /// scores per [`ScoreBackend::score_batch`] wave (default 4096;
+    /// values `< 1` behave as 1). Chunking bounds the size of each
+    /// scored batch and never changes the resulting plans.
+    #[must_use]
+    pub fn max_wave(mut self, max_wave: usize) -> Planner<'a> {
+        self.multijob.max_wave = max_wave;
+        self
+    }
+
+    /// Select how [`Planner::plan_jobs`] scores its cross-job swap
+    /// candidates: the wave-batched engine (default) or the serial
+    /// reference pass. Both produce bit-identical plans for the
+    /// built-in backends; see [`SwapEngine`].
+    #[must_use]
+    pub fn swap_engine(mut self, engine: SwapEngine) -> Planner<'a> {
+        self.multijob.engine = engine;
         self
     }
 
@@ -305,21 +344,24 @@ impl<'a> Planner<'a> {
     }
 
     /// Partition the pool across several concurrent workflows and plan
-    /// each (wraps [`multijob_allocate_with`] with this planner's
-    /// model, objective and backend). All jobs are evaluated on **one
+    /// each (wraps [`multijob_allocate_cfg`] with this planner's
+    /// model, objective, backend and swap knobs —
+    /// [`Planner::swap_rounds`], [`Planner::max_wave`],
+    /// [`Planner::swap_engine`]). All jobs are evaluated on **one
     /// shared grid**: the pinned [`Planner::grid`] when set, else a
     /// grid auto-sized once to cover every job's seed-response horizon.
-    /// Only the pool, model, objective, grid and backend carry over:
-    /// the builder's own workflow is not implicitly part of the job
-    /// set.
+    /// Only the pool, model, objective, grid, backend and swap knobs
+    /// carry over: the builder's own workflow is not implicitly part of
+    /// the job set.
     pub fn plan_jobs(&self, jobs: &[&Workflow]) -> Result<Vec<JobPlan>, SchedError> {
-        multijob_allocate_with(
+        multijob_allocate_cfg(
             jobs,
             self.servers,
             self.model,
             self.objective,
             self.backend_ref(),
             self.grid,
+            &self.multijob,
         )
     }
 
@@ -347,6 +389,42 @@ mod tests {
     use crate::compose::score::score_allocation_with;
     use crate::sched::response::{mean_response, ResponseModel};
     use crate::sched::schedule_rates;
+
+    #[test]
+    fn swap_knobs_flow_through_plan_jobs() {
+        // serial reference engine == default wave engine, and zero swap
+        // rounds means the greedy+refine plans come back untouched by
+        // the cross-job phase (still valid and disjoint)
+        let heavy = Workflow::fig6();
+        let light = Workflow::tandem(3, 1.0);
+        let pool =
+            Server::pool_exponential(&[14.0, 12.0, 10.0, 9.0, 8.0, 7.0, 6.0, 5.0, 4.0]);
+        let jobs = [&heavy, &light];
+        let wave = Planner::new(&heavy, &pool).plan_jobs(&jobs).unwrap();
+        let serial = Planner::new(&heavy, &pool)
+            .swap_engine(SwapEngine::Serial)
+            .plan_jobs(&jobs)
+            .unwrap();
+        for (w, s) in wave.iter().zip(serial.iter()) {
+            assert_eq!(w.alloc, s.alloc);
+            assert_eq!(w.score.mean, s.score.mean);
+        }
+        let tiny_waves = Planner::new(&heavy, &pool)
+            .max_wave(3)
+            .plan_jobs(&jobs)
+            .unwrap();
+        for (w, t) in wave.iter().zip(tiny_waves.iter()) {
+            assert_eq!(w.alloc, t.alloc);
+        }
+        let no_swaps = Planner::new(&heavy, &pool)
+            .swap_rounds(0)
+            .plan_jobs(&jobs)
+            .unwrap();
+        assert_eq!(no_swaps.len(), 2);
+        for p in &no_swaps {
+            assert!(p.score.is_stable());
+        }
+    }
 
     fn fig6() -> (Workflow, Vec<Server>) {
         (

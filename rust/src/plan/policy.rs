@@ -230,8 +230,19 @@ impl AllocationPolicy for BaselinePolicy {
 /// ```
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub struct ProposedPolicy {
-    /// Maximum pairwise-swap refinement rounds.
+    /// Maximum pairwise-swap refinement rounds. This is the *within-job*
+    /// §3 hill-climb depth; the *cross-job* analogue for multi-job
+    /// planning is [`Planner::swap_rounds`](crate::plan::Planner::swap_rounds).
     pub rounds: usize,
+}
+
+impl ProposedPolicy {
+    /// The proposed scheme with an explicit refinement depth (`rounds`
+    /// hill-climb rounds; `ProposedPolicy::default()` uses 8, the
+    /// legacy pipeline's depth).
+    pub fn with_rounds(rounds: usize) -> ProposedPolicy {
+        ProposedPolicy { rounds }
+    }
 }
 
 impl Default for ProposedPolicy {

@@ -169,8 +169,10 @@ impl BatchScorer {
             match self.score_batch_xla(allocs, servers, grid, model) {
                 Ok(t) => return t,
                 Err(e) => {
-                    // fall back once and remember
-                    eprintln!("dcflow: xla scorer failed ({e}); falling back to native");
+                    // fall back once and remember; silenceable via util::warn
+                    crate::util::warn::warn(&format!(
+                        "xla scorer failed ({e}); falling back to native"
+                    ));
                     self.registry = None;
                 }
             }

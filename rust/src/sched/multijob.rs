@@ -3,25 +3,68 @@
 //! heterogeneous servers that collectively need to process a data
 //! workflow" — production clusters run many at once).
 //!
-//! Algorithm (greedy + cross-job swap refinement):
-//! 1. order jobs by offered load (entry rate × serial depth, the
-//!    capacity pressure of the job);
-//! 2. seed each job in order with Alg. 1/2 against the *remaining*
-//!    pool (one pass; each job's pool view is kept);
-//! 3. size **one shared evaluation grid** for the whole job set — the
+//! # Algorithm (greedy seed + wave-batched cross-job swap refinement)
+//!
+//! Each numbered step extends the paper's machinery to the multi-job
+//! setting; the per-job inner steps are exactly Alg. 1/2 (+ §3):
+//!
+//! 1. **Order jobs by offered load** (entry rate × serial depth — the
+//!    capacity pressure of the job). Heavier jobs pick servers first,
+//!    the multi-job analogue of Alg. 1's "faster servers to
+//!    higher-rate DCCs" sort-matching.
+//! 2. **Seed each job in order with Alg. 1 + Alg. 2** against the
+//!    *remaining* pool (one greedy pass; each job's pool view is kept).
+//! 3. **Size one shared evaluation grid** for the whole job set — the
 //!    widest per-job seed-response grid, so every job's law fits —
-//!    unless the caller pinned one;
-//! 4. refine each seed (§3 balancing) on the shared grid;
-//! 5. refine across jobs: try swapping any pair of servers between two
-//!    jobs, keep the swap if the load-weighted objective sum improves —
-//!    every candidate scored on the same shared grid, so swap decisions
-//!    compare like with like.
+//!    unless the caller pinned one.
+//! 4. **Refine each seed** with the §3 min-max balancing hill-climb on
+//!    the shared grid.
+//! 5. **Refine across jobs** with the wave-batched swap engine: per
+//!    round, *every* independent (job-pair × server-pair) exchange is
+//!    materialized as a rate-scheduled candidate (Alg. 2 re-run on the
+//!    regrouped assignment), all candidates are scored through
+//!    [`ScoreBackend::score_batch`] waves, and the best non-conflicting
+//!    improvements are applied with a deterministic
+//!    [`f64::total_cmp`] tie-break ([`select_swaps`]). Applied swaps
+//!    get a §3 re-balance before the next round. See [`SwapEngine`]
+//!    for the batched/serial execution modes (identical results).
 //!
 //! Scores are load-weighted so a job processing 8 tasks/s counts 4× a
 //! 2 tasks/s job in the cluster objective (minimizing total expected
 //! in-flight work). All scoring flows through an injected
-//! [`ScoreBackend`] ([`multijob_allocate_with`]); [`multijob_allocate`]
-//! is the analytic-backend convenience.
+//! [`ScoreBackend`] ([`multijob_allocate_cfg`]); [`multijob_allocate`]
+//! is the analytic-backend convenience and
+//! [`crate::plan::Planner::plan_jobs`] the builder surface:
+//!
+//! ```
+//! use dcflow::prelude::*;
+//!
+//! let heavy = Workflow::fig6();
+//! let light = Workflow::tandem(3, 1.0);
+//! let pool = Server::pool_exponential(&[14.0, 12.0, 10.0, 9.0, 8.0, 7.0, 6.0, 5.0, 4.0]);
+//! let plans = Planner::new(&heavy, &pool)
+//!     .swap_rounds(2)              // cross-job refinement rounds
+//!     .max_wave(512)               // cap candidates per scored wave
+//!     .plan_jobs(&[&heavy, &light])
+//!     .expect("feasible");
+//! assert_eq!(plans.len(), 2);
+//! // every job is scored on one shared grid, so swap decisions compare
+//! // like with like
+//! assert_eq!(plans[0].grid, plans[1].grid);
+//! ```
+//!
+//! # Why waves
+//!
+//! The 0.4.0 engine scored swap candidates one pair at a time through
+//! [`ScoreBackend::score`], so the one hot loop that dominates
+//! multi-job planning could not exploit a sharded or fused-batch
+//! backend. The wave engine turns each round into a few wide
+//! `score_batch` calls (one per job side, chunked at
+//! [`MultiJobConfig::max_wave`]), which a
+//! [`ShardedBackend`](crate::compose::backend::ShardedBackend) fans
+//! across worker threads bit-identically — benchmarked in
+//! `benches/multijob_swap.rs` and `examples/multijob_bench.rs`
+//! (`BENCH_multijob.json`; see `docs/BENCHMARKS.md`).
 
 use crate::compose::backend::{AnalyticBackend, ScoreBackend};
 use crate::compose::grid::GridSpec;
@@ -48,6 +91,84 @@ pub struct JobPlan {
     pub grid: GridSpec,
 }
 
+/// How the cross-job swap refinement (step 5) executes. Both modes run
+/// the *same* enumeration, selection and tie-break logic and produce
+/// identical plans for any deterministic backend whose `score_batch`
+/// agrees with per-candidate `score` (all built-ins; property-tested in
+/// `tests/backend_equivalence.rs`) — the engine choice is purely about
+/// how candidate scores are obtained.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum SwapEngine {
+    /// Score every candidate through one [`ScoreBackend::score_batch`]
+    /// wave per job side (chunked at [`MultiJobConfig::max_wave`]), so
+    /// sharded/fused backends parallelize the round. The default.
+    #[default]
+    Wave,
+    /// The reference pass: score candidates one at a time, in
+    /// enumeration order, through [`ScoreBackend::score`]. Kept as the
+    /// bit-identity oracle for the wave path and as the serial-loop
+    /// baseline in `benches/multijob_swap.rs`.
+    Serial,
+}
+
+/// Knobs for the multi-job cross-job refinement (step 5). Constructed
+/// via [`Default`] (4 rounds, 4096-candidate waves, [`SwapEngine::Wave`])
+/// or field-by-field; the planner surfaces each knob as a builder
+/// method ([`swap_rounds`](crate::plan::Planner::swap_rounds),
+/// [`max_wave`](crate::plan::Planner::max_wave),
+/// [`swap_engine`](crate::plan::Planner::swap_engine)).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct MultiJobConfig {
+    /// Maximum cross-job swap rounds; refinement stops earlier when a
+    /// round applies no improving swap.
+    pub swap_rounds: usize,
+    /// Maximum candidates per scored wave. Values `< 1` are treated as
+    /// 1. Chunking a round's candidates into `max_wave`-sized waves
+    /// bounds the size of each [`ScoreBackend::score_batch`] call (what
+    /// device-backed batch scorers size their buffers by) and never
+    /// changes results — order is preserved.
+    pub max_wave: usize,
+    /// Wave-batched scoring or the serial reference pass.
+    pub engine: SwapEngine,
+}
+
+impl Default for MultiJobConfig {
+    fn default() -> MultiJobConfig {
+        MultiJobConfig {
+            swap_rounds: 4,
+            max_wave: 4096,
+            engine: SwapEngine::Wave,
+        }
+    }
+}
+
+impl MultiJobConfig {
+    /// The serial reference configuration: identical selection logic,
+    /// per-candidate scoring (see [`SwapEngine::Serial`]).
+    pub fn serial_reference() -> MultiJobConfig {
+        MultiJobConfig {
+            engine: SwapEngine::Serial,
+            ..MultiJobConfig::default()
+        }
+    }
+}
+
+/// §3 re-balance rounds applied to each side of an accepted swap before
+/// the next round (matches the refinement depth the 0.4.0 serial loop
+/// gave every candidate).
+const POST_SWAP_REFINE_ROUNDS: usize = 4;
+
+/// Acceptance margin: a swap must beat the incumbent weighted objective
+/// by more than this to count as improving (guards against float noise
+/// cycling the hill-climb).
+const IMPROVE_MARGIN: f64 = 1e-9;
+
+/// Candidates whose score captured less than this probability mass on
+/// the shared grid are rejected: their moments are deceptively low
+/// (mass-normalized truncation), so they must not win a swap. Backends
+/// that do not track mass report NaN, which passes the `<` test.
+const MIN_CANDIDATE_MASS: f64 = 0.95;
+
 /// Partition `servers` across `jobs` and allocate each, scoring with
 /// the default [`AnalyticBackend`] on an auto-sized shared grid.
 pub fn multijob_allocate(
@@ -60,14 +181,9 @@ pub fn multijob_allocate(
 }
 
 /// Partition `servers` across `jobs` with an injected scoring backend
-/// and an optional pinned evaluation grid.
-///
-/// All jobs are evaluated on **one shared grid**: `grid` when pinned,
-/// else the widest of the per-job Alg. 1/2 seed-response grids (sized
-/// once, up front — jobs are not re-derived a grid each). This is what
-/// lets a comparison of swap candidates across jobs, and downstream
-/// consumers of [`JobPlan::score`], compare numbers computed on the
-/// same support.
+/// and an optional pinned evaluation grid, using the default
+/// [`MultiJobConfig`] (wave engine). See [`multijob_allocate_cfg`] for
+/// the round/wave knobs.
 pub fn multijob_allocate_with(
     jobs: &[&Workflow],
     servers: &[Server],
@@ -75,6 +191,36 @@ pub fn multijob_allocate_with(
     objective: Objective,
     backend: &dyn ScoreBackend,
     grid: Option<GridSpec>,
+) -> Result<Vec<JobPlan>, SchedError> {
+    multijob_allocate_cfg(
+        jobs,
+        servers,
+        model,
+        objective,
+        backend,
+        grid,
+        &MultiJobConfig::default(),
+    )
+}
+
+/// Partition `servers` across `jobs` with an injected scoring backend,
+/// an optional pinned evaluation grid and explicit refinement knobs.
+///
+/// All jobs are evaluated on **one shared grid**: `grid` when pinned,
+/// else the widest of the per-job Alg. 1/2 seed-response grids (sized
+/// once, up front — jobs are not re-derived a grid each). This is what
+/// lets a comparison of swap candidates across jobs, and downstream
+/// consumers of [`JobPlan::score`], compare numbers computed on the
+/// same support. See the [module docs](self) for the step-by-step
+/// algorithm and its Alg. 1/2 cross-reference.
+pub fn multijob_allocate_cfg(
+    jobs: &[&Workflow],
+    servers: &[Server],
+    model: ResponseModel,
+    objective: Objective,
+    backend: &dyn ScoreBackend,
+    grid: Option<GridSpec>,
+    cfg: &MultiJobConfig,
 ) -> Result<Vec<JobPlan>, SchedError> {
     if jobs.is_empty() {
         return Ok(Vec::new());
@@ -169,74 +315,81 @@ pub fn multijob_allocate_with(
         });
     }
 
-    // 5. cross-job pairwise swap refinement on the weighted objective,
-    // every candidate rescored on the same shared grid
-    let weight = |j: usize| jobs[j].arrival_rate;
-    let rescore = |j: usize, global_assign: &[usize]| -> Option<(Allocation, Score)> {
-        // build a local pool view for this job's servers only
-        let pool: Vec<Server> = global_assign
+    // 5. cross-job swap refinement on the load-weighted objective:
+    // enumerate -> score (wave or serial) -> select non-conflicting ->
+    // apply + re-balance, until a round improves nothing
+    for _round in 0..cfg.swap_rounds {
+        let base: Vec<f64> = plans
             .iter()
-            .map(|&sid| servers[sid].clone())
+            .map(|p| jobs[p.job].arrival_rate * objective.key(&p.score))
             .collect();
-        let local: Vec<usize> = (0..pool.len()).collect();
-        let alloc = schedule_rates(jobs[j], local, &pool, model).ok()?;
-        let (refined, score) =
-            refine_with(jobs[j], alloc, &pool, &shared, model, objective, 4, backend).ok()?;
-        // a candidate whose response tail escapes the shared grid scores
-        // deceptively low (moments are mass-normalized) — it must not be
-        // allowed to win a swap on a truncated number. (Backends that do
-        // not track mass report NaN, which passes.)
-        if score.mass < 0.95 {
-            return None;
-        }
-        Some((
-            Allocation {
-                slot_server: refined
-                    .slot_server
-                    .iter()
-                    .map(|&i| global_assign[i])
-                    .collect(),
-                slot_rate: refined.slot_rate,
-            },
-            score,
-        ))
-    };
 
-    let mut improved = true;
-    let mut rounds = 0;
-    while improved && rounds < 4 {
-        improved = false;
-        rounds += 1;
-        for a in 0..plans.len() {
-            for b in (a + 1)..plans.len() {
-                let (ja, jb) = (plans[a].job, plans[b].job);
-                let base = weight(ja) * objective.key(&plans[a].score)
-                    + weight(jb) * objective.key(&plans[b].score);
-                if !base.is_finite() {
-                    continue;
-                }
-                // try swapping each server pair between jobs a and b
-                'outer: for ia in 0..plans[a].alloc.slot_server.len() {
-                    for ib in 0..plans[b].alloc.slot_server.len() {
-                        let mut ga = plans[a].alloc.slot_server.clone();
-                        let mut gb = plans[b].alloc.slot_server.clone();
-                        std::mem::swap(&mut ga[ia], &mut gb[ib]);
-                        let (Some((na, sa)), Some((nb, sb))) =
-                            (rescore(ja, &ga), rescore(jb, &gb))
-                        else {
-                            continue;
-                        };
-                        let cand =
-                            weight(ja) * objective.key(&sa) + weight(jb) * objective.key(&sb);
-                        if cand < base - 1e-9 {
-                            plans[a].alloc = na;
-                            plans[a].score = sa;
-                            plans[b].alloc = nb;
-                            plans[b].score = sb;
-                            improved = true;
-                            break 'outer;
-                        }
-                    }
+        let mut cands = enumerate_candidates(jobs, servers, &plans, model, &base);
+        if cands.is_empty() {
+            break;
+        }
+        score_candidates(jobs, servers, &plans, model, backend, &shared, cfg, &mut cands);
+
+        // rank the improving candidates (enumeration order preserved)
+        let mut ranked: Vec<RankedSwap> = Vec::new();
+        let mut ranked_src: Vec<usize> = Vec::new();
+        for (i, c) in cands.iter().enumerate() {
+            let sa = c.score_a.as_ref().expect("candidate a-side scored");
+            let sb = c.score_b.as_ref().expect("candidate b-side scored");
+            // a candidate whose response tail escapes the shared grid
+            // scores deceptively low — it must not win on a truncated
+            // number (NaN mass from mass-less backends passes)
+            if sa.mass < MIN_CANDIDATE_MASS || sb.mass < MIN_CANDIDATE_MASS {
+                continue;
+            }
+            let cand_key = jobs[plans[c.a].job].arrival_rate * objective.key(sa)
+                + jobs[plans[c.b].job].arrival_rate * objective.key(sb);
+            let base_key = base[c.a] + base[c.b];
+            if cand_key < base_key - IMPROVE_MARGIN {
+                ranked.push(RankedSwap {
+                    a: c.a,
+                    b: c.b,
+                    delta: cand_key - base_key,
+                });
+                ranked_src.push(i);
+            }
+        }
+        let chosen = select_swaps(&ranked, plans.len());
+        if chosen.is_empty() {
+            break;
+        }
+
+        // apply each winning swap and §3-re-balance both touched jobs;
+        // refine_with only ever improves its start score, so the
+        // round's weighted objective decrease is preserved
+        for pick in chosen {
+            let c = &cands[ranked_src[pick]];
+            let sides = [
+                (c.a, c.alloc_a.clone(), c.score_a.clone().expect("scored")),
+                (c.b, c.alloc_b.clone(), c.score_b.clone().expect("scored")),
+            ];
+            for (p, alloc, score) in sides {
+                let (refined, rscore) = refine_with(
+                    jobs[plans[p].job],
+                    alloc.clone(),
+                    servers,
+                    &shared,
+                    model,
+                    objective,
+                    POST_SWAP_REFINE_ROUNDS,
+                    backend,
+                )
+                .unwrap_or_else(|_| (alloc.clone(), score.clone()));
+                // the re-balance must not smuggle in a tail the shared
+                // grid truncates: if refinement dropped captured mass
+                // below the guard, keep the mass-checked candidate the
+                // swap was accepted on (NaN mass still passes)
+                if rscore.mass < MIN_CANDIDATE_MASS {
+                    plans[p].alloc = alloc;
+                    plans[p].score = score;
+                } else {
+                    plans[p].alloc = refined;
+                    plans[p].score = rscore;
                 }
             }
         }
@@ -244,6 +397,176 @@ pub fn multijob_allocate_with(
 
     plans.sort_by_key(|p| p.job);
     Ok(plans)
+}
+
+/// One materialized cross-job swap candidate: plans `a` and `b`
+/// exchange one server each; both regrouped assignments are re-run
+/// through Alg. 2 rate scheduling (global server ids throughout).
+struct SwapCandidate {
+    a: usize,
+    b: usize,
+    alloc_a: Allocation,
+    alloc_b: Allocation,
+    score_a: Option<Score>,
+    score_b: Option<Score>,
+}
+
+/// Enumerate every feasible (job-pair × server-pair) exchange, in
+/// deterministic lexicographic order `(a, b, slot_a, slot_b)`. Pairs
+/// whose combined base objective is non-finite (an unstable incumbent)
+/// and exchanges Alg. 2 rejects are skipped.
+fn enumerate_candidates(
+    jobs: &[&Workflow],
+    servers: &[Server],
+    plans: &[JobPlan],
+    model: ResponseModel,
+    base: &[f64],
+) -> Vec<SwapCandidate> {
+    let mut out = Vec::new();
+    for a in 0..plans.len() {
+        for b in (a + 1)..plans.len() {
+            if !(base[a] + base[b]).is_finite() {
+                continue;
+            }
+            let (ja, jb) = (plans[a].job, plans[b].job);
+            for ia in 0..plans[a].alloc.slot_server.len() {
+                for ib in 0..plans[b].alloc.slot_server.len() {
+                    let mut ga = plans[a].alloc.slot_server.clone();
+                    let mut gb = plans[b].alloc.slot_server.clone();
+                    std::mem::swap(&mut ga[ia], &mut gb[ib]);
+                    let Ok(ca) = schedule_rates(jobs[ja], ga, servers, model) else {
+                        continue;
+                    };
+                    let Ok(cb) = schedule_rates(jobs[jb], gb, servers, model) else {
+                        continue;
+                    };
+                    out.push(SwapCandidate {
+                        a,
+                        b,
+                        alloc_a: ca,
+                        alloc_b: cb,
+                        score_a: None,
+                        score_b: None,
+                    });
+                }
+            }
+        }
+    }
+    out
+}
+
+/// Score every candidate side on the shared grid. Wave mode groups the
+/// sides by job and scores each group through `score_batch` in
+/// `max_wave`-sized chunks; serial mode scores candidates one at a
+/// time in enumeration order. Identical numbers either way for any
+/// backend whose `score_batch` equals mapping `score` (the trait's
+/// default, and the contract all built-ins keep).
+#[allow(clippy::too_many_arguments)]
+fn score_candidates(
+    jobs: &[&Workflow],
+    servers: &[Server],
+    plans: &[JobPlan],
+    model: ResponseModel,
+    backend: &dyn ScoreBackend,
+    grid: &GridSpec,
+    cfg: &MultiJobConfig,
+    cands: &mut [SwapCandidate],
+) {
+    match cfg.engine {
+        SwapEngine::Serial => {
+            for c in cands.iter_mut() {
+                c.score_a =
+                    Some(backend.score(jobs[plans[c.a].job], &c.alloc_a, servers, grid, model));
+                c.score_b =
+                    Some(backend.score(jobs[plans[c.b].job], &c.alloc_b, servers, grid, model));
+            }
+        }
+        SwapEngine::Wave => {
+            let max_wave = cfg.max_wave.max(1);
+            // one pass: bucket every candidate side by the plan it
+            // scores against, keeping enumeration order per bucket
+            let mut buckets: Vec<Vec<(usize, bool)>> = vec![Vec::new(); plans.len()];
+            for (i, c) in cands.iter().enumerate() {
+                buckets[c.a].push((i, true));
+                buckets[c.b].push((i, false));
+            }
+            for (p, bucket) in buckets.into_iter().enumerate() {
+                if bucket.is_empty() {
+                    continue;
+                }
+                let wf = jobs[plans[p].job];
+                let mut scored: Vec<Score> = Vec::with_capacity(bucket.len());
+                for chunk in bucket.chunks(max_wave) {
+                    // score_batch takes owned allocations in one slice,
+                    // so the wave materializes per chunk
+                    let allocs: Vec<Allocation> = chunk
+                        .iter()
+                        .map(|&(i, is_a)| {
+                            if is_a {
+                                cands[i].alloc_a.clone()
+                            } else {
+                                cands[i].alloc_b.clone()
+                            }
+                        })
+                        .collect();
+                    scored.extend(backend.score_batch(wf, &allocs, servers, grid, model));
+                }
+                // fail at the fault site if a custom backend violates
+                // the one-Score-per-allocation contract, instead of
+                // leaving unscored sides to panic later in ranking
+                assert_eq!(
+                    scored.len(),
+                    bucket.len(),
+                    "ScoreBackend::score_batch of backend '{}' must return one Score \
+                     per allocation",
+                    backend.name()
+                );
+                for ((i, is_a), s) in bucket.into_iter().zip(scored) {
+                    if is_a {
+                        cands[i].score_a = Some(s);
+                    } else {
+                        cands[i].score_b = Some(s);
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// One improving cross-job swap as seen by the per-round selection:
+/// the two plan indices it touches and the (negative) change it
+/// promises in the load-weighted cluster objective.
+#[derive(Clone, Copy, Debug)]
+pub struct RankedSwap {
+    /// First plan index the swap touches.
+    pub a: usize,
+    /// Second plan index the swap touches.
+    pub b: usize,
+    /// Weighted-objective change (improving swaps are negative; more
+    /// negative is better).
+    pub delta: f64,
+}
+
+/// Deterministic conflict resolution for one swap round: order the
+/// candidates by `delta` ascending with [`f64::total_cmp`] (ties keep
+/// input order, i.e. the engine's enumeration order), then greedily
+/// keep every candidate whose two plans are still untouched this
+/// round. Returns the indices of the kept candidates in application
+/// order. Exposed so the conflict rule itself is directly testable.
+pub fn select_swaps(ranked: &[RankedSwap], n_plans: usize) -> Vec<usize> {
+    let mut order: Vec<usize> = (0..ranked.len()).collect();
+    order.sort_by(|&x, &y| ranked[x].delta.total_cmp(&ranked[y].delta).then(x.cmp(&y)));
+    let mut touched = vec![false; n_plans];
+    let mut applied = Vec::new();
+    for i in order {
+        let (a, b) = (ranked[i].a, ranked[i].b);
+        if !touched[a] && !touched[b] {
+            touched[a] = true;
+            touched[b] = true;
+            applied.push(i);
+        }
+    }
+    applied
 }
 
 /// Load-weighted cluster objective of a plan set.
@@ -451,6 +774,75 @@ mod tests {
             multijob_allocate(&[&inf_job], &pool(), ResponseModel::Mm1, Objective::Mean),
             Err(SchedError::Infeasible(_))
         ));
+    }
+
+    #[test]
+    fn wave_engine_matches_serial_reference_bit_for_bit() {
+        // the tentpole property: the wave engine's plans are the serial
+        // reference pass's plans, bit for bit
+        let j1 = Workflow::fig6();
+        let j2 = Workflow::tandem(3, 1.0);
+        let jobs = [&j1, &j2];
+        let serial = multijob_allocate_cfg(
+            &jobs,
+            &pool(),
+            ResponseModel::Mm1,
+            Objective::Mean,
+            &AnalyticBackend,
+            None,
+            &MultiJobConfig::serial_reference(),
+        )
+        .unwrap();
+        let wave = multijob_allocate_cfg(
+            &jobs,
+            &pool(),
+            ResponseModel::Mm1,
+            Objective::Mean,
+            &AnalyticBackend,
+            None,
+            &MultiJobConfig::default(),
+        )
+        .unwrap();
+        assert_eq!(serial.len(), wave.len());
+        for (s, w) in serial.iter().zip(wave.iter()) {
+            assert_eq!(s.job, w.job);
+            assert_eq!(s.alloc, w.alloc);
+            assert_eq!(s.grid, w.grid);
+            assert_eq!(s.score.mean, w.score.mean);
+            assert_eq!(s.score.var, w.score.var);
+            assert_eq!(s.score.p99, w.score.p99);
+        }
+    }
+
+    #[test]
+    fn max_wave_chunking_does_not_change_plans() {
+        // chunking a round's candidates into tiny waves only changes
+        // scheduling granularity, never the plans
+        let j1 = Workflow::fig6();
+        let j2 = Workflow::tandem(3, 1.0);
+        let jobs = [&j1, &j2];
+        let reference = multijob_allocate(&jobs, &pool(), ResponseModel::Mm1, Objective::Mean)
+            .unwrap();
+        for max_wave in [1usize, 7, 64] {
+            let cfg = MultiJobConfig {
+                max_wave,
+                ..MultiJobConfig::default()
+            };
+            let got = multijob_allocate_cfg(
+                &jobs,
+                &pool(),
+                ResponseModel::Mm1,
+                Objective::Mean,
+                &AnalyticBackend,
+                None,
+                &cfg,
+            )
+            .unwrap();
+            for (r, g) in reference.iter().zip(got.iter()) {
+                assert_eq!(r.alloc, g.alloc, "max_wave {max_wave}");
+                assert_eq!(r.score.mean, g.score.mean);
+            }
+        }
     }
 
     #[test]

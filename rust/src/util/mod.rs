@@ -1,5 +1,6 @@
 //! Self-contained infrastructure: PRNG, JSON, statistics, property-test
-//! harness, CLI parsing.
+//! harness, CLI parsing, and the library diagnostics channel
+//! ([`warn`]).
 //!
 //! The build image is fully offline with a vendored crate set that carries
 //! only the `xla` dependency chain, so the usual ecosystem crates
@@ -14,3 +15,4 @@ pub mod json;
 pub mod prop;
 pub mod rng;
 pub mod stats;
+pub mod warn;

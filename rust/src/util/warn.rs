@@ -1,0 +1,87 @@
+//! The one channel for library diagnostics.
+//!
+//! A handful of deep library paths emit rare, non-fatal diagnostics
+//! that a caller cannot usefully handle as errors but should be able to
+//! see (and, in production, to silence): the [`GridSpec`] auto-sizers
+//! clamping a degenerate horizon, the runtime scorer falling back from
+//! a failed XLA engine to the native one. All of them flow through
+//! [`warn`], which writes one line to stderr with a `dcflow: ` prefix.
+//!
+//! Silencing: call [`set_quiet`]`(true)` from code, or set the
+//! environment variable `DCFLOW_QUIET` to `1` or `true` before the
+//! first diagnostic is emitted. The env var is read once and cached;
+//! [`set_quiet`] always wins over it.
+//!
+//! ```
+//! use dcflow::util::warn;
+//!
+//! warn::set_quiet(true);
+//! warn::warn("this line is swallowed");
+//! assert!(warn::quiet());
+//! warn::set_quiet(false);
+//! assert!(!warn::quiet());
+//! ```
+//!
+//! [`GridSpec`]: crate::compose::grid::GridSpec
+
+use std::sync::atomic::{AtomicU8, Ordering};
+
+/// Mode not yet decided: first [`quiet`] call consults `DCFLOW_QUIET`.
+const UNSET: u8 = 0;
+const LOUD: u8 = 1;
+const QUIET: u8 = 2;
+
+static MODE: AtomicU8 = AtomicU8::new(UNSET);
+
+/// Silence (`true`) or re-enable (`false`) dcflow library diagnostics
+/// process-wide. Overrides the `DCFLOW_QUIET` environment variable.
+pub fn set_quiet(quiet: bool) {
+    MODE.store(if quiet { QUIET } else { LOUD }, Ordering::Relaxed);
+}
+
+/// Whether diagnostics are currently silenced. On the first call with
+/// no prior [`set_quiet`], the `DCFLOW_QUIET` env var (`1`/`true`,
+/// case-insensitive) decides and is cached.
+pub fn quiet() -> bool {
+    match MODE.load(Ordering::Relaxed) {
+        LOUD => false,
+        QUIET => true,
+        _ => {
+            let env_quiet = std::env::var("DCFLOW_QUIET")
+                .map(|v| v == "1" || v.eq_ignore_ascii_case("true"))
+                .unwrap_or(false);
+            let desired = if env_quiet { QUIET } else { LOUD };
+            // compare_exchange so a concurrent set_quiet() is never
+            // overwritten by the env default (set_quiet always wins)
+            match MODE.compare_exchange(UNSET, desired, Ordering::Relaxed, Ordering::Relaxed) {
+                Ok(_) => env_quiet,
+                Err(current) => current == QUIET,
+            }
+        }
+    }
+}
+
+/// Emit one library diagnostic line (`dcflow: <msg>`) to stderr unless
+/// silenced. Library code must route its diagnostics here instead of
+/// calling `eprintln!` directly, so users get exactly one switch.
+pub fn warn(msg: &str) {
+    if !quiet() {
+        eprintln!("dcflow: {msg}");
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn set_quiet_toggles_and_wins() {
+        // the global is process-wide; restore LOUD so other tests that
+        // exercise warning paths keep their stderr diagnostics
+        set_quiet(true);
+        assert!(quiet());
+        warn("suppressed diagnostic (not visible in test output)");
+        set_quiet(false);
+        assert!(!quiet());
+    }
+}

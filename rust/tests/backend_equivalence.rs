@@ -266,6 +266,117 @@ fn sharding_composes_with_empirical_backend() {
 }
 
 #[test]
+fn swap_wave_is_bit_identical_to_serial_reference() {
+    // the multi-job tentpole property: the wave-batched cross-job swap
+    // engine, through ShardedBackend at every shard count and chunking
+    // policy, reproduces the serial reference pass bit for bit
+    let j1 = Workflow::fig6();
+    let j2 = Workflow::tandem(3, 1.0);
+    let j3 = Workflow::forkjoin(2, 2.0);
+    let jobs = [&j1, &j2, &j3];
+    let pool = Server::pool_exponential(&[
+        16.0, 14.0, 12.0, 10.0, 9.0, 8.0, 7.0, 6.5, 6.0, 5.0, 4.0,
+    ]);
+    let reference = Planner::new(&j1, &pool)
+        .swap_engine(SwapEngine::Serial)
+        .plan_jobs(&jobs)
+        .unwrap();
+    for shards in [1usize, 2, 8] {
+        for chunking in [ChunkPolicy::Even, ChunkPolicy::Fixed(3)] {
+            let backend = ShardedBackend::new(&AnalyticBackend, shards).chunking(chunking);
+            let wave = Planner::new(&j1, &pool)
+                .backend(&backend)
+                .plan_jobs(&jobs)
+                .unwrap();
+            assert_eq!(reference.len(), wave.len());
+            for (r, w) in reference.iter().zip(wave.iter()) {
+                assert_eq!(r.job, w.job, "{shards} shards / {chunking:?}");
+                assert_eq!(r.alloc, w.alloc, "{shards} shards / {chunking:?}");
+                assert_eq!(r.grid, w.grid);
+                assert_eq!(r.score.mean, w.score.mean);
+                assert_eq!(r.score.var, w.score.var);
+                assert_eq!(r.score.p99, w.score.p99);
+                assert_eq!(r.score.mass, w.score.mass);
+            }
+        }
+    }
+    // and the wave cap only changes scheduling granularity, never plans
+    for max_wave in [1usize, 5] {
+        let cramped = Planner::new(&j1, &pool)
+            .max_wave(max_wave)
+            .plan_jobs(&jobs)
+            .unwrap();
+        for (r, c) in reference.iter().zip(cramped.iter()) {
+            assert_eq!(r.alloc, c.alloc, "max_wave {max_wave}");
+            assert_eq!(r.score.mean, c.score.mean);
+        }
+    }
+}
+
+#[test]
+fn swap_wave_matches_serial_on_random_job_sets() {
+    // property form over random 2-job sets: serial reference == wave
+    // engine through a sharded backend, or both infeasible identically
+    prop::run("multijob wave == serial reference", 6, |g| {
+        let a = random_workflow(g);
+        let b = random_workflow(g);
+        let total = a.slots() + b.slots();
+        let rates: Vec<f64> = (0..total + g.usize_in(0, 2))
+            .map(|_| g.f64_in(4.0, 20.0))
+            .collect();
+        let pool = Server::pool_exponential(&rates);
+        let serial = Planner::new(&a, &pool)
+            .swap_engine(SwapEngine::Serial)
+            .plan_jobs(&[&a, &b]);
+        let backend = ShardedBackend::new(&AnalyticBackend, 2);
+        let wave = Planner::new(&a, &pool)
+            .backend(&backend)
+            .plan_jobs(&[&a, &b]);
+        match (serial, wave) {
+            (Ok(s), Ok(w)) => {
+                assert_eq!(s.len(), w.len());
+                for (x, y) in s.iter().zip(w.iter()) {
+                    assert_eq!(x.alloc, y.alloc);
+                    assert_eq!(x.score.mean, y.score.mean);
+                    assert_eq!(x.score.p99, y.score.p99);
+                }
+            }
+            (Err(x), Err(y)) => assert_eq!(x, y),
+            (s, w) => panic!("feasibility mismatch: {s:?} vs {w:?}"),
+        }
+    });
+}
+
+#[test]
+fn conflicting_swaps_resolve_to_the_best_one() {
+    // regression for per-round conflict resolution: of two improving
+    // swaps touching the same job, only the more-improving one applies
+    // (total_cmp ordering, stable tie-break on enumeration order)
+    use dcflow::sched::multijob::{select_swaps, RankedSwap};
+    let ranked = [
+        RankedSwap { a: 0, b: 1, delta: -0.3 },
+        RankedSwap { a: 1, b: 2, delta: -0.8 },
+    ];
+    // (1,2) wins; (0,1) shares job 1 and is deferred to the next round
+    assert_eq!(select_swaps(&ranked, 3), vec![1]);
+    // swaps over disjoint job pairs all apply, best first
+    let disjoint = [
+        RankedSwap { a: 0, b: 1, delta: -0.3 },
+        RankedSwap { a: 2, b: 3, delta: -0.8 },
+        RankedSwap { a: 4, b: 5, delta: -0.5 },
+    ];
+    assert_eq!(select_swaps(&disjoint, 6), vec![1, 2, 0]);
+    // an exact tie keeps enumeration order deterministically
+    let tied = [
+        RankedSwap { a: 0, b: 1, delta: -0.4 },
+        RankedSwap { a: 1, b: 2, delta: -0.4 },
+    ];
+    assert_eq!(select_swaps(&tied, 3), vec![0]);
+    // empty in, empty out
+    assert!(select_swaps(&[], 3).is_empty());
+}
+
+#[test]
 fn nan_pressure_job_is_rejected_not_a_panic() {
     // regression for the multijob partial_cmp().unwrap() panic: a
     // degenerate job must surface as SchedError::Infeasible
