@@ -1,14 +1,17 @@
-//! Reproducible multi-job swap benchmark harness.
+//! Reproducible multi-job swap benchmark harness: a scenario × engine ×
+//! shards matrix.
 //!
-//! Runs the cross-job swap refinement serial reference pass and the
-//! wave engine across shard counts {1, 2, 8} on a fixed job set,
-//! verifies every configuration produces bit-identical plans, and
-//! emits a machine-readable `BENCH_multijob.json` (schema documented
-//! in `docs/BENCHMARKS.md`) so the perf trajectory of the multi-job
-//! engine is recorded, not anecdotal.
+//! For each bench scenario (heterogeneous pool, DAG pipeline jobs,
+//! heavy-tail pool) this runs the cross-job swap refinement serial
+//! reference pass and the wave engine across shard counts {1, 2, 8},
+//! verifies every configuration produces bit-identical plans to the
+//! scenario's serial reference, and emits a machine-readable
+//! `BENCH_multijob.json` (schema documented in `docs/BENCHMARKS.md`)
+//! so the perf trajectory of the multi-job engine is recorded across
+//! workload shapes, not anecdotal.
 //!
 //! ```text
-//! cargo run --release --example multijob_bench            # full grid
+//! cargo run --release --example multijob_bench            # full matrix
 //! cargo run --release --example multijob_bench -- --smoke # CI smoke
 //! cargo run --release --example multijob_bench -- --out target/BENCH_multijob.json
 //! ```
@@ -28,15 +31,81 @@ fn obj(entries: Vec<(&str, Json)>) -> Json {
     Json::Obj(m)
 }
 
+/// One row of the bench matrix's scenario axis: a job set + a pool.
+struct BenchScenario {
+    name: &'static str,
+    jobs: Vec<Workflow>,
+    servers: Vec<Server>,
+}
+
+fn scenarios(smoke: bool) -> Vec<BenchScenario> {
+    // heterogeneous pool: the paper's Fig. 6 job plus light tandem /
+    // fork-join companions (the original multijob bench workload)
+    let hetero = if smoke {
+        BenchScenario {
+            name: "hetero_pool",
+            jobs: vec![Workflow::fig6(), Workflow::tandem(3, 1.0)],
+            servers: Server::pool_exponential(&[14.0, 12.0, 10.0, 9.0, 8.0, 7.0, 6.0, 5.0, 4.0]),
+        }
+    } else {
+        BenchScenario {
+            name: "hetero_pool",
+            jobs: vec![
+                Workflow::fig6(),
+                Workflow::tandem(3, 1.0),
+                Workflow::forkjoin(2, 2.0),
+                Workflow::tandem(2, 3.0),
+            ],
+            servers: Server::pool_exponential(&[
+                18.0, 16.0, 14.0, 12.0, 11.0, 10.0, 9.0, 8.0, 7.5, 7.0, 6.0, 5.0, 4.5, 4.0,
+            ]),
+        }
+    };
+
+    // DAG pipeline: the zoo's TTSP-reduced stage graph (8 slots) plus a
+    // small tandem rider, on the zoo's 10-server pool + 2 extras
+    let dag = BenchScenario {
+        name: "dag_pipeline",
+        jobs: vec![
+            ScenarioSpec::by_name("dag_pipeline")
+                .expect("zoo scenario exists")
+                .workflow(),
+            Workflow::tandem(2, 0.6),
+        ],
+        servers: Server::pool_exponential(&[
+            14.0, 12.0, 10.0, 9.0, 8.0, 7.0, 6.0, 5.0, 4.0, 3.0, 2.5, 2.0,
+        ]),
+    };
+
+    // heavy-tail pool: Table-1 delayed-tail laws at uncomfortable
+    // parameters (the regime where FFT-grid scoring earns its keep)
+    let heavy = BenchScenario {
+        name: "heavy_tail",
+        jobs: vec![Workflow::chain(2, 2, 1.2), Workflow::tandem(2, 0.8)],
+        servers: vec![
+            Server::new(0, ServiceDist::exponential(3.0)),
+            Server::new(1, ServiceDist::exponential(2.5)),
+            Server::new(2, ServiceDist::straggler(8.0, 0.6, 0.2, 0.0)),
+            Server::new(3, ServiceDist::exponential(2.0)),
+            Server::new(4, ServiceDist::delayed_pareto(3.0, 0.02)),
+            Server::new(5, ServiceDist::exponential(1.8)),
+            Server::new(6, ServiceDist::exponential(1.5)),
+            Server::new(7, ServiceDist::delayed_weibull(1.6, 0.7, 0.05)),
+        ],
+    };
+
+    vec![hetero, dag, heavy]
+}
+
 fn main() {
     let cli = Cli::new(
         "multijob_bench",
-        "serial vs wave-batched multi-job swap refinement, JSON output",
+        "scenario x engine x shards multi-job swap matrix, JSON output",
     )
     .opt("out", "BENCH_multijob.json", "output path for the JSON report")
     .opt("iters", "3", "measured iterations per configuration")
     .opt("warmup", "1", "unmeasured warmup iterations")
-    .flag("smoke", "tiny job set + pinned coarse grid (CI smoke run)");
+    .flag("smoke", "smaller hetero job set + pinned coarse grid (CI smoke run)");
     let argv: Vec<String> = std::env::args().skip(1).collect();
     let args = match cli.parse(&argv) {
         Ok(a) => a,
@@ -64,22 +133,6 @@ fn main() {
         args.get_as("warmup").expect("--warmup")
     };
 
-    // fixed, versioned workload: the paper's Fig. 6 job plus light
-    // tandem/fork-join companions over a heterogeneous pool
-    let j1 = Workflow::fig6();
-    let j2 = Workflow::tandem(3, 1.0);
-    let j3 = Workflow::forkjoin(2, 2.0);
-    let j4 = Workflow::tandem(2, 3.0);
-    let full_jobs = [&j1, &j2, &j3, &j4];
-    let smoke_jobs = [&j1, &j2];
-    let jobs: &[&Workflow] = if smoke { &smoke_jobs } else { &full_jobs };
-    let servers = if smoke {
-        Server::pool_exponential(&[14.0, 12.0, 10.0, 9.0, 8.0, 7.0, 6.0, 5.0, 4.0])
-    } else {
-        Server::pool_exponential(&[
-            18.0, 16.0, 14.0, 12.0, 11.0, 10.0, 9.0, 8.0, 7.5, 7.0, 6.0, 5.0, 4.5, 4.0,
-        ])
-    };
     // the smoke run pins a coarse grid so CI measures the engine, not
     // the FFTs; the full run keeps the auto-sized shared grid
     let pinned = if smoke { Some(GridSpec::new(0.05, 256)) } else { None };
@@ -87,71 +140,85 @@ fn main() {
         .map(|n| n.get())
         .unwrap_or(1);
 
+    let matrix = scenarios(smoke);
     println!(
-        "multijob_bench: {} jobs, {} servers, {cpus} cpus, iters {iters}, warmup {warmup}{}",
-        jobs.len(),
-        servers.len(),
+        "multijob_bench: {} scenarios, {cpus} cpus, iters {iters}, warmup {warmup}{}",
+        matrix.len(),
         if smoke { " (smoke)" } else { "" }
     );
 
-    // serial reference pass
-    let mut serial_planner = Planner::new(&j1, &servers)
-        .objective(Objective::Mean)
-        .swap_engine(SwapEngine::Serial);
-    if let Some(g) = pinned {
-        serial_planner = serial_planner.grid(g);
-    }
-    let reference = serial_planner.plan_jobs(jobs).expect("job set is feasible");
-    let t_serial = bench(warmup, iters, || serial_planner.plan_jobs(jobs).unwrap());
-    let ref_objective = cluster_objective(&reference, jobs, Objective::Mean);
-    println!(
-        "  serial      : {:>10.6} s  (objective {:.4})",
-        t_serial.mean_s, ref_objective
-    );
-
-    let mut results: Vec<Json> = vec![obj(vec![
-        ("engine", Json::Str("serial".into())),
-        ("shards", Json::Num(1.0)),
-        ("mean_s", Json::Num(t_serial.mean_s)),
-        ("std_s", Json::Num(t_serial.std_s)),
-        ("speedup_vs_serial", Json::Num(1.0)),
-        ("cluster_objective", Json::Num(ref_objective)),
-    ])];
-
-    // wave engine × shard counts, each checked bit-identical first
+    let mut results: Vec<Json> = Vec::new();
+    let mut scenario_cfgs: Vec<Json> = Vec::new();
     let mut identical = true;
-    for shards in [1usize, 2, 8] {
-        let backend = ShardedBackend::new(&AnalyticBackend, shards);
-        let mut planner = Planner::new(&j1, &servers)
+
+    for sc in &matrix {
+        let jobs: Vec<&Workflow> = sc.jobs.iter().collect();
+        scenario_cfgs.push(obj(vec![
+            ("name", Json::Str(sc.name.into())),
+            ("jobs", Json::Num(jobs.len() as f64)),
+            ("servers", Json::Num(sc.servers.len() as f64)),
+        ]));
+
+        // serial reference pass for this scenario
+        let mut serial_planner = Planner::new(jobs[0], &sc.servers)
             .objective(Objective::Mean)
-            .backend(&backend);
+            .swap_engine(SwapEngine::Serial);
         if let Some(g) = pinned {
-            planner = planner.grid(g);
+            serial_planner = serial_planner.grid(g);
         }
-        let got = planner.plan_jobs(jobs).expect("job set is feasible");
-        let same = got.len() == reference.len()
-            && got.iter().zip(reference.iter()).all(|(g, r)| {
-                g.alloc == r.alloc
-                    && g.score.mean == r.score.mean
-                    && g.score.p99 == r.score.p99
-                    && g.grid == r.grid
-            });
-        identical &= same;
-        let t = bench(warmup, iters, || planner.plan_jobs(jobs).unwrap());
-        let objective = cluster_objective(&got, jobs, Objective::Mean);
+        let reference = serial_planner.plan_jobs(&jobs).expect("job set is feasible");
+        let t_serial = bench(warmup, iters, || serial_planner.plan_jobs(&jobs).unwrap());
+        let ref_objective = cluster_objective(&reference, &jobs, Objective::Mean);
         println!(
-            "  wave x{shards:<2}    : {:>10.6} s  (speedup {:.2}x, identical: {same})",
-            t.mean_s,
-            t_serial.mean_s / t.mean_s
+            "  {:<12} serial   : {:>10.6} s  (objective {:.4})",
+            sc.name, t_serial.mean_s, ref_objective
         );
         results.push(obj(vec![
-            ("engine", Json::Str("wave".into())),
-            ("shards", Json::Num(shards as f64)),
-            ("mean_s", Json::Num(t.mean_s)),
-            ("std_s", Json::Num(t.std_s)),
-            ("speedup_vs_serial", Json::Num(t_serial.mean_s / t.mean_s)),
-            ("cluster_objective", Json::Num(objective)),
+            ("scenario", Json::Str(sc.name.into())),
+            ("engine", Json::Str("serial".into())),
+            ("shards", Json::Num(1.0)),
+            ("mean_s", Json::Num(t_serial.mean_s)),
+            ("std_s", Json::Num(t_serial.std_s)),
+            ("speedup_vs_serial", Json::Num(1.0)),
+            ("cluster_objective", Json::Num(ref_objective)),
         ]));
+
+        // wave engine × shard counts, each checked bit-identical first
+        for shards in [1usize, 2, 8] {
+            let backend = ShardedBackend::new(&AnalyticBackend, shards);
+            let mut planner = Planner::new(jobs[0], &sc.servers)
+                .objective(Objective::Mean)
+                .backend(&backend);
+            if let Some(g) = pinned {
+                planner = planner.grid(g);
+            }
+            let got = planner.plan_jobs(&jobs).expect("job set is feasible");
+            let same = got.len() == reference.len()
+                && got.iter().zip(reference.iter()).all(|(g, r)| {
+                    g.alloc == r.alloc
+                        && g.score.mean == r.score.mean
+                        && g.score.p99 == r.score.p99
+                        && g.grid == r.grid
+                });
+            identical &= same;
+            let t = bench(warmup, iters, || planner.plan_jobs(&jobs).unwrap());
+            let objective = cluster_objective(&got, &jobs, Objective::Mean);
+            println!(
+                "  {:<12} wave x{shards:<2} : {:>10.6} s  (speedup {:.2}x, identical: {same})",
+                sc.name,
+                t.mean_s,
+                t_serial.mean_s / t.mean_s
+            );
+            results.push(obj(vec![
+                ("scenario", Json::Str(sc.name.into())),
+                ("engine", Json::Str("wave".into())),
+                ("shards", Json::Num(shards as f64)),
+                ("mean_s", Json::Num(t.mean_s)),
+                ("std_s", Json::Num(t.std_s)),
+                ("speedup_vs_serial", Json::Num(t_serial.mean_s / t.mean_s)),
+                ("cluster_objective", Json::Num(objective)),
+            ]));
+        }
     }
 
     let grid_json = match pinned {
@@ -159,13 +226,12 @@ fn main() {
         None => Json::Str("auto".into()),
     };
     let report = obj(vec![
-        ("bench", Json::Str("multijob_swap".into())),
+        ("bench", Json::Str("multijob_matrix".into())),
         ("crate_version", Json::Str(env!("CARGO_PKG_VERSION").into())),
         (
             "config",
             obj(vec![
-                ("jobs", Json::Num(jobs.len() as f64)),
-                ("servers", Json::Num(servers.len() as f64)),
+                ("scenarios", Json::Arr(scenario_cfgs)),
                 ("cpus", Json::Num(cpus as f64)),
                 ("swap_rounds", Json::Num(MultiJobConfig::default().swap_rounds as f64)),
                 ("max_wave", Json::Num(MultiJobConfig::default().max_wave as f64)),
@@ -182,7 +248,7 @@ fn main() {
     std::fs::write(&out_path, report.to_string() + "\n").expect("write BENCH json");
     println!("wrote {out_path} (identical: {identical})");
     if !identical {
-        eprintln!("multijob_bench: wave plans diverged from the serial reference");
+        eprintln!("multijob_bench: wave plans diverged from a serial reference");
         std::process::exit(1);
     }
 }

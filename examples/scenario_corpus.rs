@@ -1,0 +1,87 @@
+//! Golden-corpus maintenance CLI for the scenario subsystem.
+//!
+//! Default mode is the same gate CI runs: every workload-zoo scenario is
+//! checked against its committed golden files under `rust/tests/golden/`
+//! (replay twice, bit-compare, byte-compare the summary), blessing any
+//! scenario whose files are missing. `--regen` re-captures and rewrites
+//! the corpus unconditionally — use it after an *intentional* behavior
+//! change, then review the diff.
+//!
+//! ```text
+//! cargo run --release --example scenario_corpus                 # check / bless
+//! cargo run --release --example scenario_corpus -- --regen      # refresh all
+//! cargo run --release --example scenario_corpus -- --regen --scenario worker_churn
+//! ```
+//!
+//! Exit status: 0 all scenarios OK (matched, blessed, or regenerated),
+//! 1 on any divergence or capture error, 2 on CLI misuse.
+
+use dcflow::scenario::{check_or_bless, regenerate, GoldenStatus, ScenarioSpec};
+use dcflow::util::cli::Cli;
+
+fn main() {
+    let cli = Cli::new(
+        "scenario_corpus",
+        "check, bless or regenerate the golden scenario corpus",
+    )
+    .opt("scenario", "", "restrict to one zoo scenario by name")
+    .flag("regen", "re-capture and overwrite the corpus (intentional changes only)");
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let args = match cli.parse(&argv) {
+        Ok(a) => a,
+        Err(msg) => {
+            eprintln!("{msg}");
+            std::process::exit(2);
+        }
+    };
+    let regen = args.has("regen");
+    let only = args.get("scenario").to_string();
+
+    let zoo = ScenarioSpec::zoo();
+    if !only.is_empty() && !zoo.iter().any(|s| s.name == only) {
+        eprintln!(
+            "unknown scenario '{only}'; zoo: {}",
+            zoo.iter().map(|s| s.name.as_str()).collect::<Vec<_>>().join(", ")
+        );
+        std::process::exit(2);
+    }
+
+    let mut failed = false;
+    for spec in &zoo {
+        if !only.is_empty() && spec.name != only {
+            continue;
+        }
+        let status = if regen {
+            regenerate(spec)
+        } else {
+            check_or_bless(spec)
+        };
+        match status {
+            Ok(GoldenStatus::Match) => {
+                println!("{:<24} OK (matches committed golden)", spec.name);
+            }
+            Ok(GoldenStatus::Blessed) => {
+                println!(
+                    "{:<24} BLESSED{} — commit rust/tests/golden/",
+                    spec.name,
+                    if regen { " (regenerated)" } else { "" }
+                );
+            }
+            Ok(GoldenStatus::Divergence(msg)) => {
+                failed = true;
+                println!("{:<24} DIVERGED", spec.name);
+                eprintln!("  {msg}");
+            }
+            Err(e) => {
+                failed = true;
+                println!("{:<24} ERROR", spec.name);
+                eprintln!("  {e}");
+            }
+        }
+    }
+
+    if failed {
+        eprintln!("scenario_corpus: corpus check failed (see above)");
+        std::process::exit(1);
+    }
+}

@@ -9,6 +9,7 @@
 use crate::coordinator::leader::Coordinator;
 use crate::coordinator::worker::{WorkerHandle, WorkerSpec};
 use crate::monitor::MonitorRegistry;
+use crate::scenario::record::ChurnKind;
 use crate::sched::server::Server;
 
 /// Membership operations (implemented on [`Coordinator`]).
@@ -29,6 +30,7 @@ impl Coordinator {
             self.workers_len()
         );
         self.push_worker(WorkerHandle::spawn(spec, self.seed()), prior);
+        self.record_churn(ChurnKind::Join, id);
         id
     }
 
@@ -37,7 +39,11 @@ impl Coordinator {
     /// server requires draining jobs first, which the coordinator
     /// rejects by construction. Returns tasks served by that worker.
     pub fn remove_last_worker(&mut self) -> Option<u64> {
-        self.pop_worker().map(|w| w.shutdown())
+        let served = self.pop_worker().map(|w| w.shutdown());
+        if served.is_some() {
+            self.record_churn(ChurnKind::Leave, self.workers_len());
+        }
+        served
     }
 
     /// Rebuild the monitor registry after membership changes (keeps

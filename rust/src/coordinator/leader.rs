@@ -20,6 +20,7 @@ use crate::coordinator::worker::{WorkerHandle, WorkerSpec};
 use crate::flow::Dcc;
 use crate::monitor::MonitorRegistry;
 use crate::plan::{BaselinePolicy, OptimalPolicy, Planner, ProposedPolicy};
+use crate::scenario::record::{ChurnKind, ExecTrace, Recorder};
 use crate::sched::server::Server;
 use crate::sched::{Allocation, SchedError};
 use crate::sim::trace::Trace;
@@ -43,6 +44,8 @@ pub struct Coordinator {
     monitors: MonitorRegistry,
     cfg: CoordinatorConfig,
     next_job_id: u64,
+    /// Trace capture (None = recording off). See `scenario::record`.
+    recorder: Option<Recorder>,
 }
 
 impl Coordinator {
@@ -65,6 +68,38 @@ impl Coordinator {
             monitors: MonitorRegistry::new(n, cfg.monitor_window, cfg.min_fit_samples),
             cfg,
             next_job_id: 1,
+            recorder: None,
+        }
+    }
+
+    /// Start capturing an execution trace ([`ExecTrace`]) for the runs
+    /// that follow. `scenario` names the capture in the trace header.
+    /// Replaces any capture in progress.
+    pub fn start_recording(&mut self, scenario: &str) {
+        self.recorder = Some(Recorder::new(scenario, self.cfg.seed, self.workers.len()));
+    }
+
+    /// Stop recording and return the captured trace (None if recording
+    /// was never started).
+    pub fn take_trace(&mut self) -> Option<ExecTrace> {
+        self.recorder.take().map(Recorder::finish)
+    }
+
+    pub(crate) fn record_arrival(&mut self, seq: u64, at: f64) {
+        if let Some(r) = self.recorder.as_mut() {
+            r.arrival(seq, at);
+        }
+    }
+
+    pub(crate) fn record_reopt(&mut self, completed: u64, reason: &str) {
+        if let Some(r) = self.recorder.as_mut() {
+            r.reopt(completed, reason);
+        }
+    }
+
+    pub(crate) fn record_churn(&mut self, op: ChurnKind, server: usize) {
+        if let Some(r) = self.recorder.as_mut() {
+            r.churn(op, server);
         }
     }
 
@@ -98,7 +133,7 @@ impl Coordinator {
         &self.monitors
     }
 
-    fn allocate(&self, job: &Job) -> Result<Allocation, SchedError> {
+    pub(crate) fn allocate(&self, job: &Job) -> Result<Allocation, SchedError> {
         // the dispatch loop only needs the assignment, so use the
         // planner's unscored path. NOTE: the optimal policy now searches
         // on the planner's default seed-derived *response* grid rather
@@ -129,6 +164,7 @@ impl Coordinator {
                 seq: seq as u64,
                 arrival,
             };
+            self.record_arrival(seq as u64, arrival);
             let finish =
                 self.dispatch(job.workflow.root(), &alloc, arrival, 1.0, &mut next_free, &mut metrics);
             let completion = Completion { task, finish };
@@ -143,14 +179,9 @@ impl Coordinator {
                         if new_alloc != alloc {
                             alloc = new_alloc;
                             metrics.record_reopt();
-                            swaps.push((
-                                metrics.completed,
-                                if drifted {
-                                    "drift".to_string()
-                                } else {
-                                    "periodic".to_string()
-                                },
-                            ));
+                            let reason = if drifted { "drift" } else { "periodic" };
+                            self.record_reopt(metrics.completed, reason);
+                            swaps.push((metrics.completed, reason.to_string()));
                         }
                     }
                 }
@@ -178,7 +209,7 @@ impl Coordinator {
     /// the join. (The steady-state DES in `sim::network` instead models
     /// rate-split stations, matching the Eq. 1–3 analytics; the two
     /// semantics are cross-compared in EXPERIMENTS.md.)
-    fn dispatch(
+    pub(crate) fn dispatch(
         &mut self,
         node: &Dcc,
         alloc: &Allocation,
@@ -190,7 +221,12 @@ impl Coordinator {
         match node {
             Dcc::Queue { slot } => {
                 let sid = alloc.server_for(*slot);
-                let service = self.workers[sid].draw() * scale;
+                let drawn = self.workers[sid].draw();
+                if let Some(r) = self.recorder.as_mut() {
+                    // capture the *raw* draw: replay re-applies scaling
+                    r.service(sid, drawn);
+                }
+                let service = drawn * scale;
                 let begin = start.max(next_free[sid]);
                 let finish = begin + service;
                 next_free[sid] = finish;
@@ -280,6 +316,18 @@ impl Coordinator {
 
     pub(crate) fn monitors_mut(&mut self) -> &mut crate::monitor::MonitorRegistry {
         &mut self.monitors
+    }
+
+    pub(crate) fn config(&self) -> CoordinatorConfig {
+        self.cfg
+    }
+
+    /// Refresh the believed pool from the monitors' fitted laws;
+    /// returns the number of servers whose belief changed. (Exposed for
+    /// the `scenario::Replay` driver, which re-implements the
+    /// dispatch/re-optimization loop outside this module.)
+    pub(crate) fn refresh_pool_view(&mut self) -> usize {
+        self.monitors.refresh_pool(&mut self.pool_view)
     }
 
     /// Run several jobs concurrently over one shared cluster: the pool is

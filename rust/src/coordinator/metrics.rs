@@ -37,6 +37,16 @@ impl Metrics {
         self.makespan = self.makespan.max(finish);
     }
 
+    /// Grow the per-server vectors to cover at least `n` servers
+    /// (mid-run membership churn adds servers; shrinking is never done
+    /// so decommissioned servers keep their accumulated counters).
+    pub fn ensure_servers(&mut self, n: usize) {
+        if self.busy_time.len() < n {
+            self.busy_time.resize(n, 0.0);
+            self.tasks_per_server.resize(n, 0);
+        }
+    }
+
     /// Record one server-side service interval.
     pub fn record_service(&mut self, server_id: usize, service_time: f64) {
         self.busy_time[server_id] += service_time;
@@ -119,6 +129,19 @@ mod tests {
         assert!((m.utilization(1) - 3.0 / 12.0).abs() < 1e-12);
         assert!((m.throughput() - 2.0 / 12.0).abs() < 1e-12);
         assert!(m.summary().contains("tasks=2"));
+    }
+
+    #[test]
+    fn ensure_servers_grows_but_never_shrinks() {
+        let mut m = Metrics::new(2);
+        m.record_service(1, 1.5);
+        m.ensure_servers(4);
+        assert_eq!(m.busy_time.len(), 4);
+        assert_eq!(m.tasks_per_server, vec![0, 1, 0, 0]);
+        m.record_service(3, 0.5);
+        m.ensure_servers(1); // no-op
+        assert_eq!(m.busy_time.len(), 4);
+        assert!((m.busy_time[3] - 0.5).abs() < 1e-12);
     }
 
     #[test]

@@ -15,6 +15,7 @@
 use crate::dist::ServiceDist;
 use crate::util::rng::Rng;
 use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::Arc;
 use std::thread::JoinHandle;
 
 /// Worker behavior specification.
@@ -28,6 +29,12 @@ pub struct WorkerSpec {
     pub drift_after: Option<u64>,
     /// Law after the drift point.
     pub drift_to: Option<ServiceDist>,
+    /// Optional replay script: the worker answers draw *k* with
+    /// `script[k]` instead of sampling (`scenario::Replay` feeds
+    /// captured service times back verbatim). Draws past the end of the
+    /// script fall back to sampling `dist` — deterministic, since the
+    /// scripted draws never consumed RNG state.
+    pub script: Option<Arc<Vec<f64>>>,
 }
 
 impl WorkerSpec {
@@ -38,6 +45,7 @@ impl WorkerSpec {
             dist,
             drift_after: None,
             drift_to: None,
+            script: None,
         }
     }
 
@@ -48,6 +56,20 @@ impl WorkerSpec {
             dist,
             drift_after: Some(after),
             drift_to: Some(drift_to),
+            script: None,
+        }
+    }
+
+    /// Worker that replays `script` verbatim (draw *k* returns
+    /// `script[k]`), falling back to sampling `fallback` when the script
+    /// is exhausted. Used by `scenario::Replay`.
+    pub fn scripted(server_id: usize, fallback: ServiceDist, script: Vec<f64>) -> WorkerSpec {
+        WorkerSpec {
+            server_id,
+            dist: fallback,
+            drift_after: None,
+            drift_to: None,
+            script: Some(Arc::new(script)),
         }
     }
 }
@@ -117,18 +139,29 @@ fn worker_main(spec: WorkerSpec, seed: u64, rx: Receiver<Request>) -> u64 {
     loop {
         match rx.recv() {
             Ok(Request::Draw(reply)) => {
-                let drifted = spec
-                    .drift_after
-                    .map(|after| served >= after)
-                    .unwrap_or(false);
-                let dist = if drifted {
-                    spec.drift_to.as_ref().unwrap_or(&spec.dist)
-                } else {
-                    &spec.dist
+                let scripted = spec
+                    .script
+                    .as_ref()
+                    .and_then(|s| s.get(served as usize))
+                    .copied();
+                let sample = match scripted {
+                    Some(v) => v,
+                    None => {
+                        let drifted = spec
+                            .drift_after
+                            .map(|after| served >= after)
+                            .unwrap_or(false);
+                        let dist = if drifted {
+                            spec.drift_to.as_ref().unwrap_or(&spec.dist)
+                        } else {
+                            &spec.dist
+                        };
+                        dist.sample(&mut rng)
+                    }
                 };
                 served += 1;
                 // ignore send failure: leader may have moved on
-                let _ = reply.send(dist.sample(&mut rng));
+                let _ = reply.send(sample);
             }
             Ok(Request::Shutdown) | Err(_) => return served,
         }
@@ -174,6 +207,26 @@ mod tests {
             v
         };
         assert_eq!(mk(), mk());
+    }
+
+    #[test]
+    fn scripted_worker_replays_then_falls_back() {
+        let script = vec![0.5, 0.25, 0.125];
+        let w = WorkerHandle::spawn(
+            WorkerSpec::scripted(0, ServiceDist::exponential(2.0), script.clone()),
+            77,
+        );
+        let replayed: Vec<f64> = (0..3).map(|_| w.draw()).collect();
+        assert_eq!(replayed, script);
+        // past the script: sampled from the fallback law, bitwise equal
+        // to a fresh stable worker on the same seed (scripted draws did
+        // not consume RNG state)
+        let tail: Vec<f64> = (0..5).map(|_| w.draw()).collect();
+        w.shutdown();
+        let fresh = WorkerHandle::spawn(WorkerSpec::stable(0, ServiceDist::exponential(2.0)), 77);
+        let expect: Vec<f64> = (0..5).map(|_| fresh.draw()).collect();
+        fresh.shutdown();
+        assert_eq!(tail, expect);
     }
 
     #[test]

@@ -33,7 +33,12 @@
 //!   [`runtime::scorer::RuntimeBackend`] scoring backend with a native
 //!   fallback;
 //! * [`coordinator`] — the L3 system: leader/worker runtime implementing
-//!   Alg. 3 (monitor → re-optimize → dispatch) over simulated clusters.
+//!   Alg. 3 (monitor → re-optimize → dispatch) over simulated clusters;
+//! * [`scenario`] — trace capture/replay and the workload zoo: a
+//!   coordinator run records a versioned JSONL [`scenario::ExecTrace`]
+//!   that [`scenario::Replay`] feeds back through the live stack
+//!   bit-identically, with a committed golden-result corpus per
+//!   [`scenario::ScenarioSpec`] workload class.
 //!
 //! A module-by-module map with the Planner/Policy/ScoreBackend seams and
 //! a paper cross-reference lives in `docs/ARCHITECTURE.md`; migration
@@ -90,6 +95,7 @@ pub mod flow;
 pub mod monitor;
 pub mod plan;
 pub mod runtime;
+pub mod scenario;
 pub mod sched;
 pub mod sim;
 pub mod util;
@@ -115,6 +121,9 @@ pub mod prelude {
         Planner, ProposedPolicy, SdccPolicy,
     };
     pub use crate::runtime::scorer::RuntimeBackend;
+    pub use crate::scenario::{
+        ExecTrace, GoldenStatus, Replay, ScenarioClass, ScenarioSpec, TRACE_FORMAT_VERSION,
+    };
     pub use crate::sched::capacity::{
         max_load_scale, max_throughput, max_throughput_under_sla, required_speedup, Sla,
     };

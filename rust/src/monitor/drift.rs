@@ -28,8 +28,10 @@ pub fn detect_drift(samples: &[f64], min_half: usize) -> Option<DriftReport> {
     let mid = n / 2;
     let mut a = samples[..mid].to_vec();
     let mut b = samples[mid..].to_vec();
-    a.sort_by(|x, y| x.partial_cmp(y).unwrap());
-    b.sort_by(|x, y| x.partial_cmp(y).unwrap());
+    // total_cmp, not partial_cmp().unwrap(): a NaN observation (e.g. a
+    // corrupted measurement) must not panic the monitoring loop
+    a.sort_by(f64::total_cmp);
+    b.sort_by(f64::total_cmp);
     let ks = ks_statistic(&a, &b);
     let half = mid.min(n - mid) as f64;
     let threshold = 1.63 * (2.0 / half).sqrt();
@@ -81,5 +83,52 @@ mod tests {
     fn needs_enough_samples() {
         assert!(detect_drift(&[1.0; 50], 100).is_none());
         assert!(detect_drift(&[1.0; 199], 100).is_none());
+    }
+
+    #[test]
+    fn nan_samples_do_not_panic() {
+        // regression: partial_cmp().unwrap() panicked here before the
+        // total_cmp hardening
+        let mut samples = vec![1.0; 400];
+        samples[7] = f64::NAN;
+        samples[350] = f64::NAN;
+        let r = detect_drift(&samples, 100);
+        assert!(r.is_some()); // verdict value is unspecified, survival is not
+    }
+
+    #[test]
+    fn constant_samples_have_zero_ks() {
+        let r = detect_drift(&[0.5; 1000], 100).unwrap();
+        assert_eq!(r.ks, 0.0);
+        assert!(!r.drifted);
+    }
+
+    #[test]
+    fn window_exactly_twice_min_half_is_enough() {
+        let samples = vec![1.0; 200];
+        let r = detect_drift(&samples, 100).unwrap();
+        // halves of 100 each, threshold from the smaller half
+        assert!((r.threshold - 1.63 * (2.0_f64 / 100.0).sqrt()).abs() < 1e-12);
+        assert!(!r.drifted);
+    }
+
+    #[test]
+    fn drift_then_recover_verdict_transitions() {
+        // law A → law B → law B: sliding the window across the change
+        // point must go no-drift → drift → no-drift
+        let a = ServiceDist::exponential(10.0);
+        let b = ServiceDist::exponential(2.0);
+        let mut rng = Rng::new(27);
+        let phase_a: Vec<f64> = (0..2000).map(|_| a.sample(&mut rng)).collect();
+        let phase_b: Vec<f64> = (0..4000).map(|_| b.sample(&mut rng)).collect();
+
+        // window fully inside phase A: stable
+        assert!(!detect_drift(&phase_a, 100).unwrap().drifted);
+        // window straddling the change point: drifted
+        let mut straddle = phase_a[1000..].to_vec();
+        straddle.extend_from_slice(&phase_b[..1000]);
+        assert!(detect_drift(&straddle, 100).unwrap().drifted);
+        // window fully inside phase B: the new law is the new normal
+        assert!(!detect_drift(&phase_b[2000..], 100).unwrap().drifted);
     }
 }

@@ -1,0 +1,277 @@
+//! Golden-result corpus: committed traces + result summaries per zoo
+//! scenario, with a bless-on-absence workflow.
+//!
+//! The corpus lives in `rust/tests/golden/` as two files per scenario:
+//! `<name>.trace.jsonl` (the captured [`ExecTrace`]) and
+//! `<name>.golden.json` (the canonical result summary produced by
+//! [`golden_summary`]). [`check_or_bless`] is the single entry point
+//! used by both the test suite and the `scenario_corpus` example:
+//!
+//! * files present → replay the committed trace twice, require
+//!   bit-identical reports and re-captured traces (the determinism
+//!   contract), and require the summary to match the committed golden
+//!   byte-for-byte → [`GoldenStatus::Match`] or
+//!   [`GoldenStatus::Divergence`];
+//! * files absent → capture the scenario live, verify the same
+//!   determinism contract plus capture≡replay, write both files →
+//!   [`GoldenStatus::Blessed`]. Committing the written files freezes
+//!   the behavior; any later semantic change shows up as a divergence
+//!   in CI with a readable JSON diff.
+
+use crate::coordinator::RunReport;
+use crate::scenario::record::{ExecTrace, TRACE_FORMAT_VERSION};
+use crate::scenario::zoo::{ScenarioClass, ScenarioSpec};
+use crate::util::json::Json;
+use std::collections::BTreeMap;
+use std::path::PathBuf;
+
+/// Directory holding the committed corpus (`rust/tests/golden/`,
+/// resolved from the crate manifest so tests and examples agree
+/// regardless of working directory).
+pub fn corpus_dir() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR"))
+        .join("tests")
+        .join("golden")
+}
+
+fn obj(entries: Vec<(&str, Json)>) -> Json {
+    let mut m = BTreeMap::new();
+    for (k, v) in entries {
+        m.insert(k.to_string(), v);
+    }
+    Json::Obj(m)
+}
+
+fn num_arr(xs: impl IntoIterator<Item = f64>) -> Json {
+    Json::Arr(xs.into_iter().map(Json::Num).collect())
+}
+
+/// Canonical, deterministic result summary for a scenario run. Every
+/// float passes through the crate's shortest-round-trip JSON writer, so
+/// equal summaries are byte-equal strings and bit-equal numbers.
+pub fn golden_summary(spec: &ScenarioSpec, report: &RunReport, trace: &ExecTrace) -> Json {
+    let m = &report.metrics;
+    let mut fields = vec![
+        ("class", Json::Str(spec.class.label().into())),
+        ("completed", Json::Num(m.completed as f64)),
+        (
+            "events",
+            obj(vec![
+                ("arrivals", Json::Num(trace.arrivals() as f64)),
+                ("churns", Json::Num(trace.churns() as f64)),
+                ("reopts", Json::Num(trace.reopts() as f64)),
+                ("services", Json::Num(trace.services() as f64)),
+            ]),
+        ),
+        (
+            "final_allocation",
+            obj(vec![
+                (
+                    "servers",
+                    num_arr(
+                        report
+                            .final_allocation
+                            .slot_server
+                            .iter()
+                            .map(|&s| s as f64),
+                    ),
+                ),
+                (
+                    "rates",
+                    num_arr(report.final_allocation.slot_rate.iter().copied()),
+                ),
+            ]),
+        ),
+        ("format_version", Json::Num(TRACE_FORMAT_VERSION as f64)),
+        ("makespan", Json::Num(m.makespan)),
+        ("mean_latency", Json::Num(m.mean_latency())),
+        ("p50_latency", Json::Num(m.latency_quantile(0.5))),
+        ("p99_latency", Json::Num(m.latency_quantile(0.99))),
+        ("reoptimizations", Json::Num(m.reoptimizations as f64)),
+        ("scenario", Json::Str(spec.name.clone())),
+        ("seed", Json::Num(spec.seed as f64)),
+        (
+            "swaps",
+            Json::Arr(
+                report
+                    .swaps
+                    .iter()
+                    .map(|(at, reason)| {
+                        obj(vec![
+                            ("at", Json::Num(*at as f64)),
+                            ("reason", Json::Str(reason.clone())),
+                        ])
+                    })
+                    .collect(),
+            ),
+        ),
+        (
+            "tasks_per_server",
+            num_arr(m.tasks_per_server.iter().map(|&t| t as f64)),
+        ),
+        ("throughput", Json::Num(m.throughput())),
+        ("var_latency", Json::Num(m.var_latency())),
+    ];
+    if spec.class == ScenarioClass::EmpiricalRefit {
+        // the capture→refit→replan loop: plan against empirical laws
+        // fitted from the replayed samples
+        let refit = match spec.refit_plan(trace) {
+            Ok(plan) => obj(vec![
+                ("mean", Json::Num(plan.score.mean)),
+                ("p99", Json::Num(plan.score.p99)),
+                (
+                    "servers",
+                    num_arr(plan.allocation.slot_server.iter().map(|&s| s as f64)),
+                ),
+            ]),
+            Err(e) => Json::Str(format!("infeasible: {e}")),
+        };
+        fields.push(("refit", refit));
+    }
+    obj(fields)
+}
+
+/// Bitwise equality of two run reports: every metric, the final
+/// allocation and the swap history must match exactly (`f64::to_bits`,
+/// not epsilon comparison — the determinism contract is *identical*,
+/// not *close*).
+pub fn reports_identical(a: &RunReport, b: &RunReport) -> bool {
+    let bits = |x: f64| x.to_bits();
+    let (ma, mb) = (&a.metrics, &b.metrics);
+    ma.completed == mb.completed
+        && ma.reoptimizations == mb.reoptimizations
+        && bits(ma.makespan) == bits(mb.makespan)
+        && bits(ma.mean_latency()) == bits(mb.mean_latency())
+        && bits(ma.var_latency()) == bits(mb.var_latency())
+        && bits(ma.latency_quantile(0.99)) == bits(mb.latency_quantile(0.99))
+        && ma.tasks_per_server == mb.tasks_per_server
+        && ma.busy_time.len() == mb.busy_time.len()
+        && ma
+            .busy_time
+            .iter()
+            .zip(&mb.busy_time)
+            .all(|(x, y)| bits(*x) == bits(*y))
+        && a.final_allocation.slot_server == b.final_allocation.slot_server
+        && a.final_allocation.slot_rate.len() == b.final_allocation.slot_rate.len()
+        && a.final_allocation
+            .slot_rate
+            .iter()
+            .zip(&b.final_allocation.slot_rate)
+            .all(|(x, y)| bits(*x) == bits(*y))
+        && a.swaps == b.swaps
+}
+
+/// Outcome of a corpus check.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum GoldenStatus {
+    /// Committed trace replayed deterministically and the summary
+    /// matched the committed golden byte-for-byte.
+    Match,
+    /// No committed files existed; the scenario was captured, verified
+    /// and written out (commit the new files to freeze it).
+    Blessed,
+    /// Determinism or golden-summary mismatch — the message says which.
+    Divergence(String),
+}
+
+/// Replay + re-capture a trace twice and enforce the determinism
+/// contract; returns the first report on success.
+fn verified_replay(spec: &ScenarioSpec, trace: &ExecTrace) -> Result<RunReport, GoldenStatus> {
+    let (r1, t1) = spec.replay(trace).map_err(GoldenStatus::Divergence)?;
+    let (r2, t2) = spec.replay(trace).map_err(GoldenStatus::Divergence)?;
+    if !reports_identical(&r1, &r2) || t1 != t2 {
+        return Err(GoldenStatus::Divergence(format!(
+            "{}: two replays of the same trace disagree (determinism broken)",
+            spec.name
+        )));
+    }
+    if &t1 != trace {
+        return Err(GoldenStatus::Divergence(format!(
+            "{}: re-captured trace differs from the input trace (capture/replay loop not closed)",
+            spec.name
+        )));
+    }
+    Ok(r1)
+}
+
+/// Check a scenario against the committed corpus, blessing it when no
+/// corpus files exist yet. `Err` is reserved for IO/parse problems;
+/// semantic mismatches come back as [`GoldenStatus::Divergence`].
+pub fn check_or_bless(spec: &ScenarioSpec) -> Result<GoldenStatus, String> {
+    let dir = corpus_dir();
+    let trace_path = dir.join(format!("{}.trace.jsonl", spec.name));
+    let golden_path = dir.join(format!("{}.golden.json", spec.name));
+
+    if trace_path.exists() && golden_path.exists() {
+        let text = std::fs::read_to_string(&trace_path)
+            .map_err(|e| format!("read {}: {e}", trace_path.display()))?;
+        let trace = ExecTrace::from_jsonl(&text)?;
+        let report = match verified_replay(spec, &trace) {
+            Ok(r) => r,
+            Err(status) => return Ok(status),
+        };
+        let summary = golden_summary(spec, &report, &trace).to_string() + "\n";
+        let committed = std::fs::read_to_string(&golden_path)
+            .map_err(|e| format!("read {}: {e}", golden_path.display()))?;
+        if summary != committed {
+            return Ok(GoldenStatus::Divergence(format!(
+                "{}: golden summary diverged\n-- committed --\n{committed}\n\
+                 -- replayed --\n{summary}",
+                spec.name
+            )));
+        }
+        Ok(GoldenStatus::Match)
+    } else {
+        let status = bless(spec, &trace_path, &golden_path)?;
+        Ok(status)
+    }
+}
+
+/// Capture, verify and (re)write a scenario's corpus files
+/// unconditionally — the `--regen` path after an intentional behavior
+/// change.
+pub fn regenerate(spec: &ScenarioSpec) -> Result<GoldenStatus, String> {
+    let dir = corpus_dir();
+    let trace_path = dir.join(format!("{}.trace.jsonl", spec.name));
+    let golden_path = dir.join(format!("{}.golden.json", spec.name));
+    bless(spec, &trace_path, &golden_path)
+}
+
+fn bless(
+    spec: &ScenarioSpec,
+    trace_path: &std::path::Path,
+    golden_path: &std::path::Path,
+) -> Result<GoldenStatus, String> {
+    let (live_report, trace) = spec
+        .capture()
+        .map_err(|e| format!("capture of '{}' failed: {e}", spec.name))?;
+    let replayed = match verified_replay(spec, &trace) {
+        Ok(r) => r,
+        Err(status) => return Ok(status),
+    };
+    if !reports_identical(&live_report, &replayed) {
+        return Ok(GoldenStatus::Divergence(format!(
+            "{}: replayed report differs from the live capture",
+            spec.name
+        )));
+    }
+    // round-trip the trace through the wire format before writing so
+    // the committed bytes are exactly what future readers will parse
+    let wire = trace.to_jsonl();
+    let parsed = ExecTrace::from_jsonl(&wire)?;
+    if parsed != trace {
+        return Ok(GoldenStatus::Divergence(format!(
+            "{}: trace does not round-trip through JSONL",
+            spec.name
+        )));
+    }
+    if let Some(parent) = trace_path.parent() {
+        std::fs::create_dir_all(parent).map_err(|e| format!("mkdir {}: {e}", parent.display()))?;
+    }
+    std::fs::write(trace_path, &wire)
+        .map_err(|e| format!("write {}: {e}", trace_path.display()))?;
+    let summary = golden_summary(spec, &replayed, &trace).to_string() + "\n";
+    std::fs::write(golden_path, summary)
+        .map_err(|e| format!("write {}: {e}", golden_path.display()))?;
+    Ok(GoldenStatus::Blessed)
+}

@@ -1,0 +1,42 @@
+//! Scenario subsystem: trace capture, deterministic replay, the
+//! workload zoo and the golden-result corpus.
+//!
+//! ```text
+//!   ScenarioSpec ──capture()──▶ live Coordinator run ──▶ RunReport
+//!        │                          │ (recording on)
+//!        │                          ▼
+//!        │                ExecTrace (versioned JSONL)
+//!        │                          │
+//!        └──replay(trace)──▶ scripted Coordinator run ──▶ RunReport'
+//!                                   │ (re-recording)         ‖ bit-identical
+//!                                   ▼                        ▼
+//!                            ExecTrace' == ExecTrace    golden_summary
+//!                                                            │
+//!                                              rust/tests/golden/*.golden.json
+//! ```
+//!
+//! * [`record`] — the durable trace format: [`record::ExecTrace`] in
+//!   versioned JSONL, round-tripping bit-identically through
+//!   [`crate::util::json`];
+//! * [`replay`] — [`replay::Replay`] drives a captured trace back
+//!   through the real `coordinator`/`monitor` stack with scripted
+//!   workers and virtual time;
+//! * [`zoo`] — [`zoo::ScenarioSpec`] generators for the workload
+//!   classes (heterogeneous pools, correlated stragglers, churn, DAG
+//!   pipelines, heavy-tail extremes, empirical re-fits);
+//! * [`golden`] — the committed corpus with a bless-on-absence
+//!   workflow ([`golden::check_or_bless`]).
+//!
+//! The data-flow diagram above is documented in prose in
+//! `docs/ARCHITECTURE.md` ("Scenario subsystem"); the trace format and
+//! the bench matrix schema are in `docs/BENCHMARKS.md`.
+
+pub mod golden;
+pub mod record;
+pub mod replay;
+pub mod zoo;
+
+pub use golden::{check_or_bless, golden_summary, regenerate, reports_identical, GoldenStatus};
+pub use record::{ChurnKind, ExecTrace, Recorder, TraceEvent, TraceHeader, TRACE_FORMAT_VERSION};
+pub use replay::Replay;
+pub use zoo::{ChurnAction, ChurnOp, ScenarioClass, ScenarioSpec};

@@ -1,0 +1,449 @@
+//! Durable execution traces: the versioned JSONL capture format.
+//!
+//! A coordinator run with recording enabled
+//! ([`crate::coordinator::Coordinator::start_recording`]) produces an
+//! [`ExecTrace`]: the arrival stream, every raw per-task service draw in
+//! dispatch order, re-optimization decisions and membership (churn)
+//! events. The format is line-oriented JSON (one event per line, header
+//! first) so traces diff cleanly, stream through standard tooling, and
+//! round-trip **bit-identically**: serialization uses the crate's
+//! deterministic [`crate::util::json`] writer, whose float formatting is
+//! the shortest representation that parses back to the same `f64`.
+//!
+//! Format version: [`TRACE_FORMAT_VERSION`]. Readers reject newer
+//! versions with a precise error instead of misinterpreting them; field
+//! additions within a version are allowed, renames/removals bump it.
+
+use crate::sim::trace::Trace;
+use crate::util::json::Json;
+use std::collections::BTreeMap;
+
+/// Version stamp written into every trace header (`"version"` field).
+///
+/// Version 1 events: `header`, `arrival`, `service`, `reopt`, `churn`.
+pub const TRACE_FORMAT_VERSION: u64 = 1;
+
+/// First line of every trace: identity + provenance of the run.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct TraceHeader {
+    /// Format version ([`TRACE_FORMAT_VERSION`] when written by this
+    /// crate).
+    pub version: u64,
+    /// Scenario (or free-form run) name the trace was captured from.
+    pub scenario: String,
+    /// Coordinator RNG seed of the captured run (must fit in 2^53 so it
+    /// survives the JSON number round-trip; all zoo seeds do).
+    pub seed: u64,
+    /// Number of servers at the start of the run (churn events may grow
+    /// or shrink the pool afterwards).
+    pub servers: usize,
+}
+
+/// Membership-change direction of a [`TraceEvent::Churn`] event.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ChurnKind {
+    /// A worker joined the pool.
+    Join,
+    /// A worker left the pool.
+    Leave,
+}
+
+/// One recorded event, in global capture order.
+#[derive(Clone, Debug, PartialEq)]
+pub enum TraceEvent {
+    /// A task entered the system.
+    Arrival {
+        /// Task sequence number within the job.
+        seq: u64,
+        /// Absolute virtual arrival time.
+        at: f64,
+    },
+    /// One raw service-time draw answered by a worker (unscaled: the
+    /// value the worker's hidden law produced, before any
+    /// partitioned-data share scaling applied by the dispatcher).
+    Service {
+        /// Server that produced the draw.
+        server: usize,
+        /// The raw drawn service time.
+        draw: f64,
+    },
+    /// The allocation was swapped by the re-optimization loop.
+    Reopt {
+        /// Completed-task count at the swap.
+        completed: u64,
+        /// Why (`"drift"`, `"periodic"` or `"churn"`).
+        reason: String,
+    },
+    /// A worker joined or left the pool.
+    Churn {
+        /// Direction of the membership change.
+        op: ChurnKind,
+        /// Server id that joined / left.
+        server: usize,
+    },
+}
+
+/// A captured execution trace: header plus events in capture order.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ExecTrace {
+    /// Run identity and format version.
+    pub header: TraceHeader,
+    /// Events in global capture order.
+    pub events: Vec<TraceEvent>,
+}
+
+fn obj(entries: Vec<(&str, Json)>) -> Json {
+    let mut m = BTreeMap::new();
+    for (k, v) in entries {
+        m.insert(k.to_string(), v);
+    }
+    Json::Obj(m)
+}
+
+fn field_f64(v: &Json, key: &str) -> Result<f64, String> {
+    v.get(key)
+        .and_then(Json::as_f64)
+        .ok_or_else(|| format!("missing/invalid number field '{key}'"))
+}
+
+fn field_usize(v: &Json, key: &str) -> Result<usize, String> {
+    v.get(key)
+        .and_then(Json::as_usize)
+        .ok_or_else(|| format!("missing/invalid integer field '{key}'"))
+}
+
+fn field_str<'a>(v: &'a Json, key: &str) -> Result<&'a str, String> {
+    v.get(key)
+        .and_then(Json::as_str)
+        .ok_or_else(|| format!("missing/invalid string field '{key}'"))
+}
+
+impl ExecTrace {
+    /// Serialize to the JSONL wire format (header line, then one event
+    /// per line, trailing newline).
+    pub fn to_jsonl(&self) -> String {
+        let mut out = String::new();
+        let h = obj(vec![
+            ("kind", Json::Str("header".into())),
+            ("scenario", Json::Str(self.header.scenario.clone())),
+            ("seed", Json::Num(self.header.seed as f64)),
+            ("servers", Json::Num(self.header.servers as f64)),
+            ("version", Json::Num(self.header.version as f64)),
+        ]);
+        out.push_str(&h.to_string());
+        out.push('\n');
+        for e in &self.events {
+            let line = match e {
+                TraceEvent::Arrival { seq, at } => obj(vec![
+                    ("at", Json::Num(*at)),
+                    ("kind", Json::Str("arrival".into())),
+                    ("seq", Json::Num(*seq as f64)),
+                ]),
+                TraceEvent::Service { server, draw } => obj(vec![
+                    ("draw", Json::Num(*draw)),
+                    ("kind", Json::Str("service".into())),
+                    ("server", Json::Num(*server as f64)),
+                ]),
+                TraceEvent::Reopt { completed, reason } => obj(vec![
+                    ("completed", Json::Num(*completed as f64)),
+                    ("kind", Json::Str("reopt".into())),
+                    ("reason", Json::Str(reason.clone())),
+                ]),
+                TraceEvent::Churn { op, server } => obj(vec![
+                    ("kind", Json::Str("churn".into())),
+                    (
+                        "op",
+                        Json::Str(
+                            match op {
+                                ChurnKind::Join => "join",
+                                ChurnKind::Leave => "leave",
+                            }
+                            .into(),
+                        ),
+                    ),
+                    ("server", Json::Num(*server as f64)),
+                ]),
+            };
+            out.push_str(&line.to_string());
+            out.push('\n');
+        }
+        out
+    }
+
+    /// Parse a trace from its JSONL form. Rejects unknown format
+    /// versions, unknown event kinds and malformed lines with an error
+    /// naming the offending line.
+    pub fn from_jsonl(text: &str) -> Result<ExecTrace, String> {
+        let mut lines = text
+            .lines()
+            .enumerate()
+            .filter(|(_, l)| !l.trim().is_empty());
+        let (hline_no, hline) = lines.next().ok_or("empty trace")?;
+        let hv = Json::parse(hline)
+            .map_err(|e| format!("trace line {}: {e}", hline_no + 1))?;
+        if field_str(&hv, "kind")? != "header" {
+            return Err(format!(
+                "trace line {}: first line must be the header",
+                hline_no + 1
+            ));
+        }
+        let version = field_usize(&hv, "version")? as u64;
+        if version != TRACE_FORMAT_VERSION {
+            return Err(format!(
+                "unsupported trace format version {version} (this build reads \
+                 version {TRACE_FORMAT_VERSION})"
+            ));
+        }
+        let header = TraceHeader {
+            version,
+            scenario: field_str(&hv, "scenario")?.to_string(),
+            seed: field_f64(&hv, "seed")? as u64,
+            servers: field_usize(&hv, "servers")?,
+        };
+        let mut events = Vec::new();
+        for (no, line) in lines {
+            let v = Json::parse(line).map_err(|e| format!("trace line {}: {e}", no + 1))?;
+            let kind = field_str(&v, "kind")?.to_string();
+            let ev = match kind.as_str() {
+                "arrival" => TraceEvent::Arrival {
+                    seq: field_f64(&v, "seq")? as u64,
+                    at: field_f64(&v, "at")?,
+                },
+                "service" => TraceEvent::Service {
+                    server: field_usize(&v, "server")?,
+                    draw: field_f64(&v, "draw")?,
+                },
+                "reopt" => TraceEvent::Reopt {
+                    completed: field_f64(&v, "completed")? as u64,
+                    reason: field_str(&v, "reason")?.to_string(),
+                },
+                "churn" => TraceEvent::Churn {
+                    op: match field_str(&v, "op")? {
+                        "join" => ChurnKind::Join,
+                        "leave" => ChurnKind::Leave,
+                        other => {
+                            return Err(format!(
+                                "trace line {}: unknown churn op '{other}'",
+                                no + 1
+                            ))
+                        }
+                    },
+                    server: field_usize(&v, "server")?,
+                },
+                other => {
+                    return Err(format!(
+                        "trace line {}: unknown event kind '{other}'",
+                        no + 1
+                    ))
+                }
+            };
+            events.push(ev);
+        }
+        Ok(ExecTrace { header, events })
+    }
+
+    /// Per-server raw service draws, in per-server draw order — exactly
+    /// what a scripted replay worker must answer. The returned vector
+    /// covers every server id the trace mentions (initial pool plus any
+    /// churn joiners); servers that never served are empty.
+    pub fn service_scripts(&self) -> Vec<Vec<f64>> {
+        let mut n = self.header.servers;
+        for e in &self.events {
+            match e {
+                TraceEvent::Service { server, .. } | TraceEvent::Churn { server, .. } => {
+                    n = n.max(server + 1)
+                }
+                _ => {}
+            }
+        }
+        let mut scripts = vec![Vec::new(); n];
+        for e in &self.events {
+            if let TraceEvent::Service { server, draw } = e {
+                scripts[*server].push(*draw);
+            }
+        }
+        scripts
+    }
+
+    /// The captured arrival stream as a [`Trace`] (replay feeds this
+    /// back through the dispatch loop instead of regenerating arrivals).
+    pub fn arrival_trace(&self) -> Trace {
+        Trace {
+            arrivals: self
+                .events
+                .iter()
+                .filter_map(|e| match e {
+                    TraceEvent::Arrival { at, .. } => Some(*at),
+                    _ => None,
+                })
+                .collect(),
+        }
+    }
+
+    /// Number of arrival events.
+    pub fn arrivals(&self) -> usize {
+        self.events
+            .iter()
+            .filter(|e| matches!(e, TraceEvent::Arrival { .. }))
+            .count()
+    }
+
+    /// Number of service-draw events.
+    pub fn services(&self) -> usize {
+        self.events
+            .iter()
+            .filter(|e| matches!(e, TraceEvent::Service { .. }))
+            .count()
+    }
+
+    /// Number of allocation-swap events.
+    pub fn reopts(&self) -> usize {
+        self.events
+            .iter()
+            .filter(|e| matches!(e, TraceEvent::Reopt { .. }))
+            .count()
+    }
+
+    /// Number of membership-change events.
+    pub fn churns(&self) -> usize {
+        self.events
+            .iter()
+            .filter(|e| matches!(e, TraceEvent::Churn { .. }))
+            .count()
+    }
+}
+
+/// In-flight trace capture. The coordinator owns one while recording is
+/// on and feeds it from the dispatch loop; [`Recorder::finish`] yields
+/// the immutable [`ExecTrace`].
+#[derive(Clone, Debug)]
+pub struct Recorder {
+    trace: ExecTrace,
+}
+
+impl Recorder {
+    /// Start a capture for `scenario` on a pool of `servers` workers.
+    pub fn new(scenario: &str, seed: u64, servers: usize) -> Recorder {
+        Recorder {
+            trace: ExecTrace {
+                header: TraceHeader {
+                    version: TRACE_FORMAT_VERSION,
+                    scenario: scenario.to_string(),
+                    seed,
+                    servers,
+                },
+                events: Vec::new(),
+            },
+        }
+    }
+
+    /// Record a task arrival.
+    pub fn arrival(&mut self, seq: u64, at: f64) {
+        self.trace.events.push(TraceEvent::Arrival { seq, at });
+    }
+
+    /// Record a raw worker service draw.
+    pub fn service(&mut self, server: usize, draw: f64) {
+        self.trace.events.push(TraceEvent::Service { server, draw });
+    }
+
+    /// Record an allocation swap.
+    pub fn reopt(&mut self, completed: u64, reason: &str) {
+        self.trace.events.push(TraceEvent::Reopt {
+            completed,
+            reason: reason.to_string(),
+        });
+    }
+
+    /// Record a membership change.
+    pub fn churn(&mut self, op: ChurnKind, server: usize) {
+        self.trace.events.push(TraceEvent::Churn { op, server });
+    }
+
+    /// Finish the capture.
+    pub fn finish(self) -> ExecTrace {
+        self.trace
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample_trace() -> ExecTrace {
+        let mut r = Recorder::new("unit", 42, 3);
+        r.arrival(0, 0.125);
+        r.service(0, 0.1);
+        r.service(2, 0.30000000000000004); // a float with no short decimal
+        r.reopt(1, "drift");
+        r.churn(ChurnKind::Join, 3);
+        r.arrival(1, 1.0 / 3.0);
+        r.service(3, 1e-9);
+        r.churn(ChurnKind::Leave, 3);
+        r.finish()
+    }
+
+    #[test]
+    fn jsonl_roundtrip_is_bit_identical() {
+        let t = sample_trace();
+        let text = t.to_jsonl();
+        let back = ExecTrace::from_jsonl(&text).unwrap();
+        assert_eq!(t, back);
+        // serialization is a fixed point: re-serializing parses to the
+        // same bytes
+        assert_eq!(text, back.to_jsonl());
+    }
+
+    #[test]
+    fn header_is_first_line_and_versioned() {
+        let t = sample_trace();
+        let text = t.to_jsonl();
+        let first = text.lines().next().unwrap();
+        assert!(first.contains("\"kind\":\"header\""));
+        assert!(first.contains("\"version\":1"));
+    }
+
+    #[test]
+    fn rejects_future_version() {
+        let text = sample_trace()
+            .to_jsonl()
+            .replacen("\"version\":1", "\"version\":999", 1);
+        let err = ExecTrace::from_jsonl(&text).unwrap_err();
+        assert!(err.contains("version 999"), "{err}");
+    }
+
+    #[test]
+    fn rejects_garbage() {
+        assert!(ExecTrace::from_jsonl("").is_err());
+        assert!(ExecTrace::from_jsonl("{\"kind\":\"arrival\"}").is_err());
+        let t = sample_trace().to_jsonl() + "{\"kind\":\"mystery\"}\n";
+        assert!(ExecTrace::from_jsonl(&t).is_err());
+        let t = sample_trace().to_jsonl() + "not json\n";
+        assert!(ExecTrace::from_jsonl(&t).is_err());
+    }
+
+    #[test]
+    fn scripts_and_arrivals_extracted() {
+        let t = sample_trace();
+        let scripts = t.service_scripts();
+        assert_eq!(scripts.len(), 4); // 3 initial + churn joiner id 3
+        assert_eq!(scripts[0], vec![0.1]);
+        assert!(scripts[1].is_empty());
+        assert_eq!(scripts[3], vec![1e-9]);
+        let arr = t.arrival_trace();
+        assert_eq!(arr.arrivals.len(), 2);
+        assert!(arr.arrivals[0] < arr.arrivals[1]);
+        assert_eq!(t.arrivals(), 2);
+        assert_eq!(t.services(), 3);
+        assert_eq!(t.reopts(), 1);
+        assert_eq!(t.churns(), 2);
+    }
+
+    #[test]
+    fn empty_run_roundtrips() {
+        let t = Recorder::new("empty", 7, 0).finish();
+        let back = ExecTrace::from_jsonl(&t.to_jsonl()).unwrap();
+        assert_eq!(t, back);
+        assert_eq!(back.service_scripts().len(), 0);
+    }
+}

@@ -1,0 +1,161 @@
+//! Deterministic replay: feed a captured [`ExecTrace`] back through the
+//! live coordinator stack.
+//!
+//! Replay rebuilds the coordinator with *scripted* workers
+//! ([`crate::coordinator::WorkerSpec::scripted`]): worker *s* answers
+//! its *k*-th draw request with the *k*-th recorded raw draw for server
+//! *s*. Everything else — dispatch order, virtual per-server clocks,
+//! monitor windows, KS drift detection, parametric re-fits, planner
+//! re-optimization — runs the real code paths. Because the coordinator
+//! is a deterministic function of (arrival stream, raw draws, config),
+//! replaying a trace reproduces the original run's plans and metrics
+//! **bit-identically**, and replaying it twice is likewise
+//! bit-identical; `tests/scenario_golden.rs` property-tests this.
+//!
+//! The driver here also applies scripted membership churn (joins /
+//! leaves at recorded task sequence numbers), which `run_job` alone
+//! cannot do — capture and replay share this loop so both sides see the
+//! same control flow.
+
+use crate::coordinator::{Coordinator, Job, Metrics, RunReport, Task};
+use crate::scenario::record::{ExecTrace, TRACE_FORMAT_VERSION};
+use crate::scenario::zoo::{ChurnAction, ChurnOp, ScenarioSpec};
+use crate::sched::SchedError;
+use crate::sim::trace::Trace;
+
+/// Shared capture/replay dispatch loop: run `job` over the `arrivals`
+/// stream on `coord`, applying `churn` actions at their recorded task
+/// sequence numbers and running Algorithm 3's re-optimization cadence.
+/// This mirrors `Coordinator::run_job` exactly (same dispatch, same
+/// monitor feed, same swap rule) plus the churn hooks.
+pub(crate) fn drive(
+    coord: &mut Coordinator,
+    job: &Job,
+    arrivals: &Trace,
+    churn: &[ChurnAction],
+) -> Result<RunReport, SchedError> {
+    let cfg = coord.config();
+    let mut alloc = coord.allocate(job)?;
+    let mut metrics = Metrics::new(coord.workers_len());
+    let mut swaps: Vec<(u64, String)> = Vec::new();
+    let mut next_free = vec![0.0f64; coord.workers_len()];
+    let mut ci = 0usize;
+
+    for (seq, &arrival) in arrivals.arrivals.iter().enumerate() {
+        let mut membership_changed = false;
+        while ci < churn.len() && churn[ci].at_seq <= seq as u64 {
+            match &churn[ci].op {
+                ChurnOp::Join { spec, prior } => {
+                    coord.add_worker(spec.clone(), prior.clone());
+                    next_free.push(0.0);
+                    metrics.ensure_servers(coord.workers_len());
+                }
+                ChurnOp::Leave => {
+                    coord.remove_last_worker();
+                    next_free.pop();
+                }
+            }
+            membership_changed = true;
+            ci += 1;
+        }
+        if membership_changed {
+            // the old allocation may reference a departed server or
+            // ignore a joined one: re-plan against the new pool
+            let new_alloc = coord.allocate(job)?;
+            if new_alloc != alloc {
+                alloc = new_alloc;
+                metrics.record_reopt();
+                coord.record_reopt(metrics.completed, "churn");
+                swaps.push((metrics.completed, "churn".to_string()));
+            }
+        }
+
+        let task = Task {
+            job_id: job.id,
+            seq: seq as u64,
+            arrival,
+        };
+        coord.record_arrival(seq as u64, arrival);
+        let finish = coord.dispatch(
+            job.workflow.root(),
+            &alloc,
+            arrival,
+            1.0,
+            &mut next_free,
+            &mut metrics,
+        );
+        metrics.record_completion(finish - task.arrival, finish);
+
+        // Algorithm 3's periodic re-optimization (same rule as run_job)
+        if cfg.reopt_every > 0 && metrics.completed % cfg.reopt_every == 0 {
+            let drifted = coord.monitors().any_drifted(cfg.min_fit_samples / 2);
+            if drifted || !cfg.reopt_on_drift_only {
+                coord.refresh_pool_view();
+                if let Ok(new_alloc) = coord.allocate(job) {
+                    if new_alloc != alloc {
+                        alloc = new_alloc;
+                        metrics.record_reopt();
+                        let reason = if drifted { "drift" } else { "periodic" };
+                        coord.record_reopt(metrics.completed, reason);
+                        swaps.push((metrics.completed, reason.to_string()));
+                    }
+                }
+            }
+        }
+    }
+
+    Ok(RunReport {
+        metrics,
+        final_allocation: alloc,
+        swaps,
+    })
+}
+
+/// Replay driver: a scenario spec plus one of its captured traces.
+#[derive(Clone, Copy, Debug)]
+pub struct Replay<'a> {
+    spec: &'a ScenarioSpec,
+    trace: &'a ExecTrace,
+}
+
+impl<'a> Replay<'a> {
+    /// Bind a trace to its scenario. Fails if the trace's format
+    /// version or scenario name does not match.
+    pub fn new(spec: &'a ScenarioSpec, trace: &'a ExecTrace) -> Result<Replay<'a>, String> {
+        if trace.header.version != TRACE_FORMAT_VERSION {
+            return Err(format!(
+                "trace format version {} != supported {}",
+                trace.header.version, TRACE_FORMAT_VERSION
+            ));
+        }
+        if trace.header.scenario != spec.name {
+            return Err(format!(
+                "trace was captured from scenario '{}', not '{}'",
+                trace.header.scenario, spec.name
+            ));
+        }
+        Ok(Replay { spec, trace })
+    }
+
+    /// Replay the trace through the live coordinator stack.
+    pub fn run(&self) -> Result<RunReport, SchedError> {
+        self.run_traced().map(|(report, _)| report)
+    }
+
+    /// Replay while re-capturing: returns the run report *and* the
+    /// trace the replayed run itself recorded. For a faithful replay
+    /// the re-captured trace equals the input trace event-for-event —
+    /// the closed-loop check the golden tests enforce.
+    pub fn run_traced(&self) -> Result<(RunReport, ExecTrace), SchedError> {
+        let scripts = self.trace.service_scripts();
+        let mut coord = self.spec.scripted_coordinator(&scripts);
+        coord.start_recording(&self.spec.name);
+        let job = coord.submit(&self.spec.name, self.spec.workflow());
+        let arrivals = self.trace.arrival_trace();
+        let churn = self.spec.churn_actions(Some(&scripts));
+        let report = drive(&mut coord, &job, &arrivals, &churn)?;
+        let trace = coord.take_trace().expect("recording was started");
+        coord.shutdown();
+        Ok((report, trace))
+    }
+}

@@ -1,0 +1,538 @@
+//! The workload zoo: named, seeded scenario generators covering the
+//! regimes the paper's argument lives or dies on.
+//!
+//! Each [`ScenarioSpec`] fully determines a run — workflow, server
+//! pool, hidden worker laws, coordinator config, arrival stream and
+//! (for the churn class) a membership schedule — from its name and
+//! seed alone. [`ScenarioSpec::capture`] executes the scenario on the
+//! live coordinator stack and records an
+//! [`ExecTrace`](crate::scenario::record::ExecTrace);
+//! [`ScenarioSpec::replay`] feeds a captured trace back through
+//! [`crate::scenario::Replay`]. The committed golden corpus
+//! (`rust/tests/golden/`) holds one trace + summary per class.
+//!
+//! Classes (mirroring the survey taxonomy in PAPERS.md):
+//!
+//! * **HeterogeneousPool** — fig. 6 workflow on a pool whose service
+//!   rates span 12×; allocation quality dominates.
+//! * **CorrelatedStragglers** — three of six servers degrade *together*
+//!   into a straggler mixture mid-run; the KS monitor must catch the
+//!   correlated onset and the planner must route around it.
+//! * **WorkerChurn** — a fast server joins a third of the way in and
+//!   is decommissioned at two thirds; arrivals carry a compressed
+//!   burst composed with the `sim::trace` helpers.
+//! * **DagPipeline** — a non-trivial TTSP-reducible stage DAG run
+//!   through [`FlowDag::to_series_parallel`].
+//! * **HeavyTailExtreme** — Table-1 families at their nastiest
+//!   committed corners (Pareto shape 2.4 barely above finite variance,
+//!   Weibull shape 0.65, a 20% straggler mixture) under the M/G/1
+//!   model.
+//! * **EmpiricalRefit** — paced arrivals on the fig. 6 pool; the
+//!   captured samples are re-fitted into an
+//!   [`EmpiricalBackend`](crate::compose::backend::EmpiricalBackend)
+//!   plan via [`ScenarioSpec::refit_plan`].
+
+use crate::compose::backend::EmpiricalBackend;
+use crate::coordinator::{Coordinator, CoordinatorConfig, RunReport, WorkerSpec};
+use crate::dist::ServiceDist;
+use crate::flow::dag::FlowDag;
+use crate::flow::Workflow;
+use crate::plan::{Plan, Planner, ProposedPolicy};
+use crate::scenario::record::ExecTrace;
+use crate::scenario::replay::{drive, Replay};
+use crate::sched::server::Server;
+use crate::sched::{ResponseModel, SchedError};
+use crate::sim::trace::{ArrivalProcess, Trace};
+use crate::util::rng::Rng;
+use std::sync::Arc;
+
+/// Workload class of a scenario (see module docs).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ScenarioClass {
+    /// Wide service-rate spread, static membership.
+    HeterogeneousPool,
+    /// Several servers degrade into straggler mixtures together.
+    CorrelatedStragglers,
+    /// A server joins mid-run and leaves later.
+    WorkerChurn,
+    /// General stage DAG reduced to series–parallel form.
+    DagPipeline,
+    /// Table-1 heavy-tail families at their extremes.
+    HeavyTailExtreme,
+    /// Captured samples re-fitted into an empirical-law plan.
+    EmpiricalRefit,
+}
+
+impl ScenarioClass {
+    /// Stable string label (used in golden summaries and bench rows).
+    pub fn label(self) -> &'static str {
+        match self {
+            ScenarioClass::HeterogeneousPool => "heterogeneous_pool",
+            ScenarioClass::CorrelatedStragglers => "correlated_stragglers",
+            ScenarioClass::WorkerChurn => "worker_churn",
+            ScenarioClass::DagPipeline => "dag_pipeline",
+            ScenarioClass::HeavyTailExtreme => "heavy_tail_extreme",
+            ScenarioClass::EmpiricalRefit => "empirical_refit",
+        }
+    }
+
+    /// All classes, in zoo order.
+    pub fn all() -> [ScenarioClass; 6] {
+        [
+            ScenarioClass::HeterogeneousPool,
+            ScenarioClass::CorrelatedStragglers,
+            ScenarioClass::WorkerChurn,
+            ScenarioClass::DagPipeline,
+            ScenarioClass::HeavyTailExtreme,
+            ScenarioClass::EmpiricalRefit,
+        ]
+    }
+}
+
+/// One scheduled membership change, applied just before dispatching the
+/// task with sequence number `at_seq`.
+#[derive(Clone, Debug)]
+pub struct ChurnAction {
+    /// Task sequence number the action fires before.
+    pub at_seq: u64,
+    /// What happens.
+    pub op: ChurnOp,
+}
+
+/// A membership operation.
+#[derive(Clone, Debug)]
+pub enum ChurnOp {
+    /// Spawn a worker and extend the believed pool.
+    Join {
+        /// Worker behavior (scripted during replay).
+        spec: WorkerSpec,
+        /// The leader's prior belief about the joiner's law.
+        prior: Server,
+    },
+    /// Decommission the last (highest-id) worker.
+    Leave,
+}
+
+/// A fully deterministic scenario: name + seed determine the workflow,
+/// pool, hidden laws, config, arrivals and churn schedule.
+#[derive(Clone, Debug)]
+pub struct ScenarioSpec {
+    /// Unique scenario name (doubles as the trace header name and the
+    /// golden corpus file stem).
+    pub name: String,
+    /// Workload class.
+    pub class: ScenarioClass,
+    /// Master seed (coordinator + arrival stream derive from it).
+    pub seed: u64,
+    /// Nominal run length in tasks (the churn schedule and arrival
+    /// composition scale with it; the composed stream may differ by a
+    /// few tasks).
+    pub n_tasks: usize,
+    /// Base arrival process.
+    pub arrival: ArrivalProcess,
+}
+
+impl ScenarioSpec {
+    /// The committed workload zoo: one entry per [`ScenarioClass`].
+    pub fn zoo() -> Vec<ScenarioSpec> {
+        vec![
+            ScenarioSpec {
+                name: "heterogeneous_pool".into(),
+                class: ScenarioClass::HeterogeneousPool,
+                seed: 101,
+                n_tasks: 400,
+                arrival: ArrivalProcess::Poisson { rate: 2.0 },
+            },
+            ScenarioSpec {
+                name: "correlated_stragglers".into(),
+                class: ScenarioClass::CorrelatedStragglers,
+                seed: 211,
+                n_tasks: 700,
+                arrival: ArrivalProcess::Poisson { rate: 1.5 },
+            },
+            ScenarioSpec {
+                name: "worker_churn".into(),
+                class: ScenarioClass::WorkerChurn,
+                seed: 307,
+                n_tasks: 600,
+                arrival: ArrivalProcess::Poisson { rate: 1.0 },
+            },
+            ScenarioSpec {
+                name: "dag_pipeline".into(),
+                class: ScenarioClass::DagPipeline,
+                seed: 401,
+                n_tasks: 400,
+                arrival: ArrivalProcess::Poisson { rate: 0.8 },
+            },
+            ScenarioSpec {
+                name: "heavy_tail_extreme".into(),
+                class: ScenarioClass::HeavyTailExtreme,
+                seed: 503,
+                n_tasks: 400,
+                arrival: ArrivalProcess::Poisson { rate: 0.4 },
+            },
+            ScenarioSpec {
+                name: "empirical_refit".into(),
+                class: ScenarioClass::EmpiricalRefit,
+                seed: 601,
+                n_tasks: 400,
+                arrival: ArrivalProcess::Paced { interval: 0.5 },
+            },
+        ]
+    }
+
+    /// Look a zoo scenario up by name.
+    pub fn by_name(name: &str) -> Option<ScenarioSpec> {
+        Self::zoo().into_iter().find(|s| s.name == name)
+    }
+
+    /// Same scenario, different seed (property tests sweep this).
+    pub fn with_seed(mut self, seed: u64) -> ScenarioSpec {
+        self.seed = seed;
+        self
+    }
+
+    /// Same scenario, different nominal length.
+    pub fn with_tasks(mut self, n_tasks: usize) -> ScenarioSpec {
+        self.n_tasks = n_tasks;
+        self
+    }
+
+    /// The scenario's workflow.
+    pub fn workflow(&self) -> Workflow {
+        match self.class {
+            ScenarioClass::HeterogeneousPool | ScenarioClass::EmpiricalRefit => Workflow::fig6(),
+            ScenarioClass::CorrelatedStragglers => Workflow::forkjoin(4, 2.0),
+            ScenarioClass::WorkerChurn => Workflow::tandem(3, 1.2),
+            ScenarioClass::DagPipeline => {
+                // two parallel map stages, a diamond (direct edge vs a
+                // two-stage detour), a shuffle, two parallel reducers —
+                // TTSP-reducible, 8 stage slots
+                let dag = FlowDag::new()
+                    .stage(0, 1, "map-a")
+                    .stage(0, 1, "map-b")
+                    .stage(1, 5, "agg-x")
+                    .stage(5, 2, "agg-y")
+                    .stage(1, 2, "passthrough")
+                    .stage(2, 3, "shuffle")
+                    .stage(3, 4, "reduce-a")
+                    .stage(3, 4, "reduce-b");
+                let tree = dag
+                    .to_series_parallel(0, 4)
+                    .expect("pipeline dag is series-parallel by construction");
+                Workflow::new(tree, 1.0)
+            }
+            ScenarioClass::HeavyTailExtreme => Workflow::chain(2, 2, 0.5),
+        }
+    }
+
+    /// The leader's initial believed pool (also the hidden initial
+    /// laws: every scenario starts with truthful priors, divergence
+    /// comes from drift/churn afterwards).
+    pub fn initial_view(&self) -> Vec<Server> {
+        match self.class {
+            ScenarioClass::HeterogeneousPool => {
+                Server::pool_exponential(&[24.0, 18.0, 12.0, 9.0, 6.0, 4.0, 3.0, 2.0])
+            }
+            ScenarioClass::CorrelatedStragglers => {
+                Server::pool_exponential(&[10.0, 9.0, 8.0, 7.0, 6.0, 5.0])
+            }
+            ScenarioClass::WorkerChurn => Server::pool_exponential(&[6.0, 5.0, 4.0, 3.0]),
+            ScenarioClass::DagPipeline => {
+                Server::pool_exponential(&[14.0, 12.0, 10.0, 9.0, 8.0, 7.0, 6.0, 5.0, 4.0, 3.0])
+            }
+            ScenarioClass::HeavyTailExtreme => vec![
+                // Table-1 families at their extremes: Pareto shape 2.4
+                // (variance barely finite), sub-exponential Weibull,
+                // a 20% straggler mixture
+                Server::new(0, ServiceDist::delayed_pareto(2.4, 0.05)),
+                Server::new(1, ServiceDist::delayed_pareto(3.5, 0.0)),
+                Server::new(2, ServiceDist::delayed_weibull(1.4, 0.65, 0.1)),
+                Server::new(3, ServiceDist::delayed_weibull(2.2, 0.8, 0.0)),
+                Server::new(4, ServiceDist::straggler(9.0, 0.35, 0.2, 0.05)),
+                Server::new(5, ServiceDist::exponential(5.0)),
+            ],
+            ScenarioClass::EmpiricalRefit => {
+                Server::pool_exponential(&[9.0, 8.0, 7.0, 6.0, 5.0, 4.0])
+            }
+        }
+    }
+
+    /// Hidden worker laws for the live (capture) run. Stragglers get
+    /// correlated drift onsets; everything else is truthful.
+    pub fn live_worker_specs(&self) -> Vec<WorkerSpec> {
+        let view = self.initial_view();
+        match self.class {
+            ScenarioClass::CorrelatedStragglers => view
+                .iter()
+                .map(|s| {
+                    if s.id < 3 {
+                        // three servers degrade *together* after 250
+                        // draws into the same straggler mixture
+                        WorkerSpec::drifting(
+                            s.id,
+                            s.dist.clone(),
+                            250,
+                            ServiceDist::straggler(8.0, 1.2, 0.25, 0.0),
+                        )
+                    } else {
+                        WorkerSpec::stable(s.id, s.dist.clone())
+                    }
+                })
+                .collect(),
+            _ => view
+                .iter()
+                .map(|s| WorkerSpec::stable(s.id, s.dist.clone()))
+                .collect(),
+        }
+    }
+
+    /// Coordinator configuration for this scenario.
+    pub fn config(&self) -> CoordinatorConfig {
+        let mut cfg = CoordinatorConfig {
+            seed: self.seed,
+            reopt_every: 0,
+            ..Default::default()
+        };
+        match self.class {
+            ScenarioClass::HeterogeneousPool | ScenarioClass::DagPipeline => {}
+            ScenarioClass::CorrelatedStragglers => {
+                cfg.reopt_every = 100;
+                cfg.reopt_on_drift_only = true;
+                cfg.min_fit_samples = 128;
+                cfg.monitor_window = 1024;
+            }
+            ScenarioClass::WorkerChurn => {
+                cfg.reopt_every = 150;
+                cfg.reopt_on_drift_only = false;
+                cfg.min_fit_samples = 128;
+                cfg.monitor_window = 512;
+            }
+            ScenarioClass::HeavyTailExtreme => {
+                cfg.model = ResponseModel::Mg1;
+            }
+            ScenarioClass::EmpiricalRefit => {
+                cfg.reopt_every = 200;
+                cfg.reopt_on_drift_only = false;
+                cfg.min_fit_samples = 128;
+                cfg.monitor_window = 1024;
+            }
+        }
+        cfg
+    }
+
+    /// The scheduled membership changes (non-empty only for
+    /// [`ScenarioClass::WorkerChurn`]): one joiner a third of the way
+    /// in, decommissioned at two thirds. With `scripts` (from a
+    /// captured trace) the joiner replays its recorded draws; ids are
+    /// never reused, so per-server scripts stay unambiguous.
+    pub fn churn_actions(&self, scripts: Option<&[Vec<f64>]>) -> Vec<ChurnAction> {
+        if self.class != ScenarioClass::WorkerChurn {
+            return Vec::new();
+        }
+        let join_id = self.initial_view().len();
+        let law = ServiceDist::exponential(10.0);
+        let spec = match scripts {
+            Some(s) => WorkerSpec::scripted(
+                join_id,
+                law.clone(),
+                s.get(join_id).cloned().unwrap_or_default(),
+            ),
+            None => WorkerSpec::stable(join_id, law.clone()),
+        };
+        let n = self.n_tasks as u64;
+        vec![
+            ChurnAction {
+                at_seq: n / 3,
+                op: ChurnOp::Join {
+                    spec,
+                    prior: Server::new(join_id, law),
+                },
+            },
+            ChurnAction {
+                at_seq: 2 * n / 3,
+                op: ChurnOp::Leave,
+            },
+        ]
+    }
+
+    /// The deterministic arrival stream. The churn class composes a
+    /// compressed early burst onto the base stream with the
+    /// [`Trace::merge`] / [`Trace::scale_time`] / [`Trace::truncate`]
+    /// helpers; every other class generates its base process directly.
+    pub fn arrival_trace(&self) -> Trace {
+        let mut rng = Rng::new(self.seed ^ 0xA55A_5AA5_D00D_F00D);
+        match self.class {
+            ScenarioClass::WorkerChurn => {
+                let base_n = self.n_tasks - self.n_tasks / 4;
+                let base = Trace::generate(self.arrival, base_n, &mut rng);
+                let horizon = base.arrivals.last().copied().unwrap_or(0.0);
+                // a unit-rate stream compressed 4x and clipped to the
+                // first half of the run: a correlated arrival burst
+                let burst = Trace::generate(
+                    ArrivalProcess::Poisson { rate: 1.0 },
+                    self.n_tasks / 4,
+                    &mut rng,
+                )
+                .scale_time(0.25)
+                .truncate(horizon * 0.5);
+                base.merge(&burst)
+            }
+            _ => Trace::generate(self.arrival, self.n_tasks, &mut rng),
+        }
+    }
+
+    /// Run the scenario live (hidden laws, real drift/churn) with
+    /// recording on; returns the run report and the captured trace.
+    pub fn capture(&self) -> Result<(RunReport, ExecTrace), SchedError> {
+        let mut coord = Coordinator::new(
+            self.live_worker_specs(),
+            self.initial_view(),
+            self.config(),
+        );
+        coord.start_recording(&self.name);
+        let job = coord.submit(&self.name, self.workflow());
+        let arrivals = self.arrival_trace();
+        let churn = self.churn_actions(None);
+        let report = drive(&mut coord, &job, &arrivals, &churn)?;
+        let trace = coord.take_trace().expect("recording was started");
+        coord.shutdown();
+        Ok((report, trace))
+    }
+
+    /// Replay a captured trace through the live stack (scripted
+    /// workers); returns the replayed report and the re-captured trace
+    /// (equal to the input for a faithful replay).
+    pub fn replay(&self, trace: &ExecTrace) -> Result<(RunReport, ExecTrace), String> {
+        Replay::new(self, trace)?
+            .run_traced()
+            .map_err(|e| format!("replay of '{}' failed: {e}", self.name))
+    }
+
+    /// Coordinator whose workers answer draws from per-server scripts
+    /// (falling back to the scenario's initial laws when exhausted).
+    pub(crate) fn scripted_coordinator(&self, scripts: &[Vec<f64>]) -> Coordinator {
+        let specs = self
+            .live_worker_specs()
+            .into_iter()
+            .map(|mut s| {
+                s.script = Some(Arc::new(
+                    scripts.get(s.server_id).cloned().unwrap_or_default(),
+                ));
+                // scripted draws shadow the drift schedule entirely
+                s
+            })
+            .collect();
+        Coordinator::new(specs, self.initial_view(), self.config())
+    }
+
+    /// Re-fit captured service samples into empirical laws and plan
+    /// against them: every server with ≥ 32 recorded draws scores
+    /// through an [`EmpiricalBackend`] law, the rest stay analytic.
+    /// This is the capture→refit→replan loop the EmpiricalRefit class
+    /// exists to exercise.
+    pub fn refit_plan(&self, trace: &ExecTrace) -> Result<Plan, SchedError> {
+        let scripts = trace.service_scripts();
+        let mut backend = EmpiricalBackend::new();
+        for (sid, samples) in scripts.iter().enumerate() {
+            if samples.len() >= 32 {
+                backend = backend.with_samples(sid, samples);
+            }
+        }
+        let servers = self.initial_view();
+        let wf = self.workflow();
+        let cfg = self.config();
+        Planner::new(&wf, &servers)
+            .model(cfg.model)
+            .objective(cfg.objective)
+            .backend(&backend)
+            .plan(&ProposedPolicy::default())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn zoo_covers_every_class_once() {
+        let zoo = ScenarioSpec::zoo();
+        assert_eq!(zoo.len(), ScenarioClass::all().len());
+        for class in ScenarioClass::all() {
+            let hits: Vec<_> = zoo.iter().filter(|s| s.class == class).collect();
+            assert_eq!(hits.len(), 1, "class {class:?} must appear exactly once");
+            assert_eq!(hits[0].name, class.label());
+        }
+        // names unique ⇒ by_name resolves every entry
+        for s in &zoo {
+            assert_eq!(ScenarioSpec::by_name(&s.name).unwrap().seed, s.seed);
+        }
+        assert!(ScenarioSpec::by_name("no_such_scenario").is_none());
+    }
+
+    #[test]
+    fn every_scenario_is_feasible_on_paper() {
+        for s in ScenarioSpec::zoo() {
+            let wf = s.workflow();
+            let pool = s.initial_view();
+            assert!(
+                pool.len() >= wf.slots(),
+                "{}: pool {} < slots {}",
+                s.name,
+                pool.len(),
+                wf.slots()
+            );
+            // ids dense, as the coordinator requires
+            for (i, srv) in pool.iter().enumerate() {
+                assert_eq!(srv.id, i, "{}: ids must be dense", s.name);
+            }
+        }
+    }
+
+    #[test]
+    fn arrival_traces_are_deterministic_and_sorted() {
+        for s in ScenarioSpec::zoo() {
+            let a = s.arrival_trace();
+            let b = s.arrival_trace();
+            assert_eq!(a.arrivals, b.arrivals, "{}: regeneration must match", s.name);
+            assert!(
+                a.arrivals.windows(2).all(|w| w[0] <= w[1]),
+                "{}: arrivals must be sorted",
+                s.name
+            );
+            assert!(!a.arrivals.is_empty(), "{}: no arrivals", s.name);
+        }
+    }
+
+    #[test]
+    fn churn_schedule_only_for_churn_class() {
+        for s in ScenarioSpec::zoo() {
+            let actions = s.churn_actions(None);
+            if s.class == ScenarioClass::WorkerChurn {
+                assert_eq!(actions.len(), 2);
+                assert!(actions[0].at_seq < actions[1].at_seq);
+                assert!(matches!(actions[0].op, ChurnOp::Join { .. }));
+                assert!(matches!(actions[1].op, ChurnOp::Leave));
+                // the schedule must fire within the composed stream
+                let n = s.arrival_trace().arrivals.len() as u64;
+                assert!(actions[1].at_seq < n);
+            } else {
+                assert!(actions.is_empty(), "{}: unexpected churn", s.name);
+            }
+        }
+    }
+
+    #[test]
+    fn dag_pipeline_reduces_to_eight_slots() {
+        let s = ScenarioSpec::by_name("dag_pipeline").unwrap();
+        assert_eq!(s.workflow().slots(), 8);
+    }
+
+    #[test]
+    fn stragglers_remain_feasible_after_degradation() {
+        // the degraded law must still out-rate the per-slot demand,
+        // otherwise mid-run re-planning could become infeasible
+        let degraded = ServiceDist::straggler(8.0, 1.2, 0.25, 0.0);
+        assert!(degraded.rate() > 2.0, "rate {}", degraded.rate());
+    }
+}

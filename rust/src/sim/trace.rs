@@ -89,6 +89,39 @@ impl Trace {
         (self.arrivals.len() - 1) as f64 / (self.arrivals.last().unwrap() - self.arrivals[0])
     }
 
+    /// Merge two traces into one time-sorted stream (the superposition
+    /// of the two arrival processes). Sorting is `total_cmp`-stable, so
+    /// merging is deterministic even for tied timestamps.
+    pub fn merge(&self, other: &Trace) -> Trace {
+        let mut arrivals = Vec::with_capacity(self.arrivals.len() + other.arrivals.len());
+        arrivals.extend_from_slice(&self.arrivals);
+        arrivals.extend_from_slice(&other.arrivals);
+        arrivals.sort_by(f64::total_cmp);
+        Trace { arrivals }
+    }
+
+    /// Multiply every timestamp by `factor` (> 0): `factor < 1`
+    /// compresses the trace (rate scales by `1/factor`), `factor > 1`
+    /// stretches it.
+    pub fn scale_time(&self, factor: f64) -> Trace {
+        assert!(factor > 0.0, "time-scale factor must be positive, got {factor}");
+        Trace {
+            arrivals: self.arrivals.iter().map(|&t| t * factor).collect(),
+        }
+    }
+
+    /// Keep only the arrivals at or before `horizon`.
+    pub fn truncate(&self, horizon: f64) -> Trace {
+        Trace {
+            arrivals: self
+                .arrivals
+                .iter()
+                .copied()
+                .take_while(|&t| t <= horizon)
+                .collect(),
+        }
+    }
+
     /// Squared coefficient of variation of inter-arrival gaps
     /// (1 = Poisson, > 1 = bursty, 0 = paced).
     pub fn cv2(&self) -> f64 {
@@ -136,6 +169,76 @@ mod tests {
             &mut rng,
         );
         assert!(t.cv2() > 1.5, "cv2 {}", t.cv2());
+    }
+
+    #[test]
+    fn merge_interleaves_and_stays_sorted() {
+        let a = Trace {
+            arrivals: vec![1.0, 3.0, 5.0],
+        };
+        let b = Trace {
+            arrivals: vec![2.0, 3.0, 6.0],
+        };
+        let m = a.merge(&b);
+        assert_eq!(m.arrivals, vec![1.0, 2.0, 3.0, 3.0, 5.0, 6.0]);
+        // merging an empty trace is the identity
+        let e = Trace { arrivals: vec![] };
+        assert_eq!(a.merge(&e).arrivals, a.arrivals);
+        // superposed Poisson streams add their rates
+        let mut rng = Rng::new(5);
+        let p1 = Trace::generate(ArrivalProcess::Poisson { rate: 2.0 }, 50_000, &mut rng);
+        let p2 = Trace::generate(ArrivalProcess::Poisson { rate: 3.0 }, 50_000, &mut rng);
+        let sup = p1.truncate(1_000.0).merge(&p2.truncate(1_000.0));
+        assert!((sup.mean_rate() - 5.0).abs() < 0.2, "rate {}", sup.mean_rate());
+    }
+
+    #[test]
+    fn scale_time_rescales_rate() {
+        let t = Trace {
+            arrivals: vec![1.0, 2.0, 4.0],
+        };
+        let s = t.scale_time(0.5);
+        assert_eq!(s.arrivals, vec![0.5, 1.0, 2.0]);
+        assert!((s.mean_rate() - 2.0 * t.mean_rate()).abs() < 1e-12);
+        // cv2 is scale-invariant
+        let mut rng = Rng::new(6);
+        let p = Trace::generate(ArrivalProcess::Poisson { rate: 1.0 }, 10_000, &mut rng);
+        assert!((p.scale_time(3.0).cv2() - p.cv2()).abs() < 1e-9);
+    }
+
+    #[test]
+    #[should_panic(expected = "must be positive")]
+    fn scale_time_rejects_nonpositive() {
+        let t = Trace {
+            arrivals: vec![1.0],
+        };
+        let _ = t.scale_time(0.0);
+    }
+
+    #[test]
+    fn truncate_clips_to_horizon() {
+        let t = Trace {
+            arrivals: vec![0.5, 1.0, 1.5, 2.0, 9.0],
+        };
+        assert_eq!(t.truncate(1.5).arrivals, vec![0.5, 1.0, 1.5]); // inclusive
+        assert_eq!(t.truncate(0.0).arrivals, Vec::<f64>::new());
+        assert_eq!(t.truncate(100.0).arrivals.len(), 5);
+    }
+
+    #[test]
+    fn compose_burst_onto_base() {
+        // the zoo's churn-scenario composition: base stream + a
+        // compressed burst clipped to the first half of the run
+        let mut rng = Rng::new(7);
+        let base = Trace::generate(ArrivalProcess::Poisson { rate: 1.0 }, 3_000, &mut rng);
+        let horizon = *base.arrivals.last().unwrap();
+        let burst = Trace::generate(ArrivalProcess::Poisson { rate: 1.0 }, 1_000, &mut rng)
+            .scale_time(0.25)
+            .truncate(horizon * 0.5);
+        let composed = base.merge(&burst);
+        assert!(composed.arrivals.len() > base.arrivals.len());
+        assert!(composed.arrivals.windows(2).all(|w| w[1] >= w[0]));
+        assert!(composed.cv2() > base.cv2(), "burst must add burstiness");
     }
 
     #[test]

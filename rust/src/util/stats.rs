@@ -203,16 +203,27 @@ pub fn quantile(sorted: &[f64], q: f64) -> f64 {
 }
 
 /// Two-sample Kolmogorov–Smirnov statistic: sup |F_a - F_b|.
-/// Both inputs must be sorted ascending.
+/// Both inputs must be sorted ascending (`total_cmp` order for NaN
+/// tolerance). Tied values advance both empirical CDFs together, so
+/// identical samples — including fully constant windows — score 0
+/// rather than a spurious gap; NaN tails are skipped.
 pub fn ks_statistic(a: &[f64], b: &[f64]) -> f64 {
     assert!(!a.is_empty() && !b.is_empty());
     let (mut i, mut j) = (0usize, 0usize);
     let mut d: f64 = 0.0;
     while i < a.len() && j < b.len() {
-        if a[i] <= b[j] {
+        let x = a[i].min(b[j]);
+        let (i0, j0) = (i, j);
+        while i < a.len() && a[i] <= x {
             i += 1;
-        } else {
+        }
+        while j < b.len() && b[j] <= x {
             j += 1;
+        }
+        if i == i0 && j == j0 {
+            // both heads are NaN (unordered with everything): no
+            // rankable mass remains
+            break;
         }
         let fa = i as f64 / a.len() as f64;
         let fb = j as f64 / b.len() as f64;
@@ -306,5 +317,25 @@ mod tests {
         a.sort_by(|x, y| x.partial_cmp(y).unwrap());
         b.sort_by(|x, y| x.partial_cmp(y).unwrap());
         assert!(ks_statistic(&a, &b) > 0.3);
+    }
+
+    #[test]
+    fn ks_handles_ties_exactly() {
+        // identical constant samples: the CDFs coincide, KS must be 0
+        assert_eq!(ks_statistic(&[0.5; 100], &[0.5; 100]), 0.0);
+        // identical mixed samples with ties
+        let xs = [1.0, 1.0, 2.0, 2.0, 3.0];
+        assert_eq!(ks_statistic(&xs, &xs), 0.0);
+        // disjoint constants: maximal separation
+        assert_eq!(ks_statistic(&[1.0; 10], &[2.0; 10]), 1.0);
+    }
+
+    #[test]
+    fn ks_tolerates_nan_tails() {
+        // total_cmp sorting puts NaN last; the walk must terminate
+        let a = [1.0, 2.0, f64::NAN];
+        let b = [1.5, f64::NAN, f64::NAN];
+        let d = ks_statistic(&a, &b);
+        assert!(d.is_finite());
     }
 }

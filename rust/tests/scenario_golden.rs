@@ -1,0 +1,125 @@
+//! Golden-corpus integration tests for the scenario subsystem.
+//!
+//! `golden_corpus_matches_or_blesses` is the CI gate: with committed
+//! corpus files present it replays each trace twice and fails on any
+//! bit-level divergence from the committed summary; with files absent
+//! it captures, verifies and writes them (bless-on-absence — commit the
+//! generated `rust/tests/golden/` files to freeze behavior, see the
+//! README there).
+
+use dcflow::scenario::{
+    check_or_bless, reports_identical, ExecTrace, GoldenStatus, ScenarioClass, ScenarioSpec,
+};
+use dcflow::util::prop;
+
+#[test]
+fn corpus_covers_every_scenario_class() {
+    let zoo = ScenarioSpec::zoo();
+    for class in ScenarioClass::all() {
+        assert!(
+            zoo.iter().any(|s| s.class == class),
+            "no zoo entry for {class:?}"
+        );
+    }
+}
+
+#[test]
+fn golden_corpus_matches_or_blesses() {
+    for spec in ScenarioSpec::zoo() {
+        match check_or_bless(&spec) {
+            Ok(GoldenStatus::Match) => {}
+            Ok(GoldenStatus::Blessed) => {
+                eprintln!(
+                    "blessed new golden corpus entry for '{}' — commit rust/tests/golden/",
+                    spec.name
+                );
+            }
+            Ok(GoldenStatus::Divergence(msg)) => panic!("golden divergence: {msg}"),
+            Err(e) => panic!("corpus check for '{}' errored: {e}", spec.name),
+        }
+    }
+}
+
+#[test]
+fn capture_replay_bit_identity_property() {
+    // the acceptance property: for ANY scenario and seed, a captured
+    // trace replays to bit-identical plans/metrics, twice, and the
+    // re-captured trace closes the loop — including across the JSONL
+    // wire format
+    prop::run("capture/replay bit-identity", 8, |g| {
+        let zoo = ScenarioSpec::zoo();
+        let spec = g
+            .choose(&zoo)
+            .clone()
+            .with_seed(g.usize_in(1, 1 << 20) as u64)
+            .with_tasks(150);
+        let (live, trace) = spec
+            .capture()
+            .unwrap_or_else(|e| panic!("{}: capture failed: {e}", spec.name));
+        let wire = trace.to_jsonl();
+        let decoded = ExecTrace::from_jsonl(&wire)
+            .unwrap_or_else(|e| panic!("{}: trace parse failed: {e}", spec.name));
+        assert_eq!(decoded, trace, "{}: JSONL round-trip", spec.name);
+
+        let (r1, t1) = spec.replay(&decoded).expect("first replay");
+        let (r2, t2) = spec.replay(&decoded).expect("second replay");
+        assert!(
+            reports_identical(&live, &r1),
+            "{}: replay differs from live capture",
+            spec.name
+        );
+        assert!(
+            reports_identical(&r1, &r2),
+            "{}: two replays disagree",
+            spec.name
+        );
+        assert_eq!(t1, t2, "{}: re-captured traces disagree", spec.name);
+        assert_eq!(t1, trace, "{}: capture/replay loop not closed", spec.name);
+    });
+}
+
+#[test]
+fn churn_scenario_records_membership_events() {
+    let spec = ScenarioSpec::by_name("worker_churn").unwrap().with_tasks(180);
+    let (report, trace) = spec.capture().expect("churn capture");
+    assert_eq!(trace.churns(), 2, "join + leave must both be recorded");
+    // the churn swap shows up in the swap history with its reason
+    assert!(
+        report.swaps.iter().any(|(_, r)| r == "churn"),
+        "membership change must force a re-plan, swaps: {:?}",
+        report.swaps
+    );
+    // the joiner (id 4) served between its join and its leave
+    let scripts = trace.service_scripts();
+    assert_eq!(scripts.len(), 5);
+    assert!(
+        !scripts[4].is_empty(),
+        "joined worker never drew a single task"
+    );
+}
+
+#[test]
+fn straggler_scenario_detects_drift() {
+    let spec = ScenarioSpec::by_name("correlated_stragglers").unwrap();
+    let (report, trace) = spec.capture().expect("straggler capture");
+    assert!(
+        report.swaps.iter().any(|(_, r)| r == "drift"),
+        "correlated straggler onset must trigger a drift swap, got {:?}",
+        report.swaps
+    );
+    assert!(trace.reopts() >= 1);
+}
+
+#[test]
+fn empirical_refit_plan_is_deterministic_and_measured() {
+    let spec = ScenarioSpec::by_name("empirical_refit")
+        .unwrap()
+        .with_tasks(200);
+    let (_, trace) = spec.capture().expect("refit capture");
+    let p1 = spec.refit_plan(&trace).expect("refit plan feasible");
+    let p2 = spec.refit_plan(&trace).expect("refit plan feasible");
+    assert_eq!(p1.allocation.slot_server, p2.allocation.slot_server);
+    assert_eq!(p1.score.mean.to_bits(), p2.score.mean.to_bits());
+    assert_eq!(p1.score.p99.to_bits(), p2.score.p99.to_bits());
+    assert!(p1.score.mean.is_finite() && p1.score.mean > 0.0);
+}
