@@ -3,12 +3,16 @@
 //!
 //! For each bench scenario (heterogeneous pool, DAG pipeline jobs,
 //! heavy-tail pool) this runs the cross-job swap refinement serial
-//! reference pass and the wave engine across shard counts {1, 2, 8},
-//! verifies every configuration produces bit-identical plans to the
-//! scenario's serial reference, and emits a machine-readable
-//! `BENCH_multijob.json` (schema documented in `docs/BENCHMARKS.md`)
-//! so the perf trajectory of the multi-job engine is recorded across
-//! workload shapes, not anecdotal.
+//! reference pass and then the wave and incremental engines across
+//! shard counts {1, 2, 8}. Every configuration's plans are checked
+//! bit-identical to the scenario's serial reference BEFORE any timing
+//! loop runs — a divergent engine fails the run immediately with exit
+//! code 1, so a fast-but-wrong engine can never post a number. The
+//! harness emits a machine-readable `BENCH_multijob.json` (schema
+//! documented in `docs/BENCHMARKS.md`); incremental rows carry an
+//! additive `memo` object recording hit/miss/invalidation counters and
+//! the per-round scoring trajectory, so the memo's effectiveness is
+//! part of the recorded perf history.
 //!
 //! ```text
 //! cargo run --release --example multijob_bench            # full matrix
@@ -38,28 +42,23 @@ struct BenchScenario {
     servers: Vec<Server>,
 }
 
-fn scenarios(smoke: bool) -> Vec<BenchScenario> {
-    // heterogeneous pool: the paper's Fig. 6 job plus light tandem /
-    // fork-join companions (the original multijob bench workload)
-    let hetero = if smoke {
-        BenchScenario {
-            name: "hetero_pool",
-            jobs: vec![Workflow::fig6(), Workflow::tandem(3, 1.0)],
-            servers: Server::pool_exponential(&[14.0, 12.0, 10.0, 9.0, 8.0, 7.0, 6.0, 5.0, 4.0]),
-        }
-    } else {
-        BenchScenario {
-            name: "hetero_pool",
-            jobs: vec![
-                Workflow::fig6(),
-                Workflow::tandem(3, 1.0),
-                Workflow::forkjoin(2, 2.0),
-                Workflow::tandem(2, 3.0),
-            ],
-            servers: Server::pool_exponential(&[
-                18.0, 16.0, 14.0, 12.0, 11.0, 10.0, 9.0, 8.0, 7.5, 7.0, 6.0, 5.0, 4.5, 4.0,
-            ]),
-        }
+fn scenarios() -> Vec<BenchScenario> {
+    // heterogeneous pool: the paper's Fig. 6 job plus tandem / fork-join
+    // companions. Four jobs, not two, even in smoke: with fewer jobs a
+    // single applied swap touches every plan and the memo can never hit,
+    // so the smoke run would not exercise the incremental engine's whole
+    // point. Smoke keeps its cost down via the pinned coarse grid.
+    let hetero = BenchScenario {
+        name: "hetero_pool",
+        jobs: vec![
+            Workflow::fig6(),
+            Workflow::tandem(3, 1.0),
+            Workflow::forkjoin(2, 2.0),
+            Workflow::tandem(2, 3.0),
+        ],
+        servers: Server::pool_exponential(&[
+            18.0, 16.0, 14.0, 12.0, 11.0, 10.0, 9.0, 8.0, 7.5, 7.0, 6.0, 5.0, 4.5, 4.0,
+        ]),
     };
 
     // DAG pipeline: the zoo's TTSP-reduced stage graph (8 slots) plus a
@@ -97,6 +96,58 @@ fn scenarios(smoke: bool) -> Vec<BenchScenario> {
     vec![hetero, dag, heavy]
 }
 
+/// Bit-level plan identity: allocation, grid, and score bits must all
+/// agree (`to_bits`, not `==`, so a `-0.0`/`0.0` slip is caught too).
+fn plans_identical(got: &[JobPlan], reference: &[JobPlan]) -> bool {
+    got.len() == reference.len()
+        && got.iter().zip(reference.iter()).all(|(g, r)| {
+            g.alloc == r.alloc
+                && g.score.mean.to_bits() == r.score.mean.to_bits()
+                && g.score.p99.to_bits() == r.score.p99.to_bits()
+                && g.grid == r.grid
+        })
+}
+
+/// Everything needed to write `BENCH_multijob.json`, bundled so the
+/// report can also be flushed mid-run when an engine diverges.
+struct ReportCtx {
+    out_path: String,
+    cpus: usize,
+    iters: usize,
+    warmup: usize,
+    pinned: Option<GridSpec>,
+    smoke: bool,
+}
+
+impl ReportCtx {
+    fn write(&self, scenario_cfgs: &[Json], results: &[Json], identical: bool) {
+        let grid_json = match self.pinned {
+            Some(g) => obj(vec![("dt", Json::Num(g.dt)), ("n", Json::Num(g.n as f64))]),
+            None => Json::Str("auto".into()),
+        };
+        let report = obj(vec![
+            ("bench", Json::Str("multijob_matrix".into())),
+            ("crate_version", Json::Str(env!("CARGO_PKG_VERSION").into())),
+            (
+                "config",
+                obj(vec![
+                    ("scenarios", Json::Arr(scenario_cfgs.to_vec())),
+                    ("cpus", Json::Num(self.cpus as f64)),
+                    ("swap_rounds", Json::Num(MultiJobConfig::default().swap_rounds as f64)),
+                    ("max_wave", Json::Num(MultiJobConfig::default().max_wave as f64)),
+                    ("iters", Json::Num(self.iters as f64)),
+                    ("warmup", Json::Num(self.warmup as f64)),
+                    ("grid", grid_json),
+                    ("smoke", Json::Bool(self.smoke)),
+                ]),
+            ),
+            ("results", Json::Arr(results.to_vec())),
+            ("identical", Json::Bool(identical)),
+        ]);
+        std::fs::write(&self.out_path, report.to_string() + "\n").expect("write BENCH json");
+    }
+}
+
 fn main() {
     let cli = Cli::new(
         "multijob_bench",
@@ -105,7 +156,7 @@ fn main() {
     .opt("out", "BENCH_multijob.json", "output path for the JSON report")
     .opt("iters", "3", "measured iterations per configuration")
     .opt("warmup", "1", "unmeasured warmup iterations")
-    .flag("smoke", "smaller hetero job set + pinned coarse grid (CI smoke run)");
+    .flag("smoke", "pinned coarse grid + 1 iteration (CI smoke run)");
     let argv: Vec<String> = std::env::args().skip(1).collect();
     let args = match cli.parse(&argv) {
         Ok(a) => a,
@@ -139,8 +190,16 @@ fn main() {
     let cpus = std::thread::available_parallelism()
         .map(|n| n.get())
         .unwrap_or(1);
+    let ctx = ReportCtx {
+        out_path,
+        cpus,
+        iters,
+        warmup,
+        pinned,
+        smoke,
+    };
 
-    let matrix = scenarios(smoke);
+    let matrix = scenarios();
     println!(
         "multijob_bench: {} scenarios, {cpus} cpus, iters {iters}, warmup {warmup}{}",
         matrix.len(),
@@ -149,7 +208,6 @@ fn main() {
 
     let mut results: Vec<Json> = Vec::new();
     let mut scenario_cfgs: Vec<Json> = Vec::new();
-    let mut identical = true;
 
     for sc in &matrix {
         let jobs: Vec<&Workflow> = sc.jobs.iter().collect();
@@ -163,15 +221,15 @@ fn main() {
         let mut serial_planner = Planner::new(jobs[0], &sc.servers)
             .objective(Objective::Mean)
             .swap_engine(SwapEngine::Serial);
-        if let Some(g) = pinned {
+        if let Some(g) = ctx.pinned {
             serial_planner = serial_planner.grid(g);
         }
         let reference = serial_planner.plan_jobs(&jobs).expect("job set is feasible");
         let t_serial = bench(warmup, iters, || serial_planner.plan_jobs(&jobs).unwrap());
         let ref_objective = cluster_objective(&reference, &jobs, Objective::Mean);
         println!(
-            "  {:<12} serial   : {:>10.6} s  (objective {:.4})",
-            sc.name, t_serial.mean_s, ref_objective
+            "  {:<12} {:<16}: {:>10.6} s  (objective {:.4})",
+            sc.name, "serial", t_serial.mean_s, ref_objective
         );
         results.push(obj(vec![
             ("scenario", Json::Str(sc.name.into())),
@@ -183,72 +241,121 @@ fn main() {
             ("cluster_objective", Json::Num(ref_objective)),
         ]));
 
-        // wave engine × shard counts, each checked bit-identical first
-        for shards in [1usize, 2, 8] {
-            let backend = ShardedBackend::new(&AnalyticBackend, shards);
-            let mut planner = Planner::new(jobs[0], &sc.servers)
-                .objective(Objective::Mean)
-                .backend(&backend);
-            if let Some(g) = pinned {
-                planner = planner.grid(g);
+        // wave and incremental engines × shard counts
+        for (engine_name, engine) in [
+            ("wave", SwapEngine::Wave),
+            ("incremental", SwapEngine::Incremental),
+        ] {
+            for shards in [1usize, 2, 8] {
+                let backend = ShardedBackend::new(&AnalyticBackend, shards);
+                let mut planner = Planner::new(jobs[0], &sc.servers)
+                    .objective(Objective::Mean)
+                    .backend(&backend)
+                    .swap_engine(engine);
+                if let Some(g) = ctx.pinned {
+                    planner = planner.grid(g);
+                }
+                // identity is the gate, timing is the payload: check the
+                // plans against the serial reference BEFORE any timing
+                // loop so a divergent engine can never post a number
+                let (got, stats) = planner.plan_jobs_report(&jobs).expect("job set is feasible");
+                if !plans_identical(&got, &reference) {
+                    eprintln!(
+                        "multijob_bench: {engine_name} x{shards} plans diverged from the \
+                         serial reference on scenario '{}'",
+                        sc.name
+                    );
+                    ctx.write(&scenario_cfgs, &results, false);
+                    std::process::exit(1);
+                }
+                // every side is accounted for: fresh + memo = 2 sides
+                // per candidate exchange, every round, any engine
+                for (i, r) in stats.rounds.iter().enumerate() {
+                    assert_eq!(
+                        r.scored + r.memo_hits,
+                        2 * r.candidates,
+                        "'{}' {engine_name} x{shards} round {i}: side accounting broke",
+                        sc.name
+                    );
+                }
+                // when pairs survive round 1 untouched the memo must
+                // actually pay: hits land in round 2 and scoring work
+                // drops below the 2-sides-per-candidate ceiling
+                if engine == SwapEngine::Incremental
+                    && stats.rounds.len() >= 2
+                    && jobs.len() >= 2 * stats.rounds[0].applied + 2
+                {
+                    assert!(
+                        stats.rounds[1].memo_hits > 0 && stats.hit_rate() > 0.0,
+                        "'{}' x{shards}: pairs survived round 1 untouched but the memo \
+                         never hit",
+                        sc.name
+                    );
+                    assert!(
+                        stats.rounds[1].scored < 2 * stats.rounds[1].candidates,
+                        "'{}' x{shards}: memo hits saved no scoring work after round 1",
+                        sc.name
+                    );
+                }
+                let t = bench(warmup, iters, || planner.plan_jobs(&jobs).unwrap());
+                let objective = cluster_objective(&got, &jobs, Objective::Mean);
+                let label = format!("{engine_name} x{shards}");
+                if engine == SwapEngine::Incremental {
+                    println!(
+                        "  {:<12} {label:<16}: {:>10.6} s  (speedup {:.2}x, memo hit rate {:.3})",
+                        sc.name,
+                        t.mean_s,
+                        t_serial.mean_s / t.mean_s,
+                        stats.hit_rate()
+                    );
+                } else {
+                    println!(
+                        "  {:<12} {label:<16}: {:>10.6} s  (speedup {:.2}x)",
+                        sc.name,
+                        t.mean_s,
+                        t_serial.mean_s / t.mean_s
+                    );
+                }
+                let mut row = vec![
+                    ("scenario", Json::Str(sc.name.into())),
+                    ("engine", Json::Str(engine_name.into())),
+                    ("shards", Json::Num(shards as f64)),
+                    ("mean_s", Json::Num(t.mean_s)),
+                    ("std_s", Json::Num(t.std_s)),
+                    ("speedup_vs_serial", Json::Num(t_serial.mean_s / t.mean_s)),
+                    ("cluster_objective", Json::Num(objective)),
+                ];
+                if engine == SwapEngine::Incremental {
+                    let rounds_json: Vec<Json> = stats
+                        .rounds
+                        .iter()
+                        .map(|r| {
+                            obj(vec![
+                                ("candidates", Json::Num(r.candidates as f64)),
+                                ("scored", Json::Num(r.scored as f64)),
+                                ("memo_hits", Json::Num(r.memo_hits as f64)),
+                                ("applied", Json::Num(r.applied as f64)),
+                            ])
+                        })
+                        .collect();
+                    row.push((
+                        "memo",
+                        obj(vec![
+                            ("hits", Json::Num(stats.memo_hits as f64)),
+                            ("misses", Json::Num(stats.memo_misses as f64)),
+                            ("invalidated", Json::Num(stats.memo_invalidated as f64)),
+                            ("hit_rate", Json::Num(stats.hit_rate())),
+                            ("rounds", Json::Arr(rounds_json)),
+                        ]),
+                    ));
+                }
+                results.push(obj(row));
             }
-            let got = planner.plan_jobs(&jobs).expect("job set is feasible");
-            let same = got.len() == reference.len()
-                && got.iter().zip(reference.iter()).all(|(g, r)| {
-                    g.alloc == r.alloc
-                        && g.score.mean == r.score.mean
-                        && g.score.p99 == r.score.p99
-                        && g.grid == r.grid
-                });
-            identical &= same;
-            let t = bench(warmup, iters, || planner.plan_jobs(&jobs).unwrap());
-            let objective = cluster_objective(&got, &jobs, Objective::Mean);
-            println!(
-                "  {:<12} wave x{shards:<2} : {:>10.6} s  (speedup {:.2}x, identical: {same})",
-                sc.name,
-                t.mean_s,
-                t_serial.mean_s / t.mean_s
-            );
-            results.push(obj(vec![
-                ("scenario", Json::Str(sc.name.into())),
-                ("engine", Json::Str("wave".into())),
-                ("shards", Json::Num(shards as f64)),
-                ("mean_s", Json::Num(t.mean_s)),
-                ("std_s", Json::Num(t.std_s)),
-                ("speedup_vs_serial", Json::Num(t_serial.mean_s / t.mean_s)),
-                ("cluster_objective", Json::Num(objective)),
-            ]));
         }
     }
 
-    let grid_json = match pinned {
-        Some(g) => obj(vec![("dt", Json::Num(g.dt)), ("n", Json::Num(g.n as f64))]),
-        None => Json::Str("auto".into()),
-    };
-    let report = obj(vec![
-        ("bench", Json::Str("multijob_matrix".into())),
-        ("crate_version", Json::Str(env!("CARGO_PKG_VERSION").into())),
-        (
-            "config",
-            obj(vec![
-                ("scenarios", Json::Arr(scenario_cfgs)),
-                ("cpus", Json::Num(cpus as f64)),
-                ("swap_rounds", Json::Num(MultiJobConfig::default().swap_rounds as f64)),
-                ("max_wave", Json::Num(MultiJobConfig::default().max_wave as f64)),
-                ("iters", Json::Num(iters as f64)),
-                ("warmup", Json::Num(warmup as f64)),
-                ("grid", grid_json),
-                ("smoke", Json::Bool(smoke)),
-            ]),
-        ),
-        ("results", Json::Arr(results)),
-        ("identical", Json::Bool(identical)),
-    ]);
-
-    std::fs::write(&out_path, report.to_string() + "\n").expect("write BENCH json");
-    println!("wrote {out_path} (identical: {identical})");
-    if !identical {
-        eprintln!("multijob_bench: wave plans diverged from a serial reference");
-        std::process::exit(1);
-    }
+    // a divergence exits above, so reaching this point means every
+    // engine × shards configuration matched its serial reference
+    ctx.write(&scenario_cfgs, &results, true);
+    println!("wrote {} (identical: true)", ctx.out_path);
 }

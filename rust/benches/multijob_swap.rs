@@ -1,9 +1,12 @@
 //! PERF — wave-batched cross-job swap refinement: the multi-job
-//! engine's serial reference pass vs the wave engine, across shard
-//! counts {1, 2, 8}. The cross-job swap phase scores every
+//! engine's serial reference pass vs the wave and incremental engines,
+//! across shard counts {1, 2, 8}. The cross-job swap phase scores every
 //! (job-pair × server-pair) exchange per round; the wave engine turns
 //! that into wide `score_batch` calls a `ShardedBackend` fans across
 //! worker threads — the last hot loop PR 3's sharding could not reach.
+//! The incremental engine additionally carries a cross-round memo
+//! (`sched::memo`) so rounds after the first only re-score pair-waves
+//! touching a mutated plan; its rows include the memo counters.
 //!
 //! Documented in docs/BENCHMARKS.md. Writes bench_out/multijob_swap.csv;
 //! the reproducible JSON twin is `examples/multijob_bench.rs`
@@ -80,6 +83,72 @@ fn main() {
         ]);
         csv.row(&[
             format!("wave_x{shards}_speedup"),
+            format!("{speedup:.3}"),
+            "x".into(),
+        ]);
+    }
+    // incremental engine × shard counts: same bit-identity gate before
+    // any timing, plus the memo counters from a single reported run
+    // (the engine is deterministic, so one report speaks for all)
+    let mut memo_logged = false;
+    for shards in [1usize, 2, 8] {
+        let backend = ShardedBackend::new(&AnalyticBackend, shards);
+        let planner = Planner::new(&j1, &servers)
+            .objective(Objective::Mean)
+            .backend(&backend)
+            .swap_engine(SwapEngine::Incremental);
+        let (got, stats) = planner.plan_jobs_report(&jobs).expect("feasible");
+        assert_eq!(got.len(), reference.len());
+        for (g, r) in got.iter().zip(reference.iter()) {
+            assert_eq!(g.alloc, r.alloc, "incremental x{shards} diverged from serial");
+            assert_eq!(g.score.mean, r.score.mean);
+            assert_eq!(g.score.p99, r.score.p99);
+            assert_eq!(g.grid, r.grid);
+        }
+        if !memo_logged {
+            memo_logged = true;
+            println!(
+                "memo (any shard count)    : {} hits / {} misses / {} invalidated (hit rate {:.3})",
+                stats.memo_hits,
+                stats.memo_misses,
+                stats.memo_invalidated,
+                stats.hit_rate()
+            );
+            csv.row(&[
+                "incremental_memo_hit_rate".into(),
+                format!("{:.4}", stats.hit_rate()),
+                "ratio".into(),
+            ]);
+            csv.row(&[
+                "incremental_memo_hits".into(),
+                format!("{}", stats.memo_hits),
+                "sides".into(),
+            ]);
+            csv.row(&[
+                "incremental_memo_misses".into(),
+                format!("{}", stats.memo_misses),
+                "sides".into(),
+            ]);
+            csv.row(&[
+                "incremental_memo_invalidated".into(),
+                format!("{}", stats.memo_invalidated),
+                "sides".into(),
+            ]);
+        }
+        let t = bench(1, 3, || planner.plan_jobs(&jobs).unwrap());
+        let speedup = t_serial.mean_s / t.mean_s;
+        best_speedup = best_speedup.max(speedup);
+        println!(
+            "incremental, {shards} shard(s)   : {} (speedup {speedup:.2}x)",
+            fmt_time(t.mean_s)
+        );
+        csv.row(&[
+            format!("incremental_x{shards}_plan_jobs_s"),
+            format!("{:.6}", t.mean_s),
+            "s".into(),
+        ]);
+        csv.row(&[
+            format!("incremental_x{shards}_speedup"),
             format!("{speedup:.3}"),
             "x".into(),
         ]);

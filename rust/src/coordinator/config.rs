@@ -1,5 +1,6 @@
 //! Coordinator configuration (programmatic + JSON).
 
+use crate::sched::multijob::SwapEngine;
 use crate::sched::{Objective, ResponseModel};
 use crate::util::json::Json;
 
@@ -33,6 +34,11 @@ pub struct CoordinatorConfig {
     pub model: ResponseModel,
     /// Objective for the optimal policy.
     pub objective: Objective,
+    /// Swap engine multi-job planning (`run_multi`) refines with. All
+    /// engines produce bit-identical plans; the knob trades raw wave
+    /// throughput ([`SwapEngine::Wave`]) against memoized incremental
+    /// rounds ([`SwapEngine::Incremental`]).
+    pub swap_engine: SwapEngine,
 }
 
 impl Default for CoordinatorConfig {
@@ -46,6 +52,7 @@ impl Default for CoordinatorConfig {
             policy: Policy::Proposed,
             model: ResponseModel::Mm1,
             objective: Objective::Mean,
+            swap_engine: SwapEngine::Wave,
         }
     }
 }
@@ -95,6 +102,14 @@ impl CoordinatorConfig {
                 other => return Err(format!("unknown objective '{other}'")),
             };
         }
+        if let Some(e) = v.get("swap_engine").and_then(Json::as_str) {
+            c.swap_engine = match e {
+                "wave" => SwapEngine::Wave,
+                "serial" => SwapEngine::Serial,
+                "incremental" => SwapEngine::Incremental,
+                other => return Err(format!("unknown swap_engine '{other}'")),
+            };
+        }
         Ok(c)
     }
 }
@@ -107,6 +122,7 @@ mod tests {
     fn defaults_are_sane() {
         let c = CoordinatorConfig::default();
         assert_eq!(c.policy, Policy::Proposed);
+        assert_eq!(c.swap_engine, SwapEngine::Wave);
         assert!(c.monitor_window >= c.min_fit_samples);
     }
 
@@ -115,7 +131,7 @@ mod tests {
         let c = CoordinatorConfig::from_json(
             r#"{"seed": 7, "policy": "baseline", "model": "mg1",
                 "objective": "p99", "reopt_every": 250,
-                "reopt_on_drift_only": false}"#,
+                "reopt_on_drift_only": false, "swap_engine": "incremental"}"#,
         )
         .unwrap();
         assert_eq!(c.seed, 7);
@@ -124,11 +140,26 @@ mod tests {
         assert_eq!(c.objective, Objective::P99);
         assert_eq!(c.reopt_every, 250);
         assert!(!c.reopt_on_drift_only);
+        assert_eq!(c.swap_engine, SwapEngine::Incremental);
+    }
+
+    #[test]
+    fn every_swap_engine_name_parses() {
+        for (name, engine) in [
+            ("wave", SwapEngine::Wave),
+            ("serial", SwapEngine::Serial),
+            ("incremental", SwapEngine::Incremental),
+        ] {
+            let c =
+                CoordinatorConfig::from_json(&format!(r#"{{"swap_engine": "{name}"}}"#)).unwrap();
+            assert_eq!(c.swap_engine, engine);
+        }
     }
 
     #[test]
     fn bad_policy_rejected() {
         assert!(CoordinatorConfig::from_json(r#"{"policy": "nope"}"#).is_err());
+        assert!(CoordinatorConfig::from_json(r#"{"swap_engine": "turbo"}"#).is_err());
         assert!(CoordinatorConfig::from_json("{bad").is_err());
     }
 }

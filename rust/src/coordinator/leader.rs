@@ -348,6 +348,7 @@ impl Coordinator {
         let plans = Planner::new(wfs[0], &self.pool_view)
             .model(self.cfg.model)
             .objective(objective)
+            .swap_engine(self.cfg.swap_engine)
             .plan_jobs(&wfs)?;
 
         // merge arrivals: (time, job index, seq)

@@ -127,7 +127,10 @@ pub mod prelude {
     pub use crate::sched::capacity::{
         max_load_scale, max_throughput, max_throughput_under_sla, required_speedup, Sla,
     };
-    pub use crate::sched::multijob::{cluster_objective, JobPlan, MultiJobConfig, SwapEngine};
+    pub use crate::sched::memo::SwapMemo;
+    pub use crate::sched::multijob::{
+        cluster_objective, JobPlan, MultiJobConfig, RoundStats, SwapEngine, SwapStats,
+    };
     pub use crate::sched::server::Server;
     pub use crate::sched::{Allocation, Objective, ResponseModel, SchedError, SplitPolicy};
     pub use crate::sim::network::{simulate, SimConfig, SimResult};

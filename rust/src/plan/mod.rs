@@ -73,7 +73,7 @@ pub use crate::compose::backend::{
     AnalyticBackend, ChunkPolicy, EmpiricalBackend, ScoreBackend, ShardedBackend,
 };
 pub use crate::runtime::scorer::RuntimeBackend;
-pub use crate::sched::multijob::{MultiJobConfig, SwapEngine};
+pub use crate::sched::multijob::{MultiJobConfig, RoundStats, SwapEngine, SwapStats};
 pub use policy::{
     AllocationPolicy, BaselinePolicy, OptimalPolicy, PlanContext, ProposedPolicy, SdccPolicy,
 };
@@ -81,7 +81,7 @@ pub use policy::{
 use crate::compose::grid::GridSpec;
 use crate::compose::score::Score;
 use crate::flow::Workflow;
-use crate::sched::multijob::{multijob_allocate_cfg, JobPlan};
+use crate::sched::multijob::{multijob_allocate_cfg, multijob_allocate_report, JobPlan};
 use crate::sched::response::ResponseModel;
 use crate::sched::server::Server;
 use crate::sched::{Allocation, Objective, SchedError};
@@ -247,9 +247,12 @@ impl<'a> Planner<'a> {
     }
 
     /// Select how [`Planner::plan_jobs`] scores its cross-job swap
-    /// candidates: the wave-batched engine (default) or the serial
-    /// reference pass. Both produce bit-identical plans for the
-    /// built-in backends; see [`SwapEngine`].
+    /// candidates: the wave-batched engine (default), the serial
+    /// reference pass, or the memoized incremental engine
+    /// ([`SwapEngine::Incremental`], which skips re-scoring pairs
+    /// untouched since the previous round). All three produce
+    /// bit-identical plans for the built-in backends; see
+    /// [`SwapEngine`].
     #[must_use]
     pub fn swap_engine(mut self, engine: SwapEngine) -> Planner<'a> {
         self.multijob.engine = engine;
@@ -355,6 +358,26 @@ impl<'a> Planner<'a> {
     /// the job set.
     pub fn plan_jobs(&self, jobs: &[&Workflow]) -> Result<Vec<JobPlan>, SchedError> {
         multijob_allocate_cfg(
+            jobs,
+            self.servers,
+            self.model,
+            self.objective,
+            self.backend_ref(),
+            self.grid,
+            &self.multijob,
+        )
+    }
+
+    /// [`Planner::plan_jobs`] plus swap-phase telemetry: the plans are
+    /// identical, and the returned [`SwapStats`] carries the per-round
+    /// candidate/scored/memo-hit counters (all memo fields zero under
+    /// the non-incremental engines). Use this to observe how much work
+    /// [`SwapEngine::Incremental`] skipped.
+    pub fn plan_jobs_report(
+        &self,
+        jobs: &[&Workflow],
+    ) -> Result<(Vec<JobPlan>, SwapStats), SchedError> {
+        multijob_allocate_report(
             jobs,
             self.servers,
             self.model,

@@ -40,6 +40,7 @@ use crate::flow::Workflow;
 use crate::plan::{Plan, Planner, ProposedPolicy};
 use crate::scenario::record::ExecTrace;
 use crate::scenario::replay::{drive, Replay};
+use crate::sched::multijob::SwapEngine;
 use crate::sched::server::Server;
 use crate::sched::{ResponseModel, SchedError};
 use crate::sim::trace::{ArrivalProcess, Trace};
@@ -130,6 +131,12 @@ pub struct ScenarioSpec {
     pub n_tasks: usize,
     /// Base arrival process.
     pub arrival: ArrivalProcess,
+    /// Swap engine the coordinator's multi-job planner
+    /// (`Coordinator::run_multi`) refines with. Capture/replay plan
+    /// single jobs, so every engine reproduces the golden corpus
+    /// bit-identically; the knob exists so the corpus can assert
+    /// exactly that.
+    pub swap_engine: SwapEngine,
 }
 
 impl ScenarioSpec {
@@ -142,6 +149,7 @@ impl ScenarioSpec {
                 seed: 101,
                 n_tasks: 400,
                 arrival: ArrivalProcess::Poisson { rate: 2.0 },
+                swap_engine: SwapEngine::Wave,
             },
             ScenarioSpec {
                 name: "correlated_stragglers".into(),
@@ -149,6 +157,7 @@ impl ScenarioSpec {
                 seed: 211,
                 n_tasks: 700,
                 arrival: ArrivalProcess::Poisson { rate: 1.5 },
+                swap_engine: SwapEngine::Wave,
             },
             ScenarioSpec {
                 name: "worker_churn".into(),
@@ -156,6 +165,7 @@ impl ScenarioSpec {
                 seed: 307,
                 n_tasks: 600,
                 arrival: ArrivalProcess::Poisson { rate: 1.0 },
+                swap_engine: SwapEngine::Wave,
             },
             ScenarioSpec {
                 name: "dag_pipeline".into(),
@@ -163,6 +173,7 @@ impl ScenarioSpec {
                 seed: 401,
                 n_tasks: 400,
                 arrival: ArrivalProcess::Poisson { rate: 0.8 },
+                swap_engine: SwapEngine::Wave,
             },
             ScenarioSpec {
                 name: "heavy_tail_extreme".into(),
@@ -170,6 +181,7 @@ impl ScenarioSpec {
                 seed: 503,
                 n_tasks: 400,
                 arrival: ArrivalProcess::Poisson { rate: 0.4 },
+                swap_engine: SwapEngine::Wave,
             },
             ScenarioSpec {
                 name: "empirical_refit".into(),
@@ -177,6 +189,7 @@ impl ScenarioSpec {
                 seed: 601,
                 n_tasks: 400,
                 arrival: ArrivalProcess::Paced { interval: 0.5 },
+                swap_engine: SwapEngine::Wave,
             },
         ]
     }
@@ -195,6 +208,13 @@ impl ScenarioSpec {
     /// Same scenario, different nominal length.
     pub fn with_tasks(mut self, n_tasks: usize) -> ScenarioSpec {
         self.n_tasks = n_tasks;
+        self
+    }
+
+    /// Same scenario, different multi-job swap engine (the golden
+    /// suite sweeps this to pin engine-invariance of the corpus).
+    pub fn with_swap_engine(mut self, engine: SwapEngine) -> ScenarioSpec {
+        self.swap_engine = engine;
         self
     }
 
@@ -220,7 +240,7 @@ impl ScenarioSpec {
                 let tree = dag
                     .to_series_parallel(0, 4)
                     .expect("pipeline dag is series-parallel by construction");
-                Workflow::new(tree, 1.0)
+                Workflow::new(tree, 1.0).expect("reduced pipeline workflow is valid")
             }
             ScenarioClass::HeavyTailExtreme => Workflow::chain(2, 2, 0.5),
         }
@@ -292,6 +312,7 @@ impl ScenarioSpec {
         let mut cfg = CoordinatorConfig {
             seed: self.seed,
             reopt_every: 0,
+            swap_engine: self.swap_engine,
             ..Default::default()
         };
         match self.class {

@@ -1,0 +1,328 @@
+//! Cross-round memoization for the incremental swap engine
+//! ([`SwapEngine::Incremental`](crate::sched::multijob::SwapEngine)).
+//!
+//! A swap round only mutates the two plans whose exchange was applied,
+//! yet the wave engine re-enumerates and re-scores *every*
+//! (job-pair × server-pair) exchange each round. [`SwapMemo`] keys a
+//! pair's fully-scored exchange list by the exact
+//! [`AllocFingerprint`]s of both incumbent allocations; on the next
+//! round, a pair whose two plans are untouched hits the memo and skips
+//! both enumeration and scoring, while pairs touching a mutated plan
+//! are invalidated eagerly ([`SwapMemo::invalidate_touching`]) and
+//! re-scored fresh through the same `score_batch` wave path. Because
+//! the fingerprint is an exact structural key — not a lossy hash — a
+//! hit reproduces bit-for-bit what fresh enumeration would have
+//! produced, which is what lets the incremental engine stay
+//! bit-identical to the wave and serial oracles
+//! (`tests/incremental_equivalence.rs`).
+//!
+//! The table exposes hit/miss/invalidation counters (in candidate
+//! *sides*, i.e. individual scores, two per exchange) so tests and the
+//! bench harness can assert the memo actually skips work:
+//! `scored + hits == 2 × candidates` holds for every round.
+
+use crate::compose::score::Score;
+use crate::sched::Allocation;
+use std::collections::HashMap;
+
+/// Exact structural fingerprint of an [`Allocation`]: the per-slot
+/// `(server id, rate bits)` sequence. Two allocations fingerprint equal
+/// **iff** they are bit-identical (`to_bits` on every rate), so a memo
+/// hit can never alias two different incumbents. Construction is
+/// deterministic — it depends only on the allocation's own vectors,
+/// never on hash-map iteration order or addresses.
+#[derive(Clone, Debug, PartialEq, Eq, Hash)]
+pub struct AllocFingerprint(Box<[(usize, u64)]>);
+
+impl AllocFingerprint {
+    /// Fingerprint `alloc` exactly (slot order preserved).
+    pub fn of(alloc: &Allocation) -> AllocFingerprint {
+        AllocFingerprint(
+            alloc
+                .slot_server
+                .iter()
+                .zip(&alloc.slot_rate)
+                .map(|(&s, &r)| (s, r.to_bits()))
+                .collect(),
+        )
+    }
+
+    /// FNV-1a digest of the fingerprint, for compact display in
+    /// diagnostics. Equality checks always use the full structural key;
+    /// the digest is never used for lookup.
+    pub fn digest64(&self) -> u64 {
+        let mut h: u64 = 0xcbf29ce484222325;
+        let mut eat = |x: u64| {
+            for byte in x.to_le_bytes() {
+                h ^= byte as u64;
+                h = h.wrapping_mul(0x100000001b3);
+            }
+        };
+        for &(s, r) in self.0.iter() {
+            eat(s as u64);
+            eat(r);
+        }
+        h
+    }
+}
+
+/// One cached, fully-scored exchange of a job pair: the two
+/// rate-scheduled allocations plus their scores (full [`Score`]s,
+/// including the pdf, so replaying a hit is indistinguishable from
+/// fresh scoring).
+#[derive(Clone, Debug)]
+pub struct CachedExchange {
+    /// The `a`-side regrouped allocation (global server ids).
+    pub alloc_a: Allocation,
+    /// The `b`-side regrouped allocation (global server ids).
+    pub alloc_b: Allocation,
+    /// Score of `alloc_a` on the shared grid.
+    pub score_a: Score,
+    /// Score of `alloc_b` on the shared grid.
+    pub score_b: Score,
+}
+
+/// A pair's cached exchange list, pinned to the exact incumbents it was
+/// enumerated against.
+#[derive(Clone, Debug)]
+struct PairEntry {
+    fp_a: AllocFingerprint,
+    fp_b: AllocFingerprint,
+    exchanges: Vec<CachedExchange>,
+}
+
+/// Memo table carried across swap rounds by the incremental engine:
+/// maps a plan pair `(a, b)` (with `a < b`) to its scored exchange
+/// list, guarded by both incumbents' fingerprints.
+///
+/// Counters are in candidate *sides* (individual scores; one exchange
+/// contributes two): [`hits`](SwapMemo::hits) counts sides served from
+/// the table, [`misses`](SwapMemo::misses) sides inserted after fresh
+/// scoring, [`invalidated`](SwapMemo::invalidated) sides dropped
+/// because a plan they were enumerated against was mutated (or, as
+/// defense in depth, because a lookup saw a mismatched fingerprint).
+#[derive(Debug, Default)]
+pub struct SwapMemo {
+    pairs: HashMap<(usize, usize), PairEntry>,
+    hits: usize,
+    misses: usize,
+    invalidated: usize,
+}
+
+impl SwapMemo {
+    /// An empty memo table with zeroed counters.
+    pub fn new() -> SwapMemo {
+        SwapMemo::default()
+    }
+
+    /// Look up pair `(a, b)`'s cached exchanges against the *current*
+    /// incumbent fingerprints. Returns the cached list only when both
+    /// fingerprints match the ones the entry was enumerated under — a
+    /// stale entry (either side mutated) is evicted on sight and
+    /// counted as invalidated, so no stale hit is observable even if a
+    /// caller forgets [`invalidate_touching`](SwapMemo::invalidate_touching).
+    pub fn lookup(
+        &mut self,
+        a: usize,
+        b: usize,
+        fp_a: &AllocFingerprint,
+        fp_b: &AllocFingerprint,
+    ) -> Option<&[CachedExchange]> {
+        let fresh = match self.pairs.get(&(a, b)) {
+            None => return None,
+            Some(e) => e.fp_a == *fp_a && e.fp_b == *fp_b,
+        };
+        if !fresh {
+            let stale = self.pairs.remove(&(a, b)).expect("entry checked above");
+            self.invalidated += 2 * stale.exchanges.len();
+            return None;
+        }
+        let n = self.pairs[&(a, b)].exchanges.len();
+        self.hits += 2 * n;
+        self.pairs.get(&(a, b)).map(|e| e.exchanges.as_slice())
+    }
+
+    /// Cache pair `(a, b)`'s freshly scored exchange list under the
+    /// incumbents it was enumerated against. An empty list is cached
+    /// too — "this pair has no feasible exchange" is itself a result
+    /// worth not recomputing. Replaces any previous entry for the pair.
+    pub fn insert(
+        &mut self,
+        a: usize,
+        b: usize,
+        fp_a: AllocFingerprint,
+        fp_b: AllocFingerprint,
+        exchanges: Vec<CachedExchange>,
+    ) {
+        self.misses += 2 * exchanges.len();
+        self.pairs.insert(
+            (a, b),
+            PairEntry {
+                fp_a,
+                fp_b,
+                exchanges,
+            },
+        );
+    }
+
+    /// Drop every cached pair touching a mutated plan (`mutated[p]` is
+    /// true for plans an applied swap rewrote this round). Indices past
+    /// `mutated`'s length are conservatively treated as mutated.
+    /// Returns the number of sides dropped (also accumulated into
+    /// [`invalidated`](SwapMemo::invalidated)). The retained set and
+    /// the counters depend only on `mutated`, never on hash-map
+    /// iteration order.
+    pub fn invalidate_touching(&mut self, mutated: &[bool]) -> usize {
+        let mut dropped = 0;
+        self.pairs.retain(|&(a, b), e| {
+            let touched = mutated.get(a).copied().unwrap_or(true)
+                || mutated.get(b).copied().unwrap_or(true);
+            if touched {
+                dropped += 2 * e.exchanges.len();
+            }
+            !touched
+        });
+        self.invalidated += dropped;
+        dropped
+    }
+
+    /// Total candidate sides served from the table.
+    pub fn hits(&self) -> usize {
+        self.hits
+    }
+
+    /// Total candidate sides inserted after fresh scoring.
+    pub fn misses(&self) -> usize {
+        self.misses
+    }
+
+    /// Total candidate sides dropped by invalidation (eager or
+    /// lookup-time eviction).
+    pub fn invalidated(&self) -> usize {
+        self.invalidated
+    }
+
+    /// Number of pairs currently cached.
+    pub fn len(&self) -> usize {
+        self.pairs.len()
+    }
+
+    /// True when no pair is cached.
+    pub fn is_empty(&self) -> bool {
+        self.pairs.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn alloc(servers: &[usize], rates: &[f64]) -> Allocation {
+        Allocation {
+            slot_server: servers.to_vec(),
+            slot_rate: rates.to_vec(),
+        }
+    }
+
+    fn exchange(sa: usize, sb: usize) -> CachedExchange {
+        CachedExchange {
+            alloc_a: alloc(&[sa], &[1.0]),
+            alloc_b: alloc(&[sb], &[1.0]),
+            score_a: Score::point(1.0, 0.0, 1.0),
+            score_b: Score::point(2.0, 0.0, 2.0),
+        }
+    }
+
+    #[test]
+    fn fingerprints_are_deterministic_and_exact() {
+        let a = alloc(&[3, 1, 4], &[0.5, 0.25, 0.125]);
+        let b = alloc(&[3, 1, 4], &[0.5, 0.25, 0.125]);
+        assert_eq!(AllocFingerprint::of(&a), AllocFingerprint::of(&b));
+        assert_eq!(
+            AllocFingerprint::of(&a).digest64(),
+            AllocFingerprint::of(&b).digest64()
+        );
+        // any single-bit rate change or server change breaks equality
+        let mut c = alloc(&[3, 1, 4], &[0.5, 0.25, 0.125]);
+        c.slot_rate[1] = f64::from_bits(c.slot_rate[1].to_bits() ^ 1);
+        assert_ne!(AllocFingerprint::of(&a), AllocFingerprint::of(&c));
+        let d = alloc(&[3, 2, 4], &[0.5, 0.25, 0.125]);
+        assert_ne!(AllocFingerprint::of(&a), AllocFingerprint::of(&d));
+        // negative zero is a different incumbent than positive zero
+        let z1 = alloc(&[0], &[0.0]);
+        let z2 = alloc(&[0], &[-0.0]);
+        assert_ne!(AllocFingerprint::of(&z1), AllocFingerprint::of(&z2));
+    }
+
+    #[test]
+    fn lookup_hits_only_on_matching_fingerprints() {
+        let pa = alloc(&[0, 1], &[1.0, 2.0]);
+        let pb = alloc(&[2], &[3.0]);
+        let (fa, fb) = (AllocFingerprint::of(&pa), AllocFingerprint::of(&pb));
+        let mut memo = SwapMemo::new();
+        assert!(memo.lookup(0, 1, &fa, &fb).is_none(), "empty table misses");
+        memo.insert(0, 1, fa.clone(), fb.clone(), vec![exchange(0, 2), exchange(1, 2)]);
+        assert_eq!(memo.misses(), 4);
+        let hit = memo.lookup(0, 1, &fa, &fb).expect("fresh entry hits");
+        assert_eq!(hit.len(), 2);
+        assert_eq!(memo.hits(), 4);
+        // a mutated a-side incumbent must not hit — the stale entry is
+        // evicted and counted, and the pair misses until re-inserted
+        let mutated = alloc(&[5, 1], &[1.0, 2.0]);
+        let fm = AllocFingerprint::of(&mutated);
+        assert!(memo.lookup(0, 1, &fm, &fb).is_none(), "stale entry must not hit");
+        assert_eq!(memo.invalidated(), 4);
+        assert!(memo.is_empty());
+        assert!(memo.lookup(0, 1, &fa, &fb).is_none());
+        assert_eq!(memo.hits(), 4, "no further hits after eviction");
+    }
+
+    #[test]
+    fn invalidation_drops_exactly_the_pairs_touching_a_mutated_plan() {
+        let fp = |s: usize| AllocFingerprint::of(&alloc(&[s], &[1.0]));
+        // insertion order A: (0,1), (0,2), (1,2), (2,3)
+        let mut a = SwapMemo::new();
+        for &(x, y) in &[(0usize, 1usize), (0, 2), (1, 2), (2, 3)] {
+            a.insert(x, y, fp(x), fp(y), vec![exchange(x, y)]);
+        }
+        // insertion order B: reversed — the retained set must agree
+        let mut b = SwapMemo::new();
+        for &(x, y) in &[(2usize, 3usize), (1, 2), (0, 2), (0, 1)] {
+            b.insert(x, y, fp(x), fp(y), vec![exchange(x, y)]);
+        }
+        let mutated = [true, true, false, false];
+        assert_eq!(a.invalidate_touching(&mutated), 6, "three pairs of one exchange");
+        assert_eq!(b.invalidate_touching(&mutated), 6);
+        for memo in [&mut a, &mut b] {
+            assert_eq!(memo.len(), 1, "only (2,3) survives");
+            assert!(memo.lookup(2, 3, &fp(2), &fp(3)).is_some());
+            assert!(memo.lookup(0, 1, &fp(0), &fp(1)).is_none());
+            assert_eq!(memo.invalidated(), 6);
+        }
+        // indices past the mutated slice are conservatively dropped
+        let mut c = SwapMemo::new();
+        c.insert(7, 9, fp(7), fp(9), vec![exchange(7, 9)]);
+        assert_eq!(c.invalidate_touching(&[false; 4]), 2);
+        assert!(c.is_empty());
+    }
+
+    #[test]
+    fn counters_reconcile_with_traffic() {
+        let fp = |s: usize| AllocFingerprint::of(&alloc(&[s], &[1.0]));
+        let mut memo = SwapMemo::new();
+        // empty exchange lists are cached and hit at zero cost
+        memo.insert(0, 1, fp(0), fp(1), Vec::new());
+        assert_eq!(memo.misses(), 0);
+        assert!(memo.lookup(0, 1, &fp(0), &fp(1)).is_some());
+        assert_eq!(memo.hits(), 0, "empty hit contributes zero sides");
+        memo.insert(1, 2, fp(1), fp(2), vec![exchange(1, 2), exchange(2, 1), exchange(1, 1)]);
+        assert_eq!(memo.misses(), 6);
+        for _ in 0..3 {
+            assert_eq!(memo.lookup(1, 2, &fp(1), &fp(2)).unwrap().len(), 3);
+        }
+        assert_eq!(memo.hits(), 18);
+        assert_eq!(memo.invalidate_touching(&[false, true, false]), 6);
+        assert_eq!(memo.invalidated(), 6);
+        assert_eq!(memo.len(), 1, "(0,1) untouched");
+    }
+}

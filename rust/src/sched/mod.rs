@@ -15,7 +15,9 @@
 //!   [`crate::plan::OptimalPolicy`]);
 //! * [`equilibrium`] — Algorithm 2's rate scheduling;
 //! * [`response`] — service-law → response-law queueing models;
-//! * [`multijob`] — pool partitioning across concurrent workflows.
+//! * [`multijob`] — pool partitioning across concurrent workflows;
+//! * [`memo`] — the cross-round swap memo table behind
+//!   [`multijob::SwapEngine::Incremental`].
 //!
 //! The deprecated legacy free functions (`sdcc_allocate`,
 //! `baseline_allocate`, `proposed_allocate`, `optimal_allocate`) were
@@ -26,6 +28,7 @@ pub mod algorithms;
 pub mod allocation;
 pub mod capacity;
 pub mod equilibrium;
+pub mod memo;
 pub mod multijob;
 pub mod optimal;
 pub mod refine;
@@ -34,6 +37,7 @@ pub mod server;
 
 pub use algorithms::{allocate_with, baseline_allocate_split, schedule_rates, SplitPolicy};
 pub use allocation::{Allocation, SchedError};
+pub use memo::{AllocFingerprint, CachedExchange, SwapMemo};
 pub use refine::{propose, refine, refine_with};
 pub use response::ResponseModel;
 

@@ -65,12 +65,27 @@
 //! across worker threads bit-identically — benchmarked in
 //! `benches/multijob_swap.rs` and `examples/multijob_bench.rs`
 //! (`BENCH_multijob.json`; see `docs/BENCHMARKS.md`).
+//!
+//! # Why a memo
+//!
+//! A round only mutates the plans of the (at most two per applied
+//! swap) jobs whose exchange won, yet the wave engine re-enumerates
+//! and re-scores every pair from scratch each round.
+//! [`SwapEngine::Incremental`] carries a [`crate::sched::memo::SwapMemo`]
+//! across rounds: pairs whose incumbents are fingerprint-identical to
+//! the previous round replay their cached scored exchanges, and only
+//! pairs touching a mutated plan are rebuilt (through the same
+//! `score_batch` waves). [`multijob_allocate_report`] exposes the
+//! per-round hit/miss/invalidation counters as [`SwapStats`]. All
+//! three engines are bit-identical; `SwapEngine::Serial` remains the
+//! oracle (`tests/incremental_equivalence.rs`).
 
 use crate::compose::backend::{AnalyticBackend, ScoreBackend};
 use crate::compose::grid::GridSpec;
 use crate::compose::score::Score;
 use crate::flow::Workflow;
 use crate::sched::algorithms::allocate_with;
+use crate::sched::memo::{AllocFingerprint, CachedExchange, SwapMemo};
 use crate::sched::refine::refine_with;
 use crate::sched::response::ResponseModel;
 use crate::sched::schedule_rates;
@@ -91,12 +106,13 @@ pub struct JobPlan {
     pub grid: GridSpec,
 }
 
-/// How the cross-job swap refinement (step 5) executes. Both modes run
-/// the *same* enumeration, selection and tie-break logic and produce
-/// identical plans for any deterministic backend whose `score_batch`
-/// agrees with per-candidate `score` (all built-ins; property-tested in
-/// `tests/backend_equivalence.rs`) — the engine choice is purely about
-/// how candidate scores are obtained.
+/// How the cross-job swap refinement (step 5) executes. Every engine
+/// runs the *same* enumeration, selection and tie-break logic and
+/// produces identical plans for any deterministic backend whose
+/// `score_batch` agrees with per-candidate `score` (all built-ins;
+/// property-tested in `tests/backend_equivalence.rs` and
+/// `tests/incremental_equivalence.rs`) — the engine choice is purely
+/// about how candidate scores are obtained.
 #[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
 pub enum SwapEngine {
     /// Score every candidate through one [`ScoreBackend::score_batch`]
@@ -109,6 +125,18 @@ pub enum SwapEngine {
     /// bit-identity oracle for the wave path and as the serial-loop
     /// baseline in `benches/multijob_swap.rs`.
     Serial,
+    /// The wave engine plus a cross-round memo table
+    /// ([`crate::sched::memo::SwapMemo`]): each round, a job pair
+    /// whose two incumbent allocations are fingerprint-identical to
+    /// the previous round replays its cached scored exchanges instead
+    /// of re-enumerating and re-scoring them; only pairs touching a
+    /// plan mutated by an applied swap are rebuilt (fresh sides go
+    /// through the same `score_batch` wave path as [`SwapEngine::Wave`],
+    /// so sharded backends still parallelize the misses). Turns the
+    /// per-round cost from O(jobs² · servers²) toward
+    /// O(changed-jobs · servers²) while staying bit-identical to both
+    /// other engines (`tests/incremental_equivalence.rs`).
+    Incremental,
 }
 
 /// Knobs for the multi-job cross-job refinement (step 5). Constructed
@@ -128,7 +156,8 @@ pub struct MultiJobConfig {
     /// device-backed batch scorers size their buffers by) and never
     /// changes results — order is preserved.
     pub max_wave: usize,
-    /// Wave-batched scoring or the serial reference pass.
+    /// Wave-batched scoring, the serial reference pass, or the
+    /// memoized incremental engine.
     pub engine: SwapEngine,
 }
 
@@ -149,6 +178,80 @@ impl MultiJobConfig {
         MultiJobConfig {
             engine: SwapEngine::Serial,
             ..MultiJobConfig::default()
+        }
+    }
+
+    /// The incremental configuration: wave-batched scoring plus the
+    /// cross-round memo table (see [`SwapEngine::Incremental`]).
+    pub fn incremental() -> MultiJobConfig {
+        MultiJobConfig {
+            engine: SwapEngine::Incremental,
+            ..MultiJobConfig::default()
+        }
+    }
+}
+
+/// Telemetry from one cross-job swap round (step 5), recorded by
+/// [`multijob_allocate_report`]. For every recorded round the sides
+/// invariant holds: `scored + memo_hits == 2 * candidates` — each
+/// candidate exchange has exactly two sides, and each side is either
+/// scored through the backend or served from the memo table.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct RoundStats {
+    /// Exchange candidates this round ranked over (freshly enumerated
+    /// plus memo-served).
+    pub candidates: usize,
+    /// Candidate sides scored through the [`ScoreBackend`] this round.
+    pub scored: usize,
+    /// Candidate sides served from the memo table this round (always 0
+    /// under [`SwapEngine::Wave`] and [`SwapEngine::Serial`]).
+    pub memo_hits: usize,
+    /// Non-conflicting improving swaps applied this round.
+    pub applied: usize,
+}
+
+/// Swap-phase telemetry for one [`multijob_allocate_report`] call: the
+/// engine that ran, per-round counters, and the memo-table totals
+/// (all zero for the non-incremental engines). Rounds that enumerate
+/// zero candidates terminate the phase without being recorded.
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct SwapStats {
+    /// Engine the swap phase executed with.
+    pub engine: SwapEngine,
+    /// One entry per executed swap round, in order.
+    pub rounds: Vec<RoundStats>,
+    /// Total candidate sides served from the memo table.
+    pub memo_hits: usize,
+    /// Total candidate sides scored fresh and inserted into the memo
+    /// table. Under [`SwapEngine::Incremental`] this equals the total
+    /// `scored` across rounds.
+    pub memo_misses: usize,
+    /// Total candidate sides dropped from the memo table because an
+    /// applied swap mutated a plan they were enumerated against.
+    pub memo_invalidated: usize,
+}
+
+impl SwapStats {
+    fn new(engine: SwapEngine) -> SwapStats {
+        SwapStats {
+            engine,
+            ..SwapStats::default()
+        }
+    }
+
+    /// Total candidate sides scored through the backend across rounds.
+    pub fn scored_total(&self) -> usize {
+        self.rounds.iter().map(|r| r.scored).sum()
+    }
+
+    /// Memo hit rate in `[0, 1]`: hits over hits + misses, `0.0` when
+    /// no side was requested at all.
+    pub fn hit_rate(&self) -> f64 {
+        let total = self.memo_hits + self.memo_misses;
+        if total == 0 {
+            0.0
+        } else {
+            self.memo_hits as f64 / total as f64
         }
     }
 }
@@ -222,8 +325,28 @@ pub fn multijob_allocate_cfg(
     grid: Option<GridSpec>,
     cfg: &MultiJobConfig,
 ) -> Result<Vec<JobPlan>, SchedError> {
+    multijob_allocate_report(jobs, servers, model, objective, backend, grid, cfg)
+        .map(|(plans, _)| plans)
+}
+
+/// [`multijob_allocate_cfg`] plus swap-phase telemetry: returns the
+/// plans together with [`SwapStats`] (per-round candidate/scored/hit
+/// counters and the memo-table totals), so tests and the bench harness
+/// can assert the incremental engine actually skips work. The plans
+/// are identical to [`multijob_allocate_cfg`]'s for the same inputs —
+/// the stats are observation only.
+pub fn multijob_allocate_report(
+    jobs: &[&Workflow],
+    servers: &[Server],
+    model: ResponseModel,
+    objective: Objective,
+    backend: &dyn ScoreBackend,
+    grid: Option<GridSpec>,
+    cfg: &MultiJobConfig,
+) -> Result<(Vec<JobPlan>, SwapStats), SchedError> {
+    let mut stats = SwapStats::new(cfg.engine);
     if jobs.is_empty() {
-        return Ok(Vec::new());
+        return Ok((Vec::new(), stats));
     }
     let need: usize = jobs.iter().map(|w| w.slots()).sum();
     if servers.len() < need {
@@ -316,19 +439,112 @@ pub fn multijob_allocate_cfg(
     }
 
     // 5. cross-job swap refinement on the load-weighted objective:
-    // enumerate -> score (wave or serial) -> select non-conflicting ->
-    // apply + re-balance, until a round improves nothing
+    // enumerate (or replay from the memo) -> score fresh sides (wave or
+    // serial) -> select non-conflicting -> apply + re-balance +
+    // invalidate touched memo pairs, until a round improves nothing
+    let mut memo = SwapMemo::new();
     for _round in 0..cfg.swap_rounds {
         let base: Vec<f64> = plans
             .iter()
             .map(|p| jobs[p.job].arrival_rate * objective.key(&p.score))
             .collect();
 
-        let mut cands = enumerate_candidates(jobs, servers, &plans, model, &base);
+        let mut round = RoundStats::default();
+        // pairs freshly enumerated this round: (a, b, fp_a, fp_b,
+        // start..end range in `cands`), committed to the memo once
+        // their sides carry scores
+        let mut fresh: Vec<(usize, usize, AllocFingerprint, AllocFingerprint, usize, usize)> =
+            Vec::new();
+        let mut cands: Vec<SwapCandidate>;
+        if cfg.engine == SwapEngine::Incremental {
+            let hits_before = memo.hits();
+            cands = Vec::new();
+            for a in 0..plans.len() {
+                for b in (a + 1)..plans.len() {
+                    // same skip rule as enumerate_candidates: an
+                    // unstable incumbent pair is never enumerated, so
+                    // it is never cached either
+                    if !(base[a] + base[b]).is_finite() {
+                        continue;
+                    }
+                    let fp_a = AllocFingerprint::of(&plans[a].alloc);
+                    let fp_b = AllocFingerprint::of(&plans[b].alloc);
+                    if let Some(cached) = memo.lookup(a, b, &fp_a, &fp_b) {
+                        // replay the cached exchange list: both
+                        // enumeration order and scores are exactly
+                        // what fresh enumeration would produce,
+                        // because both incumbents are bit-identical
+                        // to the round that built the entry
+                        for ex in cached {
+                            cands.push(SwapCandidate {
+                                a,
+                                b,
+                                alloc_a: ex.alloc_a.clone(),
+                                alloc_b: ex.alloc_b.clone(),
+                                score_a: Some(ex.score_a.clone()),
+                                score_b: Some(ex.score_b.clone()),
+                            });
+                        }
+                        continue;
+                    }
+                    let start = cands.len();
+                    enumerate_pair(jobs, servers, &plans, model, a, b, &mut cands);
+                    fresh.push((a, b, fp_a, fp_b, start, cands.len()));
+                }
+            }
+            round.memo_hits = memo.hits() - hits_before;
+        } else {
+            cands = enumerate_candidates(jobs, servers, &plans, model, &base);
+        }
+        round.candidates = cands.len();
         if cands.is_empty() {
             break;
         }
-        score_candidates(jobs, servers, &plans, model, backend, &shared, cfg, &mut cands);
+        round.scored = match cfg.engine {
+            SwapEngine::Serial => {
+                for c in cands.iter_mut() {
+                    c.score_a = Some(backend.score(
+                        jobs[plans[c.a].job],
+                        &c.alloc_a,
+                        servers,
+                        &shared,
+                        model,
+                    ));
+                    c.score_b = Some(backend.score(
+                        jobs[plans[c.b].job],
+                        &c.alloc_b,
+                        servers,
+                        &shared,
+                        model,
+                    ));
+                }
+                2 * cands.len()
+            }
+            SwapEngine::Wave | SwapEngine::Incremental => score_unscored_sides(
+                jobs,
+                servers,
+                &plans,
+                model,
+                backend,
+                &shared,
+                cfg.max_wave,
+                &mut cands,
+            ),
+        };
+        // commit each freshly enumerated pair now that its sides carry
+        // scores, so the next round can replay it on a hit
+        for (a, b, fp_a, fp_b, start, end) in fresh {
+            let exchanges: Vec<CachedExchange> = cands[start..end]
+                .iter()
+                .map(|c| CachedExchange {
+                    alloc_a: c.alloc_a.clone(),
+                    alloc_b: c.alloc_b.clone(),
+                    score_a: c.score_a.clone().expect("fresh a-side scored"),
+                    score_b: c.score_b.clone().expect("fresh b-side scored"),
+                })
+                .collect();
+            memo.insert(a, b, fp_a, fp_b, exchanges);
+        }
 
         // rank the improving candidates (enumeration order preserved)
         let mut ranked: Vec<RankedSwap> = Vec::new();
@@ -355,15 +571,20 @@ pub fn multijob_allocate_cfg(
             }
         }
         let chosen = select_swaps(&ranked, plans.len());
+        round.applied = chosen.len();
         if chosen.is_empty() {
+            stats.rounds.push(round);
             break;
         }
 
         // apply each winning swap and §3-re-balance both touched jobs;
         // refine_with only ever improves its start score, so the
         // round's weighted objective decrease is preserved
+        let mut mutated = vec![false; plans.len()];
         for pick in chosen {
             let c = &cands[ranked_src[pick]];
+            mutated[c.a] = true;
+            mutated[c.b] = true;
             let sides = [
                 (c.a, c.alloc_a.clone(), c.score_a.clone().expect("scored")),
                 (c.b, c.alloc_b.clone(), c.score_b.clone().expect("scored")),
@@ -393,10 +614,21 @@ pub fn multijob_allocate_cfg(
                 }
             }
         }
+        // drop every cached pair an applied swap touched — their
+        // incumbents changed, so their exchange lists are stale (the
+        // fingerprint check would reject them anyway; eager dropping
+        // keeps the table small and the counters meaningful)
+        if cfg.engine == SwapEngine::Incremental {
+            memo.invalidate_touching(&mutated);
+        }
+        stats.rounds.push(round);
     }
+    stats.memo_hits = memo.hits();
+    stats.memo_misses = memo.misses();
+    stats.memo_invalidated = memo.invalidated();
 
     plans.sort_by_key(|p| p.job);
-    Ok(plans)
+    Ok((plans, stats))
 }
 
 /// One materialized cross-job swap candidate: plans `a` and `b`
@@ -428,109 +660,127 @@ fn enumerate_candidates(
             if !(base[a] + base[b]).is_finite() {
                 continue;
             }
-            let (ja, jb) = (plans[a].job, plans[b].job);
-            for ia in 0..plans[a].alloc.slot_server.len() {
-                for ib in 0..plans[b].alloc.slot_server.len() {
-                    let mut ga = plans[a].alloc.slot_server.clone();
-                    let mut gb = plans[b].alloc.slot_server.clone();
-                    std::mem::swap(&mut ga[ia], &mut gb[ib]);
-                    let Ok(ca) = schedule_rates(jobs[ja], ga, servers, model) else {
-                        continue;
-                    };
-                    let Ok(cb) = schedule_rates(jobs[jb], gb, servers, model) else {
-                        continue;
-                    };
-                    out.push(SwapCandidate {
-                        a,
-                        b,
-                        alloc_a: ca,
-                        alloc_b: cb,
-                        score_a: None,
-                        score_b: None,
-                    });
-                }
-            }
+            enumerate_pair(jobs, servers, plans, model, a, b, &mut out);
         }
     }
     out
 }
 
-/// Score every candidate side on the shared grid. Wave mode groups the
-/// sides by job and scores each group through `score_batch` in
-/// `max_wave`-sized chunks; serial mode scores candidates one at a
-/// time in enumeration order. Identical numbers either way for any
+/// Enumerate one job pair's feasible server exchanges in slot order
+/// `(slot_a, slot_b)`, appending unscored candidates to `out`. Shared
+/// by the full enumeration above and the incremental engine's
+/// miss path — both therefore produce the same exchanges in the same
+/// order for a given pair of incumbents.
+fn enumerate_pair(
+    jobs: &[&Workflow],
+    servers: &[Server],
+    plans: &[JobPlan],
+    model: ResponseModel,
+    a: usize,
+    b: usize,
+    out: &mut Vec<SwapCandidate>,
+) {
+    let (ja, jb) = (plans[a].job, plans[b].job);
+    for ia in 0..plans[a].alloc.slot_server.len() {
+        for ib in 0..plans[b].alloc.slot_server.len() {
+            let mut ga = plans[a].alloc.slot_server.clone();
+            let mut gb = plans[b].alloc.slot_server.clone();
+            std::mem::swap(&mut ga[ia], &mut gb[ib]);
+            let Ok(ca) = schedule_rates(jobs[ja], ga, servers, model) else {
+                continue;
+            };
+            let Ok(cb) = schedule_rates(jobs[jb], gb, servers, model) else {
+                continue;
+            };
+            out.push(SwapCandidate {
+                a,
+                b,
+                alloc_a: ca,
+                alloc_b: cb,
+                score_a: None,
+                score_b: None,
+            });
+        }
+    }
+}
+
+/// Score every *unscored* candidate side on the shared grid through
+/// `score_batch` waves: sides are grouped by the plan they score
+/// against (enumeration order kept per group) and chunked at
+/// `max_wave`. Returns the number of sides scored. Under
+/// [`SwapEngine::Wave`] every side is unscored, so this is the whole
+/// round; under [`SwapEngine::Incremental`] memo-served sides already
+/// carry scores and are skipped, so only the miss pairs pay for
+/// scoring. Because scoring is per-allocation (chunking never changes
+/// values), the numbers are identical to the serial reference for any
 /// backend whose `score_batch` equals mapping `score` (the trait's
 /// default, and the contract all built-ins keep).
 #[allow(clippy::too_many_arguments)]
-fn score_candidates(
+fn score_unscored_sides(
     jobs: &[&Workflow],
     servers: &[Server],
     plans: &[JobPlan],
     model: ResponseModel,
     backend: &dyn ScoreBackend,
     grid: &GridSpec,
-    cfg: &MultiJobConfig,
+    max_wave: usize,
     cands: &mut [SwapCandidate],
-) {
-    match cfg.engine {
-        SwapEngine::Serial => {
-            for c in cands.iter_mut() {
-                c.score_a =
-                    Some(backend.score(jobs[plans[c.a].job], &c.alloc_a, servers, grid, model));
-                c.score_b =
-                    Some(backend.score(jobs[plans[c.b].job], &c.alloc_b, servers, grid, model));
-            }
+) -> usize {
+    let max_wave = max_wave.max(1);
+    // one pass: bucket every unscored candidate side by the plan it
+    // scores against, keeping enumeration order per bucket
+    let mut buckets: Vec<Vec<(usize, bool)>> = vec![Vec::new(); plans.len()];
+    let mut total = 0;
+    for (i, c) in cands.iter().enumerate() {
+        if c.score_a.is_none() {
+            buckets[c.a].push((i, true));
+            total += 1;
         }
-        SwapEngine::Wave => {
-            let max_wave = cfg.max_wave.max(1);
-            // one pass: bucket every candidate side by the plan it
-            // scores against, keeping enumeration order per bucket
-            let mut buckets: Vec<Vec<(usize, bool)>> = vec![Vec::new(); plans.len()];
-            for (i, c) in cands.iter().enumerate() {
-                buckets[c.a].push((i, true));
-                buckets[c.b].push((i, false));
-            }
-            for (p, bucket) in buckets.into_iter().enumerate() {
-                if bucket.is_empty() {
-                    continue;
-                }
-                let wf = jobs[plans[p].job];
-                let mut scored: Vec<Score> = Vec::with_capacity(bucket.len());
-                for chunk in bucket.chunks(max_wave) {
-                    // score_batch takes owned allocations in one slice,
-                    // so the wave materializes per chunk
-                    let allocs: Vec<Allocation> = chunk
-                        .iter()
-                        .map(|&(i, is_a)| {
-                            if is_a {
-                                cands[i].alloc_a.clone()
-                            } else {
-                                cands[i].alloc_b.clone()
-                            }
-                        })
-                        .collect();
-                    scored.extend(backend.score_batch(wf, &allocs, servers, grid, model));
-                }
-                // fail at the fault site if a custom backend violates
-                // the one-Score-per-allocation contract, instead of
-                // leaving unscored sides to panic later in ranking
-                assert_eq!(
-                    scored.len(),
-                    bucket.len(),
-                    "ScoreBackend::score_batch of backend '{}' must return one Score \
-                     per allocation",
-                    backend.name()
-                );
-                for ((i, is_a), s) in bucket.into_iter().zip(scored) {
+        if c.score_b.is_none() {
+            buckets[c.b].push((i, false));
+            total += 1;
+        }
+    }
+    for (p, bucket) in buckets.into_iter().enumerate() {
+        if bucket.is_empty() {
+            continue;
+        }
+        let wf = jobs[plans[p].job];
+        let mut scored: Vec<Score> = Vec::with_capacity(bucket.len());
+        for chunk in bucket.chunks(max_wave) {
+            // score_batch takes owned allocations in one slice, so the
+            // wave materializes per chunk
+            let allocs: Vec<Allocation> = chunk
+                .iter()
+                .map(|&(i, is_a)| {
                     if is_a {
-                        cands[i].score_a = Some(s);
+                        cands[i].alloc_a.clone()
                     } else {
-                        cands[i].score_b = Some(s);
+                        cands[i].alloc_b.clone()
                     }
-                }
+                })
+                .collect();
+            scored.extend(backend.score_batch(wf, &allocs, servers, grid, model));
+        }
+        // fail at the fault site if a custom backend violates the
+        // one-Score-per-allocation contract, instead of leaving
+        // unscored sides to panic later in ranking
+        assert_eq!(
+            scored.len(),
+            bucket.len(),
+            "ScoreBackend::score_batch of backend '{}' must return one Score \
+             per allocation",
+            backend.name()
+        );
+        for ((i, is_a), s) in bucket.into_iter().zip(scored) {
+            if is_a {
+                cands[i].score_a = Some(s);
+            } else {
+                cands[i].score_b = Some(s);
             }
         }
     }
+    total
 }
 
 /// One improving cross-job swap as seen by the per-round selection:
@@ -843,6 +1093,150 @@ mod tests {
                 assert_eq!(r.score.mean, g.score.mean);
             }
         }
+    }
+
+    #[test]
+    fn incremental_engine_matches_serial_reference_bit_for_bit() {
+        // the memoized engine must replay exactly what fresh
+        // enumeration would have produced — plans, scores and grid
+        let j1 = Workflow::fig6();
+        let j2 = Workflow::tandem(3, 1.0);
+        let j3 = Workflow::forkjoin(2, 2.0);
+        let jobs = [&j1, &j2, &j3];
+        let servers = Server::pool_exponential(&[
+            16.0, 14.0, 12.0, 10.0, 9.0, 8.0, 7.0, 6.5, 6.0, 5.0, 4.0,
+        ]);
+        let serial = multijob_allocate_cfg(
+            &jobs,
+            &servers,
+            ResponseModel::Mm1,
+            Objective::Mean,
+            &AnalyticBackend,
+            None,
+            &MultiJobConfig::serial_reference(),
+        )
+        .unwrap();
+        let incremental = multijob_allocate_cfg(
+            &jobs,
+            &servers,
+            ResponseModel::Mm1,
+            Objective::Mean,
+            &AnalyticBackend,
+            None,
+            &MultiJobConfig::incremental(),
+        )
+        .unwrap();
+        assert_eq!(serial.len(), incremental.len());
+        for (s, i) in serial.iter().zip(incremental.iter()) {
+            assert_eq!(s.job, i.job);
+            assert_eq!(s.alloc, i.alloc);
+            assert_eq!(s.grid, i.grid);
+            assert_eq!(s.score.mean.to_bits(), i.score.mean.to_bits());
+            assert_eq!(s.score.var.to_bits(), i.score.var.to_bits());
+            assert_eq!(s.score.p99.to_bits(), i.score.p99.to_bits());
+        }
+    }
+
+    #[test]
+    fn report_counters_reconcile_per_round() {
+        // the sides invariant: every candidate has exactly two sides,
+        // each either scored through the backend or served by the memo
+        let j1 = Workflow::fig6();
+        let j2 = Workflow::tandem(3, 1.0);
+        let j3 = Workflow::forkjoin(2, 2.0);
+        let j4 = Workflow::tandem(2, 3.0);
+        let jobs = [&j1, &j2, &j3, &j4];
+        let servers = Server::pool_exponential(&[
+            18.0, 16.0, 14.0, 12.0, 11.0, 10.0, 9.0, 8.0, 7.5, 7.0, 6.0, 5.0, 4.5, 4.0,
+        ]);
+        for cfg in [
+            MultiJobConfig::default(),
+            MultiJobConfig::serial_reference(),
+            MultiJobConfig::incremental(),
+        ] {
+            let (_, stats) = multijob_allocate_report(
+                &jobs,
+                &servers,
+                ResponseModel::Mm1,
+                Objective::Mean,
+                &AnalyticBackend,
+                None,
+                &cfg,
+            )
+            .unwrap();
+            assert_eq!(stats.engine, cfg.engine);
+            assert!(!stats.rounds.is_empty(), "job set produces candidates");
+            for r in &stats.rounds {
+                assert_eq!(
+                    r.scored + r.memo_hits,
+                    2 * r.candidates,
+                    "{:?}: sides invariant broken in {r:?}",
+                    cfg.engine
+                );
+            }
+            match cfg.engine {
+                SwapEngine::Incremental => {
+                    assert_eq!(stats.rounds[0].memo_hits, 0, "round 1 is all fresh");
+                    assert_eq!(
+                        stats.scored_total(),
+                        stats.memo_misses,
+                        "every fresh side is inserted into the memo"
+                    );
+                    assert_eq!(
+                        stats.rounds.iter().map(|r| r.memo_hits).sum::<usize>(),
+                        stats.memo_hits
+                    );
+                }
+                SwapEngine::Wave | SwapEngine::Serial => {
+                    assert_eq!(stats.memo_hits, 0);
+                    assert_eq!(stats.memo_misses, 0);
+                    assert_eq!(stats.memo_invalidated, 0);
+                    assert!(stats.rounds.iter().all(|r| r.memo_hits == 0));
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn report_and_cfg_agree() {
+        // the report surface is observation only: same plans
+        let j1 = Workflow::fig6();
+        let j2 = Workflow::tandem(3, 1.0);
+        let jobs = [&j1, &j2];
+        let cfg = MultiJobConfig::incremental();
+        let plain = multijob_allocate_cfg(
+            &jobs,
+            &pool(),
+            ResponseModel::Mm1,
+            Objective::Mean,
+            &AnalyticBackend,
+            None,
+            &cfg,
+        )
+        .unwrap();
+        let (with_stats, _) = multijob_allocate_report(
+            &jobs,
+            &pool(),
+            ResponseModel::Mm1,
+            Objective::Mean,
+            &AnalyticBackend,
+            None,
+            &cfg,
+        )
+        .unwrap();
+        for (p, w) in plain.iter().zip(with_stats.iter()) {
+            assert_eq!(p.alloc, w.alloc);
+            assert_eq!(p.score.mean.to_bits(), w.score.mean.to_bits());
+        }
+    }
+
+    #[test]
+    fn hit_rate_is_guarded_and_bounded() {
+        let mut stats = SwapStats::new(SwapEngine::Incremental);
+        assert_eq!(stats.hit_rate(), 0.0, "0/0 guarded");
+        stats.memo_hits = 3;
+        stats.memo_misses = 9;
+        assert!((stats.hit_rate() - 0.25).abs() < 1e-15);
     }
 
     #[test]

@@ -12,6 +12,15 @@
 //!     assert_eq!(a + b, b + a);
 //! });
 //! ```
+//!
+//! Two environment knobs pin the harness for CI and local replays:
+//!
+//! * `DCFLOW_PROP_CASES=<n>` overrides every suite's case count (raise
+//!   it for soak runs, lower it for quick iteration);
+//! * `DCFLOW_PROP_SEED=<seed>` (decimal or `0x`-hex, the exact value a
+//!   failure echoes) replays **only** that seed, skipping the normal
+//!   case sweep — paste the seed from a CI failure to reproduce it
+//!   locally in one run.
 
 use crate::util::rng::Rng;
 
@@ -60,8 +69,21 @@ impl Gen {
 }
 
 /// Run `prop` for `cases` deterministic seeds derived from the property
-/// name (stable across runs/machines). Panics with the failing seed.
+/// name (stable across runs/machines). Panics with the failing seed and
+/// the `DCFLOW_PROP_SEED` incantation that replays it. `cases` is
+/// overridden by `DCFLOW_PROP_CASES` when set; `DCFLOW_PROP_SEED` runs
+/// exactly that one seed instead of the sweep (see the
+/// [module docs](self)).
 pub fn run(name: &str, cases: u64, mut prop: impl FnMut(&mut Gen)) {
+    if let Some(seed) = env_u64("DCFLOW_PROP_SEED") {
+        let mut g = Gen {
+            rng: Rng::new(seed),
+            seed,
+        };
+        prop(&mut g);
+        return;
+    }
+    let cases = env_u64("DCFLOW_PROP_CASES").unwrap_or(cases);
     let base = fnv1a(name.as_bytes());
     for case in 0..cases {
         let seed = base ^ case.wrapping_mul(0x9E3779B97F4A7C15);
@@ -76,8 +98,30 @@ pub fn run(name: &str, cases: u64, mut prop: impl FnMut(&mut Gen)) {
                 .map(|s| s.as_str())
                 .or_else(|| e.downcast_ref::<&str>().copied())
                 .unwrap_or("<non-string panic>");
-            panic!("property '{name}' failed at case {case} (replay seed {seed:#x}): {msg}");
+            panic!(
+                "property '{name}' failed at case {case} (replay seed {seed:#x}; \
+                 rerun with DCFLOW_PROP_SEED={seed:#x}): {msg}"
+            );
         }
+    }
+}
+
+/// Parse a u64 environment knob (decimal or `0x`-prefixed hex). A set
+/// but malformed value panics loudly — a silently ignored typo in
+/// `DCFLOW_PROP_SEED` would "pass" the wrong test.
+fn env_u64(name: &str) -> Option<u64> {
+    let raw = std::env::var(name).ok()?;
+    match parse_u64(raw.trim()) {
+        Some(v) => Some(v),
+        None => panic!("{name} must be a u64 (decimal or 0x-hex), got '{raw}'"),
+    }
+}
+
+fn parse_u64(v: &str) -> Option<u64> {
+    if let Some(hex) = v.strip_prefix("0x").or_else(|| v.strip_prefix("0X")) {
+        u64::from_str_radix(hex, 16).ok()
+    } else {
+        v.parse().ok()
     }
 }
 
@@ -142,5 +186,20 @@ mod tests {
         let mut v2 = 0.0;
         replay(12345, |g| v2 = g.f64_in(0.0, 1.0));
         assert_eq!(v1, v2);
+    }
+
+    #[test]
+    fn env_knob_values_parse_both_radices() {
+        // the parser behind DCFLOW_PROP_CASES / DCFLOW_PROP_SEED (the
+        // env vars themselves are not set here: mutating the process
+        // environment would race parallel tests)
+        assert_eq!(parse_u64("42"), Some(42));
+        assert_eq!(parse_u64("0x2a"), Some(42));
+        assert_eq!(parse_u64("0X2A"), Some(42));
+        assert_eq!(parse_u64("0xDEADBEEF"), Some(0xDEAD_BEEF));
+        assert_eq!(parse_u64(""), None);
+        assert_eq!(parse_u64("nope"), None);
+        assert_eq!(parse_u64("-3"), None);
+        assert_eq!(parse_u64("0x"), None);
     }
 }

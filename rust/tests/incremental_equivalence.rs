@@ -1,0 +1,501 @@
+//! Incremental swap-engine equivalence: [`SwapEngine::Incremental`]
+//! must be bit-identical to the full-wave engine and to the serial
+//! oracle on every job set, across shard counts, chunking policies and
+//! wave caps — and its memo counters must reconcile exactly with the
+//! backend traffic it saves. Mock-backend tests pin the exact per-round
+//! hit/miss/invalidation trajectory on hand-computable job sets,
+//! including the `select_swaps` conflict path.
+//!
+//! Property cases replay deterministically: a failure prints the seed
+//! and the `DCFLOW_PROP_SEED=<seed>` incantation that reruns it alone
+//! (`DCFLOW_PROP_CASES` overrides the sweep width).
+
+use dcflow::prelude::*;
+use dcflow::util::prop;
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+/// A random small workflow: tandem, fork-join, or fork-join-then-queue
+/// (the same shapes `backend_equivalence.rs` sweeps).
+fn random_workflow(g: &mut prop::Gen) -> Workflow {
+    let n_slots = g.usize_in(2, 5);
+    match g.usize_in(0, 2) {
+        0 => Workflow::tandem(n_slots, g.f64_in(0.3, 1.2)),
+        1 => Workflow::forkjoin(n_slots, g.f64_in(0.3, 1.2)),
+        _ => Workflow::new(
+            Dcc::serial(vec![
+                Dcc::parallel((0..n_slots).map(|_| Dcc::queue()).collect()),
+                Dcc::queue(),
+            ]),
+            g.f64_in(0.3, 1.2),
+        )
+        .unwrap(),
+    }
+}
+
+/// Bit-level plan-set equality: allocations, shared grid, and every
+/// score component compared through `to_bits` (so two NaNs of the same
+/// payload agree and `-0.0 != 0.0`).
+fn assert_plans_bit_identical(a: &[JobPlan], b: &[JobPlan], ctx: &str) {
+    assert_eq!(a.len(), b.len(), "{ctx}: plan count");
+    for (x, y) in a.iter().zip(b.iter()) {
+        assert_eq!(x.job, y.job, "{ctx}: job order");
+        assert_eq!(x.alloc, y.alloc, "{ctx}: allocation of job {}", x.job);
+        assert_eq!(x.grid, y.grid, "{ctx}: grid of job {}", x.job);
+        for (name, xa, ya) in [
+            ("mean", x.score.mean, y.score.mean),
+            ("var", x.score.var, y.score.var),
+            ("p99", x.score.p99, y.score.p99),
+            ("mass", x.score.mass, y.score.mass),
+        ] {
+            assert_eq!(
+                xa.to_bits(),
+                ya.to_bits(),
+                "{ctx}: {name} of job {} ({xa} vs {ya})",
+                x.job
+            );
+        }
+    }
+}
+
+#[test]
+fn incremental_is_bit_identical_across_shards_chunking_and_wave_caps() {
+    // the tentpole property on a fixed 3-job set: serial oracle == wave
+    // == incremental, for every shard count × chunking policy × wave
+    // cap combination (all through the public Planner surface)
+    let j1 = Workflow::fig6();
+    let j2 = Workflow::tandem(3, 1.0);
+    let j3 = Workflow::forkjoin(2, 2.0);
+    let jobs = [&j1, &j2, &j3];
+    let pool = Server::pool_exponential(&[
+        16.0, 14.0, 12.0, 10.0, 9.0, 8.0, 7.0, 6.5, 6.0, 5.0, 4.0,
+    ]);
+    let serial = Planner::new(&j1, &pool)
+        .swap_engine(SwapEngine::Serial)
+        .plan_jobs(&jobs)
+        .unwrap();
+    let wave = Planner::new(&j1, &pool)
+        .swap_engine(SwapEngine::Wave)
+        .plan_jobs(&jobs)
+        .unwrap();
+    assert_plans_bit_identical(&serial, &wave, "wave vs serial");
+    for shards in [1usize, 2, 8] {
+        for chunking in [ChunkPolicy::Even, ChunkPolicy::Fixed(3)] {
+            for max_wave in [1usize, 5, 4096] {
+                let backend = ShardedBackend::new(&AnalyticBackend, shards).chunking(chunking);
+                let incremental = Planner::new(&j1, &pool)
+                    .backend(&backend)
+                    .swap_engine(SwapEngine::Incremental)
+                    .max_wave(max_wave)
+                    .plan_jobs(&jobs)
+                    .unwrap();
+                assert_plans_bit_identical(
+                    &serial,
+                    &incremental,
+                    &format!("incremental x{shards} / {chunking:?} / max_wave {max_wave}"),
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn incremental_matches_oracles_on_random_job_sets() {
+    // property form over random 3-job sets and pools, multi-round
+    // trajectories included: the incremental engine through a sharded
+    // backend equals the serial oracle bit for bit, or both fail with
+    // the same error
+    prop::run("multijob incremental == serial oracle", 6, |g| {
+        let a = random_workflow(g);
+        let b = random_workflow(g);
+        let c = random_workflow(g);
+        let total = a.slots() + b.slots() + c.slots();
+        let rates: Vec<f64> = (0..total + g.usize_in(0, 2))
+            .map(|_| g.f64_in(4.0, 20.0))
+            .collect();
+        let pool = Server::pool_exponential(&rates);
+        let jobs = [&a, &b, &c];
+        let serial = Planner::new(&a, &pool)
+            .swap_engine(SwapEngine::Serial)
+            .swap_rounds(3)
+            .plan_jobs(&jobs);
+        let backend = ShardedBackend::new(&AnalyticBackend, 2);
+        let incremental = Planner::new(&a, &pool)
+            .backend(&backend)
+            .swap_engine(SwapEngine::Incremental)
+            .swap_rounds(3)
+            .plan_jobs(&jobs);
+        match (serial, incremental) {
+            (Ok(s), Ok(i)) => assert_plans_bit_identical(&s, &i, "random job set"),
+            (Err(x), Err(y)) => assert_eq!(x, y),
+            (s, i) => panic!("feasibility mismatch: {s:?} vs {i:?}"),
+        }
+    });
+}
+
+/// Analytic scoring with a side-count: every `score` call counts one,
+/// every `score_batch` call counts its batch length — exactly the unit
+/// the memo's hit/miss counters use.
+#[derive(Default)]
+struct CountingBackend {
+    scored: AtomicUsize,
+}
+
+impl ScoreBackend for CountingBackend {
+    fn name(&self) -> &str {
+        "counting-analytic"
+    }
+
+    fn score(
+        &self,
+        wf: &Workflow,
+        alloc: &Allocation,
+        servers: &[Server],
+        grid: &GridSpec,
+        model: ResponseModel,
+    ) -> Score {
+        self.scored.fetch_add(1, Ordering::Relaxed);
+        AnalyticBackend.score(wf, alloc, servers, grid, model)
+    }
+
+    fn score_batch(
+        &self,
+        wf: &Workflow,
+        allocs: &[Allocation],
+        servers: &[Server],
+        grid: &GridSpec,
+        model: ResponseModel,
+    ) -> Vec<Score> {
+        self.scored.fetch_add(allocs.len(), Ordering::Relaxed);
+        AnalyticBackend.score_batch(wf, allocs, servers, grid, model)
+    }
+}
+
+#[test]
+fn memo_hits_are_exactly_the_backend_calls_saved() {
+    // identical plans ⇒ identical refine traffic, so the only backend
+    // traffic the incremental engine removes is memo-served swap sides:
+    // wave_calls == incremental_calls + memo_hits, exactly
+    let j1 = Workflow::fig6();
+    let j2 = Workflow::tandem(3, 1.0);
+    let j3 = Workflow::forkjoin(2, 2.0);
+    let j4 = Workflow::tandem(2, 3.0);
+    let jobs = [&j1, &j2, &j3, &j4];
+    let pool = Server::pool_exponential(&[
+        18.0, 16.0, 14.0, 12.0, 11.0, 10.0, 9.0, 8.0, 7.5, 7.0, 6.0, 5.0, 4.5, 4.0,
+    ]);
+    let wave_backend = CountingBackend::default();
+    let (wave_plans, wave_stats) = Planner::new(&j1, &pool)
+        .backend(&wave_backend)
+        .swap_engine(SwapEngine::Wave)
+        .plan_jobs_report(&jobs)
+        .unwrap();
+    let inc_backend = CountingBackend::default();
+    let (inc_plans, inc_stats) = Planner::new(&j1, &pool)
+        .backend(&inc_backend)
+        .swap_engine(SwapEngine::Incremental)
+        .plan_jobs_report(&jobs)
+        .unwrap();
+    assert_plans_bit_identical(&wave_plans, &inc_plans, "counting backend");
+
+    let wave_calls = wave_backend.scored.load(Ordering::Relaxed);
+    let inc_calls = inc_backend.scored.load(Ordering::Relaxed);
+    assert_eq!(
+        wave_calls,
+        inc_calls + inc_stats.memo_hits,
+        "saved backend calls must equal memo hits \
+         (wave {wave_calls}, incremental {inc_calls}, hits {})",
+        inc_stats.memo_hits
+    );
+    assert_eq!(wave_stats.memo_hits, 0);
+    assert_eq!(wave_stats.memo_misses, 0);
+
+    // identical trajectories ⇒ identical round structure
+    assert_eq!(wave_stats.rounds.len(), inc_stats.rounds.len());
+    for (w, i) in wave_stats.rounds.iter().zip(&inc_stats.rounds) {
+        assert_eq!(w.candidates, i.candidates, "same candidates per round");
+        assert_eq!(w.applied, i.applied, "same applied swaps per round");
+        assert_eq!(w.scored, 2 * w.candidates, "wave scores every side");
+        assert_eq!(i.scored + i.memo_hits, 2 * i.candidates, "sides invariant");
+    }
+    assert_eq!(inc_stats.scored_total(), inc_stats.memo_misses);
+
+    // with at least two jobs untouched by round 1's swaps, round 2 must
+    // replay at least one cached pair (4-job sets make this reachable;
+    // 2–3-job sets structurally cannot hit)
+    if inc_stats.rounds.len() >= 2 && jobs.len() >= 2 * inc_stats.rounds[0].applied + 2 {
+        assert!(
+            inc_stats.rounds[1].memo_hits > 0,
+            "untouched pair must hit in round 2: {:?}",
+            inc_stats.rounds
+        );
+        assert!(inc_stats.hit_rate() > 0.0);
+    }
+}
+
+/// One-slot-job mock: the score of a (job, server) placement is read
+/// straight from a cost matrix, making every swap decision — and
+/// therefore the full memo trajectory — hand-computable. Jobs are
+/// identified by their (distinct, integral) arrival rates, servers by
+/// global id (`servers[slot].id`, which multijob keeps global in every
+/// pool view it passes to a backend).
+struct MatrixBackend<const N: usize> {
+    /// `cost[job][server]`; job index is `top_rate - arrival_rate`.
+    cost: [[f64; N]; N],
+    top_rate: usize,
+}
+
+impl<const N: usize> ScoreBackend for MatrixBackend<N> {
+    fn name(&self) -> &str {
+        "matrix-mock"
+    }
+
+    fn score(
+        &self,
+        wf: &Workflow,
+        alloc: &Allocation,
+        servers: &[Server],
+        _grid: &GridSpec,
+        _model: ResponseModel,
+    ) -> Score {
+        let j = self.top_rate - wf.arrival_rate.round() as usize;
+        let s = servers[alloc.slot_server[0]].id;
+        Score::point(self.cost[j][s], 0.0, self.cost[j][s])
+    }
+}
+
+#[test]
+fn memo_trajectory_is_exact_on_a_hand_computable_job_set() {
+    // four 1-slot jobs (invariant under §3 refine) with rates 4..1 seed
+    // greedily onto servers 0..3; the cost matrix makes exactly one
+    // swap improving — jobs 0 and 1 trade servers in round 1 — so the
+    // full round/memo trajectory is known in closed form:
+    //   round 1: 6 pairs × 1 exchange, all fresh (12 sides), 1 applied
+    //   round 2: 5 pairs rebuilt (10 sides), pair (2,3) replays (2
+    //            sides), nothing improves
+    let backend = MatrixBackend::<4> {
+        cost: [
+            [1.0, 0.0, 10.0, 10.0],
+            [0.0, 1.0, 10.0, 10.0],
+            [1.0, 1.0, 1.0, 1.0],
+            [1.0, 1.0, 1.0, 1.0],
+        ],
+        top_rate: 4,
+    };
+    let j0 = Workflow::tandem(1, 4.0);
+    let j1 = Workflow::tandem(1, 3.0);
+    let j2 = Workflow::tandem(1, 2.0);
+    let j3 = Workflow::tandem(1, 1.0);
+    let jobs = [&j0, &j1, &j2, &j3];
+    let pool = Server::pool_exponential(&[10.0, 9.0, 8.0, 7.0]);
+
+    let (plans, stats) = Planner::new(&j0, &pool)
+        .backend(&backend)
+        .swap_engine(SwapEngine::Incremental)
+        .plan_jobs_report(&jobs)
+        .unwrap();
+    assert_eq!(
+        stats.rounds,
+        vec![
+            RoundStats {
+                candidates: 6,
+                scored: 12,
+                memo_hits: 0,
+                applied: 1,
+            },
+            RoundStats {
+                candidates: 6,
+                scored: 10,
+                memo_hits: 2,
+                applied: 0,
+            },
+        ]
+    );
+    assert_eq!(stats.memo_hits, 2);
+    assert_eq!(stats.memo_misses, 22);
+    assert_eq!(stats.memo_invalidated, 10, "5 of 6 cached pairs touch a swapped job");
+    assert!((stats.hit_rate() - 2.0 / 24.0).abs() < 1e-15);
+
+    // the one improving swap: jobs 0 and 1 trade servers 0 and 1
+    let placed: Vec<usize> = plans.iter().map(|p| p.alloc.slot_server[0]).collect();
+    assert_eq!(placed, vec![1, 0, 2, 3]);
+
+    // and all three engines land on the same plans, bit for bit
+    for engine in [SwapEngine::Wave, SwapEngine::Serial] {
+        let other = Planner::new(&j0, &pool)
+            .backend(&backend)
+            .swap_engine(engine)
+            .plan_jobs(&jobs)
+            .unwrap();
+        assert_plans_bit_identical(&plans, &other, &format!("{engine:?} vs incremental"));
+    }
+}
+
+#[test]
+fn conflicting_improving_swaps_resolve_identically_under_every_engine() {
+    // an engineered select_swaps conflict: swaps (0,1) at delta −5 and
+    // (1,2) at delta −3 both improve in round 1 but share job 1, so
+    // exactly the better one applies — under every engine, with the
+    // same resulting plans and the same recorded trajectory
+    let backend = MatrixBackend::<3> {
+        cost: [
+            [1.0, 0.0, 5.0],
+            [0.0, 1.0, 0.0],
+            [5.0, 0.0, 1.0],
+        ],
+        top_rate: 3,
+    };
+    let j0 = Workflow::tandem(1, 3.0);
+    let j1 = Workflow::tandem(1, 2.0);
+    let j2 = Workflow::tandem(1, 1.0);
+    let jobs = [&j0, &j1, &j2];
+    let pool = Server::pool_exponential(&[10.0, 9.0, 8.0]);
+
+    let mut reference: Option<Vec<JobPlan>> = None;
+    for engine in [SwapEngine::Serial, SwapEngine::Wave, SwapEngine::Incremental] {
+        let (plans, stats) = Planner::new(&j0, &pool)
+            .backend(&backend)
+            .swap_engine(engine)
+            .plan_jobs_report(&jobs)
+            .unwrap();
+        assert_eq!(stats.rounds.len(), 2, "{engine:?}");
+        assert_eq!(
+            stats.rounds[0].applied, 1,
+            "{engine:?}: of two improving-but-conflicting swaps exactly one applies"
+        );
+        assert_eq!(stats.rounds[1].applied, 0, "{engine:?}: round 2 improves nothing");
+        // the −5 swap won: jobs 0 and 1 traded; job 2 kept server 2
+        let placed: Vec<usize> = plans.iter().map(|p| p.alloc.slot_server[0]).collect();
+        assert_eq!(placed, vec![1, 0, 2], "{engine:?}");
+        if engine == SwapEngine::Incremental {
+            // every cached pair touches job 0 or 1 ⇒ full invalidation,
+            // zero hits, both rounds fully fresh
+            assert_eq!(stats.memo_hits, 0);
+            assert_eq!(stats.memo_misses, 12);
+            assert_eq!(stats.memo_invalidated, 6);
+        }
+        match &reference {
+            None => reference = Some(plans),
+            Some(r) => assert_plans_bit_identical(r, &plans, &format!("{engine:?}")),
+        }
+    }
+}
+
+/// Mock in which one job (picked by arrival rate) scores unstable on
+/// every placement, exercising the non-finite-base skip path.
+struct OneUnstableBackend;
+
+impl ScoreBackend for OneUnstableBackend {
+    fn name(&self) -> &str {
+        "one-unstable-mock"
+    }
+
+    fn score(
+        &self,
+        wf: &Workflow,
+        alloc: &Allocation,
+        servers: &[Server],
+        _grid: &GridSpec,
+        _model: ResponseModel,
+    ) -> Score {
+        if wf.arrival_rate.round() as usize == 2 {
+            return Score::unstable_point();
+        }
+        // a mild cost spread for the two stable jobs (rates 3 and 1)
+        let s = servers[alloc.slot_server[0]].id as f64;
+        Score::point(1.0 + s, 0.0, 1.0 + s)
+    }
+}
+
+#[test]
+fn unstable_incumbents_are_skipped_and_never_cached() {
+    // job 1 is unstable everywhere ⇒ its two pairs have a non-finite
+    // base and are skipped by every engine; only pair (0,2) is
+    // enumerated, and only its sides ever enter the memo
+    let j0 = Workflow::tandem(1, 3.0);
+    let j1 = Workflow::tandem(1, 2.0);
+    let j2 = Workflow::tandem(1, 1.0);
+    let jobs = [&j0, &j1, &j2];
+    let pool = Server::pool_exponential(&[10.0, 9.0, 8.0]);
+    let backend = OneUnstableBackend;
+
+    let (inc_plans, stats) = Planner::new(&j0, &pool)
+        .backend(&backend)
+        .swap_engine(SwapEngine::Incremental)
+        .plan_jobs_report(&jobs)
+        .unwrap();
+    assert_eq!(
+        stats.rounds,
+        vec![RoundStats {
+            candidates: 1,
+            scored: 2,
+            memo_hits: 0,
+            applied: 0,
+        }],
+        "only the stable pair (0,2) is enumerated; moving job 0 to a \
+         slower server never improves"
+    );
+    assert_eq!(stats.memo_misses, 2, "skipped pairs must not be cached");
+    assert_eq!(stats.memo_hits, 0);
+    assert_eq!(stats.memo_invalidated, 0);
+
+    for engine in [SwapEngine::Wave, SwapEngine::Serial] {
+        let other = Planner::new(&j0, &pool)
+            .backend(&backend)
+            .swap_engine(engine)
+            .plan_jobs(&jobs)
+            .unwrap();
+        assert_plans_bit_identical(&inc_plans, &other, &format!("{engine:?} vs incremental"));
+    }
+}
+
+#[test]
+fn heavy_tail_laws_stay_engine_invariant() {
+    // Table-1 families at their committed extremes under M/G/1 — the
+    // degenerate-law pressure corner: near-infinite-variance pareto,
+    // sub-exponential weibull, a straggler mixture
+    let j1 = Workflow::chain(2, 2, 0.5);
+    let j2 = Workflow::tandem(2, 0.4);
+    let jobs = [&j1, &j2];
+    let pool = vec![
+        Server::new(0, ServiceDist::delayed_pareto(2.4, 0.05)),
+        Server::new(1, ServiceDist::delayed_pareto(3.5, 0.0)),
+        Server::new(2, ServiceDist::delayed_weibull(1.4, 0.65, 0.1)),
+        Server::new(3, ServiceDist::delayed_weibull(2.2, 0.8, 0.0)),
+        Server::new(4, ServiceDist::straggler(9.0, 0.35, 0.2, 0.05)),
+        Server::new(5, ServiceDist::exponential(5.0)),
+        Server::new(6, ServiceDist::exponential(4.0)),
+    ];
+    let serial = Planner::new(&j1, &pool)
+        .model(ResponseModel::Mg1)
+        .swap_engine(SwapEngine::Serial)
+        .plan_jobs(&jobs);
+    let incremental = Planner::new(&j1, &pool)
+        .model(ResponseModel::Mg1)
+        .swap_engine(SwapEngine::Incremental)
+        .plan_jobs(&jobs);
+    match (serial, incremental) {
+        (Ok(s), Ok(i)) => assert_plans_bit_identical(&s, &i, "heavy-tail pool"),
+        (Err(x), Err(y)) => assert_eq!(x, y),
+        (s, i) => panic!("feasibility mismatch: {s:?} vs {i:?}"),
+    }
+}
+
+#[test]
+fn nan_pressure_is_rejected_under_every_engine() {
+    // a poisoned job (NaN arrival rate) surfaces as Infeasible — never
+    // a panic, never a partially built memo — under all three engines
+    let mut poisoned = Workflow::tandem(2, 1.0);
+    poisoned.arrival_rate = f64::NAN;
+    let healthy = Workflow::fig6();
+    let pool =
+        Server::pool_exponential(&[14.0, 12.0, 10.0, 9.0, 8.0, 7.0, 6.0, 5.0, 4.0]);
+    for engine in [SwapEngine::Wave, SwapEngine::Serial, SwapEngine::Incremental] {
+        let result = Planner::new(&healthy, &pool)
+            .swap_engine(engine)
+            .plan_jobs(&[&healthy, &poisoned]);
+        assert!(
+            matches!(result, Err(SchedError::Infeasible(_))),
+            "{engine:?}: expected Infeasible, got {result:?}"
+        );
+    }
+}

@@ -7,10 +7,15 @@
 //! generated `rust/tests/golden/` files to freeze behavior, see the
 //! README there).
 
+use dcflow::coordinator::{Coordinator, CoordinatorConfig, RunReport};
+use dcflow::prelude::{Objective, Server, SwapEngine, Workflow};
 use dcflow::scenario::{
-    check_or_bless, reports_identical, ExecTrace, GoldenStatus, ScenarioClass, ScenarioSpec,
+    check_or_bless, golden, reports_identical, ExecTrace, GoldenStatus, ScenarioClass,
+    ScenarioSpec,
 };
+use dcflow::sim::trace::{ArrivalProcess, Trace};
 use dcflow::util::prop;
+use dcflow::util::rng::Rng;
 
 #[test]
 fn corpus_covers_every_scenario_class() {
@@ -76,6 +81,99 @@ fn capture_replay_bit_identity_property() {
         assert_eq!(t1, t2, "{}: re-captured traces disagree", spec.name);
         assert_eq!(t1, trace, "{}: capture/replay loop not closed", spec.name);
     });
+}
+
+#[test]
+fn golden_traces_replay_identically_under_every_swap_engine() {
+    // the committed corpus is a standing regression gate for the swap
+    // engines: every golden trace must replay to the same report and
+    // re-captured trace no matter which engine the coordinator's
+    // multi-job planner is configured with (capture/replay plan single
+    // jobs, so any divergence here means an engine leaks into a path
+    // it must not touch)
+    for spec in ScenarioSpec::zoo() {
+        let path = golden::corpus_dir().join(format!("{}.trace.jsonl", spec.name));
+        let Ok(text) = std::fs::read_to_string(&path) else {
+            // pre-bless tree: golden_corpus_matches_or_blesses creates
+            // the corpus; nothing to cross-check yet
+            continue;
+        };
+        let trace = ExecTrace::from_jsonl(&text)
+            .unwrap_or_else(|e| panic!("{}: committed trace unreadable: {e}", spec.name));
+        let (base_report, base_trace) = spec
+            .replay(&trace)
+            .unwrap_or_else(|e| panic!("{}: baseline replay failed: {e}", spec.name));
+        for engine in [SwapEngine::Serial, SwapEngine::Incremental] {
+            let espec = spec.clone().with_swap_engine(engine);
+            let (report, recaptured) = espec
+                .replay(&trace)
+                .unwrap_or_else(|e| panic!("{}: {engine:?} replay failed: {e}", spec.name));
+            assert!(
+                reports_identical(&base_report, &report),
+                "{}: replay under {engine:?} diverges from the default engine",
+                spec.name
+            );
+            assert_eq!(
+                recaptured, base_trace,
+                "{}: re-captured trace under {engine:?} diverges",
+                spec.name
+            );
+        }
+    }
+}
+
+#[test]
+fn run_multi_plans_are_engine_invariant() {
+    // the one coordinator path that exercises the multi-job planner:
+    // identical job sets + identical arrival streams must produce
+    // bit-identical run reports under all three swap engines
+    let pool = Server::pool_exponential(&[
+        16.0, 14.0, 12.0, 10.0, 9.0, 8.0, 7.0, 6.5, 6.0, 5.0, 4.5, 4.0,
+    ]);
+    let mut rng = Rng::new(0x5EED_CAFE);
+    let arrivals: Vec<Trace> = [2.0, 1.0, 0.8]
+        .iter()
+        .map(|&rate| Trace::generate(ArrivalProcess::Poisson { rate }, 60, &mut rng))
+        .collect();
+
+    let mut reference: Option<Vec<RunReport>> = None;
+    for engine in [SwapEngine::Wave, SwapEngine::Serial, SwapEngine::Incremental] {
+        let cfg = CoordinatorConfig {
+            swap_engine: engine,
+            reopt_every: 0,
+            ..Default::default()
+        };
+        let mut coord = Coordinator::with_truthful_priors(pool.clone(), cfg);
+        let workflows = [
+            Workflow::fig6(),
+            Workflow::tandem(3, 1.0),
+            Workflow::forkjoin(2, 2.0),
+        ];
+        let jobs: Vec<_> = workflows
+            .into_iter()
+            .enumerate()
+            .map(|(i, wf)| {
+                let job = coord.submit(&format!("job-{i}"), wf);
+                (job, arrivals[i].clone())
+            })
+            .collect();
+        let reports = coord
+            .run_multi(&jobs, Objective::Mean)
+            .unwrap_or_else(|e| panic!("{engine:?}: run_multi failed: {e}"));
+        coord.shutdown();
+        assert_eq!(reports.len(), 3, "{engine:?}");
+        match &reference {
+            None => reference = Some(reports),
+            Some(base) => {
+                for (b, r) in base.iter().zip(reports.iter()) {
+                    assert!(
+                        reports_identical(b, r),
+                        "{engine:?}: run_multi report diverges from the wave engine"
+                    );
+                }
+            }
+        }
+    }
 }
 
 #[test]
