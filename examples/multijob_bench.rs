@@ -1,9 +1,10 @@
 //! Reproducible multi-job swap benchmark harness: a scenario × engine ×
-//! shards matrix.
+//! dispatch × shards matrix.
 //!
 //! For each bench scenario (heterogeneous pool, DAG pipeline jobs,
 //! heavy-tail pool) this runs the cross-job swap refinement serial
 //! reference pass and then the wave and incremental engines across
+//! dispatch modes {pooled fabric, spawn-per-wave scoped pool} and
 //! shard counts {1, 2, 8}. Every configuration's plans are checked
 //! bit-identical to the scenario's serial reference BEFORE any timing
 //! loop runs — a divergent engine fails the run immediately with exit
@@ -11,8 +12,10 @@
 //! harness emits a machine-readable `BENCH_multijob.json` (schema
 //! documented in `docs/BENCHMARKS.md`); incremental rows carry an
 //! additive `memo` object recording hit/miss/invalidation counters and
-//! the per-round scoring trajectory, so the memo's effectiveness is
-//! part of the recorded perf history.
+//! the per-round scoring trajectory, and sharded rows carry an additive
+//! `fabric` object with the scoring-pool counters (workers, waves
+//! inline/dispatched, chunks, queue depth high-water mark, scratch
+//! allocations), so pool behavior is part of the recorded perf history.
 //!
 //! ```text
 //! cargo run --release --example multijob_bench            # full matrix
@@ -151,7 +154,7 @@ impl ReportCtx {
 fn main() {
     let cli = Cli::new(
         "multijob_bench",
-        "scenario x engine x shards multi-job swap matrix, JSON output",
+        "scenario x engine x dispatch x shards multi-job swap matrix, JSON output",
     )
     .opt("out", "BENCH_multijob.json", "output path for the JSON report")
     .opt("iters", "3", "measured iterations per configuration")
@@ -241,121 +244,150 @@ fn main() {
             ("cluster_objective", Json::Num(ref_objective)),
         ]));
 
-        // wave and incremental engines × shard counts
+        // wave and incremental engines × dispatch modes × shard counts
         for (engine_name, engine) in [
             ("wave", SwapEngine::Wave),
             ("incremental", SwapEngine::Incremental),
         ] {
-            for shards in [1usize, 2, 8] {
-                let backend = ShardedBackend::new(&AnalyticBackend, shards);
-                let mut planner = Planner::new(jobs[0], &sc.servers)
-                    .objective(Objective::Mean)
-                    .backend(&backend)
-                    .swap_engine(engine);
-                if let Some(g) = ctx.pinned {
-                    planner = planner.grid(g);
-                }
-                // identity is the gate, timing is the payload: check the
-                // plans against the serial reference BEFORE any timing
-                // loop so a divergent engine can never post a number
-                let (got, stats) = planner.plan_jobs_report(&jobs).expect("job set is feasible");
-                if !plans_identical(&got, &reference) {
-                    eprintln!(
-                        "multijob_bench: {engine_name} x{shards} plans diverged from the \
-                         serial reference on scenario '{}'",
-                        sc.name
-                    );
-                    ctx.write(&scenario_cfgs, &results, false);
-                    std::process::exit(1);
-                }
-                // every side is accounted for: fresh + memo = 2 sides
-                // per candidate exchange, every round, any engine
-                for (i, r) in stats.rounds.iter().enumerate() {
-                    assert_eq!(
-                        r.scored + r.memo_hits,
-                        2 * r.candidates,
-                        "'{}' {engine_name} x{shards} round {i}: side accounting broke",
-                        sc.name
-                    );
-                }
-                // when pairs survive round 1 untouched the memo must
-                // actually pay: hits land in round 2 and scoring work
-                // drops below the 2-sides-per-candidate ceiling
-                if engine == SwapEngine::Incremental
-                    && stats.rounds.len() >= 2
-                    && jobs.len() >= 2 * stats.rounds[0].applied + 2
-                {
-                    assert!(
-                        stats.rounds[1].memo_hits > 0 && stats.hit_rate() > 0.0,
-                        "'{}' x{shards}: pairs survived round 1 untouched but the memo \
-                         never hit",
-                        sc.name
-                    );
-                    assert!(
-                        stats.rounds[1].scored < 2 * stats.rounds[1].candidates,
-                        "'{}' x{shards}: memo hits saved no scoring work after round 1",
-                        sc.name
-                    );
-                }
-                let t = bench(warmup, iters, || planner.plan_jobs(&jobs).unwrap());
-                let objective = cluster_objective(&got, &jobs, Objective::Mean);
-                let label = format!("{engine_name} x{shards}");
-                if engine == SwapEngine::Incremental {
-                    println!(
-                        "  {:<12} {label:<16}: {:>10.6} s  (speedup {:.2}x, memo hit rate {:.3})",
-                        sc.name,
-                        t.mean_s,
-                        t_serial.mean_s / t.mean_s,
-                        stats.hit_rate()
-                    );
-                } else {
-                    println!(
-                        "  {:<12} {label:<16}: {:>10.6} s  (speedup {:.2}x)",
-                        sc.name,
-                        t.mean_s,
-                        t_serial.mean_s / t.mean_s
-                    );
-                }
-                let mut row = vec![
-                    ("scenario", Json::Str(sc.name.into())),
-                    ("engine", Json::Str(engine_name.into())),
-                    ("shards", Json::Num(shards as f64)),
-                    ("mean_s", Json::Num(t.mean_s)),
-                    ("std_s", Json::Num(t.std_s)),
-                    ("speedup_vs_serial", Json::Num(t_serial.mean_s / t.mean_s)),
-                    ("cluster_objective", Json::Num(objective)),
-                ];
-                if engine == SwapEngine::Incremental {
-                    let rounds_json: Vec<Json> = stats
-                        .rounds
-                        .iter()
-                        .map(|r| {
+            for (dispatch_name, dispatch) in [
+                ("pooled", Dispatch::Pooled),
+                ("scoped", Dispatch::SpawnPerWave),
+            ] {
+                for shards in [1usize, 2, 8] {
+                    let backend =
+                        ShardedBackend::new(&AnalyticBackend, shards).dispatch(dispatch);
+                    let mut planner = Planner::new(jobs[0], &sc.servers)
+                        .objective(Objective::Mean)
+                        .backend(&backend)
+                        .swap_engine(engine);
+                    if let Some(g) = ctx.pinned {
+                        planner = planner.grid(g);
+                    }
+                    // identity is the gate, timing is the payload: check
+                    // the plans against the serial reference BEFORE any
+                    // timing loop so a divergent engine can never post a
+                    // number
+                    let (got, stats) =
+                        planner.plan_jobs_report(&jobs).expect("job set is feasible");
+                    if !plans_identical(&got, &reference) {
+                        eprintln!(
+                            "multijob_bench: {engine_name} {dispatch_name} x{shards} plans \
+                             diverged from the serial reference on scenario '{}'",
+                            sc.name
+                        );
+                        ctx.write(&scenario_cfgs, &results, false);
+                        std::process::exit(1);
+                    }
+                    // every side is accounted for: fresh + memo = 2 sides
+                    // per candidate exchange, every round, any engine
+                    for (i, r) in stats.rounds.iter().enumerate() {
+                        assert_eq!(
+                            r.scored + r.memo_hits,
+                            2 * r.candidates,
+                            "'{}' {engine_name} {dispatch_name} x{shards} round {i}: \
+                             side accounting broke",
+                            sc.name
+                        );
+                    }
+                    // when pairs survive round 1 untouched the memo must
+                    // actually pay: hits land in round 2 and scoring work
+                    // drops below the 2-sides-per-candidate ceiling
+                    if engine == SwapEngine::Incremental
+                        && stats.rounds.len() >= 2
+                        && jobs.len() >= 2 * stats.rounds[0].applied + 2
+                    {
+                        assert!(
+                            stats.rounds[1].memo_hits > 0 && stats.hit_rate() > 0.0,
+                            "'{}' x{shards}: pairs survived round 1 untouched but the memo \
+                             never hit",
+                            sc.name
+                        );
+                        assert!(
+                            stats.rounds[1].scored < 2 * stats.rounds[1].candidates,
+                            "'{}' x{shards}: memo hits saved no scoring work after round 1",
+                            sc.name
+                        );
+                    }
+                    let t = bench(warmup, iters, || planner.plan_jobs(&jobs).unwrap());
+                    let objective = cluster_objective(&got, &jobs, Objective::Mean);
+                    let label = format!("{engine_name} {dispatch_name} x{shards}");
+                    if engine == SwapEngine::Incremental {
+                        println!(
+                            "  {:<12} {label:<24}: {:>10.6} s  (speedup {:.2}x, memo hit \
+                             rate {:.3})",
+                            sc.name,
+                            t.mean_s,
+                            t_serial.mean_s / t.mean_s,
+                            stats.hit_rate()
+                        );
+                    } else {
+                        println!(
+                            "  {:<12} {label:<24}: {:>10.6} s  (speedup {:.2}x)",
+                            sc.name,
+                            t.mean_s,
+                            t_serial.mean_s / t.mean_s
+                        );
+                    }
+                    let mut row = vec![
+                        ("scenario", Json::Str(sc.name.into())),
+                        ("engine", Json::Str(engine_name.into())),
+                        ("dispatch", Json::Str(dispatch_name.into())),
+                        ("shards", Json::Num(shards as f64)),
+                        ("mean_s", Json::Num(t.mean_s)),
+                        ("std_s", Json::Num(t.std_s)),
+                        ("speedup_vs_serial", Json::Num(t_serial.mean_s / t.mean_s)),
+                        ("cluster_objective", Json::Num(objective)),
+                    ];
+                    if engine == SwapEngine::Incremental {
+                        let rounds_json: Vec<Json> = stats
+                            .rounds
+                            .iter()
+                            .map(|r| {
+                                obj(vec![
+                                    ("candidates", Json::Num(r.candidates as f64)),
+                                    ("scored", Json::Num(r.scored as f64)),
+                                    ("memo_hits", Json::Num(r.memo_hits as f64)),
+                                    ("applied", Json::Num(r.applied as f64)),
+                                ])
+                            })
+                            .collect();
+                        row.push((
+                            "memo",
                             obj(vec![
-                                ("candidates", Json::Num(r.candidates as f64)),
-                                ("scored", Json::Num(r.scored as f64)),
-                                ("memo_hits", Json::Num(r.memo_hits as f64)),
-                                ("applied", Json::Num(r.applied as f64)),
-                            ])
-                        })
-                        .collect();
-                    row.push((
-                        "memo",
-                        obj(vec![
-                            ("hits", Json::Num(stats.memo_hits as f64)),
-                            ("misses", Json::Num(stats.memo_misses as f64)),
-                            ("invalidated", Json::Num(stats.memo_invalidated as f64)),
-                            ("hit_rate", Json::Num(stats.hit_rate())),
-                            ("rounds", Json::Arr(rounds_json)),
-                        ]),
-                    ));
+                                ("hits", Json::Num(stats.memo_hits as f64)),
+                                ("misses", Json::Num(stats.memo_misses as f64)),
+                                ("invalidated", Json::Num(stats.memo_invalidated as f64)),
+                                ("hit_rate", Json::Num(stats.hit_rate())),
+                                ("rounds", Json::Arr(rounds_json)),
+                            ]),
+                        ));
+                    }
+                    // fabric counters (workers, inline/dispatched waves,
+                    // chunks, queue depth, scratch allocs) — cumulative
+                    // over the identity-gate call, captured before timing
+                    if let Some(fs) = stats.fabric {
+                        row.push((
+                            "fabric",
+                            obj(vec![
+                                ("workers", Json::Num(fs.workers as f64)),
+                                ("pinned", Json::Bool(fs.pinned)),
+                                ("waves_inline", Json::Num(fs.waves_inline as f64)),
+                                ("waves_dispatched", Json::Num(fs.waves_dispatched as f64)),
+                                ("chunks_dispatched", Json::Num(fs.chunks_dispatched as f64)),
+                                ("max_queue_depth", Json::Num(fs.max_queue_depth as f64)),
+                                ("scratch_allocs", Json::Num(fs.scratch_allocs as f64)),
+                            ]),
+                        ));
+                    }
+                    results.push(obj(row));
                 }
-                results.push(obj(row));
             }
         }
     }
 
     // a divergence exits above, so reaching this point means every
-    // engine × shards configuration matched its serial reference
+    // engine × dispatch × shards configuration matched its serial
+    // reference
     ctx.write(&scenario_cfgs, &results, true);
     println!("wrote {} (identical: true)", ctx.out_path);
 }

@@ -1,8 +1,12 @@
 //! PERF — sharded wave scoring: `ShardedBackend` vs the serial inner
 //! backend on wide candidate waves over a many-server pool, plus the
-//! end-to-end multi-job planner. The paper's response-time tails grow
-//! with the number of series/parallel servers, so realistic plans need
-//! wide searches exactly where single-threaded `score_batch` bottlenecks.
+//! end-to-end multi-job planner. Both dispatch modes are measured —
+//! the persistent pooled fabric (default) against the spawn-per-wave
+//! scoped pool — so the fixed cost the fabric removes is visible as a
+//! pooled-vs-scoped delta at every shard count. The paper's
+//! response-time tails grow with the number of series/parallel servers,
+//! so realistic plans need wide searches exactly where single-threaded
+//! `score_batch` bottlenecks.
 //!
 //! Reported in EXPERIMENTS.md §Perf. Writes bench_out/sharded_scoring.csv.
 
@@ -65,36 +69,49 @@ fn main() {
         "s".into(),
     ]);
 
-    // correctness smoke: sharded output must equal serial bit for bit
+    // correctness smoke: both dispatch modes must equal serial bit for
+    // bit — identity is asserted before either mode is allowed to time
     let reference = serial.score_batch(&wf, &wave, &servers, &grid, ResponseModel::Mm1);
     let mut best_speedup = 0.0f64;
-    for shards in [2usize, 4, cpus.max(2)] {
-        let backend = ShardedBackend::new(&serial, shards);
-        let got = backend.score_batch(&wf, &wave, &servers, &grid, ResponseModel::Mm1);
-        assert_eq!(got.len(), reference.len());
-        for (g, r) in got.iter().zip(reference.iter()) {
-            assert_eq!(g.mean, r.mean, "sharded wave diverged from serial");
-            assert_eq!(g.p99, r.p99);
+    for (mode, dispatch) in [
+        ("pooled", Dispatch::Pooled),
+        ("scoped", Dispatch::SpawnPerWave),
+    ] {
+        for shards in [2usize, 4, cpus.max(2)] {
+            let backend = ShardedBackend::new(&serial, shards).dispatch(dispatch);
+            let got = backend.score_batch(&wf, &wave, &servers, &grid, ResponseModel::Mm1);
+            assert_eq!(got.len(), reference.len());
+            for (g, r) in got.iter().zip(reference.iter()) {
+                assert_eq!(g.mean, r.mean, "{mode} wave diverged from serial");
+                assert_eq!(g.p99, r.p99);
+            }
+            let t = bench(1, 5, || {
+                backend.score_batch(&wf, &wave, &servers, &grid, ResponseModel::Mm1)
+            });
+            let speedup = t_serial.mean_s / t.mean_s;
+            best_speedup = best_speedup.max(speedup);
+            println!(
+                "{mode} x{shards:<2} (256)         : {} (speedup {speedup:.2}x)",
+                fmt_time(t.mean_s)
+            );
+            csv.row(&[
+                format!("{mode}_x{shards}_wave_s"),
+                format!("{:.6}", t.mean_s),
+                "s".into(),
+            ]);
+            csv.row(&[
+                format!("{mode}_x{shards}_speedup"),
+                format!("{speedup:.3}"),
+                "x".into(),
+            ]);
+            if let Some(fs) = backend.fabric_stats() {
+                csv.row(&[
+                    format!("{mode}_x{shards}_scratch_allocs"),
+                    format!("{}", fs.scratch_allocs),
+                    "buffers".into(),
+                ]);
+            }
         }
-        let t = bench(1, 5, || {
-            backend.score_batch(&wf, &wave, &servers, &grid, ResponseModel::Mm1)
-        });
-        let speedup = t_serial.mean_s / t.mean_s;
-        best_speedup = best_speedup.max(speedup);
-        println!(
-            "sharded x{shards:<2} (256)        : {} (speedup {speedup:.2}x)",
-            fmt_time(t.mean_s)
-        );
-        csv.row(&[
-            format!("sharded_x{shards}_wave_s"),
-            format!("{:.6}", t.mean_s),
-            "s".into(),
-        ]);
-        csv.row(&[
-            format!("sharded_x{shards}_speedup"),
-            format!("{speedup:.3}"),
-            "x".into(),
-        ]);
     }
 
     // --- end-to-end multi-job planning ----------------------------------

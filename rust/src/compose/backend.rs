@@ -19,7 +19,10 @@
 //!   literature;
 //! * [`ShardedBackend`] — a combinator, not a predictor: wraps any of
 //!   the above (or a custom backend) and fans each `score_batch` wave
-//!   across a pool of worker threads, preserving input order and
+//!   onto the persistent scoring fabric
+//!   ([`ScoringPool`](crate::compose::fabric::ScoringPool); a
+//!   spawn-per-wave scoped pool remains as the
+//!   [`Dispatch::SpawnPerWave`] fallback), preserving input order and
 //!   returning bit-identical scores to the inner backend run serially.
 //!
 //! Custom predictors (learned models, remote services) implement the
@@ -45,10 +48,12 @@
 use std::borrow::Cow;
 use std::fmt;
 use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::Mutex;
+use std::sync::{Mutex, OnceLock};
 
+use crate::compose::fabric::{FabricStats, ScoringPool};
 use crate::compose::grid::GridSpec;
-use crate::compose::score::{score_allocation_with, Score};
+use crate::compose::score::{score_allocation_scratch, score_allocation_with, Score};
+use crate::compose::scratch::Scratch;
 use crate::dist::empirical::Empirical;
 use crate::dist::fit::select_family;
 use crate::dist::ServiceDist;
@@ -94,6 +99,36 @@ pub trait ScoreBackend {
             .iter()
             .map(|a| self.score(wf, a, servers, grid, model))
             .collect()
+    }
+
+    /// [`ScoreBackend::score_batch`] with a caller-provided [`Scratch`]
+    /// arena for intermediate kernel buffers — the entry point the
+    /// scoring fabric's workers use, so one long-lived arena serves
+    /// every candidate a worker ever scores. **Must be bit-identical to
+    /// [`ScoreBackend::score_batch`]** on the same inputs; the default
+    /// simply ignores the scratch and delegates, which is trivially so.
+    /// Backends with an allocation-free hot loop override it (see
+    /// [`AnalyticBackend`], [`EmpiricalBackend`]).
+    fn score_batch_scratch(
+        &self,
+        wf: &Workflow,
+        allocs: &[Allocation],
+        servers: &[Server],
+        grid: &GridSpec,
+        model: ResponseModel,
+        scratch: &mut Scratch,
+    ) -> Vec<Score> {
+        let _ = scratch;
+        self.score_batch(wf, allocs, servers, grid, model)
+    }
+
+    /// Counter snapshot of this backend's scoring fabric, when it has
+    /// one — `None` (the default) for plain predictors. The sharded
+    /// combinator reports pool/queue/scratch counters here; they flow
+    /// into [`SwapStats`](crate::sched::multijob::SwapStats) and the
+    /// benchmark JSON.
+    fn fabric_stats(&self) -> Option<FabricStats> {
+        None
     }
 
     /// The pool this backend effectively scores against, when it
@@ -142,6 +177,24 @@ impl ScoreBackend for AnalyticBackend {
         model: ResponseModel,
     ) -> Score {
         score_allocation_with(wf, alloc, servers, grid, model)
+    }
+
+    /// Allocation-free batch path: every candidate scores through
+    /// [`score_allocation_scratch`], bit-identical to the allocating
+    /// form (the fabric workers' hot loop).
+    fn score_batch_scratch(
+        &self,
+        wf: &Workflow,
+        allocs: &[Allocation],
+        servers: &[Server],
+        grid: &GridSpec,
+        model: ResponseModel,
+        scratch: &mut Scratch,
+    ) -> Vec<Score> {
+        allocs
+            .iter()
+            .map(|a| score_allocation_scratch(wf, a, servers, grid, model, scratch))
+            .collect()
     }
 }
 
@@ -262,6 +315,24 @@ impl ScoreBackend for EmpiricalBackend {
             .collect()
     }
 
+    /// Same one-substitution-per-wave shape as
+    /// [`EmpiricalBackend::score_batch`], on the allocation-free scorer.
+    fn score_batch_scratch(
+        &self,
+        wf: &Workflow,
+        allocs: &[Allocation],
+        servers: &[Server],
+        grid: &GridSpec,
+        model: ResponseModel,
+        scratch: &mut Scratch,
+    ) -> Vec<Score> {
+        let scoring = self.resolve_scoring_pool(servers);
+        allocs
+            .iter()
+            .map(|a| score_allocation_scratch(wf, a, &scoring, grid, model, scratch))
+            .collect()
+    }
+
     fn scoring_pool(&self, servers: &[Server]) -> Option<Vec<Server>> {
         if self.fitted.iter().all(|l| l.is_none()) {
             return None;
@@ -290,11 +361,33 @@ pub enum ChunkPolicy {
     Fixed(usize),
 }
 
+/// How a [`ShardedBackend`] executes the chunks of a parallel wave.
+/// Both modes produce bit-identical results (property-tested in
+/// `tests/fabric_equivalence.rs`); the choice is purely about fixed
+/// cost per wave.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum Dispatch {
+    /// The persistent scoring fabric
+    /// ([`ScoringPool`](crate::compose::fabric::ScoringPool)): worker
+    /// threads are spawned once, lazily on the first parallel wave,
+    /// keep a long-lived [`Scratch`] arena each, and score chunks
+    /// through [`ScoreBackend::score_batch_scratch`]. The default —
+    /// at re-optimization frequencies the per-wave spawn/join and
+    /// per-candidate buffer churn of the scoped path dominate cheap
+    /// analytic scores.
+    #[default]
+    Pooled,
+    /// Spawn a scoped thread pool per wave and score through the plain
+    /// allocating [`ScoreBackend::score_batch`] — no long-lived state
+    /// at all. Kept as the bit-identity oracle and as a fallback for
+    /// environments where persistent threads are unwanted.
+    SpawnPerWave,
+}
+
 /// A [`ScoreBackend`] combinator that fans each [`score_batch`] wave
-/// across a per-wave pool of scoped worker threads — the first scaling
-/// layer for wide candidate searches over many-server pools, where the
-/// paper's response-time tails make single-threaded wave scoring the
-/// planner's bottleneck.
+/// across worker threads — the first scaling layer for wide candidate
+/// searches over many-server pools, where the paper's response-time
+/// tails make single-threaded wave scoring the planner's bottleneck.
 ///
 /// [`score_batch`]: ScoreBackend::score_batch
 ///
@@ -303,10 +396,21 @@ pub enum ChunkPolicy {
 /// results are reassembled **in input order**. Because [`ScoreBackend`]
 /// scores candidates independently, the output is bit-identical to
 /// running the inner backend serially — property-tested in
-/// `tests/backend_equivalence.rs` across shard counts. Waves narrower
-/// than [`ShardedBackend::MIN_PARALLEL_WAVE`] (and single-candidate
-/// [`ScoreBackend::score`] calls) are scored inline, so thread spawn
+/// `tests/backend_equivalence.rs` and `tests/fabric_equivalence.rs`
+/// across shard counts, chunkings and dispatch modes. Waves narrower
+/// than [`ShardedBackend::min_wave`] (default
+/// [`ShardedBackend::MIN_PARALLEL_WAVE`]; tune with
+/// [`ShardedBackend::min_parallel_wave`]) and single-candidate
+/// [`ScoreBackend::score`] calls are scored inline, so dispatch
 /// cost is never paid where it cannot be amortized.
+///
+/// Two execution modes ([`Dispatch`]): the default [`Dispatch::Pooled`]
+/// feeds waves to a lazily spawned persistent
+/// [`ScoringPool`](crate::compose::fabric::ScoringPool) whose workers
+/// reuse one [`Scratch`] arena each across all waves (dropped with the
+/// backend); [`Dispatch::SpawnPerWave`] keeps the original scoped
+/// per-wave pool. Fabric counters are observable through
+/// [`ScoreBackend::fabric_stats`] in both modes.
 ///
 /// The inner backend must be [`Sync`]: [`AnalyticBackend`],
 /// [`EmpiricalBackend`] and
@@ -342,19 +446,35 @@ pub struct ShardedBackend<'a> {
     inner: &'a (dyn ScoreBackend + Sync),
     shards: usize,
     chunking: ChunkPolicy,
+    dispatch: Dispatch,
+    min_wave: usize,
+    pin_cores: Option<bool>,
+    pool: OnceLock<ScoringPool>,
+    waves_inline: AtomicUsize,
+    waves_dispatched: AtomicUsize,
+    chunks_dispatched: AtomicUsize,
     name: String,
 }
 
 impl<'a> ShardedBackend<'a> {
     /// Shard `inner` across `shards` worker threads (values `< 1` are
     /// treated as 1, i.e. serial). Builder-style: chain
-    /// [`ShardedBackend::chunking`] to tune wave splitting.
+    /// [`ShardedBackend::chunking`], [`ShardedBackend::dispatch`],
+    /// [`ShardedBackend::min_parallel_wave`] or
+    /// [`ShardedBackend::pin_cores`] to tune it.
     pub fn new(inner: &'a (dyn ScoreBackend + Sync), shards: usize) -> ShardedBackend<'a> {
         let shards = shards.max(1);
         ShardedBackend {
             inner,
             shards,
             chunking: ChunkPolicy::Even,
+            dispatch: Dispatch::Pooled,
+            min_wave: Self::MIN_PARALLEL_WAVE,
+            pin_cores: None,
+            pool: OnceLock::new(),
+            waves_inline: AtomicUsize::new(0),
+            waves_dispatched: AtomicUsize::new(0),
+            chunks_dispatched: AtomicUsize::new(0),
             name: format!("sharded({})x{}", inner.name(), shards),
         }
     }
@@ -375,6 +495,35 @@ impl<'a> ShardedBackend<'a> {
         self
     }
 
+    /// Select the wave execution mode (default [`Dispatch::Pooled`]).
+    #[must_use]
+    pub fn dispatch(mut self, dispatch: Dispatch) -> ShardedBackend<'a> {
+        self.dispatch = dispatch;
+        self
+    }
+
+    /// Set the inline threshold: waves narrower than `n` are scored on
+    /// the calling thread (default
+    /// [`ShardedBackend::MIN_PARALLEL_WAVE`]; values `< 2` disable
+    /// inlining short of single-candidate waves). Inline and parallel
+    /// paths are bit-identical, so this is purely a scheduling knob.
+    #[must_use]
+    pub fn min_parallel_wave(mut self, n: usize) -> ShardedBackend<'a> {
+        self.min_wave = n.max(2);
+        self
+    }
+
+    /// Force core pinning on (`true`) or off (`false`) for pooled
+    /// workers, overriding the `DCFLOW_PIN_CORES` environment knob
+    /// (which is consulted when this builder is never called). Pinning
+    /// only ever takes effect on Linux; see
+    /// [`fabric`](crate::compose::fabric).
+    #[must_use]
+    pub fn pin_cores(mut self, pin: bool) -> ShardedBackend<'a> {
+        self.pin_cores = Some(pin);
+        self
+    }
+
     /// Worker threads per wave.
     pub fn shards(&self) -> usize {
         self.shards
@@ -385,14 +534,37 @@ impl<'a> ShardedBackend<'a> {
         self.chunking
     }
 
-    /// Waves narrower than this are scored inline: spawning scoped
-    /// worker threads costs tens of microseconds each, which cheap
-    /// analytic scores on a small wave cannot amortize (single-job
-    /// refinement on small pools emits narrow O(slots²) rounds; the
-    /// multi-job wave engine's cross-job candidate waves are wide and
-    /// shard fully). Inline and sharded paths are bit-identical, so the
-    /// threshold is purely a scheduling decision.
+    /// Active wave execution mode.
+    pub fn dispatch_mode(&self) -> Dispatch {
+        self.dispatch
+    }
+
+    /// Active inline threshold (see
+    /// [`ShardedBackend::min_parallel_wave`]).
+    pub fn min_wave(&self) -> usize {
+        self.min_wave
+    }
+
+    /// Default inline threshold: waves narrower than this are scored
+    /// inline — dispatch (and, on the scoped path, thread spawn) costs
+    /// that cheap analytic scores on a small wave cannot amortize
+    /// (single-job refinement on small pools emits narrow O(slots²)
+    /// rounds; the multi-job wave engine's cross-job candidate waves
+    /// are wide and shard fully). Inline and parallel paths are
+    /// bit-identical, so the threshold is purely a scheduling decision.
+    /// Tune per backend with [`ShardedBackend::min_parallel_wave`].
     pub const MIN_PARALLEL_WAVE: usize = 8;
+
+    /// Whether pooled workers should be pinned: the explicit builder
+    /// choice when given, else the `DCFLOW_PIN_CORES` env knob.
+    fn pin_workers(&self) -> bool {
+        self.pin_cores.unwrap_or_else(|| {
+            matches!(
+                std::env::var("DCFLOW_PIN_CORES").as_deref(),
+                Ok("1") | Ok("true")
+            )
+        })
+    }
 
     /// Candidates per chunk for a wave of `wave_len`.
     fn chunk_len(&self, wave_len: usize) -> usize {
@@ -409,6 +581,9 @@ impl fmt::Debug for ShardedBackend<'_> {
             .field("inner", &self.inner.name())
             .field("shards", &self.shards)
             .field("chunking", &self.chunking)
+            .field("dispatch", &self.dispatch)
+            .field("min_wave", &self.min_wave)
+            .field("pool", &self.pool.get())
             .finish()
     }
 }
@@ -439,27 +614,43 @@ impl ScoreBackend for ShardedBackend<'_> {
         model: ResponseModel,
     ) -> Vec<Score> {
         let chunk_len = self.chunk_len(allocs.len());
-        if self.shards == 1
-            || allocs.len() <= chunk_len
-            || allocs.len() < Self::MIN_PARALLEL_WAVE
-        {
+        if self.shards == 1 || allocs.len() <= chunk_len || allocs.len() < self.min_wave {
+            self.waves_inline.fetch_add(1, Ordering::Relaxed);
             return self.inner.score_batch(wf, allocs, servers, grid, model);
         }
         let chunks: Vec<&[Allocation]> = allocs.chunks(chunk_len).collect();
         let slots: Vec<Mutex<Vec<Score>>> =
             chunks.iter().map(|_| Mutex::new(Vec::new())).collect();
-        let next = AtomicUsize::new(0);
-        let workers = self.shards.min(chunks.len());
-        std::thread::scope(|scope| {
-            for _ in 0..workers {
-                scope.spawn(|| loop {
-                    let i = next.fetch_add(1, Ordering::Relaxed);
-                    let Some(&chunk) = chunks.get(i) else { break };
-                    let scored = self.inner.score_batch(wf, chunk, servers, grid, model);
+        self.waves_dispatched.fetch_add(1, Ordering::Relaxed);
+        self.chunks_dispatched
+            .fetch_add(chunks.len(), Ordering::Relaxed);
+        match self.dispatch {
+            Dispatch::Pooled => {
+                let pool = self
+                    .pool
+                    .get_or_init(|| ScoringPool::with_pinning(self.shards, self.pin_workers()));
+                pool.dispatch(chunks.len(), &|i, scratch: &mut Scratch| {
+                    let scored = self
+                        .inner
+                        .score_batch_scratch(wf, chunks[i], servers, grid, model, scratch);
                     *slots[i].lock().expect("shard result lock") = scored;
                 });
             }
-        });
+            Dispatch::SpawnPerWave => {
+                let next = AtomicUsize::new(0);
+                let workers = self.shards.min(chunks.len());
+                std::thread::scope(|scope| {
+                    for _ in 0..workers {
+                        scope.spawn(|| loop {
+                            let i = next.fetch_add(1, Ordering::Relaxed);
+                            let Some(&chunk) = chunks.get(i) else { break };
+                            let scored = self.inner.score_batch(wf, chunk, servers, grid, model);
+                            *slots[i].lock().expect("shard result lock") = scored;
+                        });
+                    }
+                });
+            }
+        }
         // reassemble in input order: slot i holds chunk i's scores
         slots
             .into_iter()
@@ -471,6 +662,19 @@ impl ScoreBackend for ShardedBackend<'_> {
         // report the inner backend's effective pool so shared-grid
         // auto-sizing is unchanged by the sharding wrapper
         self.inner.scoring_pool(servers)
+    }
+
+    /// Always `Some`: the backend-level wave counters, merged with the
+    /// pool's queue/scratch counters once the pool has spun up (the
+    /// scoped mode, and a pooled backend that only ever saw inline
+    /// waves, report zero pool counters).
+    fn fabric_stats(&self) -> Option<FabricStats> {
+        let mut st = self.pool.get().map(|p| p.stats()).unwrap_or_default();
+        st.workers = self.shards;
+        st.waves_inline = self.waves_inline.load(Ordering::Relaxed);
+        st.waves_dispatched = self.waves_dispatched.load(Ordering::Relaxed);
+        st.chunks_dispatched = self.chunks_dispatched.load(Ordering::Relaxed);
+        Some(st)
     }
 }
 
@@ -680,6 +884,94 @@ mod tests {
         }
         // and a shard count below 1 degrades to serial, not a panic
         assert_eq!(ShardedBackend::new(&AnalyticBackend, 0).shards(), 1);
+    }
+
+    #[test]
+    fn pooled_dispatch_matches_scoped_and_serial() {
+        // quick in-module check; the full matrix lives in
+        // tests/fabric_equivalence.rs
+        let (wf, servers) = fig6();
+        let model = ResponseModel::Mm1;
+        let mut assign: Vec<usize> = (0..6).collect();
+        let mut wave = Vec::new();
+        for _ in 0..12 {
+            assign.rotate_left(1);
+            if let Ok(a) = crate::sched::schedule_rates(&wf, assign.clone(), &servers, model) {
+                wave.push(a);
+            }
+        }
+        assert!(wave.len() >= ShardedBackend::MIN_PARALLEL_WAVE);
+        let grid = GridSpec::auto_response(&wave[0], &servers, model);
+        let serial = AnalyticBackend.score_batch(&wf, &wave, &servers, &grid, model);
+        let pooled = ShardedBackend::new(&AnalyticBackend, 3);
+        assert_eq!(pooled.dispatch_mode(), Dispatch::Pooled);
+        let scoped = ShardedBackend::new(&AnalyticBackend, 3).dispatch(Dispatch::SpawnPerWave);
+        for backend in [&pooled, &scoped] {
+            let got = backend.score_batch(&wf, &wave, &servers, &grid, model);
+            assert_eq!(got.len(), serial.len());
+            for (g, s) in got.iter().zip(serial.iter()) {
+                assert_eq!(g.mean.to_bits(), s.mean.to_bits());
+                assert_eq!(g.var.to_bits(), s.var.to_bits());
+                assert_eq!(g.p99.to_bits(), s.p99.to_bits());
+                assert_eq!(g.pdf, s.pdf);
+            }
+        }
+        // the pooled backend spun its fabric up and saw the wave
+        let st = pooled.fabric_stats().expect("sharded always reports");
+        assert_eq!(st.workers, 3);
+        assert_eq!(st.waves_dispatched, 1);
+        assert!(st.chunks_dispatched >= 2);
+        assert!(st.max_queue_depth >= 1);
+        // the scoped backend reports wave counters but no pool counters
+        let st = scoped.fabric_stats().expect("sharded always reports");
+        assert_eq!(st.waves_dispatched, 1);
+        assert_eq!(st.max_queue_depth, 0);
+        assert_eq!(st.scratch_allocs, 0);
+    }
+
+    #[test]
+    fn min_parallel_wave_keeps_small_waves_inline() {
+        // the builder knob: waves below the threshold stay on the
+        // caller thread in both dispatch modes (observable through the
+        // inline/dispatched counters), and raising the threshold
+        // inlines waves the default would have fanned out
+        let (wf, servers) = fig6();
+        let model = ResponseModel::Mm1;
+        let mut assign: Vec<usize> = (0..6).collect();
+        let mut wave = Vec::new();
+        for _ in 0..12 {
+            assign.rotate_left(1);
+            if let Ok(a) = crate::sched::schedule_rates(&wf, assign.clone(), &servers, model) {
+                wave.push(a);
+            }
+        }
+        let grid = GridSpec::auto_response(&wave[0], &servers, model);
+        let small = &wave[..ShardedBackend::MIN_PARALLEL_WAVE - 1];
+        for dispatch in [Dispatch::Pooled, Dispatch::SpawnPerWave] {
+            let b = ShardedBackend::new(&AnalyticBackend, 3).dispatch(dispatch);
+            assert_eq!(b.min_wave(), ShardedBackend::MIN_PARALLEL_WAVE);
+            b.score_batch(&wf, small, &servers, &grid, model);
+            let st = b.fabric_stats().unwrap();
+            assert_eq!(st.waves_inline, 1, "{dispatch:?}");
+            assert_eq!(st.waves_dispatched, 0, "{dispatch:?}");
+
+            // raised threshold: the full wave stays inline too
+            let b = ShardedBackend::new(&AnalyticBackend, 3)
+                .dispatch(dispatch)
+                .min_parallel_wave(wave.len() + 1);
+            b.score_batch(&wf, &wave, &servers, &grid, model);
+            assert_eq!(b.fabric_stats().unwrap().waves_inline, 1);
+
+            // lowered threshold: a formerly-inline wave now fans out
+            let b = ShardedBackend::new(&AnalyticBackend, 3)
+                .dispatch(dispatch)
+                .min_parallel_wave(2)
+                .chunking(ChunkPolicy::Fixed(1));
+            b.score_batch(&wf, small, &servers, &grid, model);
+            let st = b.fabric_stats().unwrap();
+            assert_eq!(st.waves_inline, 0, "{dispatch:?}");
+            assert_eq!(st.waves_dispatched, 1, "{dispatch:?}");
+        }
     }
 
     #[test]

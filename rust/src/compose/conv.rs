@@ -10,13 +10,24 @@
 //!   bit-stable, used as the oracle;
 //! * [`conv_fft`]    — O(G log G) via [`super::fft`]; the native hot path.
 
-use super::fft::convolve_real;
+use super::fft::{convolve_real, convolve_real_into};
+use super::scratch::Scratch;
 
 /// Direct O(G²) truncated convolution with trapezoid correction.
 pub fn conv_direct(f: &[f64], g: &[f64], dt: f64) -> Vec<f64> {
     assert_eq!(f.len(), g.len(), "grids must match");
+    let mut out = vec![0.0; f.len()];
+    conv_direct_into(f, g, dt, &mut out);
+    out
+}
+
+/// [`conv_direct`] into a caller buffer (`out.len()` must equal the
+/// grid) — the same triangle sum on the same operands, bit-identical.
+pub fn conv_direct_into(f: &[f64], g: &[f64], dt: f64, out: &mut [f64]) {
+    assert_eq!(f.len(), g.len(), "grids must match");
     let n = f.len();
-    let mut out = vec![0.0; n];
+    assert_eq!(out.len(), n, "output grid must match");
+    out.fill(0.0);
     for (j, &fj) in f.iter().enumerate() {
         if fj == 0.0 {
             continue;
@@ -26,8 +37,7 @@ pub fn conv_direct(f: &[f64], g: &[f64], dt: f64) -> Vec<f64> {
             *o += fj * gi;
         }
     }
-    endpoint_correct(&mut out, f, g, dt);
-    out
+    endpoint_correct(out, f, g, dt);
 }
 
 /// FFT-backed truncated convolution with trapezoid correction.
@@ -38,6 +48,17 @@ pub fn conv_fft(f: &[f64], g: &[f64], dt: f64) -> Vec<f64> {
     let mut out = full[..n].to_vec();
     endpoint_correct(&mut out, f, g, dt);
     out
+}
+
+/// [`conv_fft`] into a caller buffer with the complex work buffers
+/// borrowed from `scratch` — bit-identical to the allocating form
+/// (identical FFT size and schedule; see
+/// [`convolve_real_into`]).
+pub fn conv_fft_into(f: &[f64], g: &[f64], dt: f64, out: &mut [f64], scratch: &mut Scratch) {
+    assert_eq!(f.len(), g.len(), "grids must match");
+    assert_eq!(out.len(), f.len(), "output grid must match");
+    convolve_real_into(f, g, out, scratch);
+    endpoint_correct(out, f, g, dt);
 }
 
 #[inline]
@@ -62,6 +83,19 @@ pub fn conv_auto(f: &[f64], g: &[f64], dt: f64) -> Vec<f64> {
         conv_direct(f, g, dt)
     } else {
         conv_fft(f, g, dt)
+    }
+}
+
+/// [`conv_auto`] into a caller buffer: the same crossover, dispatched
+/// to [`conv_direct_into`] / [`conv_fft_into`], bit-identical to the
+/// allocating form. This is what the scratch scoring path
+/// ([`super::score::score_allocation_scratch`]) folds serial stacks
+/// with.
+pub fn conv_auto_into(f: &[f64], g: &[f64], dt: f64, out: &mut [f64], scratch: &mut Scratch) {
+    if f.len() <= DIRECT_FFT_CROSSOVER {
+        conv_direct_into(f, g, dt, out);
+    } else {
+        conv_fft_into(f, g, dt, out, scratch);
     }
 }
 
@@ -188,5 +222,40 @@ mod tests {
     #[should_panic(expected = "grids must match")]
     fn rejects_mismatched_grids() {
         conv_fft(&[1.0; 8], &[1.0; 16], 0.1);
+    }
+
+    #[test]
+    fn into_variants_are_bit_identical() {
+        // the scratch path must not perturb a single ulp, on both sides
+        // of the direct/FFT crossover
+        let mut scratch = Scratch::new();
+        for n in [200usize, DIRECT_FFT_CROSSOVER + 64] {
+            let dt = 0.01;
+            let d1 = ServiceDist::exponential(2.0).pdf_grid(dt, n);
+            let d2 = ServiceDist::exponential(5.0).pdf_grid(dt, n);
+            let want = conv_auto(&d1, &d2, dt);
+            let mut got = vec![f64::NAN; n];
+            conv_auto_into(&d1, &d2, dt, &mut got, &mut scratch);
+            for (k, (x, y)) in got.iter().zip(want.iter()).enumerate() {
+                assert_eq!(x.to_bits(), y.to_bits(), "n={n} k={k}: {x} vs {y}");
+            }
+            // and the explicit backends agree with their into twins
+            let mut direct = vec![0.0; n];
+            conv_direct_into(&d1, &d2, dt, &mut direct);
+            assert_eq!(direct, conv_direct(&d1, &d2, dt));
+            let mut fft = vec![0.0; n];
+            conv_fft_into(&d1, &d2, dt, &mut fft, &mut scratch);
+            assert_eq!(fft, conv_fft(&d1, &d2, dt));
+        }
+        // warm scratch ⇒ repeated FFT convs allocate nothing
+        let n = DIRECT_FFT_CROSSOVER + 64;
+        let d = ServiceDist::exponential(3.0).pdf_grid(0.01, n);
+        let mut out = vec![0.0; n];
+        conv_fft_into(&d, &d, 0.01, &mut out, &mut scratch);
+        let warm = scratch.buffer_allocs();
+        for _ in 0..4 {
+            conv_fft_into(&d, &d, 0.01, &mut out, &mut scratch);
+        }
+        assert_eq!(scratch.buffer_allocs(), warm);
     }
 }

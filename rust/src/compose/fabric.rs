@@ -1,0 +1,467 @@
+//! The persistent scoring fabric: long-lived worker threads fed from a
+//! shared chunk queue.
+//!
+//! [`ShardedBackend`](super::backend::ShardedBackend) used to spawn a
+//! scoped thread pool *per wave*; at re-optimization frequencies the
+//! spawn/join cost dominates cheap analytic scores. [`ScoringPool`]
+//! replaces it with the fabric pattern of timely's allocator layer:
+//! workers are spawned **once**, park on a condvar-fed queue, execute
+//! wave chunks as they arrive, and shut down gracefully when the pool
+//! is dropped. Each worker owns one long-lived
+//! [`Scratch`](super::scratch::Scratch) arena, so kernel buffers are
+//! reused across every chunk the worker ever scores — the other half of
+//! the allocation-free hot loop.
+//!
+//! Data flow of one [`ScoringPool::dispatch`] wave:
+//!
+//! ```text
+//!   dispatch(n_chunks, work)                 worker 0 .. worker W-1
+//!      │  enqueue n packets ──► [ chunk queue ] ──► pop ─► work(i, &mut scratch)
+//!      │  (Mutex<VecDeque> + Condvar)                 │
+//!      └── block on wave latch ◄── count down ◄───────┘
+//!           (rethrows any worker panic)
+//! ```
+//!
+//! `dispatch` **blocks until every chunk of its wave completed**, which
+//! is what makes the lifetime-erased packet safe: the work closure is
+//! borrowed only while the dispatcher is parked on the latch. A panic
+//! inside a chunk is caught on the worker, carried through the latch,
+//! and re-thrown on the dispatching thread — same observable behavior
+//! as the scoped-pool path, and the pool stays usable afterwards.
+//!
+//! Optional **core pinning** (`DCFLOW_PIN_CORES=1`, or
+//! [`ShardedBackend::pin_cores`](super::backend::ShardedBackend::pin_cores))
+//! pins worker `i` to core `i % available_parallelism` via a raw
+//! `sched_setaffinity` call on Linux (no-op elsewhere) — the
+//! `core_affinity` idiom of the timely/graspan experiment drivers,
+//! without the dependency.
+
+use std::collections::VecDeque;
+use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+
+use crate::compose::scratch::Scratch;
+
+/// Counter snapshot of a scoring fabric — reported through
+/// [`ScoreBackend::fabric_stats`](super::backend::ScoreBackend::fabric_stats)
+/// and surfaced in [`SwapStats`](crate::sched::multijob::SwapStats) /
+/// `BENCH_multijob.json` so pool behavior is observable.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct FabricStats {
+    /// Worker threads in the pool (the configured shard count).
+    pub workers: usize,
+    /// Whether workers were pinned to cores (only ever true on Linux).
+    pub pinned: bool,
+    /// Waves scored inline on the caller thread (below the parallel
+    /// threshold) instead of being dispatched.
+    pub waves_inline: usize,
+    /// Waves fanned out across workers.
+    pub waves_dispatched: usize,
+    /// Chunks enqueued across all dispatched waves.
+    pub chunks_dispatched: usize,
+    /// High-water mark of the chunk queue depth at enqueue time.
+    pub max_queue_depth: usize,
+    /// Scratch-buffer heap events (created + grown) summed over all
+    /// workers — flat after warm-up when the hot loop is
+    /// allocation-free (see [`Scratch::buffer_allocs`]).
+    pub scratch_allocs: usize,
+}
+
+/// A caught worker panic, carried back to the dispatching thread.
+type Payload = Box<dyn std::any::Any + Send + 'static>;
+
+/// Completion latch for one dispatched wave.
+struct WaveLatch {
+    state: Mutex<LatchState>,
+    done: Condvar,
+}
+
+struct LatchState {
+    remaining: usize,
+    panic: Option<Payload>,
+}
+
+impl WaveLatch {
+    fn new(remaining: usize) -> WaveLatch {
+        WaveLatch {
+            state: Mutex::new(LatchState {
+                remaining,
+                panic: None,
+            }),
+            done: Condvar::new(),
+        }
+    }
+
+    /// One chunk finished (carrying its panic payload, if it had one).
+    fn complete(&self, panic: Option<Payload>) {
+        let mut st = self.state.lock().expect("fabric latch");
+        if st.panic.is_none() {
+            if let Some(p) = panic {
+                st.panic = Some(p);
+            }
+        }
+        st.remaining -= 1;
+        if st.remaining == 0 {
+            self.done.notify_all();
+        }
+    }
+
+    /// Block until every chunk completed; rethrow the first panic.
+    fn wait(&self) {
+        let mut st = self.state.lock().expect("fabric latch");
+        while st.remaining > 0 {
+            st = self.done.wait(st).expect("fabric latch");
+        }
+        if let Some(p) = st.panic.take() {
+            drop(st);
+            resume_unwind(p);
+        }
+    }
+}
+
+/// One unit of queued work: a lifetime-erased chunk closure call.
+struct Packet {
+    /// Monomorphized trampoline re-typing `ctx` to the closure.
+    run: unsafe fn(*const (), usize, &mut Scratch),
+    /// Borrow of the `dispatch` caller's closure, erased.
+    ctx: *const (),
+    /// Chunk index passed through to the closure.
+    chunk: usize,
+    /// The dispatching wave's completion latch.
+    wave: Arc<WaveLatch>,
+}
+
+// Safety: `ctx` borrows the closure passed to `dispatch`, and
+// `dispatch` blocks on the wave latch until every packet of the wave
+// has called `complete` — the pointee strictly outlives every use. The
+// closure bound is `Sync`, so concurrent shared access from workers is
+// sound. Nothing else in the packet is thread-affine.
+unsafe impl Send for Packet {}
+
+struct Queue {
+    packets: VecDeque<Packet>,
+    shutdown: bool,
+}
+
+struct Shared {
+    queue: Mutex<Queue>,
+    available: Condvar,
+    waves: AtomicUsize,
+    chunks: AtomicUsize,
+    depth_hwm: AtomicUsize,
+    scratch_allocs: AtomicUsize,
+}
+
+/// A persistent pool of scoring workers (see the [module docs](self)).
+///
+/// Construction spawns the threads; [`ScoringPool::dispatch`] fans a
+/// wave of chunk indices across them and blocks until the wave
+/// completed; dropping the pool signals shutdown and joins every
+/// worker. The pool is `Sync`: concurrent `dispatch` calls interleave
+/// safely (each wave has its own latch), though the intended use — one
+/// planner loop per pool — dispatches sequentially.
+pub struct ScoringPool {
+    shared: Arc<Shared>,
+    workers: Vec<JoinHandle<()>>,
+    pinned: bool,
+}
+
+impl ScoringPool {
+    /// Spawn a pool of `workers` threads (values `< 1` are treated as
+    /// 1) without core pinning.
+    pub fn new(workers: usize) -> ScoringPool {
+        Self::with_pinning(workers, false)
+    }
+
+    /// Spawn a pool of `workers` threads, optionally pinning worker `i`
+    /// to core `i % available_parallelism` (Linux only; `pin` is
+    /// recorded as effective only where the syscall exists).
+    pub fn with_pinning(workers: usize, pin: bool) -> ScoringPool {
+        let n = workers.max(1);
+        let shared = Arc::new(Shared {
+            queue: Mutex::new(Queue {
+                packets: VecDeque::new(),
+                shutdown: false,
+            }),
+            available: Condvar::new(),
+            waves: AtomicUsize::new(0),
+            chunks: AtomicUsize::new(0),
+            depth_hwm: AtomicUsize::new(0),
+            scratch_allocs: AtomicUsize::new(0),
+        });
+        let handles = (0..n)
+            .map(|i| {
+                let shared = Arc::clone(&shared);
+                std::thread::Builder::new()
+                    .name(format!("dcflow-score-{i}"))
+                    .spawn(move || worker_loop(&shared, i, pin))
+                    .expect("spawn scoring worker")
+            })
+            .collect();
+        ScoringPool {
+            shared,
+            workers: handles,
+            pinned: pin && cfg!(target_os = "linux"),
+        }
+    }
+
+    /// Worker threads in the pool.
+    pub fn workers(&self) -> usize {
+        self.workers.len()
+    }
+
+    /// Whether workers were pinned to cores.
+    pub fn pinned(&self) -> bool {
+        self.pinned
+    }
+
+    /// Fan `work` over chunk indices `0..chunks` and block until every
+    /// chunk completed. Each invocation receives the chunk index and
+    /// the executing worker's long-lived [`Scratch`]. Chunks may run on
+    /// any worker in any order; a panic inside `work` is re-thrown here
+    /// after the wave drains (the pool survives it).
+    pub fn dispatch<F>(&self, chunks: usize, work: &F)
+    where
+        F: Fn(usize, &mut Scratch) + Sync,
+    {
+        if chunks == 0 {
+            return;
+        }
+        /// Re-type the erased context back to `&F` and call it.
+        unsafe fn trampoline<F: Fn(usize, &mut Scratch) + Sync>(
+            ctx: *const (),
+            chunk: usize,
+            scratch: &mut Scratch,
+        ) {
+            // Safety: `ctx` is the `&F` borrow taken in `dispatch`,
+            // alive until the wave latch below releases the dispatcher.
+            let work = unsafe { &*ctx.cast::<F>() };
+            work(chunk, scratch);
+        }
+        let latch = Arc::new(WaveLatch::new(chunks));
+        {
+            let mut q = self.shared.queue.lock().expect("fabric queue");
+            for chunk in 0..chunks {
+                q.packets.push_back(Packet {
+                    run: trampoline::<F>,
+                    ctx: (work as *const F).cast(),
+                    chunk,
+                    wave: Arc::clone(&latch),
+                });
+            }
+            self.shared
+                .depth_hwm
+                .fetch_max(q.packets.len(), Ordering::Relaxed);
+        }
+        self.shared.available.notify_all();
+        self.shared.waves.fetch_add(1, Ordering::Relaxed);
+        self.shared.chunks.fetch_add(chunks, Ordering::Relaxed);
+        latch.wait();
+    }
+
+    /// Counter snapshot (`waves_inline` is always 0 here — inline waves
+    /// never reach the pool; [`ShardedBackend`] merges its own inline
+    /// counter in).
+    ///
+    /// [`ShardedBackend`]: super::backend::ShardedBackend
+    pub fn stats(&self) -> FabricStats {
+        FabricStats {
+            workers: self.workers.len(),
+            pinned: self.pinned,
+            waves_inline: 0,
+            waves_dispatched: self.shared.waves.load(Ordering::Relaxed),
+            chunks_dispatched: self.shared.chunks.load(Ordering::Relaxed),
+            max_queue_depth: self.shared.depth_hwm.load(Ordering::Relaxed),
+            scratch_allocs: self.shared.scratch_allocs.load(Ordering::Relaxed),
+        }
+    }
+}
+
+impl Drop for ScoringPool {
+    fn drop(&mut self) {
+        self.shared.queue.lock().expect("fabric queue").shutdown = true;
+        self.shared.available.notify_all();
+        for h in self.workers.drain(..) {
+            // worker panics were already rethrown at dispatch; a join
+            // error here cannot carry new information
+            let _ = h.join();
+        }
+    }
+}
+
+impl std::fmt::Debug for ScoringPool {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("ScoringPool")
+            .field("workers", &self.workers.len())
+            .field("pinned", &self.pinned)
+            .finish()
+    }
+}
+
+fn worker_loop(shared: &Shared, index: usize, pin: bool) {
+    if pin {
+        pin_to_core(index);
+    }
+    let mut scratch = Scratch::new();
+    loop {
+        let packet = {
+            let mut q = shared.queue.lock().expect("fabric queue");
+            loop {
+                if let Some(p) = q.packets.pop_front() {
+                    break p;
+                }
+                if q.shutdown {
+                    return;
+                }
+                q = shared.available.wait(q).expect("fabric queue");
+            }
+        };
+        let before = scratch.buffer_allocs();
+        // Safety: see `Packet` — the dispatcher is parked on this
+        // wave's latch until `complete` below, so `ctx` is alive.
+        let result = catch_unwind(AssertUnwindSafe(|| unsafe {
+            (packet.run)(packet.ctx, packet.chunk, &mut scratch)
+        }));
+        shared
+            .scratch_allocs
+            .fetch_add(scratch.buffer_allocs() - before, Ordering::Relaxed);
+        packet.wave.complete(result.err());
+    }
+}
+
+/// Pin the calling thread to core `index % available_parallelism`.
+/// Returns whether the affinity call succeeded.
+#[cfg(target_os = "linux")]
+fn pin_to_core(index: usize) -> bool {
+    // 16 usize words of mask = 1024 CPUs, the kernel's CONFIG_NR_CPUS
+    // ceiling on common distro kernels
+    const MASK_WORDS: usize = 16;
+    extern "C" {
+        fn sched_setaffinity(pid: i32, cpusetsize: usize, mask: *const usize) -> i32;
+    }
+    let cores = std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(1);
+    let core = index % cores;
+    let bits = usize::BITS as usize;
+    let mut mask = [0usize; MASK_WORDS];
+    if core / bits >= MASK_WORDS {
+        return false;
+    }
+    mask[core / bits] |= 1usize << (core % bits);
+    // Safety: pid 0 = the calling thread; the mask buffer is a valid,
+    // properly sized cpu_set_t-compatible word array.
+    unsafe { sched_setaffinity(0, std::mem::size_of_val(&mask), mask.as_ptr()) == 0 }
+}
+
+#[cfg(not(target_os = "linux"))]
+fn pin_to_core(_index: usize) -> bool {
+    false
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dispatch_runs_every_chunk_exactly_once() {
+        let pool = ScoringPool::new(3);
+        let hits: Vec<AtomicUsize> = (0..17).map(|_| AtomicUsize::new(0)).collect();
+        pool.dispatch(17, &|i, _scratch| {
+            hits[i].fetch_add(1, Ordering::Relaxed);
+        });
+        for (i, h) in hits.iter().enumerate() {
+            assert_eq!(h.load(Ordering::Relaxed), 1, "chunk {i}");
+        }
+        let st = pool.stats();
+        assert_eq!(st.workers, 3);
+        assert_eq!(st.waves_dispatched, 1);
+        assert_eq!(st.chunks_dispatched, 17);
+        assert!(st.max_queue_depth >= 1 && st.max_queue_depth <= 17);
+    }
+
+    #[test]
+    fn waves_are_synchronous_barriers() {
+        // every chunk of wave k must be complete before wave k+1 runs
+        let pool = ScoringPool::new(4);
+        let total = AtomicUsize::new(0);
+        for wave in 0..5usize {
+            pool.dispatch(8, &|_i, _s| {
+                total.fetch_add(1, Ordering::Relaxed);
+            });
+            assert_eq!(total.load(Ordering::Relaxed), (wave + 1) * 8);
+        }
+        assert_eq!(pool.stats().waves_dispatched, 5);
+    }
+
+    #[test]
+    fn zero_chunk_wave_is_a_noop() {
+        let pool = ScoringPool::new(2);
+        pool.dispatch(0, &|_i, _s| panic!("must not run"));
+        assert_eq!(pool.stats().waves_dispatched, 0);
+    }
+
+    #[test]
+    fn worker_panic_is_rethrown_and_pool_survives() {
+        let pool = ScoringPool::new(2);
+        let caught = std::panic::catch_unwind(AssertUnwindSafe(|| {
+            pool.dispatch(12, &|i, _s| {
+                if i == 7 {
+                    panic!("chunk 7 exploded");
+                }
+            });
+        }));
+        let payload = caught.expect_err("panic must propagate to the dispatcher");
+        let msg = payload.downcast_ref::<&str>().copied().unwrap_or_default();
+        assert!(msg.contains("chunk 7"), "unexpected payload: {msg}");
+        // the pool is still alive and consistent after the panic wave
+        let ran = AtomicUsize::new(0);
+        pool.dispatch(6, &|_i, _s| {
+            ran.fetch_add(1, Ordering::Relaxed);
+        });
+        assert_eq!(ran.load(Ordering::Relaxed), 6);
+    }
+
+    #[test]
+    fn worker_scratch_is_long_lived() {
+        // the same workers keep their scratch across waves: after a
+        // warm-up wave has touched every worker at most `workers`
+        // creations can ever appear, no matter how many waves follow
+        let pool = ScoringPool::new(2);
+        for _ in 0..10 {
+            pool.dispatch(4, &|_i, scratch| {
+                let a = scratch.take_f64(256);
+                let b = scratch.take_f64(256);
+                scratch.put_f64(a);
+                scratch.put_f64(b);
+            });
+        }
+        let st = pool.stats();
+        // ≤ 2 buffers per worker, ever; 40 chunks would naively be 80
+        assert!(
+            st.scratch_allocs <= 2 * st.workers,
+            "scratch not reused: {} allocs across 10 waves",
+            st.scratch_allocs
+        );
+    }
+
+    #[test]
+    fn drop_joins_workers() {
+        let pool = ScoringPool::new(3);
+        pool.dispatch(3, &|_i, _s| {});
+        drop(pool); // must not hang or leak threads
+    }
+
+    #[test]
+    fn degenerate_worker_count_is_clamped() {
+        let pool = ScoringPool::new(0);
+        assert_eq!(pool.workers(), 1);
+        let ran = AtomicUsize::new(0);
+        pool.dispatch(4, &|_i, _s| {
+            ran.fetch_add(1, Ordering::Relaxed);
+        });
+        assert_eq!(ran.load(Ordering::Relaxed), 4);
+    }
+}

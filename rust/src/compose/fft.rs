@@ -108,6 +108,51 @@ pub fn convolve_real(a: &[f64], b: &[f64]) -> Vec<f64> {
     fa[..out_len].iter().map(|c| c.re * norm).collect()
 }
 
+/// [`convolve_real`] writing the first `out.len()` coefficients into a
+/// caller buffer, with the complex work buffers borrowed from
+/// `scratch` — bit-identical to the allocating form (same padding,
+/// same butterfly schedule, same normalization), zero fresh heap
+/// buffers once the scratch is warm. `out` may be shorter than the
+/// full `la + lb - 1` convolution (the conv layer truncates to the
+/// grid anyway) but never longer.
+pub fn convolve_real_into(
+    a: &[f64],
+    b: &[f64],
+    out: &mut [f64],
+    scratch: &mut crate::compose::scratch::Scratch,
+) {
+    let out_len = a.len() + b.len() - 1;
+    assert!(
+        out.len() <= out_len,
+        "convolution of {}+{} yields {} coefficients, not {}",
+        a.len(),
+        b.len(),
+        out_len,
+        out.len()
+    );
+    let size = out_len.next_power_of_two();
+    let mut fa = scratch.take_c64(size);
+    let mut fb = scratch.take_c64(size);
+    for (c, &x) in fa.iter_mut().zip(a.iter()) {
+        *c = C64::new(x, 0.0);
+    }
+    for (c, &x) in fb.iter_mut().zip(b.iter()) {
+        *c = C64::new(x, 0.0);
+    }
+    fft_inplace(&mut fa, false);
+    fft_inplace(&mut fb, false);
+    for (x, y) in fa.iter_mut().zip(fb.iter()) {
+        *x = x.mul(*y);
+    }
+    fft_inplace(&mut fa, true);
+    let norm = 1.0 / size as f64;
+    for (o, c) in out.iter_mut().zip(fa.iter()) {
+        *o = c.re * norm;
+    }
+    scratch.put_c64(fa);
+    scratch.put_c64(fb);
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -166,5 +211,32 @@ mod tests {
     fn rejects_non_power_of_two() {
         let mut buf = vec![C64::default(); 12];
         fft_inplace(&mut buf, false);
+    }
+
+    #[test]
+    fn convolve_into_is_bit_identical_and_allocation_free() {
+        use crate::compose::scratch::Scratch;
+        let mut scratch = Scratch::new();
+        prop::run("convolve_real_into == convolve_real", 20, |g| {
+            let la = g.usize_in(1, 80);
+            let lb = g.usize_in(1, 80);
+            let a = g.vec_of(la, |g| g.f64_in(-2.0, 2.0));
+            let b = g.vec_of(lb, |g| g.f64_in(-2.0, 2.0));
+            let want = convolve_real(&a, &b);
+            let mut got = vec![f64::NAN; want.len()];
+            convolve_real_into(&a, &b, &mut got, &mut scratch);
+            for (x, y) in got.iter().zip(want.iter()) {
+                assert_eq!(x.to_bits(), y.to_bits(), "{x} vs {y}");
+            }
+        });
+        // warm the scratch on the largest size, then repeats are free
+        let a = vec![1.0; 80];
+        let mut out = vec![0.0; 159];
+        convolve_real_into(&a, &a, &mut out, &mut scratch);
+        let warm = scratch.buffer_allocs();
+        for _ in 0..5 {
+            convolve_real_into(&a, &a, &mut out, &mut scratch);
+        }
+        assert_eq!(scratch.buffer_allocs(), warm, "warm FFT must not allocate");
     }
 }

@@ -141,6 +141,15 @@ impl GridSpec {
         (0..self.n).map(|k| k as f64 * self.dt).collect()
     }
 
+    /// Grid times into a caller buffer of length [`GridSpec::n`] —
+    /// same values as [`GridSpec::times`] without the allocation.
+    pub fn times_into(&self, out: &mut [f64]) {
+        assert_eq!(out.len(), self.n, "output grid must match");
+        for (k, o) in out.iter_mut().enumerate() {
+            *o = k as f64 * self.dt;
+        }
+    }
+
     /// Largest representable time.
     pub fn t_max(&self) -> f64 {
         (self.n - 1) as f64 * self.dt
@@ -159,6 +168,9 @@ mod tests {
         assert_eq!(t[0], 0.0);
         assert!((t[3] - 1.5).abs() < 1e-12);
         assert!((g.t_max() - 7.5).abs() < 1e-12);
+        let mut into = vec![f64::NAN; 16];
+        g.times_into(&mut into);
+        assert_eq!(into, t);
     }
 
     #[test]

@@ -12,11 +12,22 @@ pub fn max_cdf(cdfs: &[Vec<f64>]) -> Vec<f64> {
     assert!(cdfs.iter().all(|c| c.len() == n), "grids must match");
     let mut out = vec![1.0; n];
     for c in cdfs {
-        for (o, &x) in out.iter_mut().zip(c.iter()) {
-            *o *= x;
-        }
+        max_cdf_fold(&mut out, c);
     }
     out
+}
+
+/// One fold step of [`max_cdf`]: multiply branch CDF `branch` into the
+/// accumulator in place. Folding branches in order into a `1.0`-filled
+/// accumulator is exactly what [`max_cdf`] does internally, so the
+/// incremental form is bit-identical — this is the scratch scoring
+/// path's parallel composition (it never materializes all branch CDFs
+/// at once).
+pub fn max_cdf_fold(acc: &mut [f64], branch: &[f64]) {
+    assert_eq!(acc.len(), branch.len(), "grids must match");
+    for (o, &x) in acc.iter_mut().zip(branch.iter()) {
+        *o *= x;
+    }
 }
 
 /// CDF of `min(X_1..X_n)`: `1 - prod_i (1 - F_i)`.
@@ -134,5 +145,25 @@ mod tests {
     #[should_panic(expected = "grids must match")]
     fn rejects_mismatched() {
         max_cdf(&[vec![0.0; 8], vec![0.0; 9]]);
+    }
+
+    #[test]
+    fn fold_is_bit_identical_to_batch_product() {
+        prop::run("max_cdf_fold == max_cdf", 20, |g| {
+            let n = 128;
+            let dt = 0.05;
+            let fan = g.usize_in(1, 6);
+            let cdfs: Vec<Vec<f64>> = (0..fan)
+                .map(|_| ServiceDist::exponential(g.rate()).cdf_grid(dt, n))
+                .collect();
+            let want = max_cdf(&cdfs);
+            let mut acc = vec![1.0; n];
+            for c in &cdfs {
+                max_cdf_fold(&mut acc, c);
+            }
+            for (x, y) in acc.iter().zip(want.iter()) {
+                assert_eq!(x.to_bits(), y.to_bits());
+            }
+        });
     }
 }

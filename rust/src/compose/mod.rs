@@ -11,7 +11,10 @@
 //! * the pluggable scoring seam every predictor sits behind —
 //!   [`backend`] ([`backend::ScoreBackend`] with the analytic and
 //!   empirical implementations; the PJRT one lives in
-//!   [`crate::runtime::scorer`]).
+//!   [`crate::runtime::scorer`]);
+//! * the persistent scoring fabric — [`fabric`] (long-lived worker
+//!   pool fed from a chunk queue) and [`scratch`] (the reusable kernel
+//!   buffer arena every `*_into` kernel variant borrows from).
 //!
 //! The numeric conventions (trapezoid cumulative integral, trapezoid
 //! endpoint correction in the convolution, central-difference PDF of a
@@ -21,8 +24,10 @@
 pub mod analytic;
 pub mod backend;
 pub mod conv;
+pub mod fabric;
 pub mod fft;
 pub mod grid;
 pub mod maxcomp;
 pub mod moments;
 pub mod score;
+pub mod scratch;

@@ -1,6 +1,8 @@
 //! Grid moments, quantiles and CDF/PDF conversions — the same trapezoid /
 //! central-difference conventions as `python/compile/kernels/ref.py`.
 
+use crate::compose::scratch::Scratch;
+
 /// Trapezoid cumulative integral of a PDF grid, clipped to [0, 1].
 pub fn cdf_from_pdf(pdf: &[f64], dt: f64) -> Vec<f64> {
     let mut acc = 0.0;
@@ -11,6 +13,18 @@ pub fn cdf_from_pdf(pdf: &[f64], dt: f64) -> Vec<f64> {
             (acc - dt * (p + p0) / 2.0).clamp(0.0, 1.0)
         })
         .collect()
+}
+
+/// [`cdf_from_pdf`] into a caller buffer (same length as `pdf`) — the
+/// same running trapezoid sum, bit-identical.
+pub fn cdf_from_pdf_into(pdf: &[f64], dt: f64, out: &mut [f64]) {
+    assert_eq!(out.len(), pdf.len(), "output grid must match");
+    let mut acc = 0.0;
+    let p0 = pdf.first().copied().unwrap_or(0.0);
+    for (o, &p) in out.iter_mut().zip(pdf.iter()) {
+        acc += p * dt;
+        *o = (acc - dt * (p + p0) / 2.0).clamp(0.0, 1.0);
+    }
 }
 
 /// (mean, variance) of a PDF grid by Riemann sums, normalized by the
@@ -40,6 +54,26 @@ pub fn quantile(pdf: &[f64], dt: f64, q: f64) -> f64 {
         }
     }
     (pdf.len() - 1) as f64 * dt
+}
+
+/// [`quantile`] with the intermediate CDF built in a scratch buffer
+/// instead of a fresh `Vec` — same trapezoid accumulation, same scan,
+/// bit-identical result. (Deliberately *recomputes* the CDF from the
+/// PDF rather than accepting one: [`quantile`]'s contract is defined
+/// against `cdf_from_pdf(pdf)`, which differs in the last ulp from a
+/// composition node's own CDF at Queue and Parallel roots.)
+pub fn quantile_scratch(pdf: &[f64], dt: f64, q: f64, scratch: &mut Scratch) -> f64 {
+    let mut cdf = scratch.take_f64(pdf.len());
+    cdf_from_pdf_into(pdf, dt, &mut cdf);
+    let mut at = (pdf.len() - 1) as f64 * dt;
+    for (k, &c) in cdf.iter().enumerate() {
+        if c >= q {
+            at = k as f64 * dt;
+            break;
+        }
+    }
+    scratch.put_f64(cdf);
+    at
 }
 
 /// Mass captured by the grid (sanity signal: < 0.99 means the grid
@@ -93,5 +127,32 @@ mod tests {
         let (n, dt) = (64, 0.01); // deliberately truncated grid
         let pdf = ServiceDist::exponential(0.1).pdf_grid(dt, n);
         assert_eq!(quantile(&pdf, dt, 0.999), (n - 1) as f64 * dt);
+    }
+
+    #[test]
+    fn scratch_variants_are_bit_identical() {
+        let mut scratch = crate::compose::scratch::Scratch::new();
+        let (n, dt) = (512, 0.01);
+        for lam in [0.1, 1.0, 2.0, 7.5] {
+            let pdf = ServiceDist::exponential(lam).pdf_grid(dt, n);
+            let want_cdf = cdf_from_pdf(&pdf, dt);
+            let mut got_cdf = vec![f64::NAN; n];
+            cdf_from_pdf_into(&pdf, dt, &mut got_cdf);
+            for (x, y) in got_cdf.iter().zip(want_cdf.iter()) {
+                assert_eq!(x.to_bits(), y.to_bits());
+            }
+            for q in [0.5, 0.99, 0.999] {
+                let want = quantile(&pdf, dt, q);
+                let got = quantile_scratch(&pdf, dt, q, &mut scratch);
+                assert_eq!(got.to_bits(), want.to_bits(), "lam={lam} q={q}");
+            }
+        }
+        // warm scratch ⇒ further quantiles allocate nothing
+        let pdf = ServiceDist::exponential(1.0).pdf_grid(dt, n);
+        let warm = scratch.buffer_allocs();
+        for _ in 0..5 {
+            quantile_scratch(&pdf, dt, 0.99, &mut scratch);
+        }
+        assert_eq!(scratch.buffer_allocs(), warm);
     }
 }

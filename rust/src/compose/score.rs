@@ -7,11 +7,14 @@
 //! the hot loop for the fig6 template; this path covers everything else
 //! and is the cross-check oracle.
 
-use crate::compose::conv::conv_auto;
+use crate::compose::conv::{conv_auto, conv_auto_into};
 use crate::compose::grid::GridSpec;
-use crate::compose::maxcomp::max_cdf;
-use crate::compose::moments::{captured_mass, cdf_from_pdf, moments, quantile};
-use crate::dist::central_diff;
+use crate::compose::maxcomp::{max_cdf, max_cdf_fold};
+use crate::compose::moments::{
+    captured_mass, cdf_from_pdf, cdf_from_pdf_into, moments, quantile, quantile_scratch,
+};
+use crate::compose::scratch::Scratch;
+use crate::dist::{central_diff, central_diff_into};
 use crate::flow::{Dcc, Workflow};
 use crate::sched::response::{response_dist, Response, ResponseModel};
 use crate::sched::server::Server;
@@ -118,6 +121,126 @@ pub fn score_allocation_with(
                 mass: captured_mass(&pdf, grid.dt),
                 pdf,
             }
+        }
+    }
+}
+
+/// [`score_allocation_with`] with every intermediate grid borrowed from
+/// `scratch` instead of freshly allocated — the scoring fabric's hot
+/// loop ([`crate::compose::fabric::ScoringPool`] workers call this once
+/// per candidate, reusing one `Scratch` per worker thread).
+///
+/// **Bit-identity contract**: the result is bit-for-bit equal to
+/// [`score_allocation_with`] on the same inputs. Every `*_into` kernel
+/// it leans on performs the exact float ops of its allocating twin in
+/// the same order (property-tested per kernel and end-to-end in
+/// `tests/fabric_equivalence.rs`).
+///
+/// After warm-up (one candidate of each grid size), the only per-call
+/// heap traffic is the returned [`Score::pdf`] clone and the transient
+/// response-law mixture inside `response_dist` — see
+/// [`crate::compose::scratch`] for what the allocation counters cover.
+pub fn score_allocation_scratch(
+    wf: &Workflow,
+    alloc: &Allocation,
+    servers: &[Server],
+    grid: &GridSpec,
+    model: ResponseModel,
+    scratch: &mut Scratch,
+) -> Score {
+    match compose_node_scratch(wf.root(), alloc, servers, grid, model, scratch) {
+        None => Score::unstable(grid),
+        Some((pdf, cdf)) => {
+            scratch.put_f64(cdf);
+            let (mean, var) = moments(&pdf, grid.dt);
+            let score = Score {
+                mean,
+                var,
+                p99: quantile_scratch(&pdf, grid.dt, 0.99, scratch),
+                mass: captured_mass(&pdf, grid.dt),
+                pdf: pdf.clone(),
+            };
+            scratch.put_f64(pdf);
+            score
+        }
+    }
+}
+
+/// Scratch twin of [`compose_node`]: both returned grids are borrowed
+/// from `scratch` and must be handed back by the caller. On the
+/// unstable (`None`) path every borrowed buffer is returned before
+/// bailing, so the stash stays steady-state across unstable candidates.
+fn compose_node_scratch(
+    node: &Dcc,
+    alloc: &Allocation,
+    servers: &[Server],
+    grid: &GridSpec,
+    model: ResponseModel,
+    scratch: &mut Scratch,
+) -> Option<(Vec<f64>, Vec<f64>)> {
+    match node {
+        Dcc::Queue { slot } => {
+            let lambda = alloc.rate_for(*slot);
+            let service = &servers[alloc.server_for(*slot)].dist;
+            match response_dist(model, service, lambda) {
+                Response::Unstable => None,
+                Response::Stable(d) => {
+                    let mut cdf = scratch.take_f64(grid.n);
+                    d.cdf_grid_into(grid.dt, &mut cdf);
+                    let mut pdf = scratch.take_f64(grid.n);
+                    central_diff_into(&cdf, grid.dt, &mut pdf);
+                    Some((pdf, cdf))
+                }
+            }
+        }
+        Dcc::Serial { children, .. } => {
+            let mut acc: Option<Vec<f64>> = None;
+            for c in children {
+                let Some((pdf, cdf)) =
+                    compose_node_scratch(c, alloc, servers, grid, model, scratch)
+                else {
+                    if let Some(prev) = acc {
+                        scratch.put_f64(prev);
+                    }
+                    return None;
+                };
+                scratch.put_f64(cdf);
+                acc = Some(match acc {
+                    None => pdf,
+                    Some(prev) => {
+                        let mut out = scratch.take_f64(grid.n);
+                        conv_auto_into(&prev, &pdf, grid.dt, &mut out, scratch);
+                        scratch.put_f64(prev);
+                        scratch.put_f64(pdf);
+                        out
+                    }
+                });
+            }
+            let pdf = acc.expect("serial has children");
+            let mut cdf = scratch.take_f64(grid.n);
+            cdf_from_pdf_into(&pdf, grid.dt, &mut cdf);
+            Some((pdf, cdf))
+        }
+        Dcc::Parallel { children, .. } => {
+            // folding children in order into a 1.0-filled accumulator is
+            // exactly max_cdf's internal loop — bit-identical
+            assert!(!children.is_empty());
+            let mut acc_cdf = scratch.take_f64(grid.n);
+            acc_cdf.fill(1.0);
+            for c in children {
+                let Some((pdf, cdf)) =
+                    compose_node_scratch(c, alloc, servers, grid, model, scratch)
+                else {
+                    scratch.put_f64(acc_cdf);
+                    return None;
+                };
+                max_cdf_fold(&mut acc_cdf, &cdf);
+                scratch.put_f64(pdf);
+                scratch.put_f64(cdf);
+            }
+            let mut pdf = scratch.take_f64(grid.n);
+            central_diff_into(&acc_cdf, grid.dt, &mut pdf);
+            Some((pdf, acc_cdf))
         }
     }
 }
@@ -255,6 +378,57 @@ mod tests {
         // a degenerate fitted law must be discarded, not compared
         let s = Score::point(f64::NAN, 1.0, 2.0);
         assert!(!s.is_stable());
+    }
+
+    #[test]
+    fn scratch_path_is_bit_identical() {
+        // fig6 (serial of parallels) under Mm1, a tandem under
+        // ServiceOnly, and an unstable candidate — the scratch scorer
+        // must agree with the allocating one to the last bit everywhere
+        let mut scratch = Scratch::new();
+        let (wf, servers) = fig6_setup();
+        let alloc = allocate_with(&wf, &servers, ResponseModel::Mm1).unwrap();
+        let grid = GridSpec::auto(&alloc, &servers);
+        for model in [ResponseModel::Mm1, ResponseModel::ServiceOnly] {
+            let want = score_allocation_with(&wf, &alloc, &servers, &grid, model);
+            let got = score_allocation_scratch(&wf, &alloc, &servers, &grid, model, &mut scratch);
+            assert_eq!(got.mean.to_bits(), want.mean.to_bits());
+            assert_eq!(got.var.to_bits(), want.var.to_bits());
+            assert_eq!(got.p99.to_bits(), want.p99.to_bits());
+            assert_eq!(got.mass.to_bits(), want.mass.to_bits());
+            assert_eq!(got.pdf.len(), want.pdf.len());
+            for (x, y) in got.pdf.iter().zip(want.pdf.iter()) {
+                assert_eq!(x.to_bits(), y.to_bits());
+            }
+        }
+        // unstable sentinel propagates identically, and the fold that
+        // bails mid-serial must hand every borrowed buffer back
+        let wf2 = Workflow::tandem(2, 5.0);
+        let servers2 = Server::pool_exponential(&[9.0, 2.0]); // 2nd queue diverges
+        let alloc2 = Allocation::new(vec![0, 1], vec![5.0, 5.0], &wf2, 2).unwrap();
+        let grid2 = GridSpec::new(0.01, 256);
+        let s = score_allocation_scratch(
+            &wf2,
+            &alloc2,
+            &servers2,
+            &grid2,
+            ResponseModel::Mm1,
+            &mut scratch,
+        );
+        assert!(!s.is_stable());
+        assert_eq!(s.pdf, vec![0.0; 256]);
+        let warm = scratch.buffer_allocs();
+        for _ in 0..3 {
+            score_allocation_scratch(
+                &wf2,
+                &alloc2,
+                &servers2,
+                &grid2,
+                ResponseModel::Mm1,
+                &mut scratch,
+            );
+        }
+        assert_eq!(scratch.buffer_allocs(), warm, "unstable path must recycle");
     }
 
     #[test]

@@ -1,0 +1,179 @@
+//! Reusable kernel-buffer stash: the allocation-free hot-loop arena.
+//!
+//! Every grid kernel in [`super`] has an `*_into` variant that writes
+//! into caller-provided buffers instead of allocating fresh `Vec`s per
+//! candidate. [`Scratch`] is where those buffers live between calls —
+//! a stash of real-valued and complex grid buffers (the pattern of
+//! timely's `sort` crate stashes): `take_*` pops a buffer and sizes it,
+//! `put_*` returns it for the next kernel. A long-lived worker (see
+//! [`super::fabric::ScoringPool`]) keeps one `Scratch` for its whole
+//! lifetime, so after the first candidate of a given grid shape has
+//! warmed the stash, scoring performs **zero stash-buffer allocations
+//! per candidate** — observable through [`Scratch::buffer_allocs`],
+//! which the allocation-discipline tests pin.
+//!
+//! What the counters do *not* cover (by design, for bit-identity with
+//! the serial reference): the returned [`Score`](super::score::Score)
+//! owns its `pdf` vector (one `to_vec` per scored candidate), and
+//! response-law construction inside
+//! [`response_dist`](crate::sched::response::response_dist) builds a
+//! small per-queue `ServiceDist`. Those are the only per-candidate
+//! heap allocations left on the pooled path; every O(grid) working
+//! buffer comes from the stash.
+
+use crate::compose::fft::C64;
+
+/// A stash of reusable grid buffers with allocation accounting.
+///
+/// Buffers are handed out by value (`take_*`) and returned (`put_*`);
+/// a taken buffer that is never returned is simply lost to the stash
+/// (the next `take` re-creates one and the counters show it). Distinct
+/// buffer lengths coexist: `take_*` re-sizes whatever buffer it pops,
+/// counting a [`Scratch::grown`] event only when the pop had to grow
+/// its capacity.
+#[derive(Debug, Default)]
+pub struct Scratch {
+    f64s: Vec<Vec<f64>>,
+    c64s: Vec<Vec<C64>>,
+    created: usize,
+    grown: usize,
+}
+
+impl Scratch {
+    /// An empty stash (no buffers warmed yet).
+    pub fn new() -> Scratch {
+        Scratch::default()
+    }
+
+    /// A zero-filled `f64` buffer of length `n`, reused from the stash
+    /// when possible.
+    pub fn take_f64(&mut self, n: usize) -> Vec<f64> {
+        match self.f64s.pop() {
+            Some(mut buf) => {
+                if buf.capacity() < n {
+                    self.grown += 1;
+                }
+                buf.clear();
+                buf.resize(n, 0.0);
+                buf
+            }
+            None => {
+                self.created += 1;
+                vec![0.0; n]
+            }
+        }
+    }
+
+    /// Return an `f64` buffer to the stash.
+    pub fn put_f64(&mut self, buf: Vec<f64>) {
+        self.f64s.push(buf);
+    }
+
+    /// A zero-filled complex buffer of length `n`, reused from the
+    /// stash when possible (zero = [`C64::default`]).
+    pub fn take_c64(&mut self, n: usize) -> Vec<C64> {
+        match self.c64s.pop() {
+            Some(mut buf) => {
+                if buf.capacity() < n {
+                    self.grown += 1;
+                }
+                buf.clear();
+                buf.resize(n, C64::default());
+                buf
+            }
+            None => {
+                self.created += 1;
+                vec![C64::default(); n]
+            }
+        }
+    }
+
+    /// Return a complex buffer to the stash.
+    pub fn put_c64(&mut self, buf: Vec<C64>) {
+        self.c64s.push(buf);
+    }
+
+    /// Buffers created because the stash was empty at `take` time.
+    pub fn created(&self) -> usize {
+        self.created
+    }
+
+    /// Stashed buffers whose capacity had to grow at `take` time.
+    pub fn grown(&self) -> usize {
+        self.grown
+    }
+
+    /// Total heap events the stash has performed (created + grown) —
+    /// the number the allocation-discipline tests assert stays flat
+    /// once the hot loop is warm.
+    pub fn buffer_allocs(&self) -> usize {
+        self.created + self.grown
+    }
+
+    /// Buffers currently parked in the stash (diagnostics).
+    pub fn parked(&self) -> usize {
+        self.f64s.len() + self.c64s.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn take_is_zero_filled_and_sized() {
+        let mut s = Scratch::new();
+        let mut a = s.take_f64(8);
+        assert_eq!(a, vec![0.0; 8]);
+        a[3] = 7.0;
+        s.put_f64(a);
+        // the recycled buffer must come back clean
+        let b = s.take_f64(8);
+        assert_eq!(b, vec![0.0; 8]);
+        assert_eq!(s.created(), 1, "second take reuses the first buffer");
+        assert_eq!(s.grown(), 0);
+    }
+
+    #[test]
+    fn warm_stash_allocates_nothing() {
+        let mut s = Scratch::new();
+        for _ in 0..3 {
+            let a = s.take_f64(64);
+            let b = s.take_f64(64);
+            let c = s.take_c64(128);
+            s.put_f64(a);
+            s.put_f64(b);
+            s.put_c64(c);
+        }
+        // 2 f64 + 1 c64 created on the first pass, nothing after
+        assert_eq!(s.buffer_allocs(), 3);
+        assert_eq!(s.parked(), 3);
+    }
+
+    #[test]
+    fn growing_a_buffer_is_counted() {
+        let mut s = Scratch::new();
+        let a = s.take_f64(16);
+        s.put_f64(a);
+        let big = s.take_f64(1024); // must grow the 16-cap buffer
+        assert_eq!(big.len(), 1024);
+        assert_eq!(s.created(), 1);
+        assert_eq!(s.grown(), 1);
+        s.put_f64(big);
+        // shrinking re-takes never grow
+        let small = s.take_f64(16);
+        assert_eq!(small.len(), 16);
+        assert_eq!(s.grown(), 1);
+    }
+
+    #[test]
+    fn c64_recycles_to_default() {
+        let mut s = Scratch::new();
+        let mut z = s.take_c64(4);
+        z[0] = C64::new(1.0, -1.0);
+        s.put_c64(z);
+        let z2 = s.take_c64(4);
+        assert!(z2.iter().all(|c| c.re == 0.0 && c.im == 0.0));
+        assert_eq!(s.buffer_allocs(), 1);
+    }
+}

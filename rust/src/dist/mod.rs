@@ -363,6 +363,15 @@ impl ServiceDist {
         (0..n).map(|k| self.cdf(k as f64 * dt)).collect()
     }
 
+    /// [`ServiceDist::cdf_grid`] into a caller buffer (`out.len()` is the
+    /// grid size) — the same evaluations, bit-identical, no allocation.
+    pub fn cdf_grid_into(&self, dt: f64, out: &mut [f64]) {
+        assert!(dt > 0.0 && out.len() >= 2, "grid needs dt>0 and n>=2");
+        for (k, o) in out.iter_mut().enumerate() {
+            *o = self.cdf(k as f64 * dt);
+        }
+    }
+
     /// PDF on the uniform grid by central differences of the analytic
     /// CDF — the exact convention of the AOT kernels and
     /// `python/compile/distributions.py::pdf_grid`, so both engines see
@@ -386,6 +395,20 @@ pub fn central_diff(cdf: &[f64], dt: f64) -> Vec<f64> {
     }
     out[n - 1] = (cdf[n - 1] - cdf[n - 2]) / dt;
     out
+}
+
+/// [`central_diff`] into a caller buffer of the same length — the same
+/// stencils in the same order, bit-identical, no allocation.
+pub fn central_diff_into(cdf: &[f64], dt: f64, out: &mut [f64]) {
+    assert!(cdf.len() >= 2, "central_diff needs at least 2 points");
+    assert!(dt > 0.0, "central_diff needs dt > 0");
+    let n = cdf.len();
+    assert_eq!(out.len(), n, "output grid must match");
+    out[0] = (cdf[1] - cdf[0]) / dt;
+    for (k, w) in cdf.windows(3).enumerate() {
+        out[k + 1] = (w[2] - w[0]) / (2.0 * dt);
+    }
+    out[n - 1] = (cdf[n - 1] - cdf[n - 2]) / dt;
 }
 
 #[cfg(test)]
@@ -559,6 +582,24 @@ mod tests {
         assert!((p[0] - 0.2).abs() < 1e-12);
         assert!((p[1] - 0.4).abs() < 1e-12);
         assert!((p[4] - 0.4).abs() < 1e-12);
+    }
+
+    #[test]
+    fn into_variants_are_bit_identical() {
+        let d = ServiceDist::delayed_exponential(1.5, 0.25);
+        let (n, dt) = (96, 0.05);
+        let cdf = d.cdf_grid(dt, n);
+        let mut cdf_into = vec![f64::NAN; n];
+        d.cdf_grid_into(dt, &mut cdf_into);
+        for (x, y) in cdf_into.iter().zip(cdf.iter()) {
+            assert_eq!(x.to_bits(), y.to_bits());
+        }
+        let pdf = central_diff(&cdf, dt);
+        let mut pdf_into = vec![f64::NAN; n];
+        central_diff_into(&cdf, dt, &mut pdf_into);
+        for (x, y) in pdf_into.iter().zip(pdf.iter()) {
+            assert_eq!(x.to_bits(), y.to_bits());
+        }
     }
 
     #[test]

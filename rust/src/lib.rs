@@ -88,6 +88,9 @@
 #![deny(rustdoc::broken_intra_doc_links)]
 #![warn(clippy::all)]
 
+// the scoring fabric and swap engines are the hot loop: hold them to
+// clippy's perf lints as errors
+#[deny(clippy::perf)]
 pub mod compose;
 pub mod coordinator;
 pub mod dist;
@@ -96,6 +99,7 @@ pub mod monitor;
 pub mod plan;
 pub mod runtime;
 pub mod scenario;
+#[deny(clippy::perf)]
 pub mod sched;
 pub mod sim;
 pub mod util;
@@ -105,10 +109,12 @@ pub mod util;
 /// backends, capacity planning and the monitoring loop end to end.
 pub mod prelude {
     pub use crate::compose::backend::{
-        AnalyticBackend, ChunkPolicy, EmpiricalBackend, ScoreBackend, ShardedBackend,
+        AnalyticBackend, ChunkPolicy, Dispatch, EmpiricalBackend, ScoreBackend, ShardedBackend,
     };
+    pub use crate::compose::fabric::{FabricStats, ScoringPool};
     pub use crate::compose::grid::GridSpec;
     pub use crate::compose::score::Score;
+    pub use crate::compose::scratch::Scratch;
     pub use crate::dist::fit::{
         fit_delayed_exponential, fit_delayed_pareto, fit_multimodal_exp, select_family, Family,
     };

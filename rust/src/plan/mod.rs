@@ -70,8 +70,9 @@
 pub mod policy;
 
 pub use crate::compose::backend::{
-    AnalyticBackend, ChunkPolicy, EmpiricalBackend, ScoreBackend, ShardedBackend,
+    AnalyticBackend, ChunkPolicy, Dispatch, EmpiricalBackend, ScoreBackend, ShardedBackend,
 };
+pub use crate::compose::fabric::{FabricStats, ScoringPool};
 pub use crate::runtime::scorer::RuntimeBackend;
 pub use crate::sched::multijob::{MultiJobConfig, RoundStats, SwapEngine, SwapStats};
 pub use policy::{

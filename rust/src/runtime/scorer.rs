@@ -489,6 +489,36 @@ impl crate::compose::backend::ScoreBackend for RuntimeBackend {
             .map(|t| Self::to_score(&t))
             .collect()
     }
+
+    /// Fabric-worker path: the native engine drops the scorer lock
+    /// before any work (shards overlap fully, exactly as in
+    /// [`score_batch`](Self::score_batch)) and scores through the
+    /// allocation-free scratch scorer; the XLA engine ignores the
+    /// scratch and runs the fused batch under the lock as usual.
+    fn score_batch_scratch(
+        &self,
+        wf: &Workflow,
+        allocs: &[Allocation],
+        servers: &[Server],
+        grid: &GridSpec,
+        model: ResponseModel,
+        scratch: &mut crate::compose::scratch::Scratch,
+    ) -> Vec<Score> {
+        let guard = self.lock();
+        if guard.backend() == ScorerEngine::Native {
+            drop(guard);
+            return allocs
+                .iter()
+                .map(|a| {
+                    crate::compose::score::score_allocation_scratch(
+                        wf, a, servers, grid, model, scratch,
+                    )
+                })
+                .collect();
+        }
+        drop(guard);
+        self.score_batch(wf, allocs, servers, grid, model)
+    }
 }
 
 /// True when the workflow is the Fig. 6 template the fused artifact was

@@ -229,6 +229,11 @@ pub struct SwapStats {
     /// Total candidate sides dropped from the memo table because an
     /// applied swap mutated a plan they were enumerated against.
     pub memo_invalidated: usize,
+    /// Scoring-fabric counter snapshot from the backend at the end of
+    /// the call ([`ScoreBackend::fabric_stats`]) — `None` for backends
+    /// without a fabric (plain predictors). Counters are cumulative
+    /// over the backend's lifetime, not per call.
+    pub fabric: Option<crate::compose::fabric::FabricStats>,
 }
 
 impl SwapStats {
@@ -626,6 +631,7 @@ pub fn multijob_allocate_report(
     stats.memo_hits = memo.hits();
     stats.memo_misses = memo.misses();
     stats.memo_invalidated = memo.invalidated();
+    stats.fabric = backend.fabric_stats();
 
     plans.sort_by_key(|p| p.job);
     Ok((plans, stats))

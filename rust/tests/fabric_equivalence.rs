@@ -1,0 +1,299 @@
+//! Scoring-fabric equivalence: the pooled dispatch path (persistent
+//! `ScoringPool` workers scoring through the allocation-free scratch
+//! kernels) must be bit-identical to the spawn-per-wave scoped path and
+//! to the serial reference, across shard counts, chunk policies and
+//! wave widths — including waves below the inline threshold. Run in CI
+//! as its own job under `RUST_TEST_THREADS=1` so pool counters are
+//! deterministic per test.
+
+use dcflow::compose::score::{score_allocation_scratch, score_allocation_with};
+use dcflow::prelude::*;
+use dcflow::sched::schedule_rates;
+use dcflow::util::prop;
+
+fn fig6() -> (Workflow, Vec<Server>) {
+    (
+        Workflow::fig6(),
+        Server::pool_exponential(&[9.0, 8.0, 7.0, 6.0, 5.0, 4.0]),
+    )
+}
+
+/// A wave of `n` distinct feasible candidates over the fig6 pool
+/// (rotations + adjacent transpositions of the identity assignment,
+/// cycled to length).
+fn candidate_wave(
+    wf: &Workflow,
+    servers: &[Server],
+    model: ResponseModel,
+    n: usize,
+) -> Vec<Allocation> {
+    let mut wave = Vec::new();
+    let mut assign: Vec<usize> = (0..servers.len()).collect();
+    while wave.len() < n {
+        assign.rotate_left(1);
+        if let Ok(a) = schedule_rates(wf, assign.clone(), servers, model) {
+            wave.push(a);
+        }
+        for i in 0..servers.len() - 1 {
+            if wave.len() >= n {
+                break;
+            }
+            let mut swapped = assign.clone();
+            swapped.swap(i, i + 1);
+            if let Ok(a) = schedule_rates(wf, swapped, servers, model) {
+                wave.push(a);
+            }
+        }
+    }
+    wave.truncate(n);
+    wave
+}
+
+fn assert_scores_bit_identical(got: &[Score], want: &[Score], ctx: &str) {
+    assert_eq!(got.len(), want.len(), "{ctx}");
+    for (k, (g, w)) in got.iter().zip(want.iter()).enumerate() {
+        assert_eq!(g.mean.to_bits(), w.mean.to_bits(), "{ctx} row {k} mean");
+        assert_eq!(g.var.to_bits(), w.var.to_bits(), "{ctx} row {k} var");
+        assert_eq!(g.p99.to_bits(), w.p99.to_bits(), "{ctx} row {k} p99");
+        assert_eq!(g.mass.to_bits(), w.mass.to_bits(), "{ctx} row {k} mass");
+        assert_eq!(g.pdf.len(), w.pdf.len(), "{ctx} row {k} pdf len");
+        for (x, y) in g.pdf.iter().zip(w.pdf.iter()) {
+            assert_eq!(x.to_bits(), y.to_bits(), "{ctx} row {k} pdf");
+        }
+    }
+}
+
+#[test]
+fn pooled_equals_scoped_equals_serial_across_the_matrix() {
+    // the tentpole property: shards x chunkings x wave widths (spanning
+    // the inline threshold on both sides), pooled == scoped == serial
+    let (wf, servers) = fig6();
+    let model = ResponseModel::Mm1;
+    let wave = candidate_wave(&wf, &servers, model, 64);
+    let grid = GridSpec::auto_response(&wave[0], &servers, model);
+    for width in [1usize, 3, 7, 8, 24, 64] {
+        let wave = &wave[..width];
+        let serial = AnalyticBackend.score_batch(&wf, wave, &servers, &grid, model);
+        for shards in [1usize, 2, 8] {
+            for chunking in [ChunkPolicy::Even, ChunkPolicy::Fixed(1), ChunkPolicy::Fixed(3)] {
+                let ctx = format!("width={width} shards={shards} {chunking:?}");
+                let pooled = ShardedBackend::new(&AnalyticBackend, shards).chunking(chunking);
+                let got = pooled.score_batch(&wf, wave, &servers, &grid, model);
+                assert_scores_bit_identical(&got, &serial, &format!("pooled {ctx}"));
+                let scoped = ShardedBackend::new(&AnalyticBackend, shards)
+                    .chunking(chunking)
+                    .dispatch(Dispatch::SpawnPerWave);
+                let got = scoped.score_batch(&wf, wave, &servers, &grid, model);
+                assert_scores_bit_identical(&got, &serial, &format!("scoped {ctx}"));
+            }
+        }
+    }
+}
+
+#[test]
+fn one_pool_scores_many_waves_bit_identically() {
+    // a single long-lived backend (one fabric) across many waves of
+    // varying width: warm workers and recycled scratch must never
+    // perturb a bit, and sub-threshold waves stay inline
+    let (wf, servers) = fig6();
+    let model = ResponseModel::Mm1;
+    let all = candidate_wave(&wf, &servers, model, 48);
+    let grid = GridSpec::auto_response(&all[0], &servers, model);
+    let pooled = ShardedBackend::new(&AnalyticBackend, 4);
+    let mut inline_expected = 0usize;
+    let mut dispatched_expected = 0usize;
+    for width in [2usize, 48, 5, 16, 48, 7, 31] {
+        let wave = &all[..width];
+        let serial = AnalyticBackend.score_batch(&wf, wave, &servers, &grid, model);
+        let got = pooled.score_batch(&wf, wave, &servers, &grid, model);
+        assert_scores_bit_identical(&got, &serial, &format!("wave width {width}"));
+        if width < pooled.min_wave() {
+            inline_expected += 1;
+        } else {
+            dispatched_expected += 1;
+        }
+    }
+    let st = pooled.fabric_stats().expect("sharded reports stats");
+    assert_eq!(st.workers, 4);
+    assert_eq!(st.waves_inline, inline_expected);
+    assert_eq!(st.waves_dispatched, dispatched_expected);
+    assert!(st.chunks_dispatched >= dispatched_expected);
+}
+
+#[test]
+fn scratch_scorer_matches_allocating_scorer_on_random_flows() {
+    // property form of the kernel-layer refactor: one shared Scratch
+    // across every draw (stale buffer contents must never leak into a
+    // score), random topologies, both response models
+    let mut scratch = Scratch::new();
+    prop::run("score_allocation_scratch == score_allocation_with", 20, |g| {
+        let n_slots = g.usize_in(2, 5);
+        let wf = match g.usize_in(0, 2) {
+            0 => Workflow::tandem(n_slots, g.f64_in(0.3, 1.2)),
+            1 => Workflow::forkjoin(n_slots, g.f64_in(0.3, 1.2)),
+            _ => Workflow::new(
+                Dcc::serial(vec![
+                    Dcc::parallel((0..n_slots).map(|_| Dcc::queue()).collect()),
+                    Dcc::queue(),
+                ]),
+                g.f64_in(0.3, 1.2),
+            )
+            .unwrap(),
+        };
+        let rates: Vec<f64> = (0..wf.slots()).map(|_| g.f64_in(2.0, 20.0)).collect();
+        let servers = Server::pool_exponential(&rates);
+        let assign: Vec<usize> = (0..wf.slots()).collect();
+        let model = if g.bool(0.5) {
+            ResponseModel::Mm1
+        } else {
+            ResponseModel::ServiceOnly
+        };
+        // schedule_rates may reject the draw as infeasible; an unstable
+        // allocation that *schedules* must still score identically
+        let Ok(alloc) = schedule_rates(&wf, assign, &servers, model) else {
+            return;
+        };
+        let grid = GridSpec::auto_response(&alloc, &servers, model);
+        let want = score_allocation_with(&wf, &alloc, &servers, &grid, model);
+        let got = score_allocation_scratch(&wf, &alloc, &servers, &grid, model, &mut scratch);
+        assert_eq!(got.mean.to_bits(), want.mean.to_bits());
+        assert_eq!(got.var.to_bits(), want.var.to_bits());
+        assert_eq!(got.p99.to_bits(), want.p99.to_bits());
+        assert_eq!(got.mass.to_bits(), want.mass.to_bits());
+        assert_eq!(got.pdf.len(), want.pdf.len());
+        for (x, y) in got.pdf.iter().zip(want.pdf.iter()) {
+            assert_eq!(x.to_bits(), y.to_bits());
+        }
+    });
+}
+
+#[test]
+fn warm_scratch_scoring_allocates_no_kernel_buffers() {
+    // the allocation-discipline contract, directly on one Scratch: after
+    // a one-candidate warm-up, scoring candidates of the same shape
+    // creates or grows zero scratch buffers — on a grid big enough that
+    // serial convolution takes the FFT path, so the complex buffers are
+    // exercised too
+    let wf = Workflow::tandem(3, 1.0);
+    let servers = Server::pool_exponential(&[9.0, 7.0, 5.0]);
+    let alloc = schedule_rates(&wf, vec![0, 1, 2], &servers, ResponseModel::Mm1).unwrap();
+    let grid = GridSpec::new(0.01, 2048); // > DIRECT_FFT_CROSSOVER
+    let mut scratch = Scratch::new();
+    // warm-up: one candidate creates every buffer shape the loop needs
+    score_allocation_scratch(&wf, &alloc, &servers, &grid, ResponseModel::Mm1, &mut scratch);
+    let warm = scratch.buffer_allocs();
+    assert!(warm > 0, "warm-up must have populated the stash");
+    for _ in 0..32 {
+        let s = score_allocation_scratch(
+            &wf,
+            &alloc,
+            &servers,
+            &grid,
+            ResponseModel::Mm1,
+            &mut scratch,
+        );
+        assert!(s.is_stable());
+    }
+    assert_eq!(
+        scratch.buffer_allocs(),
+        warm,
+        "zero scratch-buffer allocations per candidate after warm-up"
+    );
+}
+
+#[test]
+fn pooled_backend_scratch_allocs_are_bounded_by_warmup() {
+    // fabric-level allocation discipline: across many dispatched waves,
+    // total scratch heap events stay bounded by the per-worker warm-up
+    // cost — they do not scale with waves or candidates
+    let (wf, servers) = fig6();
+    let model = ResponseModel::Mm1;
+    let wave = candidate_wave(&wf, &servers, model, 24);
+    let grid = GridSpec::auto_response(&wave[0], &servers, model);
+    let shards = 2usize;
+    let pooled = ShardedBackend::new(&AnalyticBackend, shards);
+    // measure one worker's warm-up cost on an identical workload
+    let mut probe = Scratch::new();
+    score_allocation_scratch(&wf, &wave[0], &servers, &grid, model, &mut probe);
+    let per_worker_warm = probe.buffer_allocs();
+    for _ in 0..10 {
+        pooled.score_batch(&wf, &wave, &servers, &grid, model);
+    }
+    let st = pooled.fabric_stats().expect("stats");
+    assert_eq!(st.waves_dispatched, 10);
+    assert!(
+        st.scratch_allocs <= shards * per_worker_warm,
+        "scratch allocs {} exceed warm-up bound {} x {per_worker_warm} \
+         (10 waves x 24 candidates would churn ~{} buffers unpooled)",
+        st.scratch_allocs,
+        shards,
+        10 * 24 * per_worker_warm
+    );
+}
+
+#[test]
+fn plan_jobs_on_the_pool_matches_serial_and_reports_fabric() {
+    // the planner surface: multi-job planning through the pooled fabric
+    // returns identical plans and surfaces fabric + memo telemetry
+    let j1 = Workflow::fig6();
+    let j2 = Workflow::tandem(3, 1.0);
+    let j3 = Workflow::forkjoin(2, 2.0);
+    let jobs = [&j1, &j2, &j3];
+    let pool = Server::pool_exponential(&[
+        16.0, 14.0, 12.0, 10.0, 9.0, 8.0, 7.0, 6.5, 6.0, 5.0, 4.0,
+    ]);
+    let (serial_plans, serial_stats) = Planner::new(&j1, &pool).plan_jobs_report(&jobs).unwrap();
+    // a plain backend has no fabric to report
+    assert_eq!(serial_stats.fabric, None);
+    for engine in [SwapEngine::Wave, SwapEngine::Incremental] {
+        let backend = ShardedBackend::new(&AnalyticBackend, 4);
+        let (plans, stats) = Planner::new(&j1, &pool)
+            .swap_engine(engine)
+            .backend(&backend)
+            .plan_jobs_report(&jobs)
+            .unwrap();
+        assert_eq!(plans.len(), serial_plans.len());
+        for (s, p) in serial_plans.iter().zip(plans.iter()) {
+            assert_eq!(s.job, p.job, "{engine:?}");
+            assert_eq!(s.alloc, p.alloc, "{engine:?}");
+            assert_eq!(s.grid, p.grid);
+            assert_eq!(s.score.mean.to_bits(), p.score.mean.to_bits());
+            assert_eq!(s.score.var.to_bits(), p.score.var.to_bits());
+            assert_eq!(s.score.p99.to_bits(), p.score.p99.to_bits());
+        }
+        let fabric = stats.fabric.expect("sharded backend reports fabric");
+        assert_eq!(fabric.workers, 4);
+        assert!(
+            fabric.waves_inline + fabric.waves_dispatched > 0,
+            "{engine:?}: the swap phase scored at least one wave"
+        );
+        // memo hit-rate telemetry rides along next to the fabric
+        // counters
+        if engine == SwapEngine::Incremental {
+            assert_eq!(stats.memo_misses, stats.scored_total());
+            assert!((0.0..=1.0).contains(&stats.hit_rate()));
+        }
+    }
+}
+
+#[test]
+fn unstable_candidates_are_bit_identical_on_the_pool() {
+    // the unstable sentinel path recycles scratch buffers mid-fold;
+    // interleaved stable/unstable candidates must round-trip the pool
+    // with positions and sentinels intact
+    let wf = Workflow::tandem(1, 5.0);
+    let servers = Server::pool_exponential(&[20.0, 2.0]); // server 1 overloads
+    let grid = GridSpec::new(0.01, 1024);
+    let ok = Allocation::new(vec![0], vec![5.0], &wf, 2).unwrap();
+    let bad = Allocation::new(vec![1], vec![5.0], &wf, 2).unwrap();
+    let wave: Vec<Allocation> = (0..16)
+        .map(|i| if i % 3 == 0 { ok.clone() } else { bad.clone() })
+        .collect();
+    let serial = AnalyticBackend.score_batch(&wf, &wave, &servers, &grid, ResponseModel::Mm1);
+    let pooled = ShardedBackend::new(&AnalyticBackend, 3).chunking(ChunkPolicy::Fixed(2));
+    let got = pooled.score_batch(&wf, &wave, &servers, &grid, ResponseModel::Mm1);
+    assert_scores_bit_identical(&got, &serial, "unstable mix");
+    for (i, s) in got.iter().enumerate() {
+        assert_eq!(s.is_stable(), i % 3 == 0, "row {i}");
+    }
+}
