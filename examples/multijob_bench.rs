@@ -17,10 +17,21 @@
 //! inline/dispatched, chunks, queue depth high-water mark, scratch
 //! allocations), so pool behavior is part of the recorded perf history.
 //!
+//! With `DCFLOW_TRACE=1` the run additionally captures a structured
+//! telemetry trace (see `dcflow::obs`): after the matrix completes, the
+//! first scenario is re-planned once on a fixed sharded/incremental
+//! configuration, the resulting span tree is validated, and the trace is
+//! written as versioned JSONL (`--trace-out`) plus a Chrome trace-event
+//! file (`--chrome-out`, loadable in `chrome://tracing` / Perfetto). The
+//! report then carries an additive `telemetry` object with the trace
+//! summary and a metrics-registry snapshot; with tracing off the object
+//! is just `{"enabled": false}`.
+//!
 //! ```text
 //! cargo run --release --example multijob_bench            # full matrix
 //! cargo run --release --example multijob_bench -- --smoke # CI smoke
 //! cargo run --release --example multijob_bench -- --out target/BENCH_multijob.json
+//! DCFLOW_TRACE=1 cargo run --release --example multijob_bench -- --smoke
 //! ```
 
 use std::collections::BTreeMap;
@@ -123,7 +134,7 @@ struct ReportCtx {
 }
 
 impl ReportCtx {
-    fn write(&self, scenario_cfgs: &[Json], results: &[Json], identical: bool) {
+    fn write(&self, scenario_cfgs: &[Json], results: &[Json], identical: bool, telemetry: &Json) {
         let grid_json = match self.pinned {
             Some(g) => obj(vec![("dt", Json::Num(g.dt)), ("n", Json::Num(g.n as f64))]),
             None => Json::Str("auto".into()),
@@ -146,6 +157,7 @@ impl ReportCtx {
             ),
             ("results", Json::Arr(results.to_vec())),
             ("identical", Json::Bool(identical)),
+            ("telemetry", telemetry.clone()),
         ]);
         std::fs::write(&self.out_path, report.to_string() + "\n").expect("write BENCH json");
     }
@@ -157,6 +169,16 @@ fn main() {
         "scenario x engine x dispatch x shards multi-job swap matrix, JSON output",
     )
     .opt("out", "BENCH_multijob.json", "output path for the JSON report")
+    .opt(
+        "trace-out",
+        "TRACE_multijob.jsonl",
+        "telemetry JSONL path (written when DCFLOW_TRACE=1)",
+    )
+    .opt(
+        "chrome-out",
+        "TRACE_multijob.chrome.json",
+        "Chrome trace-event path (written when DCFLOW_TRACE=1)",
+    )
     .opt("iters", "3", "measured iterations per configuration")
     .opt("warmup", "1", "unmeasured warmup iterations")
     .flag("smoke", "pinned coarse grid + 1 iteration (CI smoke run)");
@@ -169,6 +191,8 @@ fn main() {
         }
     };
     let out_path = args.get("out").to_string();
+    let trace_out = args.get("trace-out").to_string();
+    let chrome_out = args.get("chrome-out").to_string();
     let smoke = args.has("smoke");
     // --smoke only lowers the *defaults*; explicitly passed --iters or
     // --warmup always win
@@ -275,7 +299,8 @@ fn main() {
                              diverged from the serial reference on scenario '{}'",
                             sc.name
                         );
-                        ctx.write(&scenario_cfgs, &results, false);
+                        let tele = obj(vec![("enabled", Json::Bool(dcflow::obs::enabled()))]);
+                        ctx.write(&scenario_cfgs, &results, false, &tele);
                         std::process::exit(1);
                     }
                     // every side is accounted for: fresh + memo = 2 sides
@@ -385,9 +410,91 @@ fn main() {
         }
     }
 
+    // telemetry capture: with DCFLOW_TRACE=1 the matrix above already
+    // ran instrumented, but its events interleave every configuration.
+    // Discard those, re-plan the first scenario once on a fixed
+    // sharded/incremental configuration so the exported trace is one
+    // clean plan → swap-round → wave → chunk tree, validate it, and
+    // write the JSONL + Chrome exports.
+    let telemetry = if dcflow::obs::enabled() {
+        let _ = dcflow::obs::drain();
+        let sc = &matrix[0];
+        let jobs: Vec<&Workflow> = sc.jobs.iter().collect();
+        let backend = ShardedBackend::new(&AnalyticBackend, 2).min_parallel_wave(2);
+        let mut planner = Planner::new(jobs[0], &sc.servers)
+            .objective(Objective::Mean)
+            .backend(&backend)
+            .swap_engine(SwapEngine::Incremental);
+        if let Some(g) = ctx.pinned {
+            planner = planner.grid(g);
+        }
+        planner.plan_jobs(&jobs).expect("job set is feasible");
+        let events = dcflow::obs::drain();
+        let summary = match dcflow::obs::validate(&events) {
+            Ok(s) => s,
+            Err(e) => {
+                eprintln!("multijob_bench: telemetry trace failed validation: {e}");
+                std::process::exit(1);
+            }
+        };
+        std::fs::write(&trace_out, dcflow::obs::to_jsonl(&events))
+            .expect("write telemetry JSONL");
+        std::fs::write(&chrome_out, dcflow::obs::to_chrome_trace(&events))
+            .expect("write Chrome trace");
+        println!(
+            "wrote {trace_out} + {chrome_out} ({} spans, max depth {})",
+            summary.spans, summary.max_depth
+        );
+        // registry snapshot: counters are cumulative over the whole
+        // process (matrix + traced re-run), which is what we want in a
+        // perf-history artifact
+        let snap = dcflow::obs::registry().snapshot();
+        let mut counters = BTreeMap::new();
+        for (name, v) in snap.counters {
+            counters.insert(name, Json::Num(v as f64));
+        }
+        let mut gauges = BTreeMap::new();
+        for (name, v) in snap.gauges {
+            gauges.insert(name, Json::Num(v));
+        }
+        let mut hists = BTreeMap::new();
+        for (name, h) in snap.histograms {
+            hists.insert(
+                name,
+                obj(vec![
+                    ("count", Json::Num(h.count as f64)),
+                    ("mean", Json::Num(h.mean())),
+                    ("p50", Json::Num(h.p50())),
+                    ("p99", Json::Num(h.p99())),
+                ]),
+            );
+        }
+        obj(vec![
+            ("enabled", Json::Bool(true)),
+            ("scenario", Json::Str(sc.name.into())),
+            ("spans", Json::Num(summary.spans as f64)),
+            ("instants", Json::Num(summary.instants as f64)),
+            ("warns", Json::Num(summary.warns as f64)),
+            ("roots", Json::Num(summary.roots as f64)),
+            ("max_depth", Json::Num(summary.max_depth as f64)),
+            ("trace_jsonl", Json::Str(trace_out.clone())),
+            ("trace_chrome", Json::Str(chrome_out.clone())),
+            (
+                "registry",
+                obj(vec![
+                    ("counters", Json::Obj(counters)),
+                    ("gauges", Json::Obj(gauges)),
+                    ("histograms", Json::Obj(hists)),
+                ]),
+            ),
+        ])
+    } else {
+        obj(vec![("enabled", Json::Bool(false))])
+    };
+
     // a divergence exits above, so reaching this point means every
     // engine × dispatch × shards configuration matched its serial
     // reference
-    ctx.write(&scenario_cfgs, &results, true);
+    ctx.write(&scenario_cfgs, &results, true, &telemetry);
     println!("wrote {} (identical: true)", ctx.out_path);
 }

@@ -1,0 +1,155 @@
+//! Telemetry trace inspector: validate a JSONL trace, print its span
+//! tree, and optionally re-export it as Chrome trace-event JSON.
+//!
+//! Reads a trace written by `dcflow::obs::to_jsonl` (e.g. the
+//! `TRACE_multijob.jsonl` emitted by `multijob_bench` under
+//! `DCFLOW_TRACE=1`), validates its structure (unique ids, parents
+//! present, child windows nested inside parents), and prints the span
+//! hierarchy with wall-clock offsets. With no `--in` it captures a small
+//! self-demo trace by planning a two-job set on a sharded backend, so
+//! the tool is runnable (and CI-checkable) without any input file.
+//!
+//! ```text
+//! cargo run --release --example trace_viz -- --in TRACE_multijob.jsonl
+//! cargo run --release --example trace_viz -- --in t.jsonl --chrome t.chrome.json
+//! cargo run --release --example trace_viz            # self-demo capture
+//! ```
+//!
+//! Exit codes: 0 valid, 1 invalid/unparseable trace, 2 usage/IO error.
+
+use std::collections::BTreeMap;
+
+use dcflow::obs::{self, Event};
+use dcflow::prelude::*;
+use dcflow::util::cli::Cli;
+
+/// Print the span hierarchy, children sorted by start time.
+fn print_span_tree(events: &[Event]) {
+    // id -> (name, start_us, dur_us, tid, attr count)
+    let mut spans: BTreeMap<u64, (&str, u64, u64, u64, usize)> = BTreeMap::new();
+    let mut children: BTreeMap<u64, Vec<u64>> = BTreeMap::new();
+    let mut roots: Vec<u64> = Vec::new();
+    for ev in events {
+        if let Event::Span {
+            id,
+            parent,
+            name,
+            tid,
+            start_us,
+            dur_us,
+            attrs,
+        } = ev
+        {
+            spans.insert(*id, (name.as_str(), *start_us, *dur_us, *tid, attrs.len()));
+            match parent {
+                Some(p) => children.entry(*p).or_default().push(*id),
+                None => roots.push(*id),
+            }
+        }
+    }
+    roots.sort_by_key(|id| (spans[id].1, *id));
+    for ids in children.values_mut() {
+        ids.sort_by_key(|id| (spans[id].1, *id));
+    }
+    // depth-first walk with an explicit stack (children pushed reversed
+    // so they pop in start order)
+    let mut stack: Vec<(u64, usize)> = roots.iter().rev().map(|&r| (r, 0)).collect();
+    while let Some((id, depth)) = stack.pop() {
+        let (name, start, dur, tid, nattrs) = spans[&id];
+        let attrs = if nattrs > 0 {
+            format!("  ({nattrs} attrs)")
+        } else {
+            String::new()
+        };
+        println!(
+            "{:indent$}{name}  [{start} us +{dur} us, tid {tid}]{attrs}",
+            "",
+            indent = 2 * depth
+        );
+        if let Some(kids) = children.get(&id) {
+            for &k in kids.iter().rev() {
+                stack.push((k, depth + 1));
+            }
+        }
+    }
+}
+
+/// Capture a self-demo trace: plan a two-job set (fig6 + tandem rider)
+/// on a sharded incremental configuration with a pinned coarse grid.
+fn demo_capture() -> Vec<Event> {
+    let _ = obs::drain(); // start from a clean sink
+    let recorder = Recorder::global();
+    {
+        let _capture = recorder.activate();
+        let servers =
+            Server::pool_exponential(&[18.0, 16.0, 14.0, 12.0, 10.0, 8.0, 6.0, 4.0]);
+        let jobs_owned = vec![Workflow::fig6(), Workflow::tandem(2, 1.0)];
+        let jobs: Vec<&Workflow> = jobs_owned.iter().collect();
+        let backend = ShardedBackend::new(&AnalyticBackend, 2).min_parallel_wave(2);
+        let planner = Planner::new(jobs[0], &servers)
+            .objective(Objective::Mean)
+            .backend(&backend)
+            .swap_engine(SwapEngine::Incremental)
+            .grid(GridSpec::new(0.05, 256));
+        planner.plan_jobs(&jobs).expect("demo job set is feasible");
+    }
+    obs::drain()
+}
+
+fn main() {
+    let cli = Cli::new(
+        "trace_viz",
+        "validate a dcflow telemetry trace, print its span tree, export Chrome JSON",
+    )
+    .opt("in", "", "input telemetry JSONL; empty = capture a self-demo trace")
+    .opt("chrome", "", "Chrome trace-event output path; empty = skip export");
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let args = match cli.parse(&argv) {
+        Ok(a) => a,
+        Err(msg) => {
+            eprintln!("{msg}");
+            std::process::exit(2);
+        }
+    };
+    let in_path = args.get("in").to_string();
+    let chrome_path = args.get("chrome").to_string();
+
+    let events = if in_path.is_empty() {
+        println!("trace_viz: no --in, capturing a self-demo trace");
+        demo_capture()
+    } else {
+        let text = match std::fs::read_to_string(&in_path) {
+            Ok(t) => t,
+            Err(e) => {
+                eprintln!("trace_viz: cannot read {in_path}: {e}");
+                std::process::exit(2);
+            }
+        };
+        match obs::parse_jsonl(&text) {
+            Ok(ev) => ev,
+            Err(e) => {
+                eprintln!("trace_viz: {e}");
+                std::process::exit(1);
+            }
+        }
+    };
+
+    let summary = match obs::validate(&events) {
+        Ok(s) => s,
+        Err(e) => {
+            eprintln!("trace_viz: invalid trace: {e}");
+            std::process::exit(1);
+        }
+    };
+    println!(
+        "valid: {} spans ({} roots, max depth {}), {} instants ({} warns)",
+        summary.spans, summary.roots, summary.max_depth, summary.instants, summary.warns
+    );
+    print_span_tree(&events);
+
+    if !chrome_path.is_empty() {
+        std::fs::write(&chrome_path, obs::to_chrome_trace(&events))
+            .expect("write Chrome trace");
+        println!("wrote {chrome_path}");
+    }
+}

@@ -614,7 +614,12 @@ impl ScoreBackend for ShardedBackend<'_> {
         model: ResponseModel,
     ) -> Vec<Score> {
         let chunk_len = self.chunk_len(allocs.len());
+        let mut wave_span = crate::obs::span("backend.wave");
+        if wave_span.is_recording() {
+            wave_span.attr("wave", allocs.len());
+        }
         if self.shards == 1 || allocs.len() <= chunk_len || allocs.len() < self.min_wave {
+            wave_span.attr("inline", true);
             self.waves_inline.fetch_add(1, Ordering::Relaxed);
             return self.inner.score_batch(wf, allocs, servers, grid, model);
         }
@@ -624,12 +629,32 @@ impl ScoreBackend for ShardedBackend<'_> {
         self.waves_dispatched.fetch_add(1, Ordering::Relaxed);
         self.chunks_dispatched
             .fetch_add(chunks.len(), Ordering::Relaxed);
+        if wave_span.is_recording() {
+            wave_span.attr("inline", false);
+            wave_span.attr("chunks", chunks.len());
+            wave_span.attr(
+                "dispatch",
+                match self.dispatch {
+                    Dispatch::Pooled => "pooled",
+                    Dispatch::SpawnPerWave => "scoped",
+                },
+            );
+        }
+        // chunk spans run on worker threads: hand them the wave id (a
+        // plain u64, freely Copy into the closures) so the cross-thread
+        // parent edge survives; 0 (capture off) yields inert guards
+        let wave_id = wave_span.id();
         match self.dispatch {
             Dispatch::Pooled => {
                 let pool = self
                     .pool
                     .get_or_init(|| ScoringPool::with_pinning(self.shards, self.pin_workers()));
                 pool.dispatch(chunks.len(), &|i, scratch: &mut Scratch| {
+                    let mut chunk_span = crate::obs::span_under(wave_id, "backend.chunk");
+                    if chunk_span.is_recording() {
+                        chunk_span.attr("chunk", i);
+                        chunk_span.attr("len", chunks[i].len());
+                    }
                     let scored = self
                         .inner
                         .score_batch_scratch(wf, chunks[i], servers, grid, model, scratch);
@@ -644,6 +669,12 @@ impl ScoreBackend for ShardedBackend<'_> {
                         scope.spawn(|| loop {
                             let i = next.fetch_add(1, Ordering::Relaxed);
                             let Some(&chunk) = chunks.get(i) else { break };
+                            let mut chunk_span =
+                                crate::obs::span_under(wave_id, "backend.chunk");
+                            if chunk_span.is_recording() {
+                                chunk_span.attr("chunk", i);
+                                chunk_span.attr("len", chunk.len());
+                            }
                             let scored = self.inner.score_batch(wf, chunk, servers, grid, model);
                             *slots[i].lock().expect("shard result lock") = scored;
                         });

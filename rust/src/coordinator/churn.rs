@@ -31,6 +31,15 @@ impl Coordinator {
         );
         self.push_worker(WorkerHandle::spawn(spec, self.seed()), prior);
         self.record_churn(ChurnKind::Join, id);
+        if crate::obs::enabled() {
+            crate::obs::event(
+                "coordinator.churn",
+                vec![
+                    ("op".to_string(), "join".into()),
+                    ("server".to_string(), id.into()),
+                ],
+            );
+        }
         id
     }
 
@@ -42,6 +51,15 @@ impl Coordinator {
         let served = self.pop_worker().map(|w| w.shutdown());
         if served.is_some() {
             self.record_churn(ChurnKind::Leave, self.workers_len());
+            if crate::obs::enabled() {
+                crate::obs::event(
+                    "coordinator.churn",
+                    vec![
+                        ("op".to_string(), "leave".into()),
+                        ("server".to_string(), self.workers_len().into()),
+                    ],
+                );
+            }
         }
         served
     }

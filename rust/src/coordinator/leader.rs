@@ -153,6 +153,11 @@ impl Coordinator {
 
     /// Run a job over an arrival trace to completion.
     pub fn run_job(&mut self, job: &Job, trace: &Trace) -> Result<RunReport, SchedError> {
+        let mut run_span = crate::obs::span("coordinator.run_job");
+        if run_span.is_recording() {
+            run_span.attr("tasks", trace.arrivals.len());
+            run_span.attr("servers", self.workers.len());
+        }
         let mut alloc = self.allocate(job)?;
         let mut metrics = Metrics::new(self.workers.len());
         let mut swaps = Vec::new();
@@ -181,6 +186,15 @@ impl Coordinator {
                             metrics.record_reopt();
                             let reason = if drifted { "drift" } else { "periodic" };
                             self.record_reopt(metrics.completed, reason);
+                            if crate::obs::enabled() {
+                                crate::obs::event(
+                                    "coordinator.reopt",
+                                    vec![
+                                        ("completed".to_string(), metrics.completed.into()),
+                                        ("reason".to_string(), reason.into()),
+                                    ],
+                                );
+                            }
                             swaps.push((metrics.completed, reason.to_string()));
                         }
                     }
@@ -188,6 +202,9 @@ impl Coordinator {
             }
         }
 
+        if crate::obs::enabled() {
+            metrics.publish(crate::obs::registry());
+        }
         Ok(RunReport {
             metrics,
             final_allocation: alloc,
@@ -342,6 +359,10 @@ impl Coordinator {
     ) -> Result<Vec<RunReport>, SchedError> {
         if jobs.is_empty() {
             return Ok(Vec::new());
+        }
+        let mut run_span = crate::obs::span("coordinator.run_multi");
+        if run_span.is_recording() {
+            run_span.attr("jobs", jobs.len());
         }
         let wfs: Vec<&crate::flow::Workflow> =
             jobs.iter().map(|(j, _)| &j.workflow).collect();

@@ -1,12 +1,28 @@
 //! Coordinator metrics: latency, throughput, utilization, re-planning.
 
+use std::sync::Mutex;
+
 use crate::util::stats::{quantile, Welford};
 
 /// Aggregated run metrics.
-#[derive(Clone, Debug, Default)]
+///
+/// Latency keeps two accumulators on purpose: the streaming [`Welford`]
+/// for mean/variance and the raw sample vector for exact quantiles.
+/// The golden-trace corpus (`scenario::golden`) pins the *bits* of
+/// `mean_latency`/`var_latency`/`latency_quantile` across versions, so
+/// neither side can be rederived from the other without perturbing
+/// float results. The coarse registry histogram published by
+/// [`Metrics::publish`] is a lossy *view* for dashboards, not a
+/// replacement for either.
+#[derive(Debug, Default)]
 pub struct Metrics {
     latency: Welford,
     latencies: Vec<f64>,
+    /// Sorted copy of `latencies`, rebuilt lazily: `latencies` is
+    /// append-only, so the cache is stale exactly when the lengths
+    /// differ. Interior-mutable so `latency_quantile(&self)` keeps its
+    /// signature.
+    sorted_cache: Mutex<Vec<f64>>,
     /// Busy time accumulated per server (virtual seconds).
     pub busy_time: Vec<f64>,
     /// Number of tasks dispatched to each server.
@@ -17,6 +33,22 @@ pub struct Metrics {
     pub reoptimizations: u64,
     /// Virtual time of the last completion.
     pub makespan: f64,
+}
+
+impl Clone for Metrics {
+    fn clone(&self) -> Metrics {
+        Metrics {
+            latency: self.latency.clone(),
+            latencies: self.latencies.clone(),
+            // the clone revalidates lazily on its first quantile call
+            sorted_cache: Mutex::new(Vec::new()),
+            busy_time: self.busy_time.clone(),
+            tasks_per_server: self.tasks_per_server.clone(),
+            completed: self.completed,
+            reoptimizations: self.reoptimizations,
+            makespan: self.makespan,
+        }
+    }
 }
 
 impl Metrics {
@@ -68,14 +100,21 @@ impl Metrics {
         self.latency.variance()
     }
 
-    /// Latency quantile (q in [0,1]).
+    /// Latency quantile (q in [0,1]). Exact (type-7 interpolated over
+    /// every sample). The sort is cached and only redone after new
+    /// completions, so `summary()`-style repeated calls sort once; NaN
+    /// samples order last via `total_cmp` instead of panicking.
     pub fn latency_quantile(&self, q: f64) -> f64 {
         if self.latencies.is_empty() {
             return 0.0;
         }
-        let mut v = self.latencies.clone();
-        v.sort_by(|a, b| a.partial_cmp(b).unwrap());
-        quantile(&v, q)
+        let mut cache = self.sorted_cache.lock().expect("latency cache lock");
+        if cache.len() != self.latencies.len() {
+            cache.clear();
+            cache.extend_from_slice(&self.latencies);
+            cache.sort_by(f64::total_cmp);
+        }
+        quantile(cache.as_slice(), q)
     }
 
     /// Completed tasks per virtual second.
@@ -106,6 +145,37 @@ impl Metrics {
             self.throughput(),
             self.reoptimizations
         )
+    }
+
+    /// Publish this run's totals into a telemetry [`Registry`]
+    /// (`coordinator.*` namespace): completion/re-plan counters, the
+    /// makespan/mean/throughput gauges, and a fixed-bucket
+    /// `coordinator.latency` histogram spanning the observed range.
+    ///
+    /// [`Registry`]: crate::obs::Registry
+    pub fn publish(&self, registry: &crate::obs::Registry) {
+        registry.counter("coordinator.completed").add(self.completed);
+        registry
+            .counter("coordinator.reoptimizations")
+            .add(self.reoptimizations);
+        registry.gauge("coordinator.makespan").set(self.makespan);
+        registry
+            .gauge("coordinator.mean_latency")
+            .set(self.mean_latency());
+        registry
+            .gauge("coordinator.throughput")
+            .set(self.throughput());
+        let hi = self
+            .latencies
+            .iter()
+            .copied()
+            .filter(|x| x.is_finite())
+            .fold(0.0_f64, f64::max);
+        let hist =
+            registry.histogram("coordinator.latency", 0.0, if hi > 0.0 { hi } else { 1.0 }, 64);
+        for &x in &self.latencies {
+            hist.record(x);
+        }
     }
 }
 
@@ -150,5 +220,56 @@ mod tests {
         assert_eq!(m.mean_latency(), 0.0);
         assert_eq!(m.throughput(), 0.0);
         assert_eq!(m.latency_quantile(0.99), 0.0);
+    }
+
+    #[test]
+    fn nan_latency_does_not_panic_quantiles() {
+        // regression: partial_cmp().unwrap() used to panic here
+        let mut m = Metrics::new(1);
+        m.record_completion(1.0, 1.0);
+        m.record_completion(f64::NAN, 2.0);
+        m.record_completion(2.0, 3.0);
+        // total_cmp orders NaN after every finite sample, so the median
+        // of [1.0, 2.0, NaN] is exactly 2.0 (type-7: h = 1.0)
+        assert_eq!(m.latency_quantile(0.5), 2.0);
+        assert_eq!(m.latency_quantile(0.0), 1.0);
+        assert!(m.latency_quantile(1.0).is_nan());
+    }
+
+    #[test]
+    fn quantile_cache_tracks_new_completions() {
+        let mut m = Metrics::new(1);
+        m.record_completion(5.0, 1.0);
+        assert_eq!(m.latency_quantile(1.0), 5.0);
+        // a second call reuses the cache; a new sample invalidates it
+        assert_eq!(m.latency_quantile(0.0), 5.0);
+        m.record_completion(1.0, 2.0);
+        assert_eq!(m.latency_quantile(0.0), 1.0);
+        assert_eq!(m.latency_quantile(1.0), 5.0);
+        // clones start with a cold cache but agree
+        let c = m.clone();
+        assert_eq!(c.latency_quantile(0.5), m.latency_quantile(0.5));
+    }
+
+    #[test]
+    fn publish_exports_registry_views() {
+        let mut m = Metrics::new(1);
+        m.record_completion(1.0, 2.0);
+        m.record_completion(3.0, 4.0);
+        m.record_reopt();
+        let r = crate::obs::Registry::default();
+        m.publish(&r);
+        assert_eq!(r.counter("coordinator.completed").get(), 2);
+        assert_eq!(r.counter("coordinator.reoptimizations").get(), 1);
+        assert_eq!(r.gauge("coordinator.makespan").get(), 4.0);
+        assert!((r.gauge("coordinator.mean_latency").get() - 2.0).abs() < 1e-12);
+        let snap = r.snapshot();
+        let (_, hist) = snap
+            .histograms
+            .iter()
+            .find(|(n, _)| n == "coordinator.latency")
+            .expect("latency histogram published");
+        assert_eq!(hist.count, 2);
+        assert_eq!(hist.max, 3.0);
     }
 }

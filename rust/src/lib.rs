@@ -27,6 +27,10 @@
 //!   validate the analytic engine and regenerate the paper's figures;
 //! * [`monitor`] — online per-server service-time estimation (the input
 //!   to Alg. 3's periodic re-optimization) with drift detection;
+//! * [`obs`] — crate-wide telemetry: hierarchical spans over the whole
+//!   planning pipeline, a metrics registry (counters / gauges /
+//!   histograms), and JSONL + Chrome-trace exporters, all no-op unless
+//!   enabled via `DCFLOW_TRACE=1` or [`obs::set_enabled`];
 //! * [`runtime`] — the PJRT hot path: loads the AOT-compiled XLA
 //!   artifacts (pallas/jax, lowered to HLO text at build time) and scores
 //!   candidate allocations in batches; surfaced to the planner as the
@@ -96,6 +100,7 @@ pub mod coordinator;
 pub mod dist;
 pub mod flow;
 pub mod monitor;
+pub mod obs;
 pub mod plan;
 pub mod runtime;
 pub mod scenario;
@@ -122,6 +127,7 @@ pub mod prelude {
     pub use crate::flow::{Dcc, Workflow};
     pub use crate::monitor::drift::detect_drift;
     pub use crate::monitor::{MonitorRegistry, ServerMonitor};
+    pub use crate::obs::Recorder;
     pub use crate::plan::{
         AllocationPolicy, BaselinePolicy, Diagnostics, OptimalPolicy, Plan, PlanContext,
         Planner, ProposedPolicy, SdccPolicy,

@@ -35,10 +35,21 @@ pub fn detect_drift(samples: &[f64], min_half: usize) -> Option<DriftReport> {
     let ks = ks_statistic(&a, &b);
     let half = mid.min(n - mid) as f64;
     let threshold = 1.63 * (2.0 / half).sqrt();
+    let drifted = ks > threshold;
+    if crate::obs::enabled() {
+        crate::obs::event(
+            "monitor.drift",
+            vec![
+                ("drifted".to_string(), drifted.into()),
+                ("ks".to_string(), ks.into()),
+                ("threshold".to_string(), threshold.into()),
+            ],
+        );
+    }
     Some(DriftReport {
         ks,
         threshold,
-        drifted: ks > threshold,
+        drifted,
     })
 }
 

@@ -1,0 +1,516 @@
+//! Telemetry exporters: versioned JSONL, Chrome trace-event output,
+//! and a structural validator.
+//!
+//! The JSONL wire format follows the same discipline as
+//! [`crate::scenario::record`]: line-oriented JSON with a versioned
+//! header line first ([`OBS_FORMAT_VERSION`]), deterministic
+//! serialization through [`crate::util::json`], and readers that
+//! reject unknown versions with a precise error instead of
+//! misinterpreting them. Field additions within a version are allowed;
+//! renames/removals bump it.
+//!
+//! [`to_chrome_trace`] renders the same events in the Chrome
+//! trace-event format — open the file in `chrome://tracing` or
+//! Perfetto and the span tree appears as nested slices per thread,
+//! with instants (re-plans, churn, drift, warnings) as markers.
+
+use std::collections::BTreeMap;
+
+use crate::util::json::Json;
+
+use super::{AttrValue, Event, Level};
+
+/// Version stamp written into every telemetry JSONL header
+/// (`"version"` field).
+///
+/// Version 1 lines: `obs_header`, `span`, `instant`.
+pub const OBS_FORMAT_VERSION: u64 = 1;
+
+fn obj(entries: Vec<(&str, Json)>) -> Json {
+    let mut m = BTreeMap::new();
+    for (k, v) in entries {
+        m.insert(k.to_string(), v);
+    }
+    Json::Obj(m)
+}
+
+fn attrs_to_json(attrs: &[(String, AttrValue)]) -> Json {
+    let mut m = BTreeMap::new();
+    for (k, v) in attrs {
+        let jv = match v {
+            AttrValue::U64(x) => Json::Num(*x as f64),
+            AttrValue::F64(x) => Json::Num(*x),
+            AttrValue::Str(s) => Json::Str(s.clone()),
+            AttrValue::Bool(b) => Json::Bool(*b),
+        };
+        m.insert(k.clone(), jv);
+    }
+    Json::Obj(m)
+}
+
+/// JSON numbers don't distinguish `U64` from integral `F64`; map
+/// non-negative integers in the exact range back to `U64` (the writer
+/// prints those without a fraction, so serialize→parse→serialize is a
+/// fixed point even though the `AttrValue` variant may change).
+fn attr_from_json(v: &Json) -> Result<AttrValue, String> {
+    match v {
+        Json::Num(x) if *x >= 0.0 && x.fract() == 0.0 && x.abs() < 9e15 => {
+            Ok(AttrValue::U64(*x as u64))
+        }
+        Json::Num(x) => Ok(AttrValue::F64(*x)),
+        Json::Str(s) => Ok(AttrValue::Str(s.clone())),
+        Json::Bool(b) => Ok(AttrValue::Bool(*b)),
+        other => Err(format!("unsupported attribute value {other:?}")),
+    }
+}
+
+fn attrs_from_json(v: Option<&Json>) -> Result<Vec<(String, AttrValue)>, String> {
+    let Some(v) = v else {
+        return Ok(Vec::new());
+    };
+    let m = v.as_obj().ok_or("'attrs' must be an object")?;
+    let mut out = Vec::with_capacity(m.len());
+    for (k, jv) in m {
+        out.push((k.clone(), attr_from_json(jv)?));
+    }
+    Ok(out)
+}
+
+fn field_u64(v: &Json, key: &str) -> Result<u64, String> {
+    v.get(key)
+        .and_then(Json::as_f64)
+        .filter(|x| *x >= 0.0 && x.fract() == 0.0)
+        .map(|x| x as u64)
+        .ok_or_else(|| format!("missing/invalid integer field '{key}'"))
+}
+
+fn field_str<'a>(v: &'a Json, key: &str) -> Result<&'a str, String> {
+    v.get(key)
+        .and_then(Json::as_str)
+        .ok_or_else(|| format!("missing/invalid string field '{key}'"))
+}
+
+/// Serialize events to the JSONL wire format: header line, then one
+/// event per line in capture order, trailing newline.
+pub fn to_jsonl(events: &[Event]) -> String {
+    let mut out = String::new();
+    let header = obj(vec![
+        ("kind", Json::Str("obs_header".into())),
+        ("version", Json::Num(OBS_FORMAT_VERSION as f64)),
+    ]);
+    out.push_str(&header.to_string());
+    out.push('\n');
+    for ev in events {
+        let line = match ev {
+            Event::Span {
+                id,
+                parent,
+                name,
+                tid,
+                start_us,
+                dur_us,
+                attrs,
+            } => obj(vec![
+                ("attrs", attrs_to_json(attrs)),
+                ("dur_us", Json::Num(*dur_us as f64)),
+                ("id", Json::Num(*id as f64)),
+                ("kind", Json::Str("span".into())),
+                ("name", Json::Str(name.clone())),
+                (
+                    "parent",
+                    parent.map_or(Json::Null, |p| Json::Num(p as f64)),
+                ),
+                ("start_us", Json::Num(*start_us as f64)),
+                ("tid", Json::Num(*tid as f64)),
+            ]),
+            Event::Instant {
+                name,
+                tid,
+                at_us,
+                level,
+                attrs,
+            } => obj(vec![
+                ("at_us", Json::Num(*at_us as f64)),
+                ("attrs", attrs_to_json(attrs)),
+                ("kind", Json::Str("instant".into())),
+                (
+                    "level",
+                    Json::Str(
+                        match level {
+                            Level::Info => "info",
+                            Level::Warn => "warn",
+                        }
+                        .into(),
+                    ),
+                ),
+                ("name", Json::Str(name.clone())),
+                ("tid", Json::Num(*tid as f64)),
+            ]),
+        };
+        out.push_str(&line.to_string());
+        out.push('\n');
+    }
+    out
+}
+
+/// Parse events back from their JSONL form. Rejects unknown format
+/// versions, unknown line kinds and malformed lines with an error
+/// naming the offending line. Integral attribute values come back as
+/// [`AttrValue::U64`] (see the format note on [`to_jsonl`]).
+pub fn parse_jsonl(text: &str) -> Result<Vec<Event>, String> {
+    let mut lines = text
+        .lines()
+        .enumerate()
+        .filter(|(_, l)| !l.trim().is_empty());
+    let (hno, hline) = lines.next().ok_or("empty telemetry trace")?;
+    let hv = Json::parse(hline).map_err(|e| format!("telemetry line {}: {e}", hno + 1))?;
+    if field_str(&hv, "kind")? != "obs_header" {
+        return Err(format!(
+            "telemetry line {}: first line must be the obs_header",
+            hno + 1
+        ));
+    }
+    let version = field_u64(&hv, "version")?;
+    if version != OBS_FORMAT_VERSION {
+        return Err(format!(
+            "unsupported telemetry format version {version} (this build reads \
+             version {OBS_FORMAT_VERSION})"
+        ));
+    }
+    let mut events = Vec::new();
+    for (no, line) in lines {
+        let v = Json::parse(line).map_err(|e| format!("telemetry line {}: {e}", no + 1))?;
+        let ev = match field_str(&v, "kind")? {
+            "span" => Event::Span {
+                id: field_u64(&v, "id")?,
+                parent: match v.get("parent") {
+                    None | Some(Json::Null) => None,
+                    Some(p) => Some(
+                        p.as_f64()
+                            .filter(|x| *x >= 0.0 && x.fract() == 0.0)
+                            .map(|x| x as u64)
+                            .ok_or_else(|| {
+                                format!("telemetry line {}: invalid 'parent'", no + 1)
+                            })?,
+                    ),
+                },
+                name: field_str(&v, "name")?.to_string(),
+                tid: field_u64(&v, "tid")?,
+                start_us: field_u64(&v, "start_us")?,
+                dur_us: field_u64(&v, "dur_us")?,
+                attrs: attrs_from_json(v.get("attrs"))
+                    .map_err(|e| format!("telemetry line {}: {e}", no + 1))?,
+            },
+            "instant" => Event::Instant {
+                name: field_str(&v, "name")?.to_string(),
+                tid: field_u64(&v, "tid")?,
+                at_us: field_u64(&v, "at_us")?,
+                level: match field_str(&v, "level")? {
+                    "info" => Level::Info,
+                    "warn" => Level::Warn,
+                    other => {
+                        return Err(format!(
+                            "telemetry line {}: unknown level '{other}'",
+                            no + 1
+                        ))
+                    }
+                },
+                attrs: attrs_from_json(v.get("attrs"))
+                    .map_err(|e| format!("telemetry line {}: {e}", no + 1))?,
+            },
+            other => {
+                return Err(format!(
+                    "telemetry line {}: unknown line kind '{other}'",
+                    no + 1
+                ))
+            }
+        };
+        events.push(ev);
+    }
+    Ok(events)
+}
+
+/// What [`validate`] found in a structurally sound trace.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct TraceSummary {
+    /// Closed spans in the trace.
+    pub spans: usize,
+    /// Instant events in the trace.
+    pub instants: usize,
+    /// `level=warn` instants among them.
+    pub warns: usize,
+    /// Spans with no parent.
+    pub roots: usize,
+    /// Deepest nesting (a root span is depth 1; 0 for an empty trace).
+    pub max_depth: usize,
+}
+
+/// Check the structural invariants every capture must satisfy:
+///
+/// * span ids are nonzero and unique;
+/// * every `parent` references a span present in the trace (spans are
+///   only emitted at close, so presence also means "closed"), with no
+///   parent cycles;
+/// * every child's `[start, start+dur]` window nests inside its
+///   parent's — guaranteed by the shared monotonic epoch and RAII
+///   drop order, so a violation means corrupted data.
+///
+/// Returns a [`TraceSummary`] on success and a message naming the
+/// first offending span otherwise.
+pub fn validate(events: &[Event]) -> Result<TraceSummary, String> {
+    let mut spans: BTreeMap<u64, (Option<u64>, u64, u64, &str)> = BTreeMap::new();
+    let mut summary = TraceSummary::default();
+    for ev in events {
+        match ev {
+            Event::Span {
+                id,
+                parent,
+                name,
+                start_us,
+                dur_us,
+                ..
+            } => {
+                if *id == 0 {
+                    return Err(format!("span '{name}' has reserved id 0"));
+                }
+                if spans
+                    .insert(*id, (*parent, *start_us, *start_us + *dur_us, name.as_str()))
+                    .is_some()
+                {
+                    return Err(format!("duplicate span id {id} ('{name}')"));
+                }
+                summary.spans += 1;
+            }
+            Event::Instant { level, .. } => {
+                summary.instants += 1;
+                if *level == Level::Warn {
+                    summary.warns += 1;
+                }
+            }
+        }
+    }
+    for (id, (parent, start, end, name)) in &spans {
+        let Some(pid) = parent else {
+            summary.roots += 1;
+            continue;
+        };
+        let Some((_, pstart, pend, pname)) = spans.get(pid) else {
+            return Err(format!(
+                "span {id} ('{name}') references missing parent {pid}"
+            ));
+        };
+        if start < pstart || end > pend {
+            return Err(format!(
+                "span {id} ('{name}') window [{start}, {end}]us escapes parent \
+                 {pid} ('{pname}') window [{pstart}, {pend}]us"
+            ));
+        }
+    }
+    for (id, entry) in &spans {
+        let name = entry.3;
+        let mut parent = entry.0;
+        let mut depth = 1usize;
+        while let Some(pid) = parent {
+            if depth > spans.len() {
+                return Err(format!("parent cycle reaching span {id} ('{name}')"));
+            }
+            depth += 1;
+            parent = spans[&pid].0;
+        }
+        summary.max_depth = summary.max_depth.max(depth);
+    }
+    Ok(summary)
+}
+
+/// Render events in the Chrome trace-event format (one JSON document,
+/// loadable in `chrome://tracing` / Perfetto). Spans become `"X"`
+/// complete events, instants become thread-scoped `"i"` markers;
+/// attributes (plus span `id`/`parent`) land in `args`.
+pub fn to_chrome_trace(events: &[Event]) -> String {
+    let mut trace_events = Vec::with_capacity(events.len());
+    for ev in events {
+        match ev {
+            Event::Span {
+                id,
+                parent,
+                name,
+                tid,
+                start_us,
+                dur_us,
+                attrs,
+            } => {
+                let mut args = match attrs_to_json(attrs) {
+                    Json::Obj(m) => m,
+                    _ => unreachable!("attrs_to_json returns an object"),
+                };
+                args.insert("span_id".to_string(), Json::Num(*id as f64));
+                if let Some(p) = parent {
+                    args.insert("span_parent".to_string(), Json::Num(*p as f64));
+                }
+                trace_events.push(obj(vec![
+                    ("args", Json::Obj(args)),
+                    ("cat", Json::Str("dcflow".into())),
+                    ("dur", Json::Num(*dur_us as f64)),
+                    ("name", Json::Str(name.clone())),
+                    ("ph", Json::Str("X".into())),
+                    ("pid", Json::Num(1.0)),
+                    ("tid", Json::Num(*tid as f64)),
+                    ("ts", Json::Num(*start_us as f64)),
+                ]));
+            }
+            Event::Instant {
+                name,
+                tid,
+                at_us,
+                level,
+                attrs,
+            } => {
+                trace_events.push(obj(vec![
+                    ("args", attrs_to_json(attrs)),
+                    (
+                        "cat",
+                        Json::Str(
+                            match level {
+                                Level::Info => "dcflow",
+                                Level::Warn => "dcflow.warn",
+                            }
+                            .into(),
+                        ),
+                    ),
+                    ("name", Json::Str(name.clone())),
+                    ("ph", Json::Str("i".into())),
+                    ("pid", Json::Num(1.0)),
+                    ("s", Json::Str("t".into())),
+                    ("tid", Json::Num(*tid as f64)),
+                    ("ts", Json::Num(*at_us as f64)),
+                ]));
+            }
+        }
+    }
+    obj(vec![
+        ("displayTimeUnit", Json::Str("ms".into())),
+        ("traceEvents", Json::Arr(trace_events)),
+    ])
+    .to_string()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample_events() -> Vec<Event> {
+        vec![
+            Event::Span {
+                id: 1,
+                parent: None,
+                name: "plan_jobs".to_string(),
+                tid: 0,
+                start_us: 10,
+                dur_us: 100,
+                attrs: vec![("jobs".to_string(), AttrValue::U64(3))],
+            },
+            Event::Span {
+                id: 2,
+                parent: Some(1),
+                name: "multijob.swap_round".to_string(),
+                tid: 0,
+                start_us: 20,
+                dur_us: 50,
+                attrs: vec![
+                    ("round".to_string(), AttrValue::U64(0)),
+                    ("inline".to_string(), AttrValue::Bool(false)),
+                    ("mass".to_string(), AttrValue::F64(0.25)),
+                    ("engine".to_string(), AttrValue::Str("Wave".to_string())),
+                ],
+            },
+            Event::Instant {
+                name: "warn".to_string(),
+                tid: 1,
+                at_us: 30,
+                level: Level::Warn,
+                attrs: vec![("msg".to_string(), AttrValue::Str("careful".to_string()))],
+            },
+        ]
+    }
+
+    #[test]
+    fn jsonl_serialization_is_a_fixed_point() {
+        let evs = sample_events();
+        let text = to_jsonl(&evs);
+        assert!(text.lines().next().unwrap().contains("\"version\":1"));
+        let back = parse_jsonl(&text).unwrap();
+        // integral F64 attrs may come back as U64; the *serialized*
+        // form is the stable identity
+        assert_eq!(text, to_jsonl(&back));
+        assert_eq!(back.len(), evs.len());
+    }
+
+    #[test]
+    fn parse_rejects_bad_input() {
+        assert!(parse_jsonl("").is_err());
+        let future = to_jsonl(&[]).replacen("\"version\":1", "\"version\":999", 1);
+        assert!(parse_jsonl(&future).unwrap_err().contains("version 999"));
+        let noheader = "{\"kind\":\"span\"}\n";
+        assert!(parse_jsonl(noheader).unwrap_err().contains("obs_header"));
+        let badline = to_jsonl(&[]) + "{\"kind\":\"mystery\"}\n";
+        assert!(parse_jsonl(&badline).unwrap_err().contains("mystery"));
+        let badlevel = to_jsonl(&[])
+            + "{\"at_us\":1,\"kind\":\"instant\",\"level\":\"loud\",\"name\":\"x\",\"tid\":0}\n";
+        assert!(parse_jsonl(&badlevel).unwrap_err().contains("loud"));
+    }
+
+    #[test]
+    fn validate_accepts_well_formed_and_summarizes() {
+        let s = validate(&sample_events()).unwrap();
+        assert_eq!(s.spans, 2);
+        assert_eq!(s.instants, 1);
+        assert_eq!(s.warns, 1);
+        assert_eq!(s.roots, 1);
+        assert_eq!(s.max_depth, 2);
+    }
+
+    #[test]
+    fn validate_rejects_structural_corruption() {
+        let mut evs = sample_events();
+        // dangling parent
+        if let Event::Span { parent, .. } = &mut evs[1] {
+            *parent = Some(99);
+        }
+        assert!(validate(&evs).unwrap_err().contains("missing parent"));
+        // duplicate id
+        let mut evs = sample_events();
+        if let Event::Span { id, parent, .. } = &mut evs[1] {
+            *id = 1;
+            *parent = None;
+        }
+        assert!(validate(&evs).unwrap_err().contains("duplicate"));
+        // child escaping the parent window
+        let mut evs = sample_events();
+        if let Event::Span { dur_us, .. } = &mut evs[1] {
+            *dur_us = 10_000;
+        }
+        assert!(validate(&evs).unwrap_err().contains("escapes parent"));
+        // reserved id
+        let mut evs = sample_events();
+        if let Event::Span { id, .. } = &mut evs[0] {
+            *id = 0;
+        }
+        assert!(validate(&evs).unwrap_err().contains("reserved id 0"));
+    }
+
+    #[test]
+    fn chrome_trace_contains_nested_slices_and_instants() {
+        let text = to_chrome_trace(&sample_events());
+        let doc = Json::parse(&text).unwrap();
+        let tes = doc.get("traceEvents").unwrap().as_arr().unwrap();
+        assert_eq!(tes.len(), 3);
+        assert_eq!(tes[0].get("ph").unwrap().as_str(), Some("X"));
+        assert_eq!(tes[1].get("name").unwrap().as_str(), Some("multijob.swap_round"));
+        assert_eq!(
+            tes[1].get("args").unwrap().get("span_parent").unwrap().as_usize(),
+            Some(1)
+        );
+        assert_eq!(tes[2].get("ph").unwrap().as_str(), Some("i"));
+        assert_eq!(tes[2].get("cat").unwrap().as_str(), Some("dcflow.warn"));
+    }
+}

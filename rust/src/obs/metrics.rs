@@ -1,0 +1,365 @@
+//! Named metrics: counters, gauges, and fixed-bucket histograms.
+//!
+//! The [`Registry`] is the crate's single metrics namespace. The
+//! existing one-off stat structs publish into it when tracing is
+//! enabled — `SwapStats` and `FabricStats` from
+//! `sched::multijob_allocate_report`, `coordinator::Metrics` via
+//! [`crate::coordinator::Metrics::publish`] — so one
+//! [`Registry::snapshot`] covers the whole pipeline and lands in
+//! `BENCH_multijob.json`'s `telemetry` object.
+//!
+//! Handles are `Arc`-shared: look one up once ([`Registry::counter`],
+//! [`Registry::gauge`], [`Registry::histogram`]) and update it lock-free
+//! (counters/gauges are atomics; histograms take a short internal lock
+//! per `record`). Nothing here is on the disabled hot path — call sites
+//! gate publication on [`super::enabled`].
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, OnceLock};
+
+/// Monotonic named counter.
+#[derive(Debug, Default)]
+pub struct Counter {
+    value: AtomicU64,
+}
+
+impl Counter {
+    /// Add `n` to the counter.
+    pub fn add(&self, n: u64) {
+        self.value.fetch_add(n, Ordering::Relaxed);
+    }
+
+    /// Add one.
+    pub fn inc(&self) {
+        self.add(1);
+    }
+
+    /// Current value.
+    pub fn get(&self) -> u64 {
+        self.value.load(Ordering::Relaxed)
+    }
+}
+
+/// Last-write-wins named gauge (stores `f64` bits in an atomic).
+#[derive(Debug, Default)]
+pub struct Gauge {
+    bits: AtomicU64,
+}
+
+impl Gauge {
+    /// Set the gauge.
+    pub fn set(&self, v: f64) {
+        self.bits.store(v.to_bits(), Ordering::Relaxed);
+    }
+
+    /// Current value (0.0 until first set).
+    pub fn get(&self) -> f64 {
+        f64::from_bits(self.bits.load(Ordering::Relaxed))
+    }
+}
+
+#[derive(Debug)]
+struct HistState {
+    /// Per-bucket counts (`bins` uniform buckets over `[lo, hi)`).
+    buckets: Vec<u64>,
+    /// Samples at or above `hi`, plus every non-finite sample.
+    overflow: u64,
+    count: u64,
+    sum: f64,
+    min: f64,
+    max: f64,
+}
+
+/// Fixed-bucket histogram over `[lo, hi)` with an overflow bucket.
+///
+/// Quantiles come from the bucket CDF ([`HistogramSnapshot::quantile`]),
+/// so they are accurate to one bucket width — `tests/telemetry.rs`
+/// pins this against the exact [`crate::util::stats::quantile`].
+/// Samples below `lo` clamp into the first bucket (matching
+/// [`crate::util::stats::Histogram`]); non-finite samples count as
+/// overflow.
+#[derive(Debug)]
+pub struct Histogram {
+    lo: f64,
+    width: f64,
+    state: Mutex<HistState>,
+}
+
+impl Histogram {
+    fn new(lo: f64, hi: f64, bins: usize) -> Histogram {
+        let bins = bins.max(1);
+        let hi = if hi > lo { hi } else { lo + 1.0 };
+        Histogram {
+            lo,
+            width: (hi - lo) / bins as f64,
+            state: Mutex::new(HistState {
+                buckets: vec![0; bins],
+                overflow: 0,
+                count: 0,
+                sum: 0.0,
+                min: f64::INFINITY,
+                max: f64::NEG_INFINITY,
+            }),
+        }
+    }
+
+    /// Record one sample.
+    pub fn record(&self, x: f64) {
+        let mut st = self.state.lock().expect("histogram lock");
+        st.count += 1;
+        if !x.is_finite() {
+            st.overflow += 1;
+            return;
+        }
+        st.sum += x;
+        if x < st.min {
+            st.min = x;
+        }
+        if x > st.max {
+            st.max = x;
+        }
+        let idx = ((x - self.lo) / self.width).floor();
+        if idx < 0.0 {
+            st.buckets[0] += 1;
+        } else if (idx as usize) < st.buckets.len() {
+            st.buckets[idx as usize] += 1;
+        } else {
+            st.overflow += 1;
+        }
+    }
+
+    /// Point-in-time copy of the full histogram state.
+    pub fn snapshot(&self) -> HistogramSnapshot {
+        let st = self.state.lock().expect("histogram lock");
+        HistogramSnapshot {
+            lo: self.lo,
+            width: self.width,
+            buckets: st.buckets.clone(),
+            overflow: st.overflow,
+            count: st.count,
+            sum: st.sum,
+            min: if st.min.is_finite() { st.min } else { 0.0 },
+            max: if st.max.is_finite() { st.max } else { 0.0 },
+        }
+    }
+}
+
+/// Frozen copy of a [`Histogram`], carrying the bucket CDF so
+/// quantiles can be computed without holding any lock.
+#[derive(Clone, Debug)]
+pub struct HistogramSnapshot {
+    /// Left edge of the first bucket.
+    pub lo: f64,
+    /// Uniform bucket width.
+    pub width: f64,
+    /// Per-bucket counts.
+    pub buckets: Vec<u64>,
+    /// Samples at/above the range (and non-finite samples).
+    pub overflow: u64,
+    /// Total samples recorded.
+    pub count: u64,
+    /// Sum of finite samples.
+    pub sum: f64,
+    /// Smallest finite sample (0.0 if none).
+    pub min: f64,
+    /// Largest finite sample (0.0 if none).
+    pub max: f64,
+}
+
+impl HistogramSnapshot {
+    /// Mean: sum of finite samples over the total sample count
+    /// (0.0 when empty; non-finite samples dilute rather than poison).
+    pub fn mean(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.sum / self.count as f64
+        }
+    }
+
+    /// Bucket-CDF quantile for `q` in `[0, 1]`: the right edge of the
+    /// first bucket whose cumulative count reaches `ceil(q * count)`
+    /// (the observed max for samples that landed in overflow). Accurate
+    /// to one bucket width. Returns 0.0 when empty.
+    pub fn quantile(&self, q: f64) -> f64 {
+        if self.count == 0 {
+            return 0.0;
+        }
+        let target = ((q.clamp(0.0, 1.0) * self.count as f64).ceil() as u64).max(1);
+        let mut seen = 0u64;
+        for (i, &b) in self.buckets.iter().enumerate() {
+            seen += b;
+            if seen >= target {
+                return self.lo + self.width * (i + 1) as f64;
+            }
+        }
+        self.max
+    }
+
+    /// Median, to one bucket width.
+    pub fn p50(&self) -> f64 {
+        self.quantile(0.50)
+    }
+
+    /// 99th percentile, to one bucket width.
+    pub fn p99(&self) -> f64 {
+        self.quantile(0.99)
+    }
+}
+
+#[derive(Debug)]
+enum Metric {
+    Counter(Arc<Counter>),
+    Gauge(Arc<Gauge>),
+    Histogram(Arc<Histogram>),
+}
+
+/// Thread-safe namespace of metrics, keyed by dotted names
+/// (`sched.swap.rounds`, `coordinator.latency`, ...). Lookups
+/// get-or-create; a name keeps the kind of its first registration
+/// (a mismatched re-lookup panics — it is a programming error).
+#[derive(Debug, Default)]
+pub struct Registry {
+    metrics: Mutex<BTreeMap<String, Metric>>,
+}
+
+impl Registry {
+    /// Get or create the counter `name`.
+    pub fn counter(&self, name: &str) -> Arc<Counter> {
+        let mut m = self.metrics.lock().expect("registry lock");
+        match m
+            .entry(name.to_string())
+            .or_insert_with(|| Metric::Counter(Arc::new(Counter::default())))
+        {
+            Metric::Counter(c) => Arc::clone(c),
+            _ => panic!("metric {name} already registered with a different kind"),
+        }
+    }
+
+    /// Get or create the gauge `name`.
+    pub fn gauge(&self, name: &str) -> Arc<Gauge> {
+        let mut m = self.metrics.lock().expect("registry lock");
+        match m
+            .entry(name.to_string())
+            .or_insert_with(|| Metric::Gauge(Arc::new(Gauge::default())))
+        {
+            Metric::Gauge(g) => Arc::clone(g),
+            _ => panic!("metric {name} already registered with a different kind"),
+        }
+    }
+
+    /// Get or create the histogram `name` with `bins` uniform buckets
+    /// over `[lo, hi)`. The shape is fixed by the first registration;
+    /// later lookups ignore their `lo`/`hi`/`bins` arguments.
+    pub fn histogram(&self, name: &str, lo: f64, hi: f64, bins: usize) -> Arc<Histogram> {
+        let mut m = self.metrics.lock().expect("registry lock");
+        match m
+            .entry(name.to_string())
+            .or_insert_with(|| Metric::Histogram(Arc::new(Histogram::new(lo, hi, bins))))
+        {
+            Metric::Histogram(h) => Arc::clone(h),
+            _ => panic!("metric {name} already registered with a different kind"),
+        }
+    }
+
+    /// Point-in-time copy of every metric, names sorted.
+    pub fn snapshot(&self) -> RegistrySnapshot {
+        let m = self.metrics.lock().expect("registry lock");
+        let mut snap = RegistrySnapshot::default();
+        for (name, metric) in m.iter() {
+            match metric {
+                Metric::Counter(c) => snap.counters.push((name.clone(), c.get())),
+                Metric::Gauge(g) => snap.gauges.push((name.clone(), g.get())),
+                Metric::Histogram(h) => snap.histograms.push((name.clone(), h.snapshot())),
+            }
+        }
+        snap
+    }
+
+    /// Drop every metric (tests and benches isolate runs with this).
+    pub fn reset(&self) {
+        self.metrics.lock().expect("registry lock").clear();
+    }
+}
+
+/// Frozen copy of a [`Registry`], each kind sorted by name.
+#[derive(Clone, Debug, Default)]
+pub struct RegistrySnapshot {
+    /// `(name, value)` for every counter.
+    pub counters: Vec<(String, u64)>,
+    /// `(name, value)` for every gauge.
+    pub gauges: Vec<(String, f64)>,
+    /// `(name, snapshot)` for every histogram.
+    pub histograms: Vec<(String, HistogramSnapshot)>,
+}
+
+/// The process-wide registry all crate instrumentation publishes into.
+pub fn registry() -> &'static Registry {
+    static REGISTRY: OnceLock<Registry> = OnceLock::new();
+    REGISTRY.get_or_init(Registry::default)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counters_and_gauges_round_trip() {
+        let r = Registry::default();
+        let c = r.counter("t.count");
+        c.inc();
+        c.add(4);
+        assert_eq!(r.counter("t.count").get(), 5);
+        let g = r.gauge("t.gauge");
+        g.set(2.5);
+        assert_eq!(r.gauge("t.gauge").get(), 2.5);
+        let snap = r.snapshot();
+        assert_eq!(snap.counters, vec![("t.count".to_string(), 5)]);
+        assert_eq!(snap.gauges, vec![("t.gauge".to_string(), 2.5)]);
+        r.reset();
+        assert!(r.snapshot().counters.is_empty());
+    }
+
+    #[test]
+    fn histogram_quantiles_track_the_bucket_cdf() {
+        let r = Registry::default();
+        let h = r.histogram("t.hist", 0.0, 10.0, 10);
+        for i in 0..100 {
+            h.record(f64::from(i) / 10.0); // 10 samples per bucket
+        }
+        let snap = h.snapshot();
+        assert_eq!(snap.count, 100);
+        assert_eq!(snap.overflow, 0);
+        // ceil(0.5*100)=50th sample sits in bucket 4 → right edge 5.0
+        assert!((snap.p50() - 5.0).abs() < 1e-12);
+        assert!((snap.p99() - 10.0).abs() < 1e-12);
+        assert!((snap.mean() - 4.95).abs() < 1e-9);
+        assert_eq!(snap.max, 9.9);
+    }
+
+    #[test]
+    fn histogram_handles_overflow_clamp_and_nonfinite() {
+        let h = Histogram::new(0.0, 1.0, 4);
+        h.record(-5.0); // clamps into bucket 0
+        h.record(0.5);
+        h.record(42.0); // overflow, finite → max tracks it
+        h.record(f64::NAN); // overflow, not in sum/min/max
+        let snap = h.snapshot();
+        assert_eq!(snap.count, 4);
+        assert_eq!(snap.overflow, 2);
+        assert_eq!(snap.buckets[0], 1);
+        assert_eq!(snap.min, -5.0);
+        assert_eq!(snap.max, 42.0);
+        // q=1.0 walks past every bucket → observed max
+        assert_eq!(snap.quantile(1.0), 42.0);
+    }
+
+    #[test]
+    #[should_panic(expected = "different kind")]
+    fn kind_mismatch_panics() {
+        let r = Registry::default();
+        let _ = r.counter("t.kind");
+        let _ = r.gauge("t.kind");
+    }
+}

@@ -1,0 +1,366 @@
+//! Crate-wide telemetry: structured spans, a metrics registry, and
+//! trace exporters for the whole planning pipeline.
+//!
+//! The paper's argument is about the *tail* of job execution time under
+//! stochastic servers — and diagnosing tails requires structured
+//! runtime telemetry, not ad-hoc counters. This module is the one
+//! observability layer for the crate:
+//!
+//! * **Spans** ([`span`], [`span_under`], [`Span`]) — RAII guards with
+//!   parent linkage, wall-clock duration (microseconds on one
+//!   process-wide monotonic epoch) and `key=value` attributes. The hot
+//!   path is instrumented end to end: `Planner::plan_jobs` phases, each
+//!   swap round in `sched::multijob`, per-wave dispatch and per-chunk
+//!   execution in `ShardedBackend`/`ScoringPool` (chunk spans are
+//!   parent-linked *across threads* to their wave), and drift / churn /
+//!   re-plan instants in the coordinator and monitor layers.
+//! * **Metrics registry** ([`Registry`], [`registry`]) — named
+//!   counters, gauges and fixed-bucket histograms with p50/p99/max
+//!   snapshots. The existing stat structs (`SwapStats`, `FabricStats`,
+//!   `coordinator::Metrics`) publish into it when tracing is enabled,
+//!   so one snapshot covers the whole pipeline.
+//! * **Exporters** ([`export`]) — a versioned JSONL event sink (same
+//!   versioning discipline as `scenario::record`) and Chrome
+//!   trace-event-format output loadable in `chrome://tracing` /
+//!   Perfetto, plus a structural validator (unique ids, existing
+//!   parents, child-within-parent windows).
+//!
+//! ## Gating
+//!
+//! Everything hangs off one process-wide switch, mirroring
+//! [`crate::util::warn`]: unset until the first query, then decided by
+//! the `DCFLOW_TRACE` environment variable (`1`/`true`) and cached;
+//! [`set_enabled`] always wins over the env var. **When disabled,
+//! instrumentation costs a few relaxed atomic loads** — no allocation,
+//! no locking, no clock reads — so plans stay bit-identical and the
+//! scoring fabric's warm-scratch zero-allocation discipline is
+//! untouched (`tests/telemetry.rs`, `tests/fabric_equivalence.rs`).
+//!
+//! Captured events buffer in an in-process sink until [`drain`]ed
+//! (long traced runs should drain periodically; nothing is written to
+//! disk unless the caller exports).
+//!
+//! ```
+//! use dcflow::obs;
+//!
+//! obs::set_enabled(true);
+//! {
+//!     let mut outer = obs::span("doc.outer");
+//!     outer.attr("answer", 42u64);
+//!     let _inner = obs::span("doc.inner");
+//! } // guards close innermost-first
+//! let events = obs::drain();
+//! obs::set_enabled(false);
+//! let summary = obs::export::validate(&events).expect("well-formed trace");
+//! assert_eq!(summary.spans, 2);
+//! assert!(obs::export::to_chrome_trace(&events).contains("doc.inner"));
+//! ```
+
+pub mod export;
+pub mod metrics;
+pub mod span;
+
+pub use export::{parse_jsonl, to_chrome_trace, to_jsonl, validate, TraceSummary, OBS_FORMAT_VERSION};
+pub use metrics::{registry, Counter, Gauge, Histogram, HistogramSnapshot, Registry, RegistrySnapshot};
+pub use span::{current_span, span, span_under, Span, SpanId};
+
+use std::sync::atomic::{AtomicU8, Ordering};
+use std::sync::Mutex;
+
+/// Mode not yet decided: the first [`enabled`] call consults
+/// `DCFLOW_TRACE` (same tri-state discipline as [`crate::util::warn`]).
+const UNSET: u8 = 0;
+const OFF: u8 = 1;
+const ON: u8 = 2;
+
+static MODE: AtomicU8 = AtomicU8::new(UNSET);
+
+/// Turn telemetry capture on (`true`) or off (`false`) process-wide.
+/// Overrides the `DCFLOW_TRACE` environment variable.
+pub fn set_enabled(on: bool) {
+    MODE.store(if on { ON } else { OFF }, Ordering::Relaxed);
+}
+
+/// Whether telemetry capture is currently enabled. On the first call
+/// with no prior [`set_enabled`], the `DCFLOW_TRACE` env var (`1` /
+/// `true`, case-insensitive) decides and is cached. This is the whole
+/// cost of disabled instrumentation: one relaxed atomic load.
+pub fn enabled() -> bool {
+    match MODE.load(Ordering::Relaxed) {
+        ON => true,
+        OFF => false,
+        _ => {
+            let env_on = std::env::var("DCFLOW_TRACE")
+                .map(|v| v == "1" || v.eq_ignore_ascii_case("true"))
+                .unwrap_or(false);
+            let desired = if env_on { ON } else { OFF };
+            // compare_exchange so a concurrent set_enabled() is never
+            // overwritten by the env default (set_enabled always wins)
+            match MODE.compare_exchange(UNSET, desired, Ordering::Relaxed, Ordering::Relaxed) {
+                Ok(_) => env_on,
+                Err(current) => current == ON,
+            }
+        }
+    }
+}
+
+/// One attribute value attached to a span or instant event.
+#[derive(Clone, Debug, PartialEq)]
+pub enum AttrValue {
+    /// Unsigned counter-like value (serialized as a JSON number).
+    U64(u64),
+    /// Floating-point value.
+    F64(f64),
+    /// Free-form string.
+    Str(String),
+    /// Boolean flag.
+    Bool(bool),
+}
+
+impl From<u64> for AttrValue {
+    fn from(v: u64) -> AttrValue {
+        AttrValue::U64(v)
+    }
+}
+
+impl From<usize> for AttrValue {
+    fn from(v: usize) -> AttrValue {
+        AttrValue::U64(v as u64)
+    }
+}
+
+impl From<f64> for AttrValue {
+    fn from(v: f64) -> AttrValue {
+        AttrValue::F64(v)
+    }
+}
+
+impl From<bool> for AttrValue {
+    fn from(v: bool) -> AttrValue {
+        AttrValue::Bool(v)
+    }
+}
+
+impl From<&str> for AttrValue {
+    fn from(v: &str) -> AttrValue {
+        AttrValue::Str(v.to_string())
+    }
+}
+
+impl From<String> for AttrValue {
+    fn from(v: String) -> AttrValue {
+        AttrValue::Str(v)
+    }
+}
+
+/// Severity of an instant event.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Level {
+    /// Ordinary pipeline event (re-plan, churn, drift verdict, ...).
+    Info,
+    /// A [`crate::util::warn`] diagnostic routed into the trace.
+    Warn,
+}
+
+/// One captured telemetry event. Spans are emitted at close time (a
+/// span event in the sink is by construction a *closed* span), instants
+/// the moment they happen.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Event {
+    /// A closed span: `[start_us, start_us + dur_us]` on the process
+    /// epoch, with its parent linkage and attributes.
+    Span {
+        /// Unique nonzero span id (process-wide).
+        id: u64,
+        /// Enclosing span's id (`None` for a root span).
+        parent: Option<u64>,
+        /// Span name (static at the instrumentation site).
+        name: String,
+        /// Capture-thread id (dense, assigned at first use).
+        tid: u64,
+        /// Open time, microseconds since the process trace epoch.
+        start_us: u64,
+        /// Wall-clock duration in microseconds.
+        dur_us: u64,
+        /// `key=value` attributes, in insertion order.
+        attrs: Vec<(String, AttrValue)>,
+    },
+    /// A point-in-time event (re-plan, churn, drift, warning).
+    Instant {
+        /// Event name.
+        name: String,
+        /// Capture-thread id.
+        tid: u64,
+        /// Event time, microseconds since the process trace epoch.
+        at_us: u64,
+        /// Severity.
+        level: Level,
+        /// `key=value` attributes, in insertion order.
+        attrs: Vec<(String, AttrValue)>,
+    },
+}
+
+/// The in-process event sink. Bounded only by [`drain`] calls.
+static SINK: Mutex<Vec<Event>> = Mutex::new(Vec::new());
+
+/// Append one event to the sink (crate instrumentation entry point).
+pub(crate) fn record(ev: Event) {
+    SINK.lock().expect("obs sink lock").push(ev);
+}
+
+/// Take every buffered event out of the sink, oldest first.
+pub fn drain() -> Vec<Event> {
+    std::mem::take(&mut *SINK.lock().expect("obs sink lock"))
+}
+
+/// Number of events currently buffered.
+pub fn pending() -> usize {
+    SINK.lock().expect("obs sink lock").len()
+}
+
+/// Record an instant info event. No-op when capture is disabled — but
+/// call sites that build an attribute vector should still gate on
+/// [`enabled`] so the vector is never allocated on the disabled path.
+pub fn event(name: &str, attrs: Vec<(String, AttrValue)>) {
+    if !enabled() {
+        return;
+    }
+    record(Event::Instant {
+        name: name.to_string(),
+        tid: span::tid(),
+        at_us: span::now_us(),
+        level: Level::Info,
+        attrs,
+    });
+}
+
+/// Record a `level=warn` instant event carrying one diagnostic message.
+/// This is [`crate::util::warn::warn`]'s hook into the trace: warnings
+/// appear next to the spans that produced them, regardless of the
+/// `DCFLOW_QUIET` stderr gate.
+pub fn warn_event(msg: &str) {
+    if !enabled() {
+        return;
+    }
+    record(Event::Instant {
+        name: "warn".to_string(),
+        tid: span::tid(),
+        at_us: span::now_us(),
+        level: Level::Warn,
+        attrs: vec![("msg".to_string(), AttrValue::Str(msg.to_string()))],
+    });
+}
+
+/// Handle to the process-wide telemetry pipeline: a zero-sized,
+/// copyable facade over the [`enabled`]/[`drain`] switchboard, so call
+/// sites (and the [`crate::plan::Planner::recorder`] builder knob) can
+/// pass "the recorder" around as a value.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct Recorder;
+
+impl Recorder {
+    /// The process-wide recorder.
+    pub fn global() -> Recorder {
+        Recorder
+    }
+
+    /// Enable capture (see [`set_enabled`]).
+    pub fn enable(self) {
+        set_enabled(true);
+    }
+
+    /// Disable capture (see [`set_enabled`]).
+    pub fn disable(self) {
+        set_enabled(false);
+    }
+
+    /// Whether capture is currently enabled (see [`enabled`]).
+    pub fn is_enabled(self) -> bool {
+        enabled()
+    }
+
+    /// Enable capture for a lexical scope: returns a guard that
+    /// restores the *exact* previous mode (including "not yet decided")
+    /// on drop. This is what [`crate::plan::Planner::recorder`] uses to
+    /// trace one planning call without flipping the global switch for
+    /// the rest of the process.
+    #[must_use = "capture stays enabled only while the guard lives"]
+    pub fn activate(self) -> ActiveRecorder {
+        let prev = MODE.swap(ON, Ordering::Relaxed);
+        ActiveRecorder { prev }
+    }
+
+    /// Take every buffered event (see [`drain`]).
+    pub fn drain(self) -> Vec<Event> {
+        drain()
+    }
+}
+
+/// Guard returned by [`Recorder::activate`]: capture is enabled while
+/// it lives and the previous mode is restored on drop.
+#[derive(Debug)]
+pub struct ActiveRecorder {
+    prev: u8,
+}
+
+impl Drop for ActiveRecorder {
+    fn drop(&mut self) {
+        MODE.store(self.prev, Ordering::Relaxed);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // obs unit tests share one process-global pipeline with the rest of
+    // the lib test binary; serialize them so drains never race each
+    // other (foreign events from concurrently running planner tests are
+    // tolerated by filtering on names unique to this module).
+    pub(super) fn lock() -> std::sync::MutexGuard<'static, ()> {
+        static LOCK: Mutex<()> = Mutex::new(());
+        LOCK.lock().unwrap_or_else(std::sync::PoisonError::into_inner)
+    }
+
+    #[test]
+    fn disabled_event_is_dropped_and_enable_round_trips() {
+        let _g = lock();
+        set_enabled(false);
+        event("obs.mod.dropped", Vec::new());
+        assert!(!drain()
+            .iter()
+            .any(|e| matches!(e, Event::Instant { name, .. } if name == "obs.mod.dropped")));
+        set_enabled(true);
+        event(
+            "obs.mod.kept",
+            vec![("k".to_string(), AttrValue::from(7u64))],
+        );
+        warn_event("obs.mod.warning");
+        let evs = drain();
+        set_enabled(false);
+        let kept = evs
+            .iter()
+            .find(|e| matches!(e, Event::Instant { name, .. } if name == "obs.mod.kept"))
+            .expect("info event captured");
+        if let Event::Instant { level, attrs, .. } = kept {
+            assert_eq!(*level, Level::Info);
+            assert_eq!(attrs[0], ("k".to_string(), AttrValue::U64(7)));
+        }
+        assert!(evs.iter().any(|e| matches!(
+            e,
+            Event::Instant { name, level: Level::Warn, .. } if name == "warn"
+        )));
+    }
+
+    #[test]
+    fn activate_guard_restores_previous_mode() {
+        let _g = lock();
+        set_enabled(false);
+        {
+            let _active = Recorder::global().activate();
+            assert!(enabled());
+        }
+        assert!(!enabled());
+        let _ = drain();
+    }
+}

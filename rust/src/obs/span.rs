@@ -1,0 +1,260 @@
+//! Hierarchical RAII spans on one process-wide monotonic clock.
+//!
+//! A [`Span`] measures a lexical scope: it opens at construction,
+//! closes (and records an [`super::Event::Span`] into the sink) on
+//! drop. Parentage is tracked per thread through a thread-local
+//! "current span" cell, so nested guards link up automatically;
+//! [`span_under`] pins an explicit parent instead, which is how chunk
+//! spans executing on fabric worker threads attach to the wave span
+//! that dispatched them.
+//!
+//! When capture is disabled the constructors return an inert guard
+//! after a single relaxed atomic load — no ids are burned, no clock is
+//! read, nothing allocates.
+
+use std::cell::Cell;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::OnceLock;
+use std::time::Instant;
+
+use super::{enabled, record, AttrValue, Event};
+
+/// Identifier of a span: nonzero and unique within the process.
+pub type SpanId = u64;
+
+/// Span ids start at 1; 0 is reserved as "no span" in thread-locals.
+static NEXT_SPAN_ID: AtomicU64 = AtomicU64::new(1);
+
+/// Dense thread ids of our own (std's `ThreadId` has no stable u64
+/// accessor), assigned at each thread's first telemetry touch.
+static NEXT_TID: AtomicU64 = AtomicU64::new(0);
+
+thread_local! {
+    /// Innermost open span on this thread (0 = none).
+    static CURRENT: Cell<u64> = const { Cell::new(0) };
+    /// This thread's dense telemetry id (u64::MAX = unassigned).
+    static TID: Cell<u64> = const { Cell::new(u64::MAX) };
+}
+
+/// The process trace epoch: every timestamp in the sink is
+/// microseconds since the first clock read, on one monotonic clock, so
+/// child windows always nest inside parent windows.
+fn epoch() -> Instant {
+    static EPOCH: OnceLock<Instant> = OnceLock::new();
+    *EPOCH.get_or_init(Instant::now)
+}
+
+/// Microseconds since the process trace epoch (monotonic).
+pub(super) fn now_us() -> u64 {
+    epoch().elapsed().as_micros() as u64
+}
+
+/// This thread's dense telemetry id.
+pub(super) fn tid() -> u64 {
+    TID.with(|t| {
+        let cur = t.get();
+        if cur != u64::MAX {
+            return cur;
+        }
+        let fresh = NEXT_TID.fetch_add(1, Ordering::Relaxed);
+        t.set(fresh);
+        fresh
+    })
+}
+
+/// Id of the innermost span currently open on this thread, if any.
+/// Useful for handing a parent across threads (see [`span_under`]).
+pub fn current_span() -> Option<SpanId> {
+    let cur = CURRENT.with(Cell::get);
+    if cur == 0 {
+        None
+    } else {
+        Some(cur)
+    }
+}
+
+/// Live state of a recording span (absent on the disabled path).
+#[derive(Debug)]
+struct SpanData {
+    id: SpanId,
+    parent: Option<SpanId>,
+    /// Thread-local `CURRENT` value to restore on close.
+    prev: u64,
+    name: &'static str,
+    tid: u64,
+    start_us: u64,
+    attrs: Vec<(String, AttrValue)>,
+}
+
+/// RAII guard for one traced scope. Construct with [`span`] or
+/// [`span_under`]; the span closes — and its event is recorded — when
+/// the guard drops. A guard built while capture is disabled is inert
+/// (`is_recording() == false`) and free to drop.
+#[derive(Debug)]
+pub struct Span {
+    inner: Option<SpanData>,
+}
+
+/// Open a span named `name` under the innermost span currently open on
+/// this thread (a root span if none is). Returns an inert guard after
+/// one atomic load when capture is disabled.
+pub fn span(name: &'static str) -> Span {
+    if !enabled() {
+        return Span { inner: None };
+    }
+    let parent = current_span();
+    open(name, parent)
+}
+
+/// Open a span named `name` under an explicit `parent` id instead of
+/// the thread-local current span. This is the cross-thread link: the
+/// dispatching side captures `wave_span.id()` (a plain `u64`, `Copy`)
+/// into the work closure, and the worker thread opens its chunk span
+/// under it. Returns an inert guard when capture is disabled.
+pub fn span_under(parent: SpanId, name: &'static str) -> Span {
+    if !enabled() {
+        return Span { inner: None };
+    }
+    open(name, Some(parent))
+}
+
+fn open(name: &'static str, parent: Option<SpanId>) -> Span {
+    let id = NEXT_SPAN_ID.fetch_add(1, Ordering::Relaxed);
+    let prev = CURRENT.with(|c| c.replace(id));
+    Span {
+        inner: Some(SpanData {
+            id,
+            parent,
+            prev,
+            name,
+            tid: tid(),
+            start_us: now_us(),
+            attrs: Vec::new(),
+        }),
+    }
+}
+
+impl Span {
+    /// Whether this guard is actually recording. Call sites gate
+    /// attribute computation on this (or on [`super::enabled`]) so the
+    /// disabled path never allocates.
+    pub fn is_recording(&self) -> bool {
+        self.inner.is_some()
+    }
+
+    /// This span's id, or 0 for an inert guard. Ids are nonzero, so 0
+    /// is unambiguous; [`span_under`] with a 0 parent would produce a
+    /// dangling edge, but an inert guard only arises when capture is
+    /// off — in which case the child guard is inert too.
+    pub fn id(&self) -> SpanId {
+        self.inner.as_ref().map_or(0, |d| d.id)
+    }
+
+    /// Attach a `key=value` attribute (kept in insertion order). No-op
+    /// on an inert guard, but prefer gating the *value computation* on
+    /// [`Span::is_recording`] when it formats or allocates.
+    pub fn attr(&mut self, key: &str, value: impl Into<AttrValue>) {
+        if let Some(data) = self.inner.as_mut() {
+            data.attrs.push((key.to_string(), value.into()));
+        }
+    }
+}
+
+impl Drop for Span {
+    fn drop(&mut self) {
+        let Some(data) = self.inner.take() else {
+            return;
+        };
+        // Restore the previous innermost span even if the guard is
+        // dropped out of order; well-nested guards make this exact.
+        CURRENT.with(|c| c.set(data.prev));
+        let end_us = now_us();
+        record(Event::Span {
+            id: data.id,
+            parent: data.parent,
+            name: data.name.to_string(),
+            tid: data.tid,
+            start_us: data.start_us,
+            dur_us: end_us.saturating_sub(data.start_us),
+            attrs: data.attrs,
+        });
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::obs::{drain, set_enabled, tests::lock};
+
+    fn span_by_name(evs: &[Event], want: &str) -> (u64, Option<u64>) {
+        evs.iter()
+            .find_map(|e| match e {
+                Event::Span {
+                    id, parent, name, ..
+                } if name == want => Some((*id, *parent)),
+                _ => None,
+            })
+            .unwrap_or_else(|| panic!("span {want} not captured"))
+    }
+
+    #[test]
+    fn nested_spans_link_to_their_parent() {
+        let _g = lock();
+        set_enabled(true);
+        {
+            let root = span("obs.span.root");
+            assert!(root.is_recording() && root.id() != 0);
+            {
+                let _mid = span("obs.span.mid");
+                let leaf = span("obs.span.leaf");
+                assert_eq!(current_span(), Some(leaf.id()));
+            }
+            assert_eq!(current_span(), Some(root.id()));
+        }
+        let evs = drain();
+        set_enabled(false);
+        let (root_id, root_parent) = span_by_name(&evs, "obs.span.root");
+        let (mid_id, mid_parent) = span_by_name(&evs, "obs.span.mid");
+        let (leaf_id, leaf_parent) = span_by_name(&evs, "obs.span.leaf");
+        assert_eq!(root_parent, None);
+        assert_eq!(mid_parent, Some(root_id));
+        assert_eq!(leaf_parent, Some(mid_id));
+        assert!(leaf_id != mid_id && mid_id != root_id);
+    }
+
+    #[test]
+    fn span_under_links_across_an_explicit_parent() {
+        let _g = lock();
+        set_enabled(true);
+        let parent_id;
+        {
+            let parent = span("obs.span.wave");
+            parent_id = parent.id();
+            let handle = std::thread::spawn(move || {
+                let mut child = span_under(parent_id, "obs.span.chunk");
+                child.attr("len", 3usize);
+            });
+            handle.join().expect("worker thread");
+        }
+        let evs = drain();
+        set_enabled(false);
+        let (wave_id, _) = span_by_name(&evs, "obs.span.wave");
+        let (_, chunk_parent) = span_by_name(&evs, "obs.span.chunk");
+        assert_eq!(wave_id, parent_id);
+        assert_eq!(chunk_parent, Some(parent_id));
+    }
+
+    #[test]
+    fn disabled_guard_is_inert() {
+        let _g = lock();
+        set_enabled(false);
+        let mut s = span("obs.span.inert");
+        assert!(!s.is_recording());
+        assert_eq!(s.id(), 0);
+        s.attr("ignored", true);
+        drop(s);
+        assert!(!drain()
+            .iter()
+            .any(|e| matches!(e, Event::Span { name, .. } if name == "obs.span.inert")));
+    }
+}

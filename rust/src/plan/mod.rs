@@ -152,6 +152,7 @@ pub struct Planner<'a> {
     grid: Option<GridSpec>,
     backend: Option<&'a dyn ScoreBackend>,
     multijob: MultiJobConfig,
+    recorder: Option<crate::obs::Recorder>,
 }
 
 impl fmt::Debug for Planner<'_> {
@@ -164,6 +165,7 @@ impl fmt::Debug for Planner<'_> {
             .field("grid", &self.grid)
             .field("backend", &self.backend_ref().name())
             .field("multijob", &self.multijob)
+            .field("recorder", &self.recorder)
             .finish()
     }
 }
@@ -179,6 +181,7 @@ impl<'a> Planner<'a> {
             grid: None,
             backend: None,
             multijob: MultiJobConfig::default(),
+            recorder: None,
         }
     }
 
@@ -260,6 +263,40 @@ impl<'a> Planner<'a> {
         self
     }
 
+    /// Attach a telemetry [`Recorder`](crate::obs::Recorder): every
+    /// planning entry point ([`Planner::plan`], [`Planner::compare`],
+    /// [`Planner::score`], [`Planner::allocate`],
+    /// [`Planner::plan_jobs`], [`Planner::plan_jobs_report`]) then
+    /// captures spans for the duration of that call, restoring the
+    /// previous capture mode afterwards — trace one planner without
+    /// flipping `DCFLOW_TRACE` for the whole process. Capture never
+    /// changes the plans: instrumentation only observes.
+    ///
+    /// ```
+    /// use dcflow::prelude::*;
+    ///
+    /// let wf = Workflow::fig6();
+    /// let servers = Server::pool_exponential(&[9.0, 8.0, 7.0, 6.0, 5.0, 4.0]);
+    /// let plan = Planner::new(&wf, &servers)
+    ///     .recorder(Recorder::global())
+    ///     .plan(&SdccPolicy)
+    ///     .expect("feasible");
+    /// assert!(plan.score.mean > 0.0);
+    /// let events = Recorder::global().drain();
+    /// assert!(dcflow::obs::validate(&events).is_ok());
+    /// ```
+    #[must_use]
+    pub fn recorder(mut self, recorder: crate::obs::Recorder) -> Planner<'a> {
+        self.recorder = Some(recorder);
+        self
+    }
+
+    /// Capture guard for one planning call (`None` when no recorder is
+    /// attached — the global `DCFLOW_TRACE` gate still applies).
+    fn activate(&self) -> Option<crate::obs::ActiveRecorder> {
+        self.recorder.map(crate::obs::Recorder::activate)
+    }
+
     fn backend_ref(&self) -> &'a dyn ScoreBackend {
         self.backend.unwrap_or(&DEFAULT_BACKEND)
     }
@@ -286,6 +323,8 @@ impl<'a> Planner<'a> {
     /// (cached in the context, never recomputed). Scoring policies
     /// materialize the grid lazily when they first consult it.
     pub fn allocate(&self, policy: &dyn AllocationPolicy) -> Result<Allocation, SchedError> {
+        let _capture = self.activate();
+        let _span = crate::obs::span("plan.allocate");
         policy.allocate(&self.ctx())
     }
 
@@ -293,6 +332,11 @@ impl<'a> Planner<'a> {
     /// backend, on this invocation's evaluation grid (the same grid the
     /// policy saw in its [`PlanContext`]).
     pub fn plan(&self, policy: &dyn AllocationPolicy) -> Result<Plan, SchedError> {
+        let _capture = self.activate();
+        let mut span = crate::obs::span("plan");
+        if span.is_recording() {
+            span.attr("policy", policy.name());
+        }
         let ctx = self.ctx();
         let allocation = policy.allocate(&ctx)?;
         Ok(self.finish(policy.name(), allocation, &ctx))
@@ -307,6 +351,11 @@ impl<'a> Planner<'a> {
         &self,
         policies: &[&dyn AllocationPolicy],
     ) -> Vec<Result<Plan, SchedError>> {
+        let _capture = self.activate();
+        let mut span = crate::obs::span("plan.compare");
+        if span.is_recording() {
+            span.attr("policies", policies.len());
+        }
         let ctx = self.ctx();
         policies
             .iter()
@@ -338,6 +387,8 @@ impl<'a> Planner<'a> {
     /// assert_eq!(s.mean, plan.score.mean);
     /// ```
     pub fn score(&self, alloc: &Allocation) -> Score {
+        let _capture = self.activate();
+        let _span = crate::obs::span("plan.score");
         if self.grid.is_some() {
             return self.ctx().score(alloc);
         }
@@ -358,6 +409,11 @@ impl<'a> Planner<'a> {
     /// carry over: the builder's own workflow is not implicitly part of
     /// the job set.
     pub fn plan_jobs(&self, jobs: &[&Workflow]) -> Result<Vec<JobPlan>, SchedError> {
+        let _capture = self.activate();
+        let mut span = crate::obs::span("plan_jobs");
+        if span.is_recording() {
+            span.attr("jobs", jobs.len());
+        }
         multijob_allocate_cfg(
             jobs,
             self.servers,
@@ -378,6 +434,11 @@ impl<'a> Planner<'a> {
         &self,
         jobs: &[&Workflow],
     ) -> Result<(Vec<JobPlan>, SwapStats), SchedError> {
+        let _capture = self.activate();
+        let mut span = crate::obs::span("plan_jobs");
+        if span.is_recording() {
+            span.attr("jobs", jobs.len());
+        }
         multijob_allocate_report(
             jobs,
             self.servers,

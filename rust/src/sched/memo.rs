@@ -183,6 +183,12 @@ impl SwapMemo {
             !touched
         });
         self.invalidated += dropped;
+        if dropped > 0 && crate::obs::enabled() {
+            crate::obs::event(
+                "memo.invalidate",
+                vec![("sides_dropped".to_string(), dropped.into())],
+            );
+        }
         dropped
     }
 

@@ -360,6 +360,14 @@ pub fn multijob_allocate_report(
             have: servers.len(),
         });
     }
+    // telemetry root for this allocation call (one atomic load when
+    // capture is off; attribute formatting gated so it never allocates)
+    let mut mj_span = crate::obs::span("multijob");
+    if mj_span.is_recording() {
+        mj_span.attr("jobs", jobs.len());
+        mj_span.attr("servers", servers.len());
+        mj_span.attr("engine", format!("{:?}", cfg.engine));
+    }
 
     // 1. order by capacity pressure. A degenerate job (NaN/infinite
     // arrival rate, e.g. from a poisoned fit upstream) is rejected with
@@ -392,36 +400,43 @@ pub fn multijob_allocate_report(
     // the removal order is identical either way)
     let mut remaining: Vec<Server> = servers.to_vec();
     let mut staged: Vec<(usize, Allocation, Vec<Server>)> = Vec::with_capacity(jobs.len());
-    for &j in &order {
-        let seed = allocate_with(jobs[j], &remaining, model)?;
-        let pool_view = remaining.clone();
-        let mut used = seed.slot_server.clone();
-        used.sort_unstable_by(|a, b| b.cmp(a));
-        for i in used {
-            remaining.remove(i);
+    {
+        let _seed_span = crate::obs::span("multijob.seed");
+        for &j in &order {
+            let seed = allocate_with(jobs[j], &remaining, model)?;
+            let pool_view = remaining.clone();
+            let mut used = seed.slot_server.clone();
+            used.sort_unstable_by(|a, b| b.cmp(a));
+            for i in used {
+                remaining.remove(i);
+            }
+            staged.push((j, seed, pool_view));
         }
-        staged.push((j, seed, pool_view));
     }
 
     // 3. one shared evaluation grid for the whole job set: the widest
     // (largest dt, i.e. longest horizon) of the per-job seed-response
     // grids, sized against the laws the backend actually scores
-    let shared = grid.unwrap_or_else(|| {
-        staged
-            .iter()
-            .map(|(_, seed, pool)| {
-                let pool = backend.resolve_scoring_pool(pool);
-                GridSpec::auto_response(seed, &pool, model)
-            })
-            // total_cmp: a degenerate per-job dt must widen the merge
-            // deterministically, never panic it (auto grids clamp
-            // non-finite horizons, so dt is finite here by construction)
-            .max_by(|a, b| a.dt.total_cmp(&b.dt))
-            .expect("staged is non-empty: jobs.is_empty() returned early")
-    });
+    let shared = {
+        let _grid_sizing = crate::obs::span("multijob.shared_grid");
+        grid.unwrap_or_else(|| {
+            staged
+                .iter()
+                .map(|(_, seed, pool)| {
+                    let pool = backend.resolve_scoring_pool(pool);
+                    GridSpec::auto_response(seed, &pool, model)
+                })
+                // total_cmp: a degenerate per-job dt must widen the merge
+                // deterministically, never panic it (auto grids clamp
+                // non-finite horizons, so dt is finite here by construction)
+                .max_by(|a, b| a.dt.total_cmp(&b.dt))
+                .expect("staged is non-empty: jobs.is_empty() returned early")
+        })
+    };
 
     // 4. refine each job on the shared grid against its pool view
     let mut plans: Vec<JobPlan> = Vec::with_capacity(jobs.len());
+    let refine_span = crate::obs::span("multijob.refine_seeds");
     for (j, seed, pool_view) in staged {
         let (local_alloc, score) =
             refine_with(jobs[j], seed, &pool_view, &shared, model, objective, 8, backend)?;
@@ -442,13 +457,18 @@ pub fn multijob_allocate_report(
             grid: shared,
         });
     }
+    drop(refine_span);
 
     // 5. cross-job swap refinement on the load-weighted objective:
     // enumerate (or replay from the memo) -> score fresh sides (wave or
     // serial) -> select non-conflicting -> apply + re-balance +
     // invalidate touched memo pairs, until a round improves nothing
     let mut memo = SwapMemo::new();
-    for _round in 0..cfg.swap_rounds {
+    for round_idx in 0..cfg.swap_rounds {
+        let mut round_span = crate::obs::span("multijob.swap_round");
+        if round_span.is_recording() {
+            round_span.attr("round", round_idx);
+        }
         let base: Vec<f64> = plans
             .iter()
             .map(|p| jobs[p.job].arrival_rate * objective.key(&p.score))
@@ -502,6 +522,10 @@ pub fn multijob_allocate_report(
             cands = enumerate_candidates(jobs, servers, &plans, model, &base);
         }
         round.candidates = cands.len();
+        if round_span.is_recording() {
+            round_span.attr("candidates", round.candidates);
+            round_span.attr("memo_hits", round.memo_hits);
+        }
         if cands.is_empty() {
             break;
         }
@@ -577,6 +601,10 @@ pub fn multijob_allocate_report(
         }
         let chosen = select_swaps(&ranked, plans.len());
         round.applied = chosen.len();
+        if round_span.is_recording() {
+            round_span.attr("scored", round.scored);
+            round_span.attr("applied", round.applied);
+        }
         if chosen.is_empty() {
             stats.rounds.push(round);
             break;
@@ -632,6 +660,34 @@ pub fn multijob_allocate_report(
     stats.memo_misses = memo.misses();
     stats.memo_invalidated = memo.invalidated();
     stats.fabric = backend.fabric_stats();
+
+    // publish the stat structs as registry views (sched.* / fabric.*),
+    // so one snapshot covers the swap phase end to end
+    if crate::obs::enabled() {
+        let reg = crate::obs::registry();
+        reg.counter("sched.swap.rounds").add(stats.rounds.len() as u64);
+        reg.counter("sched.swap.candidates")
+            .add(stats.rounds.iter().map(|r| r.candidates as u64).sum::<u64>());
+        reg.counter("sched.swap.scored")
+            .add(stats.rounds.iter().map(|r| r.scored as u64).sum::<u64>());
+        reg.counter("sched.swap.applied")
+            .add(stats.rounds.iter().map(|r| r.applied as u64).sum::<u64>());
+        reg.counter("sched.memo.hits").add(stats.memo_hits as u64);
+        reg.counter("sched.memo.misses").add(stats.memo_misses as u64);
+        reg.counter("sched.memo.invalidated")
+            .add(stats.memo_invalidated as u64);
+        if let Some(f) = &stats.fabric {
+            reg.gauge("fabric.workers").set(f.workers as f64);
+            reg.gauge("fabric.waves_inline").set(f.waves_inline as f64);
+            reg.gauge("fabric.waves_dispatched")
+                .set(f.waves_dispatched as f64);
+            reg.gauge("fabric.chunks_dispatched")
+                .set(f.chunks_dispatched as f64);
+            reg.gauge("fabric.max_queue_depth")
+                .set(f.max_queue_depth as f64);
+            reg.gauge("fabric.scratch_allocs").set(f.scratch_allocs as f64);
+        }
+    }
 
     plans.sort_by_key(|p| p.job);
     Ok((plans, stats))

@@ -64,7 +64,13 @@ pub fn quiet() -> bool {
 /// Emit one library diagnostic line (`dcflow: <msg>`) to stderr unless
 /// silenced. Library code must route its diagnostics here instead of
 /// calling `eprintln!` directly, so users get exactly one switch.
+///
+/// When telemetry capture is on ([`crate::obs`]), every diagnostic is
+/// additionally recorded as a `level=warn` instant event — traces show
+/// warnings next to the spans that produced them. `DCFLOW_QUIET` only
+/// gates stderr; it does not filter the trace.
 pub fn warn(msg: &str) {
+    crate::obs::warn_event(msg);
     if !quiet() {
         eprintln!("dcflow: {msg}");
     }

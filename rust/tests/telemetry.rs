@@ -1,0 +1,342 @@
+//! Telemetry subsystem integration tests: disabled-recorder
+//! bit-identity of planning, span parentage across the scoring pool's
+//! threads, histogram quantile accuracy against the exact reference,
+//! JSONL round-tripping with version rejection, warn routing, and the
+//! `Planner::recorder` scope guard. The obs pipeline is process-global,
+//! so every test touching it serializes on one local lock (CI
+//! additionally runs this binary under `RUST_TEST_THREADS=1`).
+
+use std::collections::BTreeMap;
+use std::sync::Mutex;
+
+use dcflow::obs::{self, AttrValue, Event, Level};
+use dcflow::prelude::*;
+use dcflow::sched::schedule_rates;
+use dcflow::util::rng::Rng;
+use dcflow::util::stats;
+use dcflow::util::warn;
+
+/// Serialize tests that flip the global capture mode or drain the sink.
+fn lock() -> std::sync::MutexGuard<'static, ()> {
+    static LOCK: Mutex<()> = Mutex::new(());
+    LOCK.lock().unwrap_or_else(std::sync::PoisonError::into_inner)
+}
+
+/// The bench's heterogeneous-pool scenario: four jobs on 14 servers,
+/// enough pairs that swap rounds always have candidates to score.
+fn job_set() -> (Vec<Workflow>, Vec<Server>) {
+    (
+        vec![
+            Workflow::fig6(),
+            Workflow::tandem(3, 1.0),
+            Workflow::forkjoin(2, 2.0),
+            Workflow::tandem(2, 3.0),
+        ],
+        Server::pool_exponential(&[
+            18.0, 16.0, 14.0, 12.0, 11.0, 10.0, 9.0, 8.0, 7.5, 7.0, 6.0, 5.0, 4.5, 4.0,
+        ]),
+    )
+}
+
+/// Index the span events of a trace: id → (name, parent).
+fn span_index(events: &[Event]) -> BTreeMap<u64, (String, Option<u64>)> {
+    let mut by_id = BTreeMap::new();
+    for ev in events {
+        if let Event::Span {
+            id, parent, name, ..
+        } = ev
+        {
+            by_id.insert(*id, (name.clone(), *parent));
+        }
+    }
+    by_id
+}
+
+/// Ancestor names of a span, nearest first.
+fn ancestors(by_id: &BTreeMap<u64, (String, Option<u64>)>, mut id: u64) -> Vec<String> {
+    let mut chain = Vec::new();
+    while let Some(p) = by_id.get(&id).and_then(|(_, parent)| *parent) {
+        chain.push(by_id[&p].0.clone());
+        id = p;
+    }
+    chain
+}
+
+#[test]
+fn disabled_recorder_keeps_plan_jobs_bit_identical() {
+    let _g = lock();
+    obs::set_enabled(false);
+    let (jobs_owned, servers) = job_set();
+    let jobs: Vec<&Workflow> = jobs_owned.iter().collect();
+    let backend = ShardedBackend::new(&AnalyticBackend, 2).min_parallel_wave(2);
+    let planner = Planner::new(jobs[0], &servers)
+        .objective(Objective::Mean)
+        .backend(&backend)
+        .swap_engine(SwapEngine::Incremental)
+        .grid(GridSpec::new(0.05, 256));
+    let reference = planner.plan_jobs(&jobs).expect("job set is feasible");
+
+    obs::set_enabled(true);
+    let traced = planner.plan_jobs(&jobs).expect("job set is feasible");
+    obs::set_enabled(false);
+    let _ = obs::drain();
+    let replay = planner.plan_jobs(&jobs).expect("job set is feasible");
+
+    for (label, plans) in [("traced", &traced), ("replay", &replay)] {
+        assert_eq!(plans.len(), reference.len(), "{label}");
+        for (g, r) in plans.iter().zip(reference.iter()) {
+            assert_eq!(g.job, r.job, "{label} job index");
+            assert_eq!(g.alloc, r.alloc, "{label} allocation");
+            assert_eq!(g.score.mean.to_bits(), r.score.mean.to_bits(), "{label} mean");
+            assert_eq!(g.score.p99.to_bits(), r.score.p99.to_bits(), "{label} p99");
+            assert_eq!(g.grid, r.grid, "{label} grid");
+        }
+    }
+}
+
+#[test]
+fn plan_jobs_emits_a_nested_span_tree() {
+    let _g = lock();
+    let _ = obs::drain();
+    let (jobs_owned, servers) = job_set();
+    let jobs: Vec<&Workflow> = jobs_owned.iter().collect();
+    let backend = ShardedBackend::new(&AnalyticBackend, 4).min_parallel_wave(2);
+    let planner = Planner::new(jobs[0], &servers)
+        .objective(Objective::Mean)
+        .backend(&backend)
+        .swap_engine(SwapEngine::Incremental)
+        .grid(GridSpec::new(0.05, 256));
+    obs::set_enabled(true);
+    planner.plan_jobs(&jobs).expect("job set is feasible");
+    obs::set_enabled(false);
+    let events = obs::drain();
+
+    let summary = obs::validate(&events).expect("well-formed trace");
+    assert!(summary.spans >= 4, "expected a real span tree: {summary:?}");
+    assert!(summary.max_depth >= 3, "plan_jobs → multijob → phase: {summary:?}");
+
+    let by_id = span_index(&events);
+    let named = |want: &str| -> Vec<u64> {
+        by_id
+            .iter()
+            .filter(|(_, (n, _))| n == want)
+            .map(|(id, _)| *id)
+            .collect()
+    };
+    // the pipeline root is the planner entry point
+    let roots = named("plan_jobs");
+    assert_eq!(roots.len(), 1);
+    assert_eq!(by_id[&roots[0]].1, None, "plan_jobs is a root span");
+    // multijob nests directly under it
+    for id in named("multijob") {
+        let parent = by_id[&id].1.expect("multijob has a parent");
+        assert_eq!(by_id[&parent].0, "plan_jobs");
+    }
+    assert!(!named("multijob").is_empty());
+    // every swap round is a direct child of multijob
+    let rounds = named("multijob.swap_round");
+    assert!(!rounds.is_empty(), "swap rounds were traced");
+    for id in rounds {
+        let parent = by_id[&id].1.expect("round has a parent");
+        assert_eq!(by_id[&parent].0, "multijob");
+    }
+    // every scoring wave sits somewhere under multijob, and every chunk
+    // directly under its wave
+    let waves = named("backend.wave");
+    assert!(!waves.is_empty(), "scoring waves were traced");
+    for id in waves {
+        assert!(
+            ancestors(&by_id, id).iter().any(|n| n == "multijob"),
+            "wave {id} escaped the multijob subtree"
+        );
+    }
+    for id in named("backend.chunk") {
+        let parent = by_id[&id].1.expect("chunk has a parent");
+        assert_eq!(by_id[&parent].0, "backend.wave");
+    }
+}
+
+#[test]
+fn chunk_spans_nest_under_their_wave_across_pool_threads() {
+    let _g = lock();
+    let _ = obs::drain();
+    // a 32-candidate wave over fig6 (rotations + adjacent
+    // transpositions of the identity assignment)
+    let wf = Workflow::fig6();
+    let servers = Server::pool_exponential(&[9.0, 8.0, 7.0, 6.0, 5.0, 4.0]);
+    let model = ResponseModel::Mm1;
+    let mut wave = Vec::new();
+    let mut assign: Vec<usize> = (0..servers.len()).collect();
+    while wave.len() < 32 {
+        assign.rotate_left(1);
+        if let Ok(a) = schedule_rates(&wf, assign.clone(), &servers, model) {
+            wave.push(a);
+        }
+        for i in 0..servers.len() - 1 {
+            if wave.len() >= 32 {
+                break;
+            }
+            let mut swapped = assign.clone();
+            swapped.swap(i, i + 1);
+            if let Ok(a) = schedule_rates(&wf, swapped, &servers, model) {
+                wave.push(a);
+            }
+        }
+    }
+    let grid = GridSpec::auto_response(&wave[0], &servers, model);
+    let pooled = ShardedBackend::new(&AnalyticBackend, 4).min_parallel_wave(2);
+
+    obs::set_enabled(true);
+    let outer = obs::span("telemetry.test.outer");
+    let outer_id = outer.id();
+    let _scores = pooled.score_batch(&wf, &wave, &servers, &grid, model);
+    drop(outer);
+    obs::set_enabled(false);
+    let events = obs::drain();
+
+    obs::validate(&events).expect("well-formed trace");
+    let by_id = span_index(&events);
+    let wave_ids: Vec<u64> = by_id
+        .iter()
+        .filter(|(_, (n, _))| n == "backend.wave")
+        .map(|(id, _)| *id)
+        .collect();
+    assert_eq!(wave_ids.len(), 1, "one wave span for one score_batch call");
+    assert_eq!(
+        by_id[&wave_ids[0]].1,
+        Some(outer_id),
+        "the wave nests under the caller's open span"
+    );
+    // 32 candidates over 4 shards: dispatched, so chunk spans exist and
+    // each links across its worker thread back to this wave
+    let chunks: Vec<u64> = by_id
+        .iter()
+        .filter(|(_, (n, _))| n == "backend.chunk")
+        .map(|(id, _)| *id)
+        .collect();
+    assert!(!chunks.is_empty(), "a 32-wide wave on 4 shards dispatches");
+    for id in chunks {
+        assert_eq!(by_id[&id].1, Some(wave_ids[0]), "chunk {id} parent");
+    }
+}
+
+#[test]
+fn registry_histogram_quantiles_track_the_exact_reference() {
+    // local registry: no global state, no lock needed
+    let reg = obs::Registry::default();
+    let hist = reg.histogram("test.latency", 0.0, 8.0, 64);
+    let mut rng = Rng::new(42);
+    let mut samples: Vec<f64> = (0..2000).map(|_| rng.exponential(1.0)).collect();
+    for &s in &samples {
+        hist.record(s);
+    }
+    samples.sort_by(f64::total_cmp);
+    let snap = hist.snapshot();
+    assert_eq!(snap.count, 2000);
+    for q in [0.1, 0.5, 0.9, 0.99] {
+        let exact = stats::quantile(&samples, q);
+        let approx = snap.quantile(q);
+        assert!(
+            (approx - exact).abs() <= 2.0 * snap.width,
+            "q={q}: bucket-CDF {approx} vs exact {exact} (width {})",
+            snap.width
+        );
+    }
+}
+
+#[test]
+fn jsonl_round_trips_and_rejects_foreign_versions() {
+    let _g = lock();
+    let _ = obs::drain();
+    obs::set_enabled(true);
+    {
+        let mut root = obs::span("telemetry.test.root");
+        root.attr("jobs", 3usize);
+        root.attr("engine", "incremental");
+        let _child = obs::span("telemetry.test.child");
+        obs::event(
+            "telemetry.test.instant",
+            vec![("k".to_string(), 1.5f64.into())],
+        );
+    }
+    obs::set_enabled(false);
+    let events = obs::drain();
+    let text = obs::to_jsonl(&events);
+
+    // serialize → parse → serialize is byte-stable
+    let parsed = obs::parse_jsonl(&text).expect("round-trip parse");
+    assert_eq!(obs::to_jsonl(&parsed), text);
+
+    // a trace from a future format version is rejected, not misread
+    let mut lines: Vec<String> = text.lines().map(str::to_string).collect();
+    lines[0] = lines[0].replace('1', "999");
+    let err = obs::parse_jsonl(&lines.join("\n")).unwrap_err();
+    assert!(err.contains("unsupported"), "got: {err}");
+    // headerless and empty inputs are rejected too
+    assert!(obs::parse_jsonl(&lines[1..].join("\n")).is_err());
+    assert!(obs::parse_jsonl("").is_err());
+
+    // the Chrome export carries the slices and the instant
+    let chrome = obs::to_chrome_trace(&events);
+    assert!(chrome.contains("traceEvents"));
+    assert!(chrome.contains("telemetry.test.root"));
+    assert!(chrome.contains("telemetry.test.child"));
+    assert!(chrome.contains("telemetry.test.instant"));
+}
+
+#[test]
+fn warn_reaches_the_trace_even_when_stderr_is_quiet() {
+    let _g = lock();
+    let _ = obs::drain();
+    warn::set_quiet(true);
+    obs::set_enabled(true);
+    warn::warn("telemetry-test diagnostic (not visible in test output)");
+    obs::set_enabled(false);
+    warn::set_quiet(false);
+    let events = obs::drain();
+    let w = events
+        .iter()
+        .find(|e| {
+            matches!(
+                e,
+                Event::Instant { name, level: Level::Warn, .. } if name == "warn"
+            )
+        })
+        .expect("warn captured as a level=warn instant");
+    if let Event::Instant { attrs, .. } = w {
+        assert!(
+            matches!(&attrs[0].1, AttrValue::Str(s) if s.contains("telemetry-test")),
+            "warn event carries the message"
+        );
+    }
+}
+
+#[test]
+fn planner_recorder_scopes_capture_and_restores_mode() {
+    let _g = lock();
+    obs::set_enabled(false);
+    let _ = obs::drain();
+    let wf = Workflow::fig6();
+    let servers = Server::pool_exponential(&[9.0, 8.0, 7.0, 6.0, 5.0, 4.0]);
+    let planner = Planner::new(&wf, &servers).recorder(Recorder::global());
+    let plan = planner.plan(&SdccPolicy).expect("fig6 is feasible");
+    assert!(plan.score.mean > 0.0);
+    // the guard restored the pre-call (disabled) mode...
+    assert!(!obs::enabled(), "recorder scope leaked past the call");
+    obs::event("telemetry.test.after", Vec::new());
+    // ...yet the traced call itself was captured
+    let events = obs::drain();
+    obs::validate(&events).expect("well-formed trace");
+    assert!(
+        events
+            .iter()
+            .any(|e| matches!(e, Event::Span { name, .. } if name == "plan")),
+        "the plan call was traced"
+    );
+    assert!(
+        !events
+            .iter()
+            .any(|e| matches!(e, Event::Instant { name, .. } if name == "telemetry.test.after")),
+        "post-call events are not captured"
+    );
+}
