@@ -1,7 +1,8 @@
 //! Golden-corpus maintenance CLI for the scenario subsystem.
 //!
-//! Default mode is the same gate CI runs: every workload-zoo scenario is
-//! checked against its committed golden files under `rust/tests/golden/`
+//! Default mode is the same gate CI runs: every workload-zoo scenario
+//! (plus the serve soak scenario, `serve_soak_short`) is checked
+//! against its committed golden files under `rust/tests/golden/`
 //! (replay twice, bit-compare, byte-compare the summary), blessing any
 //! scenario whose files are missing. `--regen` re-captures and rewrites
 //! the corpus unconditionally — use it after an *intentional* behavior
@@ -37,10 +38,13 @@ fn main() {
     let regen = args.has("regen");
     let only = args.get("scenario").to_string();
 
-    let zoo = ScenarioSpec::zoo();
+    // the full corpus: one zoo entry per class plus the serve soak
+    // scenario the live re-planning service is goldened against
+    let mut zoo = ScenarioSpec::zoo();
+    zoo.push(ScenarioSpec::serve_soak_short());
     if !only.is_empty() && !zoo.iter().any(|s| s.name == only) {
         eprintln!(
-            "unknown scenario '{only}'; zoo: {}",
+            "unknown scenario '{only}'; corpus: {}",
             zoo.iter().map(|s| s.name.as_str()).collect::<Vec<_>>().join(", ")
         );
         std::process::exit(2);

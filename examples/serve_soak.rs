@@ -1,0 +1,358 @@
+//! Deterministic soak of the live re-planning service: sustained seeded
+//! load across every workload-zoo class, with the service's own latency
+//! (planner wall time per admitted re-plan) as the headline number.
+//!
+//! Every scenario runs **twice** under the same [`ServeConfig`]; the
+//! soak gates on bit-identical run reports, execution traces and
+//! admission counters before it reports anything (identity is the gate,
+//! latency is the payload). The admission invariants — `offered ==
+//! admitted + shed`, `shed == shed_inflight + shed_debounce`,
+//! `peak_inflight <= max_inflight` — are re-checked here on every run,
+//! not just in the test suite. A `sim::network` Monte-Carlo pass over
+//! the first scenario's final allocation cross-checks the analytic
+//! plan (and exercises the pinned `cdf_at` edge behavior), with a
+//! `sim::queueing` station-level reference alongside.
+//!
+//! ```text
+//! cargo run --release --example serve_soak            # full soak (~24k requests)
+//! cargo run --release --example serve_soak -- --smoke # CI smoke (~1.8k requests)
+//! DCFLOW_TRACE=1 cargo run --release --example serve_soak -- --smoke
+//! ```
+//!
+//! Output: a deterministic JSON report (schema in `docs/BENCHMARKS.md`)
+//! plus, under `DCFLOW_TRACE=1`, the telemetry JSONL / Chrome-trace
+//! exports of one instrumented short soak. Exit codes: 0 = every
+//! scenario deterministic and every invariant held, 1 = divergence
+//! (the report is still written first), 2 = CLI error.
+
+use std::collections::BTreeMap;
+use std::time::Instant;
+
+use dcflow::prelude::*;
+use dcflow::scenario::reports_identical;
+use dcflow::sim::queueing::simulate_station;
+use dcflow::util::cli::Cli;
+use dcflow::util::json::Json;
+use dcflow::util::rng::Rng;
+
+fn obj(entries: Vec<(&str, Json)>) -> Json {
+    let mut m = BTreeMap::new();
+    for (k, v) in entries {
+        m.insert(k.to_string(), v);
+    }
+    Json::Obj(m)
+}
+
+/// Mean / max / count summary of the real planner wall times.
+fn timing_json(secs: &[f64]) -> Json {
+    let n = secs.len();
+    let mean = if n == 0 {
+        0.0
+    } else {
+        secs.iter().sum::<f64>() / n as f64
+    };
+    let max = secs.iter().copied().fold(0.0_f64, f64::max);
+    obj(vec![
+        ("count", Json::Num(n as f64)),
+        ("mean_s", Json::Num(mean)),
+        ("max_s", Json::Num(max)),
+    ])
+}
+
+fn admission_json(st: &AdmissionStats) -> Json {
+    obj(vec![
+        ("offered", Json::Num(st.offered as f64)),
+        ("admitted", Json::Num(st.admitted as f64)),
+        ("shed", Json::Num(st.shed as f64)),
+        ("shed_inflight", Json::Num(st.shed_inflight as f64)),
+        ("shed_debounce", Json::Num(st.shed_debounce as f64)),
+        ("forced", Json::Num(st.forced as f64)),
+        ("peak_inflight", Json::Num(st.peak_inflight as f64)),
+        ("swaps_applied", Json::Num(st.swaps_applied as f64)),
+    ])
+}
+
+struct ReportCtx {
+    out_path: String,
+    cfg: ServeConfig,
+    tasks: usize,
+    sim_tasks: usize,
+    seed: u64,
+    smoke: bool,
+}
+
+impl ReportCtx {
+    fn write(&self, results: &[Json], sim_check: &Json, identical: bool, telemetry: &Json) {
+        let report = obj(vec![
+            ("bench", Json::Str("serve_soak".into())),
+            ("crate_version", Json::Str(env!("CARGO_PKG_VERSION").into())),
+            (
+                "config",
+                obj(vec![
+                    ("max_inflight", Json::Num(self.cfg.max_inflight as f64)),
+                    ("debounce", Json::Num(self.cfg.debounce as f64)),
+                    ("replan_hold", Json::Num(self.cfg.replan_hold as f64)),
+                    ("shards", Json::Num(self.cfg.shards as f64)),
+                    ("wave_depth", Json::Num(self.cfg.wave_depth as f64)),
+                    ("tasks_per_scenario", Json::Num(self.tasks as f64)),
+                    ("sim_tasks", Json::Num(self.sim_tasks as f64)),
+                    ("seed", Json::Num(self.seed as f64)),
+                    ("smoke", Json::Bool(self.smoke)),
+                ]),
+            ),
+            ("results", Json::Arr(results.to_vec())),
+            ("sim_check", sim_check.clone()),
+            ("deterministic", Json::Bool(identical)),
+            ("telemetry", telemetry.clone()),
+        ]);
+        std::fs::write(&self.out_path, report.to_string() + "\n").expect("write SOAK json");
+    }
+}
+
+fn main() {
+    let cli = Cli::new(
+        "serve_soak",
+        "deterministic soak of the live re-planning service over the workload zoo",
+    )
+    .opt("out", "SOAK_serve.json", "output path for the JSON report")
+    .opt(
+        "trace-out",
+        "TRACE_serve_soak.jsonl",
+        "telemetry JSONL path (written when DCFLOW_TRACE=1)",
+    )
+    .opt(
+        "chrome-out",
+        "TRACE_serve_soak.chrome.json",
+        "Chrome trace-event path (written when DCFLOW_TRACE=1)",
+    )
+    .opt("tasks", "4000", "arrival-stream length per zoo scenario")
+    .opt("sim-tasks", "50000", "Monte-Carlo samples for the sim cross-check")
+    .opt("seed", "0", "XORed into every scenario seed (0 = the pinned zoo seeds)")
+    .opt("max-inflight", "1", "admission: concurrent re-plan slot cap")
+    .opt("debounce", "400", "admission: min completions between admitted re-plans")
+    .opt("replan-hold", "250", "admission: completions each admitted re-plan holds its slot")
+    .opt("shards", "2", "scoring-fabric workers behind the async backend")
+    .opt("wave-depth", "2", "in-flight chunk depth of the async backend")
+    .flag("smoke", "short streams (CI smoke run)");
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let args = match cli.parse(&argv) {
+        Ok(a) => a,
+        Err(msg) => {
+            eprintln!("{msg}");
+            std::process::exit(2);
+        }
+    };
+    let out_path = args.get("out").to_string();
+    let trace_out = args.get("trace-out").to_string();
+    let chrome_out = args.get("chrome-out").to_string();
+    let smoke = args.has("smoke");
+    // --smoke only lowers the *defaults*; explicit --tasks/--sim-tasks win
+    let passed = |name: &str| {
+        argv.iter()
+            .any(|a| a == &format!("--{name}") || a.starts_with(&format!("--{name}=")))
+    };
+    let tasks: usize = if smoke && !passed("tasks") {
+        300
+    } else {
+        args.get_as("tasks").expect("--tasks")
+    };
+    let sim_tasks: usize = if smoke && !passed("sim-tasks") {
+        5_000
+    } else {
+        args.get_as("sim-tasks").expect("--sim-tasks")
+    };
+    let seed: u64 = args.get_as("seed").expect("--seed");
+    let cfg = ServeConfig {
+        max_inflight: args.get_as("max-inflight").expect("--max-inflight"),
+        debounce: args.get_as("debounce").expect("--debounce"),
+        replan_hold: args.get_as("replan-hold").expect("--replan-hold"),
+        shards: args.get_as("shards").expect("--shards"),
+        wave_depth: args.get_as("wave-depth").expect("--wave-depth"),
+    };
+    let ctx = ReportCtx {
+        out_path,
+        cfg,
+        tasks,
+        sim_tasks,
+        seed,
+        smoke,
+    };
+
+    let specs: Vec<ScenarioSpec> = ScenarioSpec::zoo()
+        .into_iter()
+        .map(|s| {
+            let scenario_seed = s.seed ^ seed;
+            s.with_seed(scenario_seed).with_tasks(tasks)
+        })
+        .collect();
+    println!(
+        "serve_soak: {} scenarios x {tasks} tasks, admission cap {} / debounce {} / hold {}{}",
+        specs.len(),
+        cfg.max_inflight,
+        cfg.debounce,
+        cfg.replan_hold,
+        if smoke { " (smoke)" } else { "" }
+    );
+
+    let mut results: Vec<Json> = Vec::new();
+    let mut identical = true;
+    let mut total_completed: u64 = 0;
+    // first scenario's outcome feeds the Monte-Carlo cross-check below
+    let mut sim_subject: Option<(ScenarioSpec, Allocation)> = None;
+
+    for spec in &specs {
+        let started = Instant::now();
+        let (r1, t1) = Service::run_spec(spec, cfg)
+            .unwrap_or_else(|e| panic!("{}: service run failed: {e}", spec.name));
+        let (r2, t2) = Service::run_spec(spec, cfg)
+            .unwrap_or_else(|e| panic!("{}: service re-run failed: {e}", spec.name));
+        let wall_s = started.elapsed().as_secs_f64();
+
+        // determinism gate: same seed twice => same decisions, bit for bit
+        let deterministic =
+            reports_identical(&r1.run, &r2.run) && t1 == t2 && r1.admission == r2.admission;
+        if !deterministic {
+            eprintln!(
+                "serve_soak: '{}' is NOT deterministic across identical runs \
+                 (admission {:?} vs {:?})",
+                spec.name, r1.admission, r2.admission
+            );
+            identical = false;
+        }
+        // admission invariants, re-checked on every soak run
+        let st = r1.admission;
+        if st.offered != st.admitted + st.shed
+            || st.shed != st.shed_inflight + st.shed_debounce
+            || st.peak_inflight > cfg.max_inflight.max(1)
+        {
+            eprintln!(
+                "serve_soak: '{}' broke an admission invariant: {st:?}",
+                spec.name
+            );
+            identical = false;
+        }
+
+        let m = &r1.run.metrics;
+        total_completed += m.completed;
+        println!(
+            "  {:<24} tasks {:>6}  virt p99 {:>8.4}  replans {}/{} (shed {})  plan mean \
+             {:>9.6} s",
+            spec.name,
+            m.completed,
+            m.latency_quantile(0.99),
+            st.admitted,
+            st.offered,
+            st.shed,
+            r1.replan_secs.iter().sum::<f64>() / r1.replan_secs.len().max(1) as f64
+        );
+        results.push(obj(vec![
+            ("scenario", Json::Str(spec.name.clone())),
+            ("class", Json::Str(spec.class.label().into())),
+            ("seed", Json::Num(spec.seed as f64)),
+            ("completed", Json::Num(m.completed as f64)),
+            ("mean_latency", Json::Num(m.mean_latency())),
+            ("p50_latency", Json::Num(m.latency_quantile(0.5))),
+            ("p99_latency", Json::Num(m.latency_quantile(0.99))),
+            ("throughput", Json::Num(m.throughput())),
+            ("makespan", Json::Num(m.makespan)),
+            ("reoptimizations", Json::Num(m.reoptimizations as f64)),
+            ("admission", admission_json(&st)),
+            // the latency of the service itself: real planner wall time
+            ("replan_wall", timing_json(&r1.replan_secs)),
+            ("wall_s", Json::Num(wall_s)),
+            ("deterministic", Json::Bool(deterministic)),
+        ]));
+        if sim_subject.is_none() {
+            sim_subject = Some((spec.clone(), r1.run.final_allocation.clone()));
+        }
+    }
+    println!("total simulated requests: {}", 2 * total_completed);
+
+    // Monte-Carlo cross-check: simulate the first scenario's final
+    // allocation end to end and read the response CDF at the virtual
+    // quantiles — exercising the pinned cdf_at edge contract — plus a
+    // Lindley station-level reference for slot 0
+    let sim_check = match &sim_subject {
+        Some((spec, alloc)) if alloc.slot_server.iter().all(|&s| s < spec.initial_view().len()) => {
+            let servers = spec.initial_view();
+            let scfg = SimConfig {
+                n_tasks: sim_tasks,
+                warmup: sim_tasks / 20,
+                seed: 0xD0C5 ^ seed,
+                queueing: true,
+            };
+            let sim = simulate(&spec.workflow(), alloc, &servers, &scfg);
+            assert_eq!(sim.cdf_at(f64::NEG_INFINITY), 0.0, "cdf lower edge");
+            assert_eq!(sim.cdf_at(f64::INFINITY), 1.0, "cdf upper edge");
+            let mut rng = Rng::new(scfg.seed);
+            let station = simulate_station(
+                &servers[alloc.server_for(0)].dist,
+                alloc.rate_for(0),
+                scfg.n_tasks,
+                scfg.warmup,
+                &mut rng,
+            );
+            let station_mean = station.iter().sum::<f64>() / station.len() as f64;
+            obj(vec![
+                ("scenario", Json::Str(spec.name.clone())),
+                ("sim_mean", Json::Num(sim.mean)),
+                ("sim_p50", Json::Num(sim.p50)),
+                ("sim_p99", Json::Num(sim.p99)),
+                ("cdf_at_p50", Json::Num(sim.cdf_at(sim.p50))),
+                ("cdf_at_p99", Json::Num(sim.cdf_at(sim.p99))),
+                ("station0_mean", Json::Num(station_mean)),
+            ])
+        }
+        _ => Json::Str("skipped: final allocation references a departed server".into()),
+    };
+
+    // telemetry capture: re-run one short soak instrumented so the
+    // exported trace is a single clean serve.run -> serve.replan ->
+    // backend.wave -> backend.chunk tree, then validate + export it
+    let telemetry = if dcflow::obs::enabled() {
+        let _ = dcflow::obs::drain();
+        let spec = ScenarioSpec::serve_soak_short();
+        let (report, _) = Service::run_spec(&spec, cfg).expect("instrumented soak runs");
+        let events = dcflow::obs::drain();
+        let summary = match dcflow::obs::validate(&events) {
+            Ok(s) => s,
+            Err(e) => {
+                eprintln!("serve_soak: telemetry trace failed validation: {e}");
+                std::process::exit(1);
+            }
+        };
+        std::fs::write(&trace_out, dcflow::obs::to_jsonl(&events))
+            .expect("write telemetry JSONL");
+        std::fs::write(&chrome_out, dcflow::obs::to_chrome_trace(&events))
+            .expect("write Chrome trace");
+        println!(
+            "wrote {trace_out} + {chrome_out} ({} spans, max depth {})",
+            summary.spans, summary.max_depth
+        );
+        let snap = dcflow::obs::registry().snapshot();
+        let mut counters = BTreeMap::new();
+        for (name, v) in snap.counters {
+            counters.insert(name, Json::Num(v as f64));
+        }
+        obj(vec![
+            ("enabled", Json::Bool(true)),
+            ("scenario", Json::Str(spec.name.clone())),
+            ("spans", Json::Num(summary.spans as f64)),
+            ("instants", Json::Num(summary.instants as f64)),
+            ("roots", Json::Num(summary.roots as f64)),
+            ("max_depth", Json::Num(summary.max_depth as f64)),
+            ("soak_offered", Json::Num(report.admission.offered as f64)),
+            ("trace_jsonl", Json::Str(trace_out.clone())),
+            ("trace_chrome", Json::Str(chrome_out.clone())),
+            ("counters", Json::Obj(counters)),
+        ])
+    } else {
+        obj(vec![("enabled", Json::Bool(false))])
+    };
+
+    ctx.write(&results, &sim_check, identical, &telemetry);
+    println!("wrote {} (deterministic: {identical})", ctx.out_path);
+    if !identical {
+        std::process::exit(1);
+    }
+}

@@ -23,7 +23,14 @@
 //!   ([`ScoringPool`](crate::compose::fabric::ScoringPool); a
 //!   spawn-per-wave scoped pool remains as the
 //!   [`Dispatch::SpawnPerWave`] fallback), preserving input order and
-//!   returning bit-identical scores to the inner backend run serially.
+//!   returning bit-identical scores to the inner backend run serially;
+//! * [`AsyncScoreBackend`] — the pipelining combinator behind the live
+//!   re-planning service ([`crate::serve`]): chunks flow through the
+//!   fabric with a bounded number in flight, and
+//!   [`AsyncScoreBackend::score_stream`] keeps waves scoring *while the
+//!   caller is still enumerating candidates* — results are reassembled
+//!   in input order and stay bit-identical to the inner backend run
+//!   serially.
 //!
 //! Custom predictors (learned models, remote services) implement the
 //! same trait and plug into
@@ -46,9 +53,10 @@
 //! ```
 
 use std::borrow::Cow;
+use std::collections::VecDeque;
 use std::fmt;
 use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::{Mutex, OnceLock};
+use std::sync::{Condvar, Mutex, OnceLock};
 
 use crate::compose::fabric::{FabricStats, ScoringPool};
 use crate::compose::grid::GridSpec;
@@ -709,6 +717,452 @@ impl ScoreBackend for ShardedBackend<'_> {
     }
 }
 
+/// In-flight bookkeeping for one [`AsyncScoreBackend::score_stream`]
+/// call: the bounded chunk queue between the enumerating producer and
+/// the issuing consumers.
+struct StreamQueue {
+    /// Chunks awaiting dispatch, tagged with their input-order index.
+    pending: VecDeque<(usize, Vec<Allocation>)>,
+    /// The producer exhausted its candidate iterator.
+    done: bool,
+}
+
+/// A [`ScoreBackend`] combinator that *pipelines* waves through the
+/// persistent scoring fabric with a bounded number of chunks in flight
+/// — the asynchronous scoring seam the live re-planning service
+/// ([`crate::serve`]) plans through.
+///
+/// Where [`ShardedBackend`] submits a whole wave and blocks on one
+/// fabric dispatch, this adapter runs up to
+/// [`AsyncScoreBackend::in_flight`] issuer threads, each holding one
+/// chunk open on the [`ScoringPool`](crate::compose::fabric::ScoringPool)
+/// at a time (the pool is `Sync`; concurrent dispatches interleave on
+/// per-wave latches). Two entry points share that machinery:
+///
+/// * [`ScoreBackend::score_batch`] — the wave is already materialized;
+///   chunks are issued as issuer slots free up, so a slow chunk never
+///   stalls the rest of the wave behind a single barrier;
+/// * [`AsyncScoreBackend::score_stream`] — candidates arrive from an
+///   **iterator still being enumerated**: full chunks enter a bounded
+///   queue (capacity = the in-flight depth) while the caller keeps
+///   producing, overlapping enumeration with scoring end to end.
+///
+/// Either way results are reassembled **in input order** and are
+/// bit-identical to the inner backend run serially: candidates score
+/// independently, chunk boundaries are a deterministic function of the
+/// knobs, and thread scheduling only reorders *when* a slot is filled,
+/// never *what* fills it. `tests/serve_equivalence.rs` property-tests
+/// this across shard counts, in-flight depths and chunking policies.
+///
+/// Waves narrower than [`AsyncScoreBackend::min_parallel_wave`] (and
+/// single-candidate [`ScoreBackend::score`] calls) are scored inline —
+/// same rule, and same reasoning, as [`ShardedBackend`]. Diagnostics
+/// ([`ScoreBackend::scoring_pool`], grid auto-sizing) delegate to the
+/// inner backend, so wrapping never changes what gets scored.
+///
+/// ```
+/// use dcflow::prelude::*;
+///
+/// let wf = Workflow::fig6();
+/// let servers = Server::pool_exponential(&[9.0, 8.0, 7.0, 6.0, 5.0, 4.0]);
+/// let pipelined = AsyncScoreBackend::new(&AnalyticBackend, 2);
+/// let plan = Planner::new(&wf, &servers)
+///     .backend(&pipelined)
+///     .plan(&ProposedPolicy::default())
+///     .expect("feasible");
+/// // bit-identical to the serial analytic path
+/// let serial = Planner::new(&wf, &servers)
+///     .plan(&ProposedPolicy::default())
+///     .expect("feasible");
+/// assert_eq!(plan.allocation, serial.allocation);
+/// assert_eq!(plan.score.mean, serial.score.mean);
+/// ```
+pub struct AsyncScoreBackend<'a> {
+    inner: &'a (dyn ScoreBackend + Sync),
+    shards: usize,
+    in_flight: usize,
+    chunking: ChunkPolicy,
+    min_wave: usize,
+    pin_cores: Option<bool>,
+    pool: OnceLock<ScoringPool>,
+    waves_inline: AtomicUsize,
+    waves_pipelined: AtomicUsize,
+    chunks_pipelined: AtomicUsize,
+    peak_in_flight: AtomicUsize,
+    name: String,
+}
+
+impl<'a> AsyncScoreBackend<'a> {
+    /// Default bound on chunks concurrently held open on the fabric.
+    /// Deep enough to hide one straggling chunk behind its successors,
+    /// shallow enough that a re-plan never floods the pool queue.
+    pub const DEFAULT_IN_FLIGHT: usize = 4;
+
+    /// Pipeline `inner` across `shards` fabric workers (values `< 1`
+    /// are treated as 1) with the default in-flight depth.
+    /// Builder-style: chain [`AsyncScoreBackend::in_flight`],
+    /// [`AsyncScoreBackend::chunking`],
+    /// [`AsyncScoreBackend::min_parallel_wave`] or
+    /// [`AsyncScoreBackend::pin_cores`] to tune it.
+    pub fn new(inner: &'a (dyn ScoreBackend + Sync), shards: usize) -> AsyncScoreBackend<'a> {
+        let shards = shards.max(1);
+        AsyncScoreBackend {
+            inner,
+            shards,
+            in_flight: Self::DEFAULT_IN_FLIGHT,
+            chunking: ChunkPolicy::Even,
+            min_wave: ShardedBackend::MIN_PARALLEL_WAVE,
+            pin_cores: None,
+            pool: OnceLock::new(),
+            waves_inline: AtomicUsize::new(0),
+            waves_pipelined: AtomicUsize::new(0),
+            chunks_pipelined: AtomicUsize::new(0),
+            peak_in_flight: AtomicUsize::new(0),
+            name: format!("async({})x{}", inner.name(), shards),
+        }
+    }
+
+    /// Bound the number of chunks concurrently in flight (queued or
+    /// scoring; values `< 1` are treated as 1 — fully serial issue,
+    /// still bit-identical).
+    #[must_use]
+    pub fn in_flight(mut self, depth: usize) -> AsyncScoreBackend<'a> {
+        self.in_flight = depth.max(1);
+        self
+    }
+
+    /// Select the wave-splitting policy (default [`ChunkPolicy::Even`];
+    /// [`ChunkPolicy::Fixed`] also sets the stream granule of
+    /// [`AsyncScoreBackend::score_stream`]).
+    #[must_use]
+    pub fn chunking(mut self, chunking: ChunkPolicy) -> AsyncScoreBackend<'a> {
+        self.chunking = chunking;
+        self
+    }
+
+    /// Set the inline threshold: materialized waves narrower than `n`
+    /// are scored on the calling thread (default
+    /// [`ShardedBackend::MIN_PARALLEL_WAVE`]; values `< 2` are clamped).
+    /// Inline and pipelined paths are bit-identical, so this is purely
+    /// a scheduling knob.
+    #[must_use]
+    pub fn min_parallel_wave(mut self, n: usize) -> AsyncScoreBackend<'a> {
+        self.min_wave = n.max(2);
+        self
+    }
+
+    /// Force core pinning on (`true`) or off (`false`) for the fabric
+    /// workers, overriding the `DCFLOW_PIN_CORES` environment knob.
+    #[must_use]
+    pub fn pin_cores(mut self, pin: bool) -> AsyncScoreBackend<'a> {
+        self.pin_cores = Some(pin);
+        self
+    }
+
+    /// Fabric worker threads.
+    pub fn shards(&self) -> usize {
+        self.shards
+    }
+
+    /// Active in-flight depth bound.
+    pub fn in_flight_depth(&self) -> usize {
+        self.in_flight
+    }
+
+    /// Active wave-splitting policy.
+    pub fn chunk_policy(&self) -> ChunkPolicy {
+        self.chunking
+    }
+
+    /// Active inline threshold.
+    pub fn min_wave(&self) -> usize {
+        self.min_wave
+    }
+
+    /// High-water mark of chunks concurrently held open on the fabric
+    /// over this backend's lifetime — never exceeds
+    /// [`AsyncScoreBackend::in_flight_depth`] (pinned in
+    /// `tests/serve_equivalence.rs`).
+    pub fn peak_in_flight(&self) -> usize {
+        self.peak_in_flight.load(Ordering::Relaxed)
+    }
+
+    /// Score candidates from an iterator **while it is still being
+    /// enumerated**: every time a full chunk accumulates it enters a
+    /// bounded queue (capacity = the in-flight depth) consumed by the
+    /// issuer threads, so enumeration and fabric scoring overlap. The
+    /// returned scores are in enumeration order and bit-identical to
+    /// `inner.score_batch` over the collected candidates.
+    ///
+    /// The enumerating (calling) thread blocks only when the queue is
+    /// full — the backpressure that keeps a fast producer from flooding
+    /// the fabric.
+    pub fn score_stream<I>(
+        &self,
+        wf: &Workflow,
+        candidates: I,
+        servers: &[Server],
+        grid: &GridSpec,
+        model: ResponseModel,
+    ) -> Vec<Score>
+    where
+        I: IntoIterator<Item = Allocation>,
+    {
+        let granule = match self.chunking {
+            ChunkPolicy::Even => self.min_wave,
+            ChunkPolicy::Fixed(n) => n.max(1),
+        };
+        let mut wave_span = crate::obs::span("backend.wave");
+        if wave_span.is_recording() {
+            wave_span.attr("stream", true);
+            wave_span.attr("granule", granule);
+        }
+        let wave_id = wave_span.id();
+        let pool = self.pool();
+        let queue = Mutex::new(StreamQueue {
+            pending: VecDeque::new(),
+            done: false,
+        });
+        let space = Condvar::new(); // producer waits: queue below capacity
+        let ready = Condvar::new(); // issuers wait: chunk available or done
+        let slots: Mutex<Vec<Option<Vec<Score>>>> = Mutex::new(Vec::new());
+        let live = AtomicUsize::new(0);
+        let issued = AtomicUsize::new(0);
+        self.waves_pipelined.fetch_add(1, Ordering::Relaxed);
+        std::thread::scope(|scope| {
+            for _ in 0..self.in_flight {
+                scope.spawn(|| loop {
+                    let (idx, chunk) = {
+                        let mut q = queue.lock().expect("stream queue lock");
+                        while q.pending.is_empty() && !q.done {
+                            q = ready.wait(q).expect("stream queue lock");
+                        }
+                        let Some(item) = q.pending.pop_front() else {
+                            break; // empty and done: drain complete
+                        };
+                        space.notify_one();
+                        item
+                    };
+                    let depth = live.fetch_add(1, Ordering::Relaxed) + 1;
+                    self.peak_in_flight.fetch_max(depth, Ordering::Relaxed);
+                    let scored = self.issue_chunk(wave_id, wf, idx, &chunk, servers, grid, model, pool);
+                    live.fetch_sub(1, Ordering::Relaxed);
+                    issued.fetch_add(1, Ordering::Relaxed);
+                    slots.lock().expect("stream slot lock")[idx] = Some(scored);
+                });
+            }
+            // the producer runs on the calling thread: enumeration
+            // proceeds while earlier chunks are already on the fabric
+            let mut buf: Vec<Allocation> = Vec::with_capacity(granule);
+            let mut next_idx = 0usize;
+            for cand in candidates {
+                buf.push(cand);
+                if buf.len() == granule {
+                    self.push_chunk(&queue, &space, &ready, &slots, next_idx, std::mem::take(&mut buf));
+                    next_idx += 1;
+                    buf.reserve(granule);
+                }
+            }
+            if !buf.is_empty() {
+                self.push_chunk(&queue, &space, &ready, &slots, next_idx, buf);
+            }
+            let mut q = queue.lock().expect("stream queue lock");
+            q.done = true;
+            ready.notify_all();
+        });
+        self.chunks_pipelined
+            .fetch_add(issued.load(Ordering::Relaxed), Ordering::Relaxed);
+        slots
+            .into_inner()
+            .expect("stream slot lock")
+            .into_iter()
+            .flat_map(|s| s.expect("every stream chunk scored"))
+            .collect()
+    }
+
+    /// Enqueue one chunk for the issuers, blocking while the queue is
+    /// at capacity (the stream's backpressure point), and grow the
+    /// ordered result slots to cover its index.
+    fn push_chunk(
+        &self,
+        queue: &Mutex<StreamQueue>,
+        space: &Condvar,
+        ready: &Condvar,
+        slots: &Mutex<Vec<Option<Vec<Score>>>>,
+        idx: usize,
+        chunk: Vec<Allocation>,
+    ) {
+        slots.lock().expect("stream slot lock").push(None);
+        let mut q = queue.lock().expect("stream queue lock");
+        while q.pending.len() >= self.in_flight {
+            q = space.wait(q).expect("stream queue lock");
+        }
+        q.pending.push_back((idx, chunk));
+        ready.notify_one();
+    }
+
+    /// Score one chunk through the fabric (one single-chunk dispatch —
+    /// concurrent issuers interleave on the pool's per-wave latches)
+    /// and hand back its scores.
+    #[allow(clippy::too_many_arguments)]
+    fn issue_chunk(
+        &self,
+        wave_id: u64,
+        wf: &Workflow,
+        idx: usize,
+        chunk: &[Allocation],
+        servers: &[Server],
+        grid: &GridSpec,
+        model: ResponseModel,
+        pool: &ScoringPool,
+    ) -> Vec<Score> {
+        let out: Mutex<Vec<Score>> = Mutex::new(Vec::new());
+        pool.dispatch(1, &|_, scratch: &mut Scratch| {
+            let mut chunk_span = crate::obs::span_under(wave_id, "backend.chunk");
+            if chunk_span.is_recording() {
+                chunk_span.attr("chunk", idx);
+                chunk_span.attr("len", chunk.len());
+            }
+            let scored = self
+                .inner
+                .score_batch_scratch(wf, chunk, servers, grid, model, scratch);
+            *out.lock().expect("async result lock") = scored;
+        });
+        out.into_inner().expect("async result lock")
+    }
+
+    /// The lazily spun-up fabric.
+    fn pool(&self) -> &ScoringPool {
+        self.pool
+            .get_or_init(|| ScoringPool::with_pinning(self.shards, self.pin_workers()))
+    }
+
+    /// Whether fabric workers should be pinned: the explicit builder
+    /// choice when given, else the `DCFLOW_PIN_CORES` env knob.
+    fn pin_workers(&self) -> bool {
+        self.pin_cores.unwrap_or_else(|| {
+            matches!(
+                std::env::var("DCFLOW_PIN_CORES").as_deref(),
+                Ok("1") | Ok("true")
+            )
+        })
+    }
+
+    /// Candidates per chunk for a materialized wave of `wave_len`
+    /// (same policy arithmetic as [`ShardedBackend`]).
+    fn chunk_len(&self, wave_len: usize) -> usize {
+        match self.chunking {
+            ChunkPolicy::Even => wave_len.div_ceil(self.shards).max(1),
+            ChunkPolicy::Fixed(n) => n.max(1),
+        }
+    }
+}
+
+impl fmt::Debug for AsyncScoreBackend<'_> {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.debug_struct("AsyncScoreBackend")
+            .field("inner", &self.inner.name())
+            .field("shards", &self.shards)
+            .field("in_flight", &self.in_flight)
+            .field("chunking", &self.chunking)
+            .field("min_wave", &self.min_wave)
+            .field("pool", &self.pool.get())
+            .finish()
+    }
+}
+
+impl ScoreBackend for AsyncScoreBackend<'_> {
+    fn name(&self) -> &str {
+        &self.name
+    }
+
+    fn score(
+        &self,
+        wf: &Workflow,
+        alloc: &Allocation,
+        servers: &[Server],
+        grid: &GridSpec,
+        model: ResponseModel,
+    ) -> Score {
+        // one candidate cannot be pipelined; no thread overhead
+        self.inner.score(wf, alloc, servers, grid, model)
+    }
+
+    fn score_batch(
+        &self,
+        wf: &Workflow,
+        allocs: &[Allocation],
+        servers: &[Server],
+        grid: &GridSpec,
+        model: ResponseModel,
+    ) -> Vec<Score> {
+        let chunk_len = self.chunk_len(allocs.len());
+        let mut wave_span = crate::obs::span("backend.wave");
+        if wave_span.is_recording() {
+            wave_span.attr("wave", allocs.len());
+        }
+        if self.shards == 1 || allocs.len() <= chunk_len || allocs.len() < self.min_wave {
+            wave_span.attr("inline", true);
+            self.waves_inline.fetch_add(1, Ordering::Relaxed);
+            return self.inner.score_batch(wf, allocs, servers, grid, model);
+        }
+        let chunks: Vec<&[Allocation]> = allocs.chunks(chunk_len).collect();
+        let slots: Vec<Mutex<Vec<Score>>> =
+            chunks.iter().map(|_| Mutex::new(Vec::new())).collect();
+        self.waves_pipelined.fetch_add(1, Ordering::Relaxed);
+        self.chunks_pipelined
+            .fetch_add(chunks.len(), Ordering::Relaxed);
+        if wave_span.is_recording() {
+            wave_span.attr("inline", false);
+            wave_span.attr("chunks", chunks.len());
+            wave_span.attr("in_flight", self.in_flight);
+        }
+        let wave_id = wave_span.id();
+        let pool = self.pool();
+        let next = AtomicUsize::new(0);
+        let live = AtomicUsize::new(0);
+        let issuers = self.in_flight.min(chunks.len());
+        std::thread::scope(|scope| {
+            for _ in 0..issuers {
+                scope.spawn(|| loop {
+                    let i = next.fetch_add(1, Ordering::Relaxed);
+                    let Some(&chunk) = chunks.get(i) else { break };
+                    let depth = live.fetch_add(1, Ordering::Relaxed) + 1;
+                    self.peak_in_flight.fetch_max(depth, Ordering::Relaxed);
+                    let scored =
+                        self.issue_chunk(wave_id, wf, i, chunk, servers, grid, model, pool);
+                    live.fetch_sub(1, Ordering::Relaxed);
+                    *slots[i].lock().expect("async result lock") = scored;
+                });
+            }
+        });
+        // reassemble in input order: slot i holds chunk i's scores
+        slots
+            .into_iter()
+            .flat_map(|m| m.into_inner().expect("async result lock"))
+            .collect()
+    }
+
+    fn scoring_pool(&self, servers: &[Server]) -> Option<Vec<Server>> {
+        // report the inner backend's effective pool so shared-grid
+        // auto-sizing is unchanged by the pipelining wrapper
+        self.inner.scoring_pool(servers)
+    }
+
+    /// Always `Some`: backend-level wave counters (pipelined waves
+    /// under `waves_dispatched`, issued chunks under
+    /// `chunks_dispatched`) merged with the pool's queue/scratch
+    /// counters once the fabric has spun up.
+    fn fabric_stats(&self) -> Option<FabricStats> {
+        let mut st = self.pool.get().map(|p| p.stats()).unwrap_or_default();
+        st.workers = self.shards;
+        st.waves_inline = self.waves_inline.load(Ordering::Relaxed);
+        st.waves_dispatched = self.waves_pipelined.load(Ordering::Relaxed);
+        st.chunks_dispatched = self.chunks_pipelined.load(Ordering::Relaxed);
+        Some(st)
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -853,6 +1307,7 @@ mod tests {
         assert_eq!(AnalyticBackend.name(), "analytic");
         assert_eq!(EmpiricalBackend::new().name(), "empirical");
         assert_eq!(ShardedBackend::new(&AnalyticBackend, 4).name(), "sharded(analytic)x4");
+        assert_eq!(AsyncScoreBackend::new(&AnalyticBackend, 4).name(), "async(analytic)x4");
     }
 
     #[test]
@@ -1002,6 +1457,127 @@ mod tests {
             let st = b.fabric_stats().unwrap();
             assert_eq!(st.waves_inline, 0, "{dispatch:?}");
             assert_eq!(st.waves_dispatched, 1, "{dispatch:?}");
+        }
+    }
+
+    /// A ~36-candidate wave (wide enough that every knob combination
+    /// below really pipelines) plus its serial oracle scores.
+    fn pipeline_wave() -> (Workflow, Vec<Server>, Vec<Allocation>, GridSpec, Vec<Score>) {
+        let (wf, servers) = fig6();
+        let model = ResponseModel::Mm1;
+        let mut wave: Vec<Allocation> = Vec::new();
+        let mut assign: Vec<usize> = (0..6).collect();
+        for _ in 0..6 {
+            assign.rotate_left(1);
+            if let Ok(a) = crate::sched::schedule_rates(&wf, assign.clone(), &servers, model) {
+                wave.push(a);
+            }
+            for i in 0..5 {
+                let mut swapped = assign.clone();
+                swapped.swap(i, i + 1);
+                if let Ok(a) = crate::sched::schedule_rates(&wf, swapped, &servers, model) {
+                    wave.push(a);
+                }
+            }
+        }
+        assert!(wave.len() >= 2 * ShardedBackend::MIN_PARALLEL_WAVE);
+        let grid = GridSpec::auto_response(&wave[0], &servers, model);
+        let serial = AnalyticBackend.score_batch(&wf, &wave, &servers, &grid, model);
+        (wf, servers, wave, grid, serial)
+    }
+
+    #[test]
+    fn async_batch_matches_serial_bits() {
+        // quick in-module check; the full knob matrix lives in
+        // tests/serve_equivalence.rs
+        let (wf, servers, wave, grid, serial) = pipeline_wave();
+        let model = ResponseModel::Mm1;
+        let b = AsyncScoreBackend::new(&AnalyticBackend, 3)
+            .in_flight(2)
+            .chunking(ChunkPolicy::Fixed(4));
+        let got = b.score_batch(&wf, &wave, &servers, &grid, model);
+        assert_eq!(got.len(), serial.len());
+        for (g, s) in got.iter().zip(serial.iter()) {
+            assert_eq!(g.mean.to_bits(), s.mean.to_bits());
+            assert_eq!(g.var.to_bits(), s.var.to_bits());
+            assert_eq!(g.p99.to_bits(), s.p99.to_bits());
+            assert_eq!(g.pdf, s.pdf);
+        }
+        // the fabric really saw the wave, within the in-flight bound
+        let st = b.fabric_stats().expect("async always reports");
+        assert_eq!(st.workers, 3);
+        assert_eq!(st.waves_dispatched, 1);
+        assert!(st.chunks_dispatched >= 2);
+        assert!(b.peak_in_flight() >= 1);
+        assert!(b.peak_in_flight() <= 2, "peak {}", b.peak_in_flight());
+    }
+
+    #[test]
+    fn async_stream_overlaps_enumeration_bit_identically() {
+        // candidates delivered one at a time from a live iterator:
+        // order and bits must match the serial batch over the same
+        // enumeration, whatever the granule
+        let (wf, servers, wave, grid, serial) = pipeline_wave();
+        let model = ResponseModel::Mm1;
+        for chunking in [ChunkPolicy::Even, ChunkPolicy::Fixed(1), ChunkPolicy::Fixed(5)] {
+            let b = AsyncScoreBackend::new(&AnalyticBackend, 2)
+                .in_flight(3)
+                .chunking(chunking);
+            let got = b.score_stream(&wf, wave.iter().cloned(), &servers, &grid, model);
+            assert_eq!(got.len(), serial.len(), "{chunking:?}");
+            for (g, s) in got.iter().zip(serial.iter()) {
+                assert_eq!(g.mean.to_bits(), s.mean.to_bits(), "{chunking:?}");
+                assert_eq!(g.pdf, s.pdf);
+            }
+            assert!(b.peak_in_flight() <= 3);
+        }
+        // an empty stream is fine and yields an empty wave
+        let b = AsyncScoreBackend::new(&AnalyticBackend, 2);
+        let got = b.score_stream(&wf, std::iter::empty(), &servers, &grid, model);
+        assert!(got.is_empty());
+    }
+
+    #[test]
+    fn async_inline_and_clamp_rules_match_sharded() {
+        let (wf, servers, wave, grid, _) = pipeline_wave();
+        let model = ResponseModel::Mm1;
+        // narrow waves stay inline
+        let b = AsyncScoreBackend::new(&AnalyticBackend, 3);
+        let small = &wave[..ShardedBackend::MIN_PARALLEL_WAVE - 1];
+        b.score_batch(&wf, small, &servers, &grid, model);
+        let st = b.fabric_stats().unwrap();
+        assert_eq!(st.waves_inline, 1);
+        assert_eq!(st.waves_dispatched, 0);
+        // degenerate knobs clamp instead of panicking
+        assert_eq!(AsyncScoreBackend::new(&AnalyticBackend, 0).shards(), 1);
+        assert_eq!(
+            AsyncScoreBackend::new(&AnalyticBackend, 2).in_flight(0).in_flight_depth(),
+            1
+        );
+    }
+
+    #[test]
+    fn async_handles_unstable_candidates() {
+        // unstable rows keep their position and their infinite sentinel
+        // through the pipelined path
+        let wf = Workflow::tandem(1, 5.0);
+        let servers = Server::pool_exponential(&[20.0, 2.0]); // server 1 overloads at λ=5
+        let grid = GridSpec::new(0.01, 1024);
+        let ok_alloc = Allocation::new(vec![0], vec![5.0], &wf, 2).unwrap();
+        let bad = Allocation::new(vec![1], vec![5.0], &wf, 2).unwrap();
+        let wave: Vec<Allocation> = (0..12)
+            .map(|i| if i % 3 == 0 { ok_alloc.clone() } else { bad.clone() })
+            .collect();
+        let b = AsyncScoreBackend::new(&AnalyticBackend, 3).chunking(ChunkPolicy::Fixed(2));
+        let got = b.score_batch(&wf, &wave, &servers, &grid, ResponseModel::Mm1);
+        assert_eq!(got.len(), 12);
+        for (i, s) in got.iter().enumerate() {
+            if i % 3 == 0 {
+                assert!(s.is_stable(), "row {i}");
+            } else {
+                assert!(!s.is_stable(), "row {i}");
+                assert_eq!(s.mean, f64::INFINITY);
+            }
         }
     }
 

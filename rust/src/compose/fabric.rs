@@ -160,8 +160,11 @@ struct Shared {
 /// wave of chunk indices across them and blocks until the wave
 /// completed; dropping the pool signals shutdown and joins every
 /// worker. The pool is `Sync`: concurrent `dispatch` calls interleave
-/// safely (each wave has its own latch), though the intended use — one
-/// planner loop per pool — dispatches sequentially.
+/// safely (each wave has its own latch) — the property
+/// [`AsyncScoreBackend`](super::backend::AsyncScoreBackend) builds on
+/// to keep several chunks in flight while candidates are still being
+/// enumerated. [`ShardedBackend`](super::backend::ShardedBackend)
+/// dispatches sequentially, one wave at a time.
 pub struct ScoringPool {
     shared: Arc<Shared>,
     workers: Vec<JoinHandle<()>>,

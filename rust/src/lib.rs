@@ -42,7 +42,12 @@
 //!   coordinator run records a versioned JSONL [`scenario::ExecTrace`]
 //!   that [`scenario::Replay`] feeds back through the live stack
 //!   bit-identically, with a committed golden-result corpus per
-//!   [`scenario::ScenarioSpec`] workload class.
+//!   [`scenario::ScenarioSpec`] workload class;
+//! * [`serve`] — the live re-planning service: a [`serve::Service`]
+//!   event loop that ingests arrivals, churn and drift verdicts,
+//!   re-plans under admission control through the pipelining
+//!   [`compose::backend::AsyncScoreBackend`], and records every
+//!   decision as a replayable [`scenario`] trace.
 //!
 //! A module-by-module map with the Planner/Policy/ScoreBackend seams and
 //! a paper cross-reference lives in `docs/ARCHITECTURE.md`; migration
@@ -106,6 +111,7 @@ pub mod runtime;
 pub mod scenario;
 #[deny(clippy::perf)]
 pub mod sched;
+pub mod serve;
 pub mod sim;
 pub mod util;
 
@@ -114,7 +120,8 @@ pub mod util;
 /// backends, capacity planning and the monitoring loop end to end.
 pub mod prelude {
     pub use crate::compose::backend::{
-        AnalyticBackend, ChunkPolicy, Dispatch, EmpiricalBackend, ScoreBackend, ShardedBackend,
+        AnalyticBackend, AsyncScoreBackend, ChunkPolicy, Dispatch, EmpiricalBackend,
+        ScoreBackend, ShardedBackend,
     };
     pub use crate::compose::fabric::{FabricStats, ScoringPool};
     pub use crate::compose::grid::GridSpec;
@@ -145,5 +152,6 @@ pub mod prelude {
     };
     pub use crate::sched::server::Server;
     pub use crate::sched::{Allocation, Objective, ResponseModel, SchedError, SplitPolicy};
+    pub use crate::serve::{AdmissionStats, ServeConfig, ServeReport, Service};
     pub use crate::sim::network::{simulate, SimConfig, SimResult};
 }

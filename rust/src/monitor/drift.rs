@@ -19,8 +19,12 @@ pub struct DriftReport {
 }
 
 /// Detect drift within a window of samples (chronological order).
-/// Returns None when fewer than `2 * min_half` samples are available.
+/// Returns None when fewer than `2 * min_half` samples are available;
+/// `min_half` values `< 1` are treated as 1 (a zero would accept
+/// windows too small to split into two non-empty halves — an empty
+/// reference half and an infinite/NaN threshold).
 pub fn detect_drift(samples: &[f64], min_half: usize) -> Option<DriftReport> {
+    let min_half = min_half.max(1);
     let n = samples.len();
     if n < 2 * min_half {
         return None;
@@ -94,6 +98,23 @@ mod tests {
     fn needs_enough_samples() {
         assert!(detect_drift(&[1.0; 50], 100).is_none());
         assert!(detect_drift(&[1.0; 199], 100).is_none());
+    }
+
+    #[test]
+    fn zero_min_half_is_clamped_not_degenerate() {
+        // regression: min_half == 0 used to pass the size guard on any
+        // window, slicing an empty reference half (mid == 0 for n == 1)
+        // and producing an infinite/NaN threshold
+        assert!(detect_drift(&[], 0).is_none());
+        assert!(detect_drift(&[1.0], 0).is_none());
+        // two samples is the smallest window the clamp admits, and its
+        // verdict must be finite and well-formed
+        let r = detect_drift(&[1.0, 2.0], 0).expect("clamped to min_half = 1");
+        assert!(r.ks.is_finite());
+        assert!(r.threshold.is_finite() && r.threshold > 0.0);
+        // clamped call agrees with the explicit min_half = 1 call
+        let explicit = detect_drift(&[1.0, 2.0], 1).unwrap();
+        assert_eq!(r, explicit);
     }
 
     #[test]

@@ -42,7 +42,10 @@
 //! injection ([`Planner::backend`]), or any custom implementation. Wrap
 //! any of them in a
 //! [`ShardedBackend`](crate::compose::backend::ShardedBackend) to fan
-//! candidate waves across worker threads with bit-identical results:
+//! candidate waves across worker threads — or in an
+//! [`AsyncScoreBackend`](crate::compose::backend::AsyncScoreBackend) to
+//! pipeline chunks through the scoring fabric with a bounded in-flight
+//! depth — with bit-identical results either way:
 //!
 //! ```
 //! use dcflow::prelude::*;
@@ -70,7 +73,8 @@
 pub mod policy;
 
 pub use crate::compose::backend::{
-    AnalyticBackend, ChunkPolicy, Dispatch, EmpiricalBackend, ScoreBackend, ShardedBackend,
+    AnalyticBackend, AsyncScoreBackend, ChunkPolicy, Dispatch, EmpiricalBackend, ScoreBackend,
+    ShardedBackend,
 };
 pub use crate::compose::fabric::{FabricStats, ScoringPool};
 pub use crate::runtime::scorer::RuntimeBackend;

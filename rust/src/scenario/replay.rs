@@ -28,6 +28,13 @@ use crate::sim::trace::Trace;
 /// sequence numbers and running Algorithm 3's re-optimization cadence.
 /// This mirrors `Coordinator::run_job` exactly (same dispatch, same
 /// monitor feed, same swap rule) plus the churn hooks.
+///
+/// `serve::Service::run` mirrors this loop in turn (admission control
+/// layered on the optimization re-plans): under a transparent
+/// [`crate::serve::ServeConfig`] a service run records the *same* trace
+/// this loop would — which is what lets serve soak traces replay here
+/// bit-identically (`tests/scenario_golden.rs`). Changes to this loop
+/// must be reflected there.
 pub(crate) fn drive(
     coord: &mut Coordinator,
     job: &Job,

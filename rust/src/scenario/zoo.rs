@@ -199,6 +199,24 @@ impl ScenarioSpec {
         Self::zoo().into_iter().find(|s| s.name == name)
     }
 
+    /// The short soak scenario the live re-planning service
+    /// ([`crate::serve`]) is goldened against: worker-churn machinery
+    /// (the class with the richest event stream — joins, leaves, a
+    /// compressed arrival burst, periodic re-opt checks) under its own
+    /// name and seed, deliberately **not** part of [`ScenarioSpec::zoo`]
+    /// — the zoo stays exactly one entry per class; this spec rides the
+    /// same golden machinery via its distinct corpus file stem.
+    pub fn serve_soak_short() -> ScenarioSpec {
+        ScenarioSpec {
+            name: "serve_soak_short".into(),
+            class: ScenarioClass::WorkerChurn,
+            seed: 0x50AC,
+            n_tasks: 240,
+            arrival: ArrivalProcess::Poisson { rate: 1.0 },
+            swap_engine: SwapEngine::Wave,
+        }
+    }
+
     /// Same scenario, different seed (property tests sweep this).
     pub fn with_seed(mut self, seed: u64) -> ScenarioSpec {
         self.seed = seed;

@@ -1,0 +1,554 @@
+//! The live re-planning service: a [`Coordinator`] event loop that
+//! re-plans continuously under admission control.
+//!
+//! The paper's argument (and *Runtime Variation in Big Data Analytics*,
+//! PAPERS.md) is that a plan computed once is stale by the time it
+//! executes — straggler tails drift, workers join and leave, load
+//! shifts. [`Service`] turns the one-shot planner plus the passive
+//! coordinator into a living loop:
+//!
+//! ```text
+//!                   clocked event stream
+//!   arrivals ───┐  churn (join/leave) ──┐  drift verdicts ──┐
+//!               ▼                       ▼                   ▼
+//!        ┌─────────────────────────────────────────────────────┐
+//!        │                 Service event loop                  │
+//!        │  dispatch task → feed monitors → completion metrics │
+//!        │        │                                            │
+//!        │        ▼ re-plan wanted? (churn / drift / periodic) │
+//!        │  ┌───────────────── admission ─────────────────┐    │
+//!        │  │ in-flight ≤ cap?  debounce elapsed?  forced? │    │
+//!        │  └───────┬──────────────────────────┬──────────┘    │
+//!        │    admitted                      shed (counted)     │
+//!        │        ▼                                            │
+//!        │  Planner::allocate through AsyncScoreBackend        │
+//!        │  (chunks pipelined on the scoring fabric)           │
+//!        │        ▼                                            │
+//!        │  swap allocation if it changed (obs + trace event)  │
+//!        └─────────────────────────────────────────────────────┘
+//! ```
+//!
+//! The loop mirrors the capture/replay driver of [`crate::scenario`]
+//! **exactly** (same dispatch recursion, same monitor feed, same
+//! re-optimization rule), so a run recorded through
+//! [`Service::start_recording`] replays bit-identically through
+//! [`crate::scenario::Replay`] — the soak tests and the golden corpus
+//! build on that. Re-planning goes through an [`AsyncScoreBackend`]
+//! wrapping the planner's default analytic backend; because the async
+//! adapter is bit-identical to its inner backend, the service's plans
+//! are bit-identical to [`Coordinator`]'s own, pipelining included.
+//!
+//! ## Admission control
+//!
+//! Re-plan triggers are classified:
+//!
+//! * **forced** (membership churn) — the old allocation may reference a
+//!   departed server, so these always run; shedding them would be a
+//!   correctness bug, and they do not occupy planner capacity;
+//! * **optimization** (drift verdicts, periodic checks) — subject to
+//!   the in-flight cap ([`ServeConfig::max_inflight`], each admitted
+//!   re-plan holds a slot for [`ServeConfig::replan_hold`] completions)
+//!   and the debounce window ([`ServeConfig::debounce`] completions
+//!   since the last admitted re-plan). Shed requests are counted, never
+//!   silently dropped: `offered == admitted + shed` always holds
+//!   (pinned in `tests/serve_soak.rs`).
+//!
+//! The default [`ServeConfig`] is *transparent* (cap 1, no debounce, no
+//! hold): every optimization re-plan is admitted and the service's
+//! decision sequence equals the plain capture/replay driver's — which
+//! is exactly what makes its traces replayable. Restrictive settings
+//! trade re-plan freshness for planner load, deterministically.
+//!
+//! Every decision is observable: `serve.replan` / `serve.shed` instant
+//! events, a `serve.run` span around the loop, and counters published
+//! into the [`crate::obs`] registry when tracing is enabled.
+
+use std::collections::VecDeque;
+
+use crate::compose::backend::{AnalyticBackend, AsyncScoreBackend, ScoreBackend};
+use crate::coordinator::{
+    Coordinator, CoordinatorConfig, Job, Metrics, Policy, RunReport, Task, WorkerSpec,
+};
+use crate::flow::Workflow;
+use crate::plan::{BaselinePolicy, OptimalPolicy, Planner, ProposedPolicy};
+use crate::scenario::record::ExecTrace;
+use crate::scenario::zoo::{ChurnAction, ChurnOp, ScenarioSpec};
+use crate::sched::server::Server;
+use crate::sched::{Allocation, SchedError};
+use crate::sim::trace::Trace;
+
+/// Admission-control and scoring knobs for a [`Service`].
+///
+/// The default is transparent: every optimization re-plan is admitted,
+/// so the service's decision sequence is identical to the plain
+/// capture/replay driver's (see the [module docs](self)).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ServeConfig {
+    /// Maximum optimization re-plans concurrently holding a planner
+    /// slot (values `< 1` are treated as 1). Offers beyond the cap are
+    /// shed and counted.
+    pub max_inflight: usize,
+    /// Minimum completions between two *admitted* optimization
+    /// re-plans; offers inside the window are shed (0 = no debounce).
+    pub debounce: u64,
+    /// Completions an admitted re-plan occupies its planner slot for
+    /// (0 = released immediately — the transparent default).
+    pub replan_hold: u64,
+    /// Fabric workers behind the [`AsyncScoreBackend`] the service
+    /// plans through.
+    pub shards: usize,
+    /// In-flight chunk depth of that backend (its pipelining bound).
+    pub wave_depth: usize,
+}
+
+impl Default for ServeConfig {
+    fn default() -> Self {
+        ServeConfig {
+            max_inflight: 1,
+            debounce: 0,
+            replan_hold: 0,
+            shards: 2,
+            wave_depth: 2,
+        }
+    }
+}
+
+/// What the admission controller did over one [`Service::run`].
+///
+/// Invariants (pinned in `tests/serve_soak.rs`): `offered == admitted +
+/// shed`, `shed == shed_inflight + shed_debounce`, and `peak_inflight
+/// <= max_inflight`.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct AdmissionStats {
+    /// Re-plan opportunities presented to the controller (forced churn
+    /// re-plans included).
+    pub offered: u64,
+    /// Offers that ran the planner (forced re-plans included).
+    pub admitted: u64,
+    /// Offers rejected by admission control.
+    pub shed: u64,
+    /// Shed because the in-flight cap was reached.
+    pub shed_inflight: u64,
+    /// Shed because the debounce window had not elapsed.
+    pub shed_debounce: u64,
+    /// Forced (churn) re-plans inside `admitted` — never shed.
+    pub forced: u64,
+    /// High-water mark of concurrently held planner slots.
+    pub peak_inflight: usize,
+    /// Admitted re-plans whose new allocation differed and was swapped
+    /// in.
+    pub swaps_applied: u64,
+}
+
+/// Outcome of one [`Service::run`]: the coordinator-level run report
+/// plus the service-level decision record.
+#[derive(Debug)]
+pub struct ServeReport {
+    /// Metrics, final allocation and swap log — same shape as a plain
+    /// coordinator run, bit-comparable via
+    /// [`crate::scenario::reports_identical`].
+    pub run: RunReport,
+    /// Admission-control counters.
+    pub admission: AdmissionStats,
+    /// Wall-clock seconds of every planner invocation — the initial
+    /// plan followed by each admitted re-plan, in order — i.e. the
+    /// latency of the *service* itself, reported by the soak harness.
+    /// Timings are real time and therefore not deterministic; every
+    /// *decision* in `run`/`admission` is.
+    pub replan_secs: Vec<f64>,
+}
+
+/// The admission controller: a bounded window of held planner slots
+/// plus the shed/admit counters.
+struct Admission {
+    cfg: ServeConfig,
+    /// Completion counts at which each held slot expires.
+    held: VecDeque<u64>,
+    /// Completion count of the last admitted optimization re-plan.
+    last_admitted: Option<u64>,
+    stats: AdmissionStats,
+}
+
+impl Admission {
+    fn new(cfg: ServeConfig) -> Admission {
+        Admission {
+            cfg,
+            held: VecDeque::new(),
+            last_admitted: None,
+            stats: AdmissionStats::default(),
+        }
+    }
+
+    /// Present one re-plan opportunity; returns whether to run the
+    /// planner. Forced offers (churn) always pass and never occupy a
+    /// slot — see the [module docs](self).
+    fn offer(&mut self, completed: u64, forced: bool, reason: &str) -> bool {
+        while self.held.front().is_some_and(|&e| e <= completed) {
+            self.held.pop_front();
+        }
+        self.stats.offered += 1;
+        if forced {
+            self.stats.admitted += 1;
+            self.stats.forced += 1;
+            return true;
+        }
+        if self.held.len() >= self.cfg.max_inflight.max(1) {
+            self.stats.shed += 1;
+            self.stats.shed_inflight += 1;
+            self.shed_event(completed, reason, "inflight");
+            return false;
+        }
+        if let Some(last) = self.last_admitted {
+            if self.cfg.debounce > 0 && completed < last + self.cfg.debounce {
+                self.stats.shed += 1;
+                self.stats.shed_debounce += 1;
+                self.shed_event(completed, reason, "debounce");
+                return false;
+            }
+        }
+        self.stats.admitted += 1;
+        self.last_admitted = Some(completed);
+        self.held.push_back(completed + self.cfg.replan_hold);
+        self.stats.peak_inflight = self.stats.peak_inflight.max(self.held.len());
+        true
+    }
+
+    fn shed_event(&self, completed: u64, reason: &str, why: &str) {
+        if crate::obs::enabled() {
+            crate::obs::event(
+                "serve.shed",
+                vec![
+                    ("reason".to_string(), reason.into()),
+                    ("why".to_string(), why.into()),
+                    ("completed".to_string(), completed.into()),
+                ],
+            );
+        }
+    }
+}
+
+/// The live re-planning service: owns a [`Coordinator`] and drives it
+/// over a clocked event stream, re-planning through an
+/// [`AsyncScoreBackend`] under admission control (see the
+/// [module docs](self)).
+pub struct Service {
+    coord: Coordinator,
+    cfg: ServeConfig,
+}
+
+impl Service {
+    /// Service over a freshly spawned coordinator (one worker per
+    /// spec; `initial_view` is the leader's prior belief).
+    pub fn new(
+        specs: Vec<WorkerSpec>,
+        initial_view: Vec<Server>,
+        coord_cfg: CoordinatorConfig,
+        cfg: ServeConfig,
+    ) -> Service {
+        Service {
+            coord: Coordinator::new(specs, initial_view, coord_cfg),
+            cfg,
+        }
+    }
+
+    /// Service over a workload-zoo scenario's live cluster (same
+    /// workers, view and coordinator config as
+    /// [`ScenarioSpec::capture`] uses).
+    pub fn from_spec(spec: &ScenarioSpec, cfg: ServeConfig) -> Service {
+        Service::new(
+            spec.live_worker_specs(),
+            spec.initial_view(),
+            spec.config(),
+            cfg,
+        )
+    }
+
+    /// One-call soak entry point: run `spec`'s full event stream
+    /// (arrivals + churn) through a recording service and return the
+    /// report plus the captured [`ExecTrace`]. Under the transparent
+    /// default [`ServeConfig`] the trace is byte-identical to
+    /// [`ScenarioSpec::capture`]'s and replays through
+    /// [`crate::scenario::Replay`].
+    pub fn run_spec(
+        spec: &ScenarioSpec,
+        cfg: ServeConfig,
+    ) -> Result<(ServeReport, ExecTrace), SchedError> {
+        let mut service = Service::from_spec(spec, cfg);
+        service.start_recording(&spec.name);
+        let job = service.submit(&spec.name, spec.workflow());
+        let arrivals = spec.arrival_trace();
+        let churn = spec.churn_actions(None);
+        let report = service.run(&job, &arrivals, &churn)?;
+        let trace = service.take_trace().expect("recording was started");
+        service.shutdown();
+        Ok((report, trace))
+    }
+
+    /// Admission/scoring configuration in force.
+    pub fn serve_config(&self) -> ServeConfig {
+        self.cfg
+    }
+
+    /// The owned coordinator's believed pool.
+    pub fn pool_view(&self) -> &[Server] {
+        self.coord.pool_view()
+    }
+
+    /// Begin capturing an execution trace (see
+    /// [`Coordinator::start_recording`]).
+    pub fn start_recording(&mut self, scenario: &str) {
+        self.coord.start_recording(scenario);
+    }
+
+    /// Finish recording and take the trace, if recording was started.
+    pub fn take_trace(&mut self) -> Option<ExecTrace> {
+        self.coord.take_trace()
+    }
+
+    /// Register a job with the owned coordinator.
+    pub fn submit(&mut self, name: &str, workflow: Workflow) -> Job {
+        self.coord.submit(name, workflow)
+    }
+
+    /// Shut the owned coordinator down; returns per-worker task counts.
+    pub fn shutdown(self) -> Vec<u64> {
+        self.coord.shutdown()
+    }
+
+    /// Drive `job` over the clocked event stream: `arrivals` paces
+    /// task dispatch, `churn` injects membership events at their task
+    /// sequence numbers, and the coordinator's monitors supply drift
+    /// verdicts — the re-optimization rule, dispatch recursion and
+    /// monitor feed are exactly the capture/replay driver's, with
+    /// admission control layered on the optimization re-plans (see the
+    /// [module docs](self)).
+    pub fn run(
+        &mut self,
+        job: &Job,
+        arrivals: &Trace,
+        churn: &[ChurnAction],
+    ) -> Result<ServeReport, SchedError> {
+        let cfg = self.coord.config();
+        let backend = AsyncScoreBackend::new(&AnalyticBackend, self.cfg.shards)
+            .in_flight(self.cfg.wave_depth);
+        let mut run_span = crate::obs::span("serve.run");
+        if run_span.is_recording() {
+            run_span.attr("tasks", arrivals.arrivals.len());
+            run_span.attr("servers", self.coord.workers_len());
+            run_span.attr("max_inflight", self.cfg.max_inflight);
+            run_span.attr("debounce", self.cfg.debounce);
+        }
+        let mut admission = Admission::new(self.cfg);
+        let mut replan_secs: Vec<f64> = Vec::new();
+        let mut alloc = Self::plan(&self.coord, job, &backend, &mut replan_secs)?;
+        let mut metrics = Metrics::new(self.coord.workers_len());
+        let mut swaps: Vec<(u64, String)> = Vec::new();
+        let mut next_free = vec![0.0f64; self.coord.workers_len()];
+        let mut ci = 0usize;
+
+        for (seq, &arrival) in arrivals.arrivals.iter().enumerate() {
+            let mut membership_changed = false;
+            while ci < churn.len() && churn[ci].at_seq <= seq as u64 {
+                match &churn[ci].op {
+                    ChurnOp::Join { spec, prior } => {
+                        self.coord.add_worker(spec.clone(), prior.clone());
+                        next_free.push(0.0);
+                        metrics.ensure_servers(self.coord.workers_len());
+                    }
+                    ChurnOp::Leave => {
+                        self.coord.remove_last_worker();
+                        next_free.pop();
+                    }
+                }
+                membership_changed = true;
+                ci += 1;
+            }
+            if membership_changed {
+                // the old allocation may reference a departed server or
+                // ignore a joined one: this re-plan is forced — shedding
+                // it would leave a dangling assignment
+                admission.offer(metrics.completed, true, "churn");
+                let new_alloc = Self::plan(&self.coord, job, &backend, &mut replan_secs)?;
+                Self::apply(
+                    &mut self.coord,
+                    &mut alloc,
+                    new_alloc,
+                    &mut metrics,
+                    &mut swaps,
+                    &mut admission.stats,
+                    "churn",
+                );
+            }
+
+            let task = Task {
+                job_id: job.id,
+                seq: seq as u64,
+                arrival,
+            };
+            self.coord.record_arrival(seq as u64, arrival);
+            let finish = self.coord.dispatch(
+                job.workflow.root(),
+                &alloc,
+                arrival,
+                1.0,
+                &mut next_free,
+                &mut metrics,
+            );
+            metrics.record_completion(finish - task.arrival, finish);
+
+            // Algorithm 3's periodic re-optimization cadence, gated by
+            // the admission controller
+            if cfg.reopt_every > 0 && metrics.completed % cfg.reopt_every == 0 {
+                let drifted = self.coord.monitors().any_drifted(cfg.min_fit_samples / 2);
+                if drifted || !cfg.reopt_on_drift_only {
+                    let reason = if drifted { "drift" } else { "periodic" };
+                    if admission.offer(metrics.completed, false, reason) {
+                        self.coord.refresh_pool_view();
+                        if let Ok(new_alloc) =
+                            Self::plan(&self.coord, job, &backend, &mut replan_secs)
+                        {
+                            Self::apply(
+                                &mut self.coord,
+                                &mut alloc,
+                                new_alloc,
+                                &mut metrics,
+                                &mut swaps,
+                                &mut admission.stats,
+                                reason,
+                            );
+                        }
+                    }
+                }
+            }
+        }
+
+        if crate::obs::enabled() {
+            let st = &admission.stats;
+            run_span.attr("offered", st.offered);
+            run_span.attr("shed", st.shed);
+            let reg = crate::obs::registry();
+            reg.counter("serve.replans_offered").add(st.offered);
+            reg.counter("serve.replans_admitted").add(st.admitted);
+            reg.counter("serve.replans_shed").add(st.shed);
+            reg.counter("serve.swaps_applied").add(st.swaps_applied);
+            metrics.publish(reg);
+        }
+        Ok(ServeReport {
+            run: RunReport {
+                metrics,
+                final_allocation: alloc,
+                swaps,
+            },
+            admission: admission.stats,
+            replan_secs,
+        })
+    }
+
+    /// One planner invocation through the async backend — the same
+    /// planner construction as [`Coordinator`]'s own allocator, so the
+    /// result is bit-identical to it (the async adapter is bit-identical
+    /// to the analytic backend it wraps). Wall time is appended to
+    /// `timings`.
+    fn plan(
+        coord: &Coordinator,
+        job: &Job,
+        backend: &AsyncScoreBackend<'_>,
+        timings: &mut Vec<f64>,
+    ) -> Result<Allocation, SchedError> {
+        let cfg = coord.config();
+        let mut span = crate::obs::span("serve.replan");
+        if span.is_recording() {
+            span.attr("backend", backend.name());
+        }
+        let started = std::time::Instant::now();
+        let planner = Planner::new(&job.workflow, coord.pool_view())
+            .model(cfg.model)
+            .objective(cfg.objective)
+            .backend(backend);
+        let out = match cfg.policy {
+            Policy::Proposed => planner.allocate(&ProposedPolicy::default()),
+            Policy::Baseline => planner.allocate(&BaselinePolicy::default()),
+            Policy::Optimal => planner.allocate(&OptimalPolicy),
+        };
+        timings.push(started.elapsed().as_secs_f64());
+        out
+    }
+
+    /// Swap `new_alloc` in if it differs from the one in force,
+    /// recording the re-optimization everywhere a coordinator run
+    /// would (metrics, trace recorder, swap log) plus the service's
+    /// own counters and instant event.
+    #[allow(clippy::too_many_arguments)]
+    fn apply(
+        coord: &mut Coordinator,
+        alloc: &mut Allocation,
+        new_alloc: Allocation,
+        metrics: &mut Metrics,
+        swaps: &mut Vec<(u64, String)>,
+        stats: &mut AdmissionStats,
+        reason: &str,
+    ) {
+        if new_alloc == *alloc {
+            return;
+        }
+        *alloc = new_alloc;
+        metrics.record_reopt();
+        coord.record_reopt(metrics.completed, reason);
+        swaps.push((metrics.completed, reason.to_string()));
+        stats.swaps_applied += 1;
+        if crate::obs::enabled() {
+            crate::obs::event(
+                "serve.replan",
+                vec![
+                    ("reason".to_string(), reason.into()),
+                    ("completed".to_string(), metrics.completed.into()),
+                ],
+            );
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::scenario::reports_identical;
+
+    #[test]
+    fn transparent_service_equals_capture() {
+        // the keystone: under the transparent default config the
+        // service's decisions are the capture/replay driver's, bit for
+        // bit — trace and report alike
+        let spec = ScenarioSpec::serve_soak_short().with_tasks(120);
+        let (captured_report, captured_trace) = spec.capture().expect("capture runs");
+        let (served, served_trace) =
+            Service::run_spec(&spec, ServeConfig::default()).expect("service runs");
+        assert!(reports_identical(&captured_report, &served.run));
+        assert_eq!(captured_trace, served_trace);
+        assert_eq!(served_trace.to_jsonl(), captured_trace.to_jsonl());
+        // transparent admission: nothing shed, invariants hold
+        let st = served.admission;
+        assert_eq!(st.shed, 0);
+        assert_eq!(st.offered, st.admitted + st.shed);
+        // planner invocations: the initial plan + every admitted offer
+        assert_eq!(st.admitted as usize + 1, served.replan_secs.len());
+        assert!(st.peak_inflight <= 1);
+    }
+
+    #[test]
+    fn forced_churn_replans_survive_zero_capacity() {
+        // a config that sheds every optimization re-plan must still
+        // re-plan on membership churn (correctness, not optimization)
+        let spec = ScenarioSpec::serve_soak_short().with_tasks(120);
+        let cfg = ServeConfig {
+            debounce: u64::MAX,
+            ..ServeConfig::default()
+        };
+        let (report, _) = Service::run_spec(&spec, cfg).expect("service runs");
+        let st = report.admission;
+        assert_eq!(st.offered, st.admitted + st.shed);
+        assert_eq!(st.admitted, st.forced, "only forced re-plans admitted");
+        assert!(st.forced >= 1, "churn scenario must force re-plans");
+        // every swap in the log is a churn swap
+        assert!(report.run.swaps.iter().all(|(_, r)| r == "churn"));
+    }
+}

@@ -77,8 +77,20 @@ impl SimResult {
     }
 
     /// Empirical CDF of the samples evaluated at `t`.
+    ///
+    /// Edge behavior is pinned: queries below the first sample return
+    /// exactly `0.0`, queries at or above the last sample exactly
+    /// `1.0`, and an empty sample set is `0.0` everywhere (it used to
+    /// divide `0/0` into NaN). `NaN` queries sort below every sample
+    /// and yield `0.0`.
     pub fn cdf_at(&self, t: f64) -> f64 {
         let idx = self.samples.partition_point(|&x| x <= t);
+        if idx == 0 {
+            return 0.0; // empty set, below-first query, or NaN query
+        }
+        if idx == self.samples.len() {
+            return 1.0;
+        }
         idx as f64 / self.samples.len() as f64
     }
 }
@@ -256,5 +268,37 @@ mod tests {
         let r2 = simulate_serial_iid(2.0, 5, &cfg(10_000));
         assert_eq!(r1.mean, r2.mean);
         assert_eq!(r1.samples, r2.samples);
+    }
+
+    #[test]
+    fn cdf_edges_are_exact() {
+        // regression: queries outside the sample range must hit the
+        // exact 0.0 / 1.0 bounds, not whatever idx/n rounds to
+        let r = SimResult::from_samples(vec![3.0, 5.0, 2.0]);
+        assert_eq!(r.samples, vec![2.0, 3.0, 5.0]); // sorted on entry
+        assert_eq!(r.cdf_at(1.9), 0.0);
+        assert_eq!(r.cdf_at(f64::NEG_INFINITY), 0.0);
+        assert_eq!(r.cdf_at(2.0), 1.0 / 3.0);
+        assert_eq!(r.cdf_at(4.0), 2.0 / 3.0);
+        assert_eq!(r.cdf_at(5.0), 1.0); // at the last sample
+        assert_eq!(r.cdf_at(100.0), 1.0); // above it
+        assert_eq!(r.cdf_at(f64::INFINITY), 1.0);
+        // NaN queries sort below every sample: CDF 0, never NaN
+        assert_eq!(r.cdf_at(f64::NAN), 0.0);
+    }
+
+    #[test]
+    fn cdf_of_empty_sample_set_is_zero_not_nan() {
+        // regression: the empty set used to divide 0/0 into NaN
+        let r = SimResult {
+            mean: 0.0,
+            var: 0.0,
+            p50: 0.0,
+            p99: 0.0,
+            samples: Vec::new(),
+        };
+        assert_eq!(r.cdf_at(0.0), 0.0);
+        assert_eq!(r.cdf_at(10.0), 0.0);
+        assert_eq!(r.cdf_at(f64::NEG_INFINITY), 0.0);
     }
 }

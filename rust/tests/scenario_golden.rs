@@ -8,7 +8,7 @@
 //! README there).
 
 use dcflow::coordinator::{Coordinator, CoordinatorConfig, RunReport};
-use dcflow::prelude::{Objective, Server, SwapEngine, Workflow};
+use dcflow::prelude::{Objective, ServeConfig, Server, Service, SwapEngine, Workflow};
 use dcflow::scenario::{
     check_or_bless, golden, reports_identical, ExecTrace, GoldenStatus, ScenarioClass,
     ScenarioSpec,
@@ -120,6 +120,73 @@ fn golden_traces_replay_identically_under_every_swap_engine() {
             );
         }
     }
+}
+
+#[test]
+fn serve_soak_golden_matches_or_blesses() {
+    // the live re-planning service rides the same golden machinery as
+    // the zoo: its short soak scenario gets a committed trace + summary
+    // under its own corpus file stem
+    let spec = ScenarioSpec::serve_soak_short();
+    match check_or_bless(&spec) {
+        Ok(GoldenStatus::Match) => {}
+        Ok(GoldenStatus::Blessed) => {
+            eprintln!(
+                "blessed new golden corpus entry for '{}' — commit rust/tests/golden/",
+                spec.name
+            );
+        }
+        Ok(GoldenStatus::Divergence(msg)) => panic!("golden divergence: {msg}"),
+        Err(e) => panic!("corpus check for '{}' errored: {e}", spec.name),
+    }
+}
+
+#[test]
+fn serve_soak_trace_replays_under_every_swap_engine_and_matches_the_service() {
+    // the committed soak trace is engine-invariant like every other
+    // golden trace, AND the live service itself (transparent admission)
+    // reproduces it bit for bit — closing the loop serve is built on:
+    // service run == capture/replay driver == committed corpus
+    let spec = ScenarioSpec::serve_soak_short();
+    let path = golden::corpus_dir().join(format!("{}.trace.jsonl", spec.name));
+    let Ok(text) = std::fs::read_to_string(&path) else {
+        // pre-bless tree: serve_soak_golden_matches_or_blesses creates
+        // the corpus; nothing to cross-check yet
+        return;
+    };
+    let trace = ExecTrace::from_jsonl(&text)
+        .unwrap_or_else(|e| panic!("{}: committed trace unreadable: {e}", spec.name));
+    let (base_report, base_trace) = spec
+        .replay(&trace)
+        .unwrap_or_else(|e| panic!("{}: baseline replay failed: {e}", spec.name));
+    for engine in [SwapEngine::Serial, SwapEngine::Incremental] {
+        let espec = spec.clone().with_swap_engine(engine);
+        let (report, recaptured) = espec
+            .replay(&trace)
+            .unwrap_or_else(|e| panic!("{}: {engine:?} replay failed: {e}", spec.name));
+        assert!(
+            reports_identical(&base_report, &report),
+            "{}: replay under {engine:?} diverges from the default engine",
+            spec.name
+        );
+        assert_eq!(
+            recaptured, base_trace,
+            "{}: re-captured trace under {engine:?} diverges",
+            spec.name
+        );
+    }
+    let (served, served_trace) =
+        Service::run_spec(&spec, ServeConfig::default()).expect("service runs");
+    assert_eq!(
+        served_trace, trace,
+        "{}: the live service no longer reproduces the committed soak trace",
+        spec.name
+    );
+    assert!(
+        reports_identical(&served.run, &base_report),
+        "{}: service run report diverges from the replayed corpus",
+        spec.name
+    );
 }
 
 #[test]

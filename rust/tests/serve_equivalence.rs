@@ -1,0 +1,197 @@
+//! Async-backend equivalence: [`AsyncScoreBackend`] pipelines chunks
+//! through the scoring fabric with a bounded in-flight depth, and every
+//! score it returns must be bit-identical to its inner synchronous
+//! backend — across shard counts, in-flight depths, chunk policies and
+//! randomized topologies, for both the batch entry point and the
+//! overlapping `score_stream` path. This is the property the live
+//! re-planning service (`serve::Service`) stands on: its plans equal
+//! the plain coordinator's because the async adapter never perturbs a
+//! bit.
+//!
+//! Property cases honor `DCFLOW_PROP_CASES` / `DCFLOW_PROP_SEED`.
+
+use dcflow::prelude::*;
+use dcflow::sched::schedule_rates;
+use dcflow::util::prop;
+
+/// Up to `n` distinct feasible candidates over `servers` (rotations +
+/// adjacent transpositions, bounded attempts so an infeasible draw can
+/// never loop forever). Requires `wf.slots() == servers.len()`.
+fn candidate_wave(
+    wf: &Workflow,
+    servers: &[Server],
+    model: ResponseModel,
+    n: usize,
+) -> Vec<Allocation> {
+    let mut wave = Vec::new();
+    let mut assign: Vec<usize> = (0..servers.len()).collect();
+    for _ in 0..2 * n {
+        if wave.len() >= n {
+            break;
+        }
+        assign.rotate_left(1);
+        if let Ok(a) = schedule_rates(wf, assign.clone(), servers, model) {
+            wave.push(a);
+        }
+        for i in 0..servers.len().saturating_sub(1) {
+            if wave.len() >= n {
+                break;
+            }
+            let mut swapped = assign.clone();
+            swapped.swap(i, i + 1);
+            if let Ok(a) = schedule_rates(wf, swapped, servers, model) {
+                wave.push(a);
+            }
+        }
+    }
+    wave.truncate(n);
+    wave
+}
+
+fn assert_scores_bit_identical(got: &[Score], want: &[Score], ctx: &str) {
+    assert_eq!(got.len(), want.len(), "{ctx}");
+    for (k, (g, w)) in got.iter().zip(want.iter()).enumerate() {
+        assert_eq!(g.mean.to_bits(), w.mean.to_bits(), "{ctx} row {k} mean");
+        assert_eq!(g.var.to_bits(), w.var.to_bits(), "{ctx} row {k} var");
+        assert_eq!(g.p99.to_bits(), w.p99.to_bits(), "{ctx} row {k} p99");
+        assert_eq!(g.mass.to_bits(), w.mass.to_bits(), "{ctx} row {k} mass");
+        assert_eq!(g.pdf.len(), w.pdf.len(), "{ctx} row {k} pdf len");
+        for (x, y) in g.pdf.iter().zip(w.pdf.iter()) {
+            assert_eq!(x.to_bits(), y.to_bits(), "{ctx} row {k} pdf");
+        }
+    }
+}
+
+#[test]
+fn async_backend_bit_identical_across_matrix_on_random_topologies() {
+    // the satellite property: for ANY feasible topology and wave, every
+    // shards x depth x chunking combination of the async adapter equals
+    // the inner analytic backend bit for bit — batch and stream alike
+    prop::run("AsyncScoreBackend == inner backend", 6, |g| {
+        let n_slots = g.usize_in(2, 5);
+        let wf = match g.usize_in(0, 2) {
+            0 => Workflow::tandem(n_slots, g.f64_in(0.3, 1.2)),
+            1 => Workflow::forkjoin(n_slots, g.f64_in(0.3, 1.2)),
+            _ => Workflow::new(
+                Dcc::serial(vec![
+                    Dcc::parallel((0..n_slots).map(|_| Dcc::queue()).collect()),
+                    Dcc::queue(),
+                ]),
+                g.f64_in(0.3, 1.2),
+            )
+            .unwrap(),
+        };
+        let rates: Vec<f64> = (0..wf.slots()).map(|_| g.f64_in(3.0, 20.0)).collect();
+        let servers = Server::pool_exponential(&rates);
+        let model = ResponseModel::Mm1;
+        let width = g.usize_in(9, 30);
+        let wave = candidate_wave(&wf, &servers, model, width);
+        if wave.is_empty() {
+            return; // infeasible draw
+        }
+        let grid = GridSpec::auto_response(&wave[0], &servers, model);
+        let serial = AnalyticBackend.score_batch(&wf, &wave, &servers, &grid, model);
+
+        for shards in [1usize, 2, 8] {
+            for depth in [1usize, 2, 16] {
+                for chunking in
+                    [ChunkPolicy::Even, ChunkPolicy::Fixed(1), ChunkPolicy::Fixed(5)]
+                {
+                    let ctx = format!("shards={shards} depth={depth} {chunking:?}");
+                    let backend = AsyncScoreBackend::new(&AnalyticBackend, shards)
+                        .in_flight(depth)
+                        .chunking(chunking);
+                    let got = backend.score_batch(&wf, &wave, &servers, &grid, model);
+                    assert_scores_bit_identical(&got, &serial, &format!("batch {ctx}"));
+                    let streamed = backend.score_stream(
+                        &wf,
+                        wave.iter().cloned(),
+                        &servers,
+                        &grid,
+                        model,
+                    );
+                    assert_scores_bit_identical(&streamed, &serial, &format!("stream {ctx}"));
+                    assert!(
+                        backend.peak_in_flight() <= depth,
+                        "{ctx}: pipelining exceeded its bound ({} > {depth})",
+                        backend.peak_in_flight()
+                    );
+                }
+            }
+        }
+    });
+}
+
+#[test]
+fn async_over_empirical_inner_matches_that_inner() {
+    // the adapter composes over any Sync inner backend, not just the
+    // analytic one: an empty empirical backend falls back to analytic
+    // laws, and async(empirical) must equal empirical bit for bit
+    let wf = Workflow::fig6();
+    let servers = Server::pool_exponential(&[9.0, 8.0, 7.0, 6.0, 5.0, 4.0]);
+    let model = ResponseModel::Mm1;
+    let wave = candidate_wave(&wf, &servers, model, 20);
+    assert!(wave.len() >= 16, "fig6 rotations are feasible");
+    let grid = GridSpec::auto_response(&wave[0], &servers, model);
+    let empirical = EmpiricalBackend::new();
+    let want = empirical.score_batch(&wf, &wave, &servers, &grid, model);
+    let backend = AsyncScoreBackend::new(&empirical, 3).in_flight(2);
+    assert_eq!(backend.name(), "async(empirical)x3");
+    let got = backend.score_batch(&wf, &wave, &servers, &grid, model);
+    assert_scores_bit_identical(&got, &want, "async(empirical)");
+}
+
+#[test]
+fn async_inline_rule_matches_sharded_inline_rule() {
+    // narrow waves stay inline on both adapters — same threshold, same
+    // single-thread scoring path, so identical counters and bits
+    let wf = Workflow::fig6();
+    let servers = Server::pool_exponential(&[9.0, 8.0, 7.0, 6.0, 5.0, 4.0]);
+    let model = ResponseModel::Mm1;
+    let wave = candidate_wave(&wf, &servers, model, ShardedBackend::MIN_PARALLEL_WAVE - 1);
+    let grid = GridSpec::auto_response(&wave[0], &servers, model);
+    let serial = AnalyticBackend.score_batch(&wf, &wave, &servers, &grid, model);
+    let sharded = ShardedBackend::new(&AnalyticBackend, 4);
+    let pipelined = AsyncScoreBackend::new(&AnalyticBackend, 4);
+    assert_eq!(pipelined.min_wave(), sharded.min_wave());
+    let s = sharded.score_batch(&wf, &wave, &servers, &grid, model);
+    let a = pipelined.score_batch(&wf, &wave, &servers, &grid, model);
+    assert_scores_bit_identical(&a, &s, "inline async vs sharded");
+    assert_scores_bit_identical(&a, &serial, "inline async vs serial");
+    let st = pipelined.fabric_stats().expect("async reports fabric stats");
+    assert_eq!(st.waves_inline, 1, "sub-threshold wave stayed inline");
+    assert_eq!(st.waves_dispatched, 0);
+    assert_eq!(pipelined.peak_in_flight(), 0, "inline path never pipelines");
+}
+
+#[test]
+fn planner_plans_are_identical_through_the_async_backend() {
+    // the serve-facing corollary: a Planner wired to the async adapter
+    // returns the same allocation and bit-identical scores as the plain
+    // serial planner — this is why Service plans equal Coordinator's
+    let wf = Workflow::fig6();
+    let servers = Server::pool_exponential(&[9.0, 8.0, 7.0, 6.0, 5.0, 4.0]);
+    let serial_plan = Planner::new(&wf, &servers)
+        .objective(Objective::Mean)
+        .plan(&ProposedPolicy::default())
+        .expect("feasible");
+    for (shards, depth) in [(1usize, 1usize), (2, 2), (8, 16)] {
+        let backend = AsyncScoreBackend::new(&AnalyticBackend, shards).in_flight(depth);
+        let plan = Planner::new(&wf, &servers)
+            .objective(Objective::Mean)
+            .backend(&backend)
+            .plan(&ProposedPolicy::default())
+            .expect("feasible");
+        assert_eq!(plan.allocation, serial_plan.allocation, "x{shards} d{depth}");
+        assert_eq!(
+            plan.score.mean.to_bits(),
+            serial_plan.score.mean.to_bits(),
+            "x{shards} d{depth}"
+        );
+        assert_eq!(
+            plan.score.p99.to_bits(),
+            serial_plan.score.p99.to_bits(),
+            "x{shards} d{depth}"
+        );
+    }
+}

@@ -1,0 +1,161 @@
+//! Soak-determinism tests for the live re-planning service: the same
+//! seed must produce the same re-plan sequence, the same trace and the
+//! same admission decisions — twice, under any admission configuration —
+//! and the admission counters must always balance.
+//!
+//! Property cases honor `DCFLOW_PROP_CASES` / `DCFLOW_PROP_SEED`.
+
+use dcflow::prelude::*;
+use dcflow::scenario::reports_identical;
+use dcflow::util::prop;
+
+/// Run the spec twice under `cfg` and require bit-identical outcomes;
+/// returns the first run for further inspection.
+fn deterministic_pair(spec: &ScenarioSpec, cfg: ServeConfig) -> (ServeReport, ExecTrace) {
+    let (r1, t1) = Service::run_spec(spec, cfg)
+        .unwrap_or_else(|e| panic!("{}: first run failed: {e}", spec.name));
+    let (r2, t2) = Service::run_spec(spec, cfg)
+        .unwrap_or_else(|e| panic!("{}: second run failed: {e}", spec.name));
+    assert!(
+        reports_identical(&r1.run, &r2.run),
+        "{}: same seed, different run reports",
+        spec.name
+    );
+    assert_eq!(t1, t2, "{}: same seed, different traces", spec.name);
+    assert_eq!(
+        r1.admission, r2.admission,
+        "{}: same seed, different admission decisions",
+        spec.name
+    );
+    assert_eq!(
+        r1.run.swaps, r2.run.swaps,
+        "{}: same seed, different re-plan sequences",
+        spec.name
+    );
+    (r1, t1)
+}
+
+/// The counters must balance no matter what was shed.
+fn assert_admission_invariants(st: &AdmissionStats, cfg: &ServeConfig, ctx: &str) {
+    assert_eq!(
+        st.offered,
+        st.admitted + st.shed,
+        "{ctx}: offered != admitted + shed: {st:?}"
+    );
+    assert_eq!(
+        st.shed,
+        st.shed_inflight + st.shed_debounce,
+        "{ctx}: shed causes do not add up: {st:?}"
+    );
+    assert!(
+        st.peak_inflight <= cfg.max_inflight.max(1),
+        "{ctx}: in-flight re-plans exceeded the cap: {st:?}"
+    );
+    assert!(st.forced <= st.admitted, "{ctx}: forced exceeds admitted");
+    assert!(
+        st.swaps_applied <= st.admitted,
+        "{ctx}: more swaps than admitted re-plans"
+    );
+}
+
+#[test]
+fn same_seed_twice_is_bit_identical_transparent() {
+    let spec = ScenarioSpec::serve_soak_short();
+    let (report, _) = deterministic_pair(&spec, ServeConfig::default());
+    let st = report.admission;
+    assert_admission_invariants(&st, &ServeConfig::default(), "transparent");
+    // transparent config sheds nothing, and every planner invocation is
+    // accounted for: the initial plan plus each admitted re-plan
+    assert_eq!(st.shed, 0);
+    assert_eq!(st.admitted as usize + 1, report.replan_secs.len());
+    assert!(report.replan_secs.iter().all(|&s| s >= 0.0));
+}
+
+#[test]
+fn debounce_sheds_deterministically() {
+    // WorkerChurn config re-opts every 150 completions; a debounce
+    // window wider than the whole run admits the first optimization
+    // offer and sheds the rest — deterministically, twice
+    let spec = ScenarioSpec::serve_soak_short().with_tasks(600);
+    let cfg = ServeConfig {
+        debounce: 10_000,
+        ..ServeConfig::default()
+    };
+    let (report, _) = deterministic_pair(&spec, cfg);
+    let st = report.admission;
+    assert_admission_invariants(&st, &cfg, "debounce");
+    assert!(
+        st.shed_debounce > 0,
+        "a run-length debounce window must shed periodic offers: {st:?}"
+    );
+    assert_eq!(st.shed_inflight, 0, "nothing held long enough to shed on cap");
+    // forced churn re-plans are never debounced
+    assert!(st.forced >= 1, "churn class must force re-plans");
+}
+
+#[test]
+fn inflight_cap_sheds_deterministically() {
+    // a re-plan hold longer than the run pins the single slot after the
+    // first admitted optimization re-plan, so later offers shed on the
+    // in-flight cap instead
+    let spec = ScenarioSpec::serve_soak_short().with_tasks(600);
+    let cfg = ServeConfig {
+        replan_hold: 10_000,
+        ..ServeConfig::default()
+    };
+    let (report, _) = deterministic_pair(&spec, cfg);
+    let st = report.admission;
+    assert_admission_invariants(&st, &cfg, "inflight");
+    assert!(
+        st.shed_inflight > 0,
+        "a run-length hold must shed on the in-flight cap: {st:?}"
+    );
+    assert_eq!(st.peak_inflight, 1, "exactly the one held slot");
+    assert!(st.forced >= 1, "forced churn re-plans bypass the held slot");
+}
+
+#[test]
+fn transparent_soak_trace_replays_bit_identically() {
+    // a serve-recorded trace is a first-class scenario trace: feeding it
+    // back through the capture/replay stack reproduces the service's
+    // run report exactly
+    let spec = ScenarioSpec::serve_soak_short();
+    let (served, trace) =
+        Service::run_spec(&spec, ServeConfig::default()).expect("service runs");
+    let (replayed, recaptured) = spec.replay(&trace).expect("serve trace replays");
+    assert!(
+        reports_identical(&served.run, &replayed),
+        "replay of a serve trace diverges from the service run"
+    );
+    assert_eq!(recaptured, trace, "replay did not close the capture loop");
+}
+
+#[test]
+fn soak_determinism_holds_across_zoo_classes_and_admission_configs() {
+    // the general property: any zoo class, any seed, any admission
+    // configuration — the service is a deterministic function of
+    // (scenario, config), and the counters always balance
+    prop::run("serve soak determinism", 4, |g| {
+        let zoo = ScenarioSpec::zoo();
+        let spec = g
+            .choose(&zoo)
+            .clone()
+            .with_seed(g.usize_in(1, 1 << 20) as u64)
+            .with_tasks(120);
+        let cfg = ServeConfig {
+            max_inflight: g.usize_in(1, 2),
+            debounce: if g.bool(0.5) { 0 } else { 200 },
+            replan_hold: if g.bool(0.5) { 0 } else { 300 },
+            shards: g.usize_in(1, 3),
+            wave_depth: g.usize_in(1, 4),
+        };
+        let (report, _) = deterministic_pair(&spec, cfg);
+        assert_admission_invariants(&report.admission, &cfg, &spec.name);
+        assert_eq!(
+            report.admission.admitted as usize + 1,
+            report.replan_secs.len(),
+            "{}: every admitted offer ran the planner exactly once",
+            spec.name
+        );
+    });
+}
